@@ -1,0 +1,66 @@
+//! Distributed matrix multiplication across a daemon cluster (paper §6.4).
+//!
+//! Real end-to-end run at N=512 over 1/2/4 in-process servers connected by
+//! a shaped 56 Gb/s LAN profile, reporting host-side timings (including
+//! the partial-result merge, as the paper does) plus the DES projection of
+//! the paper-scale 8192² / 16-GPU curve (Fig 12).
+//!
+//! Run with: `cargo run --release --example matmul_cluster`
+
+use poclr::apps::matmul;
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::Cluster;
+use poclr::net::LinkProfile;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let inputs = matmul::MatmulInputs::generate(512, 7);
+
+    println!("== real run: 512x512 over in-process daemon clusters ==");
+    let mut t1 = None;
+    for n_servers in [1usize, 2, 4] {
+        let cluster = Cluster::start(
+            n_servers,
+            1,
+            LinkProfile::LAN_56G,
+            LinkProfile::LAN_56G,
+            false,
+            &manifest,
+            &[],
+        )?;
+        let platform = Platform::connect(
+            &cluster.addrs(),
+            ClientConfig {
+                link: LinkProfile::LAN_56G,
+                ..Default::default()
+            },
+        )?;
+        let ctx = platform.context();
+        let queues: Vec<_> = (0..n_servers as u32).map(|s| ctx.queue(s, 0)).collect();
+
+        // Warm the block artifact so compile time stays out of the timing.
+        let warm = matmul::MatmulInputs::generate(512, 8);
+        matmul::run(&ctx, &queues, &warm)?;
+
+        let (stats, c) = matmul::run(&ctx, &queues, &inputs)?;
+        matmul::verify_spot(&inputs, &c, 12, 99)?;
+        let t = stats.host_time.as_secs_f64();
+        let speedup = t1.get_or_insert(t).max(1e-12) / t.max(1e-12);
+        println!(
+            "  {n_servers} server(s): host {:8.2} ms  (compute+collect {:8.2} ms)  speedup {speedup:5.2}x  [verified]",
+            t * 1e3,
+            stats.compute_time.as_secs_f64() * 1e3
+        );
+        let t1v = *t1.get_or_insert(t);
+        let _ = t1v;
+    }
+
+    println!("\n== DES projection: paper-scale Fig 12 (8192^2, P100/V100 bed) ==");
+    for (d, s) in scenarios::fig12_matmul_speedup(8192, &[1, 2, 4, 8, 12, 16]) {
+        println!("  {d:>2} GPUs: speedup {s:5.2}x");
+    }
+    println!("(paper: logarithmic curve ending slightly below 6x at 16 GPUs)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: offload a vector addition to a PoCL-R daemon.
+//!
+//! Spawns one in-process daemon (the "MEC server"), connects the client
+//! driver to it over real loopback TCP, uploads two vectors, launches the
+//! AOT-compiled `vecadd_f32_4096` artifact, and reads the result back —
+//! the full three-layer stack in ~40 lines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    // "Server side": one daemon exposing one PJRT-backed device.
+    let manifest = Manifest::load_default()?;
+    let daemon = Daemon::spawn(DaemonConfig::local(0, 1, manifest))?;
+    println!("pocld listening on {}", daemon.addr());
+
+    // "UE side": link the app against the remote driver.
+    let platform = Platform::connect(&[daemon.addr()], ClientConfig::default())?;
+    println!(
+        "connected: {} server(s), {} device(s)",
+        platform.n_servers(),
+        platform.n_devices(0)
+    );
+
+    let ctx = platform.context();
+    let queue = ctx.queue(0, 0);
+
+    // Host data.
+    let x: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..4096).map(|i| (4096 - i) as f32).collect();
+    let to_bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|f| f.to_le_bytes()).collect() };
+
+    // Buffers + commands, OpenCL style.
+    let bx = ctx.create_buffer(4 * 4096);
+    let by = ctx.create_buffer(4 * 4096);
+    let bo = ctx.create_buffer(4 * 4096);
+    queue.write(bx, &to_bytes(&x))?;
+    queue.write(by, &to_bytes(&y))?;
+    let ev = queue.run("vecadd_f32_4096", &[bx, by], &[bo])?;
+    ev.wait()?;
+
+    let out = queue.read(bo)?;
+    let first = f32::from_le_bytes(out[0..4].try_into().unwrap());
+    let last = f32::from_le_bytes(out[4 * 4095..].try_into().unwrap());
+    assert_eq!(first, 4096.0);
+    assert_eq!(last, 4096.0);
+    let ts = ev.profiling().expect("profiling info");
+    println!(
+        "vecadd OK: every element = 4096.0; device time {:.1} µs",
+        (ts.end_ns - ts.start_ns) as f64 / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""AOT exporter: lower every L2 entry to HLO text + write the manifest.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts [--only name1,name2]
+
+Outputs:
+    artifacts/<name>.hlo.txt   one per ENTRIES item
+    artifacts/manifest.json    shapes, dtypes, flops, file names — the rust
+                               artifact registry is built from this file.
+
+Python runs exactly once, at build time; the rust binary is self-contained
+after ``make artifacts``.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+_DTYPE_TAG = {"float32": "f32", "int32": "s32", "uint32": "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": _DTYPE_TAG[str(s.dtype)]}
+
+
+def _nbytes(s) -> int:
+    n = 1
+    for d in s.shape:
+        n *= d
+    return n * s.dtype.itemsize
+
+
+def export_entry(name: str, out_dir: str) -> dict:
+    fn, specs, flops, desc = model.ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *specs)
+    return {
+        "name": name,
+        "file": fname,
+        "description": desc,
+        "flops": flops,
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": [_spec_json(s) for s in out_specs],
+        "bytes_in": sum(_nbytes(s) for s in specs),
+        "bytes_out": sum(_nbytes(s) for s in out_specs),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated entry filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(model.ENTRIES)
+    if args.only:
+        keep = set(args.only.split(","))
+        unknown = keep - set(names)
+        if unknown:
+            raise SystemExit(f"unknown entries: {sorted(unknown)}")
+        names = [n for n in names if n in keep]
+
+    entries = []
+    for name in names:
+        info = export_entry(name, args.out_dir)
+        entries.append(info)
+        print(f"  {name:28s} -> {info['file']:34s} ({info['flops']:>11} flop)")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

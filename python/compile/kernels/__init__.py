@@ -1,0 +1,2 @@
+"""L1: Pallas kernels (interpret=True) + the pure-jnp oracle in ref.py."""
+from . import elementwise, lbm, matmul, pointcloud, ref, sortnet  # noqa: F401

@@ -1,0 +1,80 @@
+"""L1 Pallas kernels for the trivial command-latency benchmark workloads.
+
+These are deliberately tiny — the paper's Fig 8-11 micro-benchmarks dispatch
+"practically empty" kernels to isolate runtime overhead from compute. They
+still go through the full Pallas path so the AOT artifacts exercise the same
+machinery as the heavy kernels.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is what we validate here (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _passthrough_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def passthrough(x):
+    """Copy a buffer unchanged (Fig 9 pass-through kernel)."""
+    return pl.pallas_call(
+        _passthrough_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _increment_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1
+
+
+def increment(x):
+    """x + 1 (Fig 10/11: invalidates stale copies between migrations)."""
+    return pl.pallas_call(
+        _increment_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _vecadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def vecadd(x, y, block=1024):
+    """Elementwise sum, tiled over 1D blocks.
+
+    The grid/BlockSpec split is pointless for CPU-interpret execution but
+    mirrors how the kernel would be laid out on a real accelerator: one
+    VMEM-resident block per grid step.
+    """
+    n = x.shape[0]
+    if n % block != 0 or n < block:
+        block = n
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _vecadd_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(x, y)
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def saxpy(a, x, y):
+    """a*x + y with the scalar broadcast from a 1-element buffer."""
+    return pl.pallas_call(
+        _saxpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(a, x, y)

@@ -1,0 +1,74 @@
+"""L1 Pallas tiled matmul — the compute hot spot of the distributed matrix
+multiplication case study (paper Figs 12-13).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenCL
+kernel targets NVIDIA GPUs with threadblock tiling; here the kernel is
+re-thought for the TPU model that Pallas exposes:
+
+* the grid is (M/bm, N/bn); each grid step owns one ``bm x bn`` output tile
+  resident in VMEM,
+* the K dimension is walked in ``bk``-wide slices with an f32 accumulator in
+  registers/VMEM (``fori_loop`` carry), feeding the MXU with
+  ``preferred_element_type=jnp.float32`` contractions,
+* BlockSpecs express the HBM->VMEM schedule the CUDA version expressed with
+  threadblocks: A streams row-panels, B streams column-panels.
+
+Default tile of 128x128x128 matches the MXU systolic array shape; VMEM
+footprint per step = bm*K + K*bn + bm*bn floats (see DESIGN.md §9 for the
+roofline estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, bk: int):
+    """One (bm, bn) output tile: accumulate over K in bk-wide MXU feeds."""
+    k = a_ref.shape[1]
+    nsteps = k // bk
+
+    def body(i, acc):
+        a_blk = a_ref[:, pl.dslice(i * bk, bk)]
+        b_blk = b_ref[pl.dslice(i * bk, bk), :]
+        return acc + jax.lax.dot_general(
+            a_blk,
+            b_blk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    acc = jax.lax.fori_loop(0, nsteps, body, acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul(a, b, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Tiled matmul a @ b for f32[M,K] x f32[K,N].
+
+    Tile sizes clamp down to the problem size so small problems still run
+    through the same kernel (pytest sweeps shapes via hypothesis).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tile ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # row panel of A
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # column panel of B
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: VPCC-like point cloud reconstruction.
+
+Back-projects a decoded geometry (depth) plane + occupancy plane into an
+array of 3D points — the "reconstruct the points with shaders" stage of the
+paper's AR pipeline (§7.1). One texel maps to one point; unoccupied texels
+are pushed to z=1e9 so the subsequent depth sort places them last and the
+renderer can clip them.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reconstruct_kernel(geom_ref, occ_ref, pts_ref, *, fx, cx, cy):
+    geom = geom_ref[...]
+    occ = occ_ref[...]
+    h, w = geom.shape
+    col = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
+    row = jax.lax.broadcasted_iota(jnp.float32, (h, w), 0)
+    x = (col - cx) * geom * fx
+    y = (row - cy) * geom * fx
+    z = jnp.where(occ > 0.5, geom, 1e9)
+    pts = jnp.stack([x, y, z], axis=-1)
+    pts_ref[...] = pts.reshape(h * w, 3)
+
+
+def reconstruct(geom, occ, fx=0.5, cx=None, cy=None):
+    """f32[H,W] geometry + f32[H,W] occupancy -> f32[H*W,3] points."""
+    import functools
+
+    h, w = geom.shape
+    if cx is None:
+        cx = (w - 1) / 2.0
+    if cy is None:
+        cy = (h - 1) / 2.0
+    return pl.pallas_call(
+        functools.partial(_reconstruct_kernel, fx=fx, cx=cx, cy=cy),
+        out_shape=jax.ShapeDtypeStruct((h * w, 3), jnp.float32),
+        interpret=True,
+    )(geom, occ)

@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the L1 kernels are validated against by pytest
+(`python/tests/`). They intentionally use the most straightforward jnp
+formulation; no pallas, no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+import jax
+
+# ---------------------------------------------------------------------------
+# Elementwise / trivial command kernels (Figs 8-11 micro-benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def passthrough(x):
+    """Copy a buffer unchanged (the Fig 9 pass-through kernel)."""
+    return x
+
+
+def increment(x):
+    """x + 1 elementwise (the Fig 10/11 migration-invalidation kernel)."""
+    return x + 1
+
+
+def vecadd(x, y):
+    """Elementwise sum."""
+    return x + y
+
+
+def saxpy(a, x, y):
+    """a*x + y with a broadcast scalar held in a 1-element buffer."""
+    return a[0] * x + y
+
+
+# ---------------------------------------------------------------------------
+# Matmul (Fig 12/13 distributed matrix multiplication workload)
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b):
+    """Plain f32 matmul with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# D2Q9 lattice-Boltzmann step (FluidX3D stand-in, Figs 16/17)
+# ---------------------------------------------------------------------------
+
+# D2Q9 discrete velocity set. Index order matters: it is baked into the
+# artifacts and the rust-side halo exchange.
+#   i : 0      1      2      3      4      5      6      7      8
+#   e : (0,0) (1,0)  (0,1)  (-1,0) (0,-1) (1,1)  (-1,1) (-1,-1) (1,-1)
+LBM_EX = jnp.array([0, 1, 0, -1, 0, 1, -1, -1, 1], dtype=jnp.float32)
+LBM_EY = jnp.array([0, 0, 1, 0, -1, 1, 1, -1, -1], dtype=jnp.float32)
+LBM_W = jnp.array(
+    [4 / 9, 1 / 9, 1 / 9, 1 / 9, 1 / 9, 1 / 36, 1 / 36, 1 / 36, 1 / 36],
+    dtype=jnp.float32,
+)
+LBM_EX_I = [0, 1, 0, -1, 0, 1, -1, -1, 1]
+LBM_EY_I = [0, 0, 1, 0, -1, 1, 1, -1, -1]
+
+
+def lbm_equilibrium(rho, ux, uy):
+    """BGK equilibrium distribution f_eq[9, H, W] from macroscopic fields."""
+    usq = ux * ux + uy * uy
+    feq = []
+    for i in range(9):
+        eu = LBM_EX[i] * ux + LBM_EY[i] * uy
+        feq.append(LBM_W[i] * rho * (1.0 + 3.0 * eu + 4.5 * eu * eu - 1.5 * usq))
+    return jnp.stack(feq, axis=0)
+
+
+def lbm_macroscopic(f):
+    """Density and velocity from distributions f[9, H, W]."""
+    rho = jnp.sum(f, axis=0)
+    ux = jnp.tensordot(LBM_EX, f, axes=1) / rho
+    uy = jnp.tensordot(LBM_EY, f, axes=1) / rho
+    return rho, ux, uy
+
+
+def lbm_step(f, halo_top, halo_bot, omega=1.0):
+    """One D2Q9 stream+collide step over a row-decomposed domain slab.
+
+    f        : f32[9, H, W]  distributions of this domain's rows
+    halo_top : f32[9, W]     neighbour row directly *above* row 0
+    halo_bot : f32[9, W]     neighbour row directly *below* row H-1
+    returns  (f', boundary_top', boundary_bot')
+      boundary_top' = f'[:, 0, :],  boundary_bot' = f'[:, H-1, :]
+
+    Streaming is periodic in W (the x axis); the y axis is decomposed
+    across domains, cross-domain flow arriving through the halo rows.
+    Row index grows downward: "top" is row 0's neighbour at y-1.
+    """
+    h = f.shape[1]
+    # Stack halos so streaming can be expressed as plain shifts over an
+    # extended slab of H+2 rows: [halo_top; f; halo_bot].
+    ext = jnp.concatenate([halo_top[:, None, :], f, halo_bot[:, None, :]], axis=1)
+    streamed = []
+    for i in range(9):
+        gi = jnp.roll(ext[i], LBM_EX_I[i], axis=1)  # x shift, periodic in W
+        # y shift: f_i arrives at row r from row r - ey_i of the extended slab
+        src0 = 1 - LBM_EY_I[i]  # extended-row index feeding interior row 0
+        gi = jax.lax.dynamic_slice_in_dim(gi, src0, h, axis=0)
+        streamed.append(gi)
+    fs = jnp.stack(streamed, axis=0)
+    rho, ux, uy = lbm_macroscopic(fs)
+    feq = lbm_equilibrium(rho, ux, uy)
+    fp = fs + omega * (feq - fs)
+    return fp, fp[:, 0, :], fp[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Point cloud reconstruction + depth sort (AR case study, Fig 15)
+# ---------------------------------------------------------------------------
+
+
+def pc_reconstruct(geom, occ, fx=0.5, cx=None, cy=None):
+    """Back-project a decoded VPCC-like geometry map into 3D points.
+
+    geom : f32[H, W] depth map (decoded video geometry plane)
+    occ  : f32[H, W] occupancy in {0, 1}
+    returns f32[H*W, 3]; unoccupied texels are pushed to z = 1e9 so they
+    sort behind everything and can be dropped by the renderer.
+    """
+    h, w = geom.shape
+    if cx is None:
+        cx = (w - 1) / 2.0
+    if cy is None:
+        cy = (h - 1) / 2.0
+    col = jnp.arange(w, dtype=jnp.float32)[None, :]
+    row = jnp.arange(h, dtype=jnp.float32)[:, None]
+    x = (col - cx) * geom * fx
+    y = (row - cy) * geom * fx
+    z = jnp.where(occ > 0.5, geom, 1e9)
+    pts = jnp.stack(
+        [jnp.broadcast_to(x, (h, w)), jnp.broadcast_to(y, (h, w)), z], axis=-1
+    )
+    return pts.reshape(h * w, 3)
+
+
+def pc_depth_order(pts, cam):
+    """Indices ordering points back-to-front (descending distance to cam).
+
+    pts : f32[N, 3], cam : f32[3] -> i32[N]
+    Ties are broken by index to keep the order fully deterministic (the
+    bitonic network in the pallas kernel does the same).
+    """
+    d = jnp.sum((pts - cam[None, :]) ** 2, axis=1)
+    n = pts.shape[0]
+    # lexicographic (idx minor, -d major) ascending == d descending w/ tiebreak
+    order = jnp.lexsort((jnp.arange(n), -d))
+    return order.astype(jnp.int32)

@@ -1,0 +1,202 @@
+"""L2: the JAX compute graphs exported as AOT artifacts.
+
+Each entry in ``ENTRIES`` is one HLO artifact that the rust daemons load via
+PJRT and execute on behalf of OpenCL kernel-launch commands. The functions
+compose the L1 Pallas kernels (``kernels/``); everything lowers into a single
+fused HLO module per entry so there is no host round-trip inside a step.
+
+Entry naming convention: ``<workload>_<dtype/shape tag>``. The rust side
+refers to artifacts by these names (see ``rust/src/runtime/artifact.rs``),
+and the OpenCL ``program`` objects map built-in kernel names onto them.
+
+Shape variants exist because PJRT executables are shape-specialized: e.g.
+the LBM slab comes in one height per domain-count so a 1/2/4-way domain
+decomposition of the 64-row grid each has an exact artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise, lbm, matmul, pointcloud, sortnet
+
+F32 = jnp.float32
+S32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry functions. All return tuples (lowered with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+
+def noop(x):
+    """Fig 8 no-op command: returns its input untouched via the L1 copy
+    kernel. The cheapest possible dispatch, isolating runtime overhead."""
+    return (elementwise.passthrough(x),)
+
+
+def passthrough(x):
+    """Fig 9 pass-through: copy one int from an input to an output buffer."""
+    return (elementwise.passthrough(x),)
+
+
+def increment(x):
+    """Fig 10/11 helper: bump the buffer to invalidate remote copies."""
+    return (elementwise.increment(x),)
+
+
+def vecadd(x, y):
+    return (elementwise.vecadd(x, y),)
+
+
+def saxpy(a, x, y):
+    return (elementwise.saxpy(a, x, y),)
+
+
+def matmul_square(a, b):
+    return (matmul.matmul(a, b),)
+
+
+def matmul_block(a, b):
+    """Row-block of the distributed matmul: A_block[rows,K] @ B[K,N]."""
+    return (matmul.matmul(a, b),)
+
+
+def lbm_step(f, halo_top, halo_bot):
+    return lbm.lbm_step(f, halo_top, halo_bot, omega=1.0)
+
+
+def pc_reconstruct(geom, occ):
+    return (pointcloud.reconstruct(geom, occ),)
+
+
+def pc_depth_order(pts, cam):
+    return (sortnet.depth_order(pts, cam),)
+
+
+def ar_frame(geom, occ, cam):
+    """Fused AR server step: reconstruct the cloud and compute the
+    back-to-front ordering in one artifact (one command, one completion)."""
+    pts = pointcloud.reconstruct(geom, occ)
+    order = sortnet.depth_order(pts, cam)
+    return (pts, order)
+
+
+# ---------------------------------------------------------------------------
+# Export registry
+# ---------------------------------------------------------------------------
+
+
+def _mm_flops(m, k, n):
+    return 2 * m * k * n
+
+
+def _lbm_flops(h, w):
+    # ~9 shifted loads + macroscopic sums (~27) + 9 equilibria (~12 each)
+    return h * w * 160
+
+
+def _sort_flops(n):
+    import math
+
+    lg = int(math.log2(n))
+    return n * lg * (lg + 1) // 2 * 4
+
+
+# name -> (fn, [arg specs], flops, description)
+ENTRIES = {
+    "noop_s32_1": (noop, [spec([1], S32)], 0, "Fig 8 no-op command kernel"),
+    "passthrough_s32_1": (
+        passthrough,
+        [spec([1], S32)],
+        0,
+        "Fig 9 pass-through kernel (1 int in -> out)",
+    ),
+    "increment_s32_1": (
+        increment,
+        [spec([1], S32)],
+        1,
+        "Fig 10/11 buffer-invalidation kernel",
+    ),
+    "vecadd_f32_4096": (
+        vecadd,
+        [spec([4096]), spec([4096])],
+        4096,
+        "quickstart vector addition",
+    ),
+    "saxpy_f32_4096": (
+        saxpy,
+        [spec([1]), spec([4096]), spec([4096])],
+        2 * 4096,
+        "saxpy with scalar buffer",
+    ),
+    "matmul_f32_256": (
+        matmul_square,
+        [spec([256, 256]), spec([256, 256])],
+        _mm_flops(256, 256, 256),
+        "square matmul tile",
+    ),
+    "matmul_f32_512": (
+        matmul_square,
+        [spec([512, 512]), spec([512, 512])],
+        _mm_flops(512, 512, 512),
+        "square matmul tile",
+    ),
+    "matmul_block_256x512": (
+        matmul_block,
+        [spec([256, 512]), spec([512, 512])],
+        _mm_flops(256, 512, 512),
+        "half-row-block of 512 distributed matmul",
+    ),
+    "matmul_block_128x512": (
+        matmul_block,
+        [spec([128, 512]), spec([512, 512])],
+        _mm_flops(128, 512, 512),
+        "quarter-row-block of 512 distributed matmul",
+    ),
+    "matmul_block_64x512": (
+        matmul_block,
+        [spec([64, 512]), spec([512, 512])],
+        _mm_flops(64, 512, 512),
+        "eighth-row-block of 512 distributed matmul",
+    ),
+    "lbm_step_9x64x64": (
+        lbm_step,
+        [spec([9, 64, 64]), spec([9, 64]), spec([9, 64])],
+        _lbm_flops(64, 64),
+        "D2Q9 step, whole 64x64 grid in one domain",
+    ),
+    "lbm_step_9x32x64": (
+        lbm_step,
+        [spec([9, 32, 64]), spec([9, 64]), spec([9, 64])],
+        _lbm_flops(32, 64),
+        "D2Q9 step, 2-way row decomposition slab",
+    ),
+    "lbm_step_9x16x64": (
+        lbm_step,
+        [spec([9, 16, 64]), spec([9, 64]), spec([9, 64])],
+        _lbm_flops(16, 64),
+        "D2Q9 step, 4-way row decomposition slab",
+    ),
+    "pc_reconstruct_64x64": (
+        pc_reconstruct,
+        [spec([64, 64]), spec([64, 64])],
+        4096 * 10,
+        "VPCC-like geometry back-projection",
+    ),
+    "pc_depth_order_4096": (
+        pc_depth_order,
+        [spec([4096, 3]), spec([3])],
+        _sort_flops(4096),
+        "AR hot spot: depth + bitonic argsort (offloaded)",
+    ),
+    "ar_frame_64x64": (
+        ar_frame,
+        [spec([64, 64]), spec([64, 64]), spec([3])],
+        4096 * 10 + _sort_flops(4096),
+        "fused AR server step: reconstruct + depth order",
+    ),
+}

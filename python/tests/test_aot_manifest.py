@@ -1,0 +1,64 @@
+"""AOT pipeline: every entry lowers to parseable HLO and a sound manifest."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import pytest
+
+from compile import aot, model
+
+REPO = Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+
+
+def test_all_entries_have_positive_io():
+    for name, (fn, specs, flops, desc) in model.ENTRIES.items():
+        assert specs, name
+        assert flops >= 0, name
+        assert desc, name
+
+
+def test_entry_names_match_convention():
+    for name in model.ENTRIES:
+        assert name.replace("_", "").isalnum(), name
+
+
+@pytest.mark.parametrize("name", ["noop_s32_1", "passthrough_s32_1", "increment_s32_1"])
+def test_micro_entries_lower(tmp_path, name):
+    info = aot.export_entry(name, str(tmp_path))
+    text = (tmp_path / info["file"]).read_text()
+    assert text.startswith("HloModule"), text[:60]
+    assert info["inputs"][0]["dtype"] == "s32"
+
+
+def test_eval_shape_agrees_with_manifest_specs():
+    for name, (fn, specs, _, _) in model.ENTRIES.items():
+        outs = jax.eval_shape(fn, *specs)
+        assert isinstance(outs, tuple) and len(outs) >= 1, name
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_built_manifest_is_complete():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == set(model.ENTRIES), names.symmetric_difference(set(model.ENTRIES))
+    for art in manifest["artifacts"]:
+        f = ARTIFACTS / art["file"]
+        assert f.exists(), art["file"]
+        assert f.read_text().startswith("HloModule")
+        assert art["bytes_in"] > 0 and art["bytes_out"] > 0
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_hashes_match_files():
+    import hashlib
+
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    for art in manifest["artifacts"]:
+        text = (ARTIFACTS / art["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest()[:16] == art["sha256"], art["name"]

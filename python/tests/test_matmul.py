@@ -1,0 +1,72 @@
+"""L1 tiled matmul vs jnp.matmul, shape/tile swept with hypothesis."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 64, 128]),
+    k=st.sampled_from([16, 32, 64, 128]),
+    n=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+    got = mm.matmul(a, b, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tilings(bm, bn, bk, seed):
+    """Every tiling of the same problem produces the same product."""
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (64, 64)), _rand(rng, (64, 64))
+    got = mm.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rectangular_block():
+    """The distributed row-block shape used by the Fig 12/13 workload."""
+    rng = np.random.default_rng(0)
+    a, b = _rand(rng, (128, 512)), _rand(rng, (512, 512))
+    got = mm.matmul(a, b)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    a = _rand(np.random.default_rng(1), (64, 64))
+    np.testing.assert_allclose(mm.matmul(a, eye, bm=32, bn=32, bk=32), a, atol=1e-6)
+
+
+def test_matmul_indivisible_tile_raises():
+    a = jnp.zeros((48, 48), jnp.float32)
+    with pytest.raises(AssertionError):
+        mm.matmul(a, a, bm=32, bn=32, bk=32)
+
+
+def test_matmul_contraction_mismatch_raises():
+    with pytest.raises(AssertionError):
+        mm.matmul(jnp.zeros((16, 16), jnp.float32), jnp.zeros((32, 16), jnp.float32))

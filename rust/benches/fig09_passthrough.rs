@@ -1,0 +1,91 @@
+//! Fig 9: pass-through kernel duration via the event profiling API.
+//!
+//! Paper: PoCL-R commands take ~1/6 of SnuCL's, but ~2x the native NVIDIA
+//! driver.
+
+use poclr::baseline::snucl::SnuclContext;
+use poclr::client::{local::LocalQueue, ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::util::stats::Samples;
+
+const ITERS: usize = 300;
+
+fn main() {
+    let manifest = Manifest::load_default().expect("make artifacts first");
+    report::figure("Fig 9", "pass-through kernel duration (event profiling)");
+
+    // Native.
+    let mut native = Samples::new();
+    {
+        let lq = LocalQueue::gpu(manifest.clone());
+        lq.warm("passthrough_s32_1");
+        let a = lq.create_buffer(4);
+        let b = lq.create_buffer(4);
+        lq.write(a, &7i32.to_le_bytes());
+        for _ in 0..20 {
+            lq.run("passthrough_s32_1", &[a], &[b]).unwrap();
+        }
+        for _ in 0..ITERS {
+            let ts = lq.run("passthrough_s32_1", &[a], &[b]).unwrap();
+            native.push((ts.end_ns - ts.start_ns) as f64);
+        }
+    }
+
+    // PoCL-R remote: profiled duration = daemon-side queued -> end.
+    let mut poclr = Samples::new();
+    {
+        let mut cfg = DaemonConfig::local(0, 1, manifest.clone());
+        cfg.warm = vec!["passthrough_s32_1".into()];
+        let d = Daemon::spawn(cfg).unwrap();
+        let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+        let ctx = p.context();
+        let q = ctx.queue(0, 0);
+        let a = ctx.create_buffer(4);
+        let b = ctx.create_buffer(4);
+        q.write(a, &7i32.to_le_bytes()).unwrap();
+        for _ in 0..20 {
+            q.run("passthrough_s32_1", &[a], &[b]).unwrap().wait().unwrap();
+        }
+        for _ in 0..ITERS {
+            let ev = q.run("passthrough_s32_1", &[a], &[b]).unwrap();
+            ev.wait().unwrap();
+            let ts = ev.profiling().unwrap();
+            poclr.push((ts.end_ns - ts.queued_ns) as f64);
+        }
+    }
+
+    // SnuCL baseline: same daemon path + modeled MPI transit in the
+    // reported duration.
+    let mut snucl = Samples::new();
+    {
+        let mut cfg = DaemonConfig::local(0, 1, manifest.clone());
+        cfg.warm = vec!["passthrough_s32_1".into()];
+        let d = Daemon::spawn(cfg).unwrap();
+        let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+        let ctx = p.context();
+        let sn = SnuclContext::new(ctx.clone(), 1);
+        let q = sn.queue(0, 0);
+        let a = ctx.create_buffer(4);
+        let b = ctx.create_buffer(4);
+        q.write(a, &7i32.to_le_bytes()).unwrap();
+        for _ in 0..20 {
+            q.run("passthrough_s32_1", &[a], &[b]).unwrap().wait().unwrap();
+        }
+        for _ in 0..ITERS {
+            let ev = q.run("passthrough_s32_1", &[a], &[b]).unwrap();
+            ev.wait().unwrap();
+            snucl.push(q.profiled_duration_ns(&ev).unwrap() as f64);
+        }
+    }
+
+    report::latency_row("native", &mut native);
+    report::latency_row("poclr", &mut poclr);
+    report::latency_row("snucl (reimpl.)", &mut snucl);
+    println!(
+        "\n  ratios: poclr/native = {:.2} (paper ~2), snucl/poclr = {:.2} (paper ~6)",
+        poclr.mean() / native.mean().max(1.0),
+        snucl.mean() / poclr.mean().max(1.0)
+    );
+}

@@ -1,0 +1,91 @@
+//! Fig 11: RDMA vs TCP speedup for server-to-server buffer migration,
+//! swept over buffer size.
+//!
+//! Paper: ~30% faster by 32 B, a knee where transfers exceed the 9 MiB
+//! socket buffer (writes start splitting), plateauing around +65% at
+//! 134 MiB.
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::Cluster;
+use poclr::net::LinkProfile;
+use poclr::report;
+use poclr::runtime::Manifest;
+
+fn bench_path(rdma: bool, size: usize, iters: usize, manifest: &Manifest) -> f64 {
+    let link = LinkProfile::ETH_40G_DIRECT;
+    let cluster = Cluster::start(2, 1, LinkProfile::LOOPBACK, link, rdma, manifest, &["increment_s32_1"]).unwrap();
+    let p = Platform::connect(
+        &cluster.addrs(),
+        ClientConfig {
+            rdma_migrations: rdma,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let buf = ctx.create_buffer(size as u64);
+    let data = vec![0xA5u8; size];
+    q0.write(buf, &data).unwrap();
+    // First-element increment invalidates copies between migrations; use a
+    // tiny helper buffer carrying the head so the kernel stays 4 bytes.
+    let head = ctx.create_buffer(4);
+    q0.write(head, &0i32.to_le_bytes()).unwrap();
+
+    // Warm one round trip.
+    q1.migrate(buf).unwrap().wait().unwrap();
+    q0.migrate(buf).unwrap().wait().unwrap();
+
+    let mut total_ns = 0u128;
+    let mut toward1 = true;
+    for _ in 0..iters {
+        let (qd, qo) = if toward1 { (&q1, &q0) } else { (&q0, &q1) };
+        let t0 = std::time::Instant::now();
+        qd.migrate(buf).unwrap().wait().unwrap();
+        total_ns += t0.elapsed().as_nanos();
+        // Invalidate on the destination so the next hop really transfers.
+        qd.run("increment_s32_1", &[head], &[head]).unwrap().wait().unwrap();
+        // Touch buf residency: bind head increment to buf by rewriting one
+        // byte through a write (cheap, off the timed path).
+        qd.write(buf, &data[..1.min(size)]).unwrap();
+        let _ = qo;
+        toward1 = !toward1;
+    }
+    total_ns as f64 / iters as f64
+}
+
+fn main() {
+    let manifest = Manifest::load_default().expect("make artifacts first");
+    report::figure(
+        "Fig 11",
+        "RDMA speedup over TCP for buffer migration (40Gb direct link)",
+    );
+    let cases: &[(usize, usize)] = &[
+        (4, 120),
+        (32, 120),
+        (1024, 120),
+        (32 * 1024, 80),
+        (1 << 20, 40),
+        (9 << 20, 16),
+        (32 << 20, 8),
+        (134 << 20, 4),
+    ];
+    println!(
+        "  {:>12} {:>14} {:>14} {:>9}",
+        "size", "tcp", "rdma", "speedup"
+    );
+    for &(size, iters) in cases {
+        let tcp = bench_path(false, size, iters, &manifest);
+        let rdma = bench_path(true, size, iters, &manifest);
+        println!(
+            "  {:>12} {:>14} {:>14} {:>8.2}x",
+            poclr::util::fmt_bytes(size as u64),
+            poclr::util::fmt_ns(tcp),
+            poclr::util::fmt_ns(rdma),
+            tcp / rdma
+        );
+    }
+    println!("\n  paper: ~1.3x by 32 B, knee at the 9 MiB socket buffer,");
+    println!("         plateau ~1.65x at >=134 MiB");
+}

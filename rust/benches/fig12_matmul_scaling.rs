@@ -1,0 +1,77 @@
+//! Fig 12: distributed matmul speedup vs number of devices.
+//!
+//! Real end-to-end runs at N=512 over 1/2/4 in-process servers, plus the
+//! calibrated DES projection of the paper's 8192² / 16-GPU testbed.
+//! Paper: logarithmic curve, slightly below 6x at 16 GPUs, and no >8-GPU
+//! regression (unlike SnuCL).
+
+use poclr::apps::matmul;
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::Cluster;
+use poclr::net::LinkProfile;
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios;
+
+fn main() {
+    let manifest = Manifest::load_default().expect("make artifacts first");
+    report::figure("Fig 12", "distributed matmul speedup vs devices");
+
+    println!("  -- real runs (512x512, in-process cluster, 56Gb profile) --");
+    let inputs = matmul::MatmulInputs::generate(512, 7);
+    let mut t1: Option<f64> = None;
+    for n in [1usize, 2, 4, 8] {
+        let cluster = Cluster::start(
+            n.min(4),
+            n.div_ceil(4.min(n)),
+            LinkProfile::LAN_56G,
+            LinkProfile::LAN_56G,
+            false,
+            &manifest,
+            &[],
+        )
+        .unwrap();
+        let p = Platform::connect(
+            &cluster.addrs(),
+            ClientConfig {
+                link: LinkProfile::LAN_56G,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ctx = p.context();
+        // n queues spread over servers/devices.
+        let mut queues = Vec::new();
+        'outer: for dev in 0..4u32 {
+            for s in 0..cluster.daemons.len() as u32 {
+                if queues.len() == n {
+                    break 'outer;
+                }
+                if dev < p.n_devices(s) {
+                    queues.push(ctx.queue(s, dev));
+                }
+            }
+        }
+        if queues.len() != n {
+            println!("  {n:>2} devices: skipped (could not assemble queues)");
+            continue;
+        }
+        // warm
+        matmul::run(&ctx, &queues, &matmul::MatmulInputs::generate(512, 8)).unwrap();
+        let (stats, c) = matmul::run(&ctx, &queues, &inputs).unwrap();
+        matmul::verify_spot(&inputs, &c, 8, 3).unwrap();
+        let t = stats.host_time.as_secs_f64();
+        let base = *t1.get_or_insert(t);
+        println!(
+            "  {n:>2} device(s): host {:>9.2} ms   speedup {:>5.2}x   [verified]",
+            t * 1e3,
+            base / t
+        );
+    }
+
+    println!("\n  -- DES projection (8192^2 on the P100/V100 bed) --");
+    for (d, s) in scenarios::fig12_matmul_speedup(8192, &[1, 2, 4, 8, 12, 16]) {
+        println!("  {d:>2} GPUs: speedup {s:>5.2}x");
+    }
+    println!("\n  paper: ~1.8x @2, ~3x @4, ~4.4x @8, just under 6x @16");
+}

@@ -1,0 +1,82 @@
+//! Fig 13: average RDMA speedup for the distributed matmul's result-merge
+//! migrations, by matrix size and server count.
+//!
+//! Paper: ~60% improvement at 8192² with 4-8 servers; no gain (or a net
+//! negative, due to region registration + key exchange) for small
+//! matrices or many servers. Regenerated on the calibrated DES plus a
+//! small real-mode cross-check.
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::Cluster;
+use poclr::net::LinkProfile;
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios;
+
+fn real_merge_speedup(bytes: usize, manifest: &Manifest) -> f64 {
+    // Cross-check point: one block migration of `bytes` between two
+    // servers, TCP vs RDMA, through the real stack.
+    let mut times = [0f64; 2];
+    for (i, rdma) in [false, true].into_iter().enumerate() {
+        let cluster = Cluster::start(
+            2,
+            1,
+            LinkProfile::LOOPBACK,
+            LinkProfile::LAN_56G,
+            rdma,
+            manifest,
+            &[],
+        )
+        .unwrap();
+        let p = Platform::connect(
+            &cluster.addrs(),
+            ClientConfig {
+                rdma_migrations: rdma,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ctx = p.context();
+        let q0 = ctx.queue(0, 0);
+        let q1 = ctx.queue(1, 0);
+        let buf = ctx.create_buffer(bytes as u64);
+        q0.write(buf, &vec![1u8; bytes]).unwrap();
+        q1.migrate(buf).unwrap().wait().unwrap(); // warm path
+        q0.migrate(buf).unwrap().wait().unwrap();
+        let iters = 6;
+        let t0 = std::time::Instant::now();
+        for r in 0..iters {
+            let q = if r % 2 == 0 { &q1 } else { &q0 };
+            q.migrate(buf).unwrap().wait().unwrap();
+        }
+        times[i] = t0.elapsed().as_secs_f64() / iters as f64;
+    }
+    times[0] / times[1]
+}
+
+fn main() {
+    let manifest = Manifest::load_default().expect("make artifacts first");
+    report::figure("Fig 13", "RDMA speedup for distributed matmul merge");
+
+    println!("  -- DES (paper-scale, 56Gb cluster) --");
+    println!("  {:>8} {:>6} {:>6} {:>6} {:>6}", "N", "4 srv", "8 srv", "12 srv", "16 srv");
+    for n in [2048usize, 4096, 8192] {
+        let row: Vec<String> = [4usize, 8, 12, 16]
+            .iter()
+            .map(|&s| format!("{:>5.2}x", scenarios::fig13_rdma_speedup(n, s)))
+            .collect();
+        println!("  {n:>8} {}", row.join(" "));
+    }
+
+    println!("\n  -- real-mode cross-check (single merge migration, 2 servers) --");
+    for bytes in [1usize << 20, 32 << 20] {
+        let s = real_merge_speedup(bytes, &manifest);
+        println!(
+            "  {:>10} block: tcp/rdma = {s:>5.2}x",
+            poclr::util::fmt_bytes(bytes as u64)
+        );
+    }
+
+    println!("\n  paper: ~1.6x at 8192^2 with 4-8 servers; <=1x for small N or");
+    println!("         many servers (registration + key exchange overhead)");
+}

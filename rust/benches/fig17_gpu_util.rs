@@ -1,0 +1,68 @@
+//! Fig 17: FluidX3D GPU utilization, 1 GPU per node.
+//!
+//! Paper: multi-node utilization is in the order of 80%, matching the
+//! MLUPs increase of Fig 16; localhost and native sit near 100%.
+
+use poclr::apps::lbm;
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::Cluster;
+use poclr::net::LinkProfile;
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios::{self, FluidMode};
+
+fn main() {
+    let manifest = Manifest::load_default().expect("make artifacts first");
+    report::figure("Fig 17", "FluidX3D GPU utilization");
+
+    println!("  -- real runs (64x64 D2Q9, 30 steps; busy_ns / wall) --");
+    for n in [1usize, 2, 4] {
+        let cluster = Cluster::start(
+            n,
+            1,
+            LinkProfile::ETH_1G,
+            LinkProfile::LAN_100G,
+            false,
+            &manifest,
+            &["lbm_step_9x64x64", "lbm_step_9x32x64", "lbm_step_9x16x64"],
+        )
+        .unwrap();
+        let p = Platform::connect(
+            &cluster.addrs(),
+            ClientConfig {
+                link: LinkProfile::ETH_1G,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ctx = p.context();
+        let queues: Vec<_> = (0..n as u32).map(|s| ctx.queue(s, 0)).collect();
+        let (stats, _) = lbm::run(&ctx, &queues, 30, 11, lbm::ExchangeMode::Implicit).unwrap();
+        let busy: u64 = cluster.daemons.iter().map(|d| d.busy_ns()).sum();
+        let util = busy as f64 / (stats.elapsed.as_nanos() as f64 * n as f64);
+        println!(
+            "  {n} node(s): utilization {:>5.1}%  (toy grid => overhead-dominated)",
+            util * 100.0
+        );
+    }
+
+    println!("\n  -- DES projection (paper scale) --");
+    for mode in [
+        FluidMode::Native,
+        FluidMode::Localhost,
+        FluidMode::PoclrTcp,
+        FluidMode::PoclrRdma,
+    ] {
+        let row: Vec<String> = [1usize, 2, 3]
+            .iter()
+            .map(|&n| {
+                format!(
+                    "{:>4.0}%",
+                    scenarios::fig16_fluidx3d(mode, n, 100).utilization * 100.0
+                )
+            })
+            .collect();
+        println!("  {:<12} 1/2/3 nodes: {}", format!("{mode:?}"), row.join(" "));
+    }
+    println!("\n  paper: ~80% multi-node, ~100% single node / localhost / native");
+}

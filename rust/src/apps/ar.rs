@@ -1,0 +1,395 @@
+//! Real-time point-cloud AR rendering case study (paper §7.1, Fig 15).
+//!
+//! Pipeline per frame (paper Fig 14 application):
+//!
+//! 1. a *custom streaming device* on the server produces the next
+//!    VPCC-compressed frame into an OpenCL buffer (+ its content size),
+//! 2. the stream reaches both the phone (for reconstruction) and — in the
+//!    offloaded configs — the server's *custom decoder device*,
+//! 3. the phone decodes + reconstructs the points; the **depth sort** (the
+//!    computational hot spot) runs either on the phone's GPU or on the
+//!    remote GPU via the `ar_frame` artifact,
+//! 4. the sorted index list (i32[4096]) returns to the phone for
+//!    alpha-blended rendering, while AR pose tracking runs concurrently.
+//!
+//! What is measured vs modeled (DESIGN.md §3): the server-side path —
+//! stream device, decoder device, GPU sort, buffer migrations, link
+//! pacing — is *real execution* through the PoCL-R stack. Phone-side
+//! compute is real PJRT execution scaled by per-stage slowdown factors
+//! (a Snapdragon 855 is not this host), and the frame time is assembled
+//! from the phases below. Energy comes from [`crate::energy`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::apps::vpcc;
+use crate::client::{local::LocalQueue, ClientConfig, Platform};
+use crate::daemon::{Daemon, DaemonConfig};
+use crate::energy::{FrameActivity, PowerModel};
+use crate::net::LinkProfile;
+use crate::runtime::builtin::{StreamSource, VpccDecoder};
+use crate::runtime::executor::DeviceKind;
+use crate::runtime::pjrt::vec_into_bytes;
+use crate::runtime::Manifest;
+
+/// Frame geometry (matches the pc_* artifacts).
+pub const FRAME_H: usize = 64;
+pub const FRAME_W: usize = 64;
+pub const N_POINTS: usize = FRAME_H * FRAME_W;
+
+/// Conservative worst-case allocation for a compressed frame, modeling the
+/// paper's HD VPCC stream buffers ("sized conservatively" for the worst
+/// case — far beyond typical content). Without the content-size extension
+/// this whole allocation crosses the Wi-Fi link every frame; with it, only
+/// the few-KB compressed frame does. This is exactly the waste Fig 15's
+/// DYN bars remove.
+pub const FRAME_ALLOC: usize = 6 << 20;
+
+/// Phone-side calibration constants (documented in DESIGN.md §Fig15).
+///
+/// Slowdown factors scale *measured host execution* of the 4096-point
+/// artifacts to the paper's workload: (a) the case-study cloud is an HD
+/// VPCC stream of roughly 90k points (~22x our artifact's point count;
+/// the sort network grows n·log²n ≈ 29x), and (b) a Snapdragon 855's
+/// Adreno 640 runs these compute kernels ~10x slower than this host.
+pub mod phone {
+    /// Reconstruction is a cheap shader pass: point-count ratio dominates,
+    /// GPU parallelism absorbs most of it => ~12x over measured.
+    pub const RECONSTRUCT_SLOWDOWN: f64 = 12.0;
+    /// The depth sort is the hot spot the paper offloads: the case-study
+    /// cloud is a full-body capture (~250k points => ~70x the n·log²n
+    /// network work of our 4096-point artifact) times the mobile-GPU gap
+    /// (~10x) => ~700x over measured. This is what makes local sorting
+    /// untenable (the paper's local configs run at ~1-2 fps).
+    pub const SORT_SLOWDOWN: f64 = 700.0;
+    /// Hardware HEVC decoder latency per frame.
+    pub const DECODE_NS: u64 = 3_000_000;
+    /// AR pose tracking per frame (runs concurrently with the render path
+    /// when the GPU is free — i.e. when sorting is offloaded).
+    pub const TRACK_NS: u64 = 12_000_000;
+    /// Final alpha-blended render pass.
+    pub const RENDER_NS: u64 = 3_000_000;
+}
+
+/// The Fig 15 configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArConfig {
+    /// Everything on the phone, no AR tracking.
+    LocalIgpu,
+    /// Everything on the phone, with AR tracking.
+    LocalIgpuAr,
+    /// Sort offloaded; compressed frame routed through the phone
+    /// (download + re-upload: "host round-trip").
+    RemoteAr { p2p: bool, dyn_size: bool },
+}
+
+impl ArConfig {
+    pub fn label(self) -> &'static str {
+        match self {
+            ArConfig::LocalIgpu => "IGPU",
+            ArConfig::LocalIgpuAr => "IGPU+AR",
+            ArConfig::RemoteAr {
+                p2p: false,
+                dyn_size: false,
+            } => "rGPU+AR",
+            ArConfig::RemoteAr {
+                p2p: true,
+                dyn_size: false,
+            } => "rGPU+AR+P2P",
+            ArConfig::RemoteAr {
+                p2p: true,
+                dyn_size: true,
+            } => "rGPU+AR+P2P+DYN",
+            ArConfig::RemoteAr {
+                p2p: false,
+                dyn_size: true,
+            } => "rGPU+AR+DYN",
+        }
+    }
+
+    pub fn tracking(self) -> bool {
+        !matches!(self, ArConfig::LocalIgpu)
+    }
+}
+
+/// Results of one AR run.
+#[derive(Debug, Clone)]
+pub struct ArStats {
+    pub config_label: &'static str,
+    pub frames: usize,
+    pub fps: f64,
+    pub energy_mj_per_frame: f64,
+    pub avg_frame_ms: f64,
+    pub avg_tx_bytes: f64,
+    pub avg_rx_bytes: f64,
+}
+
+/// The AR harness: one server daemon exposing GPU + camera + decoder
+/// devices, one simulated phone (local PJRT queue + power model).
+pub struct ArHarness {
+    pub daemon: Daemon,
+    pub platform: Platform,
+    pub phone_gpu: LocalQueue,
+    pub power: PowerModel,
+    manifest: Manifest,
+    link: LinkProfile,
+    /// Calibrated host execution of the reconstruction artifact (ns).
+    recon_base_ns: u64,
+    /// Calibrated host execution of the depth-sort artifact (ns).
+    sort_base_ns: u64,
+}
+
+impl ArHarness {
+    /// `link` is the UE access network (the paper's Wi-Fi 6).
+    pub fn new(manifest: Manifest, link: LinkProfile, n_frames: usize, seed: u64) -> Result<ArHarness> {
+        let mut cfg = DaemonConfig::local(0, 1, manifest.clone());
+        cfg.client_link = link;
+        cfg.custom_devices = vec![
+            DeviceKind::Custom(Box::new(StreamSource::synthetic_padded(
+                FRAME_H,
+                FRAME_W,
+                n_frames,
+                seed,
+                FRAME_ALLOC,
+            ))),
+            DeviceKind::Custom(Box::new(VpccDecoder)),
+        ];
+        cfg.warm = vec!["ar_frame_64x64".into(), "pc_reconstruct_64x64".into()];
+        let daemon = Daemon::spawn(cfg)?;
+        let platform = Platform::connect(
+            &[daemon.addr()],
+            ClientConfig {
+                link,
+                ..Default::default()
+            },
+        )?;
+        let phone_gpu = LocalQueue::gpu(manifest.clone());
+        phone_gpu.warm("pc_reconstruct_64x64");
+        phone_gpu.warm("pc_depth_order_4096");
+        // Calibrate the phone-kernel base costs once (minimum of several
+        // runs: a stable lower bound, immune to scheduler noise that
+        // otherwise dominates the x600-scaled sort model).
+        let (recon_base_ns, sort_base_ns) = {
+            let g = phone_gpu.create_buffer(4 * N_POINTS);
+            let o = phone_gpu.create_buffer(4 * N_POINTS);
+            let pts = phone_gpu.create_buffer(4 * N_POINTS * 3);
+            let cam = phone_gpu.create_buffer(12);
+            let ord = phone_gpu.create_buffer(4 * N_POINTS);
+            phone_gpu.write(cam, &[0u8; 12]);
+            let mut recon = u64::MAX;
+            let mut sort = u64::MAX;
+            for _ in 0..7 {
+                let ts = phone_gpu.run("pc_reconstruct_64x64", &[g, o], &[pts])?;
+                recon = recon.min(ts.end_ns - ts.start_ns);
+                let ts = phone_gpu.run("pc_depth_order_4096", &[pts, cam], &[ord])?;
+                sort = sort.min(ts.end_ns - ts.start_ns);
+            }
+            (recon, sort)
+        };
+        Ok(ArHarness {
+            daemon,
+            platform,
+            phone_gpu,
+            power: PowerModel::default(),
+            manifest,
+            link,
+            recon_base_ns,
+            sort_base_ns,
+        })
+    }
+
+    /// Run `frames` frames under `config` and aggregate stats.
+    pub fn run(&self, config: ArConfig, frames: usize) -> Result<ArStats> {
+        let ctx = self.platform.context();
+        // Device indices on the server: 0 = GPU, 1 = camera, 2 = decoder.
+        let q_gpu = ctx.queue(0, 0);
+        let q_cam = ctx.queue(0, 1);
+        let q_dec = ctx.queue(0, 2);
+
+        // Stream output buffers (+ linked content size).
+        let (frame_buf, cs_buf) = ctx.create_buffer_with_content_size(FRAME_ALLOC as u64);
+        let geom_buf = ctx.create_buffer((4 * N_POINTS) as u64);
+        let occ_buf = ctx.create_buffer((4 * N_POINTS) as u64);
+        let cam_buf = ctx.create_buffer(12);
+        let pts_buf = ctx.create_buffer((4 * N_POINTS * 3) as u64);
+        let order_buf = ctx.create_buffer((4 * N_POINTS) as u64);
+
+        // Phone-local buffers.
+        let p_geom = self.phone_gpu.create_buffer(4 * N_POINTS);
+        let p_occ = self.phone_gpu.create_buffer(4 * N_POINTS);
+        let p_pts = self.phone_gpu.create_buffer(4 * N_POINTS * 3);
+        let p_cam = self.phone_gpu.create_buffer(12);
+        let p_order = self.phone_gpu.create_buffer(4 * N_POINTS);
+
+        let mut total_frame_ns = 0u64;
+        let mut total_energy_mj = 0f64;
+        let mut total_tx = 0u64;
+        let mut total_rx = 0u64;
+
+        // One untimed warm frame per configuration: first launches pay
+        // artifact compilation (server- and phone-side) which must not
+        // skew per-frame statistics.
+        let n_iters = frames + 1;
+        for fr in 0..n_iters {
+            let warmup = fr == 0;
+            // Camera pose orbits the scene.
+            let t = fr as f32 * 0.05;
+            let cam = [2.0 * t.cos(), 0.5, 2.0 * t.sin()];
+            let cam_bytes = vec_into_bytes(cam.to_vec());
+
+            let mut act = FrameActivity::default();
+
+            // ---- 1. stream_next on the camera device (server side) -----
+            q_cam
+                .run("vpcc.stream_next", &[], &[frame_buf, cs_buf])?
+                .wait()?;
+
+            // ---- 2. the phone ingests the compressed frame -------------
+            // Remote configs pull the stream through the OpenCL buffer:
+            // with DYN the content-size-aware read moves only meaningful
+            // bytes; without it the full conservative allocation crosses
+            // the access network every frame. Local configs receive the
+            // native content-sized stream (no OpenCL buffers involved).
+            let dyn_size = matches!(
+                config,
+                ArConfig::RemoteAr { dyn_size: true, .. } | ArConfig::LocalIgpu | ArConfig::LocalIgpuAr
+            );
+            let t_ingest = Instant::now();
+            let compressed = if dyn_size {
+                q_cam.read_content(frame_buf)?
+            } else {
+                q_cam.read(frame_buf)?
+            };
+            let ingest_ns = t_ingest.elapsed().as_nanos() as u64;
+            act.rx_bytes += compressed.len() as u64;
+            act.decode_ns += phone::DECODE_NS;
+            let frame = vpcc::decode_frame(&compressed)
+                .context("phone-side decode of streamed frame")?;
+
+            // ---- 3. phone reconstructs its own copy of the points ------
+            self.phone_gpu.write(p_geom, &vec_into_bytes(frame.geom.clone()));
+            self.phone_gpu.write(p_occ, &vec_into_bytes(frame.occ.clone()));
+            self.phone_gpu
+                .run("pc_reconstruct_64x64", &[p_geom, p_occ], &[p_pts])?;
+            let recon_ns =
+                (self.recon_base_ns as f64 * phone::RECONSTRUCT_SLOWDOWN) as u64;
+            act.gpu_ns += recon_ns;
+
+            // ---- 4. depth sort: local or offloaded ----------------------
+            let (sort_path_ns, order_len) = match config {
+                ArConfig::LocalIgpu | ArConfig::LocalIgpuAr => {
+                    self.phone_gpu.write(p_cam, &cam_bytes);
+                    self.phone_gpu
+                        .run("pc_depth_order_4096", &[p_pts, p_cam], &[p_order])?;
+                    let ns = (self.sort_base_ns as f64 * phone::SORT_SLOWDOWN) as u64;
+                    act.gpu_ns += ns;
+                    (ns, 0usize)
+                }
+                ArConfig::RemoteAr { p2p, .. } => {
+                    let t0 = Instant::now();
+                    if !p2p {
+                        // Host round-trip: the phone re-uploads the
+                        // compressed frame it just downloaded (trimmed to
+                        // the codec framing — the app knows its own
+                        // format), and the server decodes *that* copy.
+                        let flen = vpcc::compressed_len(&compressed)?;
+                        let up = ctx.create_buffer(flen as u64);
+                        q_dec.write(up, &compressed[..flen])?;
+                        act.tx_bytes += flen as u64;
+                        q_dec.run("vpcc.decode", &[up], &[geom_buf, occ_buf])?;
+                    } else {
+                        // P2P: the stream buffer flows directly from the
+                        // camera device to the decoder device server-side.
+                        q_dec.run("vpcc.decode", &[frame_buf], &[geom_buf, occ_buf])?;
+                    }
+                    q_gpu.write(cam_buf, &cam_bytes)?;
+                    let ev =
+                        q_gpu.run("ar_frame_64x64", &[geom_buf, occ_buf, cam_buf], &[pts_buf, order_buf])?;
+                    ev.wait()?;
+                    let order = q_gpu.read(order_buf)?;
+                    act.rx_bytes += order.len() as u64;
+                    act.tx_bytes += 64; // command traffic upper bound
+                    (t0.elapsed().as_nanos() as u64, order.len())
+                }
+            };
+
+            // ---- 5. assemble the frame time -----------------------------
+            // Tracking runs concurrently with the sort path when the sort
+            // is offloaded (the paper's stated benefit: the SoC is free
+            // for pose estimation); it serializes with local sorting
+            // because the GPU+CPU are saturated.
+            let serial_ns = ingest_ns + phone::DECODE_NS + recon_ns + phone::RENDER_NS;
+            let frame_ns = match config {
+                ArConfig::LocalIgpu => serial_ns + sort_path_ns,
+                ArConfig::LocalIgpuAr => serial_ns + sort_path_ns + phone::TRACK_NS,
+                ArConfig::RemoteAr { .. } => {
+                    serial_ns + sort_path_ns.max(phone::TRACK_NS)
+                }
+            };
+            act.frame_ns = frame_ns;
+            if config.tracking() {
+                act.track_ns = phone::TRACK_NS;
+            }
+
+            if !warmup {
+                total_frame_ns += frame_ns;
+                total_energy_mj += self.power.energy_mj(&act);
+                total_tx += act.tx_bytes;
+                total_rx += act.rx_bytes;
+            }
+            let _ = order_len;
+        }
+
+        let avg_frame_ns = total_frame_ns as f64 / frames as f64;
+        Ok(ArStats {
+            config_label: config.label(),
+            frames,
+            fps: 1e9 / avg_frame_ns,
+            energy_mj_per_frame: total_energy_mj / frames as f64,
+            avg_frame_ms: avg_frame_ns / 1e6,
+            avg_tx_bytes: total_tx as f64 / frames as f64,
+            avg_rx_bytes: total_rx as f64 / frames as f64,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn link(&self) -> LinkProfile {
+        self.link
+    }
+}
+
+/// An `Arc`-sharable default harness for tests/benches.
+pub fn default_harness(frames: usize) -> Result<Arc<ArHarness>> {
+    let manifest = Manifest::load_default()?;
+    Ok(Arc::new(ArHarness::new(
+        manifest,
+        LinkProfile::WIFI6,
+        frames,
+        42,
+    )?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_cover_all_configs() {
+        assert_eq!(ArConfig::LocalIgpu.label(), "IGPU");
+        assert_eq!(
+            ArConfig::RemoteAr {
+                p2p: true,
+                dyn_size: true
+            }
+            .label(),
+            "rGPU+AR+P2P+DYN"
+        );
+        assert!(!ArConfig::LocalIgpu.tracking());
+        assert!(ArConfig::LocalIgpuAr.tracking());
+    }
+}

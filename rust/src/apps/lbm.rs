@@ -1,0 +1,366 @@
+//! FluidX3D stand-in: multi-node D2Q9 lattice-Boltzmann simulation
+//! (paper §7.2, Figs 16-17).
+//!
+//! The paper runs FluidX3D's D3Q19 benchmark over 1-3 GPU servers; the
+//! boundary rows of each domain must be exchanged after every time step.
+//! PoCL-R's contribution is that the "new mode" — implicit buffer
+//! migration instead of manual download/upload through the host — lets the
+//! runtime route the exchange P2P between servers.
+//!
+//! This driver reproduces exactly that structure on the D2Q9 artifacts:
+//! each domain slab lives on one device; the step artifact returns the new
+//! slab *plus its two boundary rows as separate small buffers*; the next
+//! step's halo arguments are the neighbouring domains' boundary buffers —
+//! so the client driver's implicit migration moves 9*W floats per neighbour
+//! per step, server-to-server, never through the client. The "manual" mode
+//! (paper: FluidX3D's original implementation) downloads boundary rows to
+//! the client and re-uploads them, for comparison.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::client::{Buffer, Context, Event, Queue};
+use crate::runtime::pjrt::vec_into_bytes;
+use crate::util::rng::Rng;
+
+pub const W: usize = 64;
+pub const GRID_H: usize = 64;
+
+/// D2Q9 velocity set (must match python/compile/kernels/ref.py).
+pub const EX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];
+pub const EY: [i32; 9] = [0, 0, 1, 0, -1, 1, 1, -1, -1];
+pub const WEIGHT: [f32; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+/// Map a slab height to its step artifact.
+pub fn slab_artifact(h: usize) -> Result<&'static str> {
+    Ok(match h {
+        64 => "lbm_step_9x64x64",
+        32 => "lbm_step_9x32x64",
+        16 => "lbm_step_9x16x64",
+        other => bail!("no lbm artifact for slab height {other}"),
+    })
+}
+
+/// Initial condition: perturbed equilibrium, deterministic by seed.
+/// Layout f32[9][H][W] flattened.
+pub fn initial_state(h: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut rho = vec![0f32; h * W];
+    let mut ux = vec![0f32; h * W];
+    let mut uy = vec![0f32; h * W];
+    for i in 0..h * W {
+        rho[i] = 1.0 + 0.05 * rng.next_normal();
+        ux[i] = 0.05 * rng.next_normal();
+        uy[i] = 0.05 * rng.next_normal();
+    }
+    let mut f = vec![0f32; 9 * h * W];
+    for q in 0..9 {
+        for i in 0..h * W {
+            let eu = EX[q] as f32 * ux[i] + EY[q] as f32 * uy[i];
+            let usq = ux[i] * ux[i] + uy[i] * uy[i];
+            f[q * h * W + i] =
+                WEIGHT[q] * rho[i] * (1.0 + 3.0 * eu + 4.5 * eu * eu - 1.5 * usq);
+        }
+    }
+    f
+}
+
+/// Pure-rust reference step over the full periodic grid (correctness
+/// oracle for the distributed runs). omega = 1.
+pub fn reference_step(f: &[f32], h: usize) -> Vec<f32> {
+    let hw = h * W;
+    let mut fs = vec![0f32; 9 * hw];
+    for q in 0..9 {
+        for y in 0..h {
+            for x in 0..W {
+                // pull: f_q(x) <- f_q(x - e_q), periodic both axes
+                let sx = ((x as i32 - EX[q]).rem_euclid(W as i32)) as usize;
+                let sy = ((y as i32 - EY[q]).rem_euclid(h as i32)) as usize;
+                fs[q * hw + y * W + x] = f[q * hw + sy * W + sx];
+            }
+        }
+    }
+    let mut out = vec![0f32; 9 * hw];
+    for i in 0..hw {
+        let mut rho = 0f32;
+        let mut jx = 0f32;
+        let mut jy = 0f32;
+        for q in 0..9 {
+            let v = fs[q * hw + i];
+            rho += v;
+            jx += EX[q] as f32 * v;
+            jy += EY[q] as f32 * v;
+        }
+        let ux = jx / rho;
+        let uy = jy / rho;
+        let usq = ux * ux + uy * uy;
+        for q in 0..9 {
+            let eu = EX[q] as f32 * ux + EY[q] as f32 * uy;
+            let feq = WEIGHT[q] * rho * (1.0 + 3.0 * eu + 4.5 * eu * eu - 1.5 * usq);
+            // omega = 1: f' = feq
+            out[q * hw + i] = fs[q * hw + i] + 1.0 * (feq - fs[q * hw + i]);
+        }
+    }
+    out
+}
+
+/// Extract row `y` of a flattened slab as an f32[9][W] halo buffer.
+pub fn extract_row(f: &[f32], h: usize, y: usize) -> Vec<f32> {
+    let mut out = vec![0f32; 9 * W];
+    for q in 0..9 {
+        out[q * W..(q + 1) * W].copy_from_slice(&f[q * h * W + y * W..q * h * W + y * W + W]);
+    }
+    out
+}
+
+/// How boundary rows travel between domains each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Implicit P2P migration by the runtime (the paper's "new mode").
+    Implicit,
+    /// Manual circulation through the client (FluidX3D's original mode):
+    /// download each boundary row, re-upload it to the neighbour.
+    HostRoundtrip,
+}
+
+/// Stats of one distributed LBM run.
+#[derive(Debug, Clone)]
+pub struct LbmStats {
+    pub domains: usize,
+    pub steps: usize,
+    /// Millions of lattice updates per second (the paper's Fig 16 metric).
+    pub mlups: f64,
+    pub elapsed: std::time::Duration,
+}
+
+/// One domain's rotating buffer set.
+struct Domain {
+    q: Queue,
+    h: usize,
+    f: Buffer,
+    top_out: Buffer,
+    bot_out: Buffer,
+}
+
+/// Run `steps` of the simulation decomposed over `queues` (row slabs).
+/// Returns stats and the final full grid (rows in domain order).
+pub fn run(
+    ctx: &Context,
+    queues: &[Queue],
+    steps: usize,
+    seed: u64,
+    mode: ExchangeMode,
+) -> Result<(LbmStats, Vec<f32>)> {
+    let d = queues.len();
+    if GRID_H % d != 0 {
+        bail!("{GRID_H} rows do not split over {d} domains");
+    }
+    let h = GRID_H / d;
+    let artifact = slab_artifact(h)?;
+    let full = initial_state(GRID_H, seed);
+
+    // Set up each domain: slab buffer + initial halo rows (periodic wrap).
+    let mut domains: Vec<Domain> = Vec::new();
+    for (i, q) in queues.iter().enumerate() {
+        let slab: Vec<f32> = {
+            // rows i*h .. (i+1)*h of the full grid, per direction plane
+            let mut s = vec![0f32; 9 * h * W];
+            for qd in 0..9 {
+                let src = &full[qd * GRID_H * W + i * h * W..qd * GRID_H * W + (i + 1) * h * W];
+                s[qd * h * W..(qd + 1) * h * W].copy_from_slice(src);
+            }
+            s
+        };
+        let f = ctx.create_buffer((4 * 9 * h * W) as u64);
+        q.write(f, &vec_into_bytes(slab))?;
+        // Boundary-out buffers start as this domain's own edge rows so the
+        // first step's halo migration has real contents.
+        let top_out = ctx.create_buffer((4 * 9 * W) as u64);
+        let bot_out = ctx.create_buffer((4 * 9 * W) as u64);
+        let slab_ref: Vec<f32> = {
+            let mut s = vec![0f32; 9 * h * W];
+            for qd in 0..9 {
+                let src = &full[qd * GRID_H * W + i * h * W..qd * GRID_H * W + (i + 1) * h * W];
+                s[qd * h * W..(qd + 1) * h * W].copy_from_slice(src);
+            }
+            s
+        };
+        q.write(top_out, &vec_into_bytes(extract_row(&slab_ref, h, 0)))?;
+        q.write(bot_out, &vec_into_bytes(extract_row(&slab_ref, h, h - 1)))?;
+        domains.push(Domain {
+            q: q.clone(),
+            h,
+            f,
+            top_out,
+            bot_out,
+        });
+    }
+    for dom in &domains {
+        dom.q.finish()?;
+    }
+
+    // Untimed warm step: the first launch waits behind the daemon's async
+    // artifact compilation; that must not pollute the MLUPs measurement.
+    // The warm step runs on scratch outputs and does not advance state.
+    {
+        let mut warm_events = Vec::new();
+        for dom in &domains {
+            let f_s = ctx.create_buffer((4 * 9 * dom.h * W) as u64);
+            let t_s = ctx.create_buffer((4 * 9 * W) as u64);
+            let b_s = ctx.create_buffer((4 * 9 * W) as u64);
+            warm_events.push(dom.q.run(
+                artifact,
+                &[dom.f, dom.top_out, dom.bot_out],
+                &[f_s, t_s, b_s],
+            )?);
+        }
+        for ev in &warm_events {
+            ev.wait()?;
+        }
+    }
+
+    let t0 = Instant::now();
+    for _step in 0..steps {
+        let mut events: Vec<Event> = Vec::new();
+        let mut next: Vec<(Buffer, Buffer, Buffer)> = Vec::new();
+        // Snapshot the boundary buffers of this generation.
+        let tops: Vec<Buffer> = domains.iter().map(|d| d.top_out).collect();
+        let bots: Vec<Buffer> = domains.iter().map(|d| d.bot_out).collect();
+        for (i, dom) in domains.iter().enumerate() {
+            let up = (i + d - 1) % d; // neighbour above
+            let down = (i + 1) % d; // neighbour below
+            // halo_top = bottom boundary of the domain above; halo_bot =
+            // top boundary of the domain below.
+            let (halo_top, halo_bot) = match mode {
+                ExchangeMode::Implicit => (bots[up], tops[down]),
+                ExchangeMode::HostRoundtrip => {
+                    // Manual circulation: read rows via the client and
+                    // upload as fresh buffers on this domain's server.
+                    let tb = dom.q.read(bots[up])?;
+                    let bb = dom.q.read(tops[down])?;
+                    let ht = ctx.create_buffer((4 * 9 * W) as u64);
+                    let hb = ctx.create_buffer((4 * 9 * W) as u64);
+                    dom.q.write(ht, &tb)?;
+                    dom.q.write(hb, &bb)?;
+                    (ht, hb)
+                }
+            };
+            let f_new = ctx.create_buffer((4 * 9 * dom.h * W) as u64);
+            let t_new = ctx.create_buffer((4 * 9 * W) as u64);
+            let b_new = ctx.create_buffer((4 * 9 * W) as u64);
+            let ev = dom
+                .q
+                .run(artifact, &[dom.f, halo_top, halo_bot], &[f_new, t_new, b_new])?;
+            events.push(ev);
+            next.push((f_new, t_new, b_new));
+        }
+        for ev in &events {
+            ev.wait()?;
+        }
+        for (dom, (f_new, t_new, b_new)) in domains.iter_mut().zip(next) {
+            // Recycle the previous generation's buffers so daemon memory
+            // stays bounded over long runs.
+            ctx.release_buffer(dom.f)?;
+            ctx.release_buffer(dom.top_out)?;
+            ctx.release_buffer(dom.bot_out)?;
+            dom.f = f_new;
+            dom.top_out = t_new;
+            dom.bot_out = b_new;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let mlups = (GRID_H * W * steps) as f64 / elapsed.as_secs_f64() / 1e6;
+
+    // Collect the final grid.
+    let mut out = vec![0f32; 9 * GRID_H * W];
+    for (i, dom) in domains.iter().enumerate() {
+        let bytes = dom.q.read(dom.f)?;
+        let slab: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        for qd in 0..9 {
+            let dst = &mut out[qd * GRID_H * W + i * h * W..qd * GRID_H * W + (i + 1) * h * W];
+            dst.copy_from_slice(&slab[qd * h * W..(qd + 1) * h * W]);
+        }
+    }
+
+    Ok((
+        LbmStats {
+            domains: d,
+            steps,
+            mlups,
+            elapsed,
+        },
+        out,
+    ))
+}
+
+/// Total mass of a grid (conserved quantity).
+pub fn total_mass(f: &[f32]) -> f64 {
+    f.iter().map(|v| *v as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_mass_is_near_hw() {
+        let f = initial_state(16, 3);
+        let m = total_mass(&f);
+        // rho ~ N(1, 0.05) per cell
+        assert!((m - (16 * W) as f64).abs() < 0.1 * (16 * W) as f64, "{m}");
+    }
+
+    #[test]
+    fn reference_step_conserves_mass() {
+        let f = initial_state(16, 4);
+        let m0 = total_mass(&f);
+        let f1 = reference_step(&f, 16);
+        let m1 = total_mass(&f1);
+        assert!((m0 - m1).abs() < 1e-3, "{m0} vs {m1}");
+    }
+
+    #[test]
+    fn uniform_equilibrium_is_fixed_point() {
+        let hw = 8 * W;
+        let mut f = vec![0f32; 9 * hw];
+        for q in 0..9 {
+            for i in 0..hw {
+                f[q * hw + i] = WEIGHT[q];
+            }
+        }
+        let f1 = reference_step(&f, 8);
+        for (a, b) in f.iter().zip(&f1) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn extract_row_picks_the_right_plane_rows() {
+        let h = 4;
+        let mut f = vec![0f32; 9 * h * W];
+        for q in 0..9 {
+            for y in 0..h {
+                for x in 0..W {
+                    f[q * h * W + y * W + x] = (q * 100 + y) as f32;
+                }
+            }
+        }
+        let row = extract_row(&f, h, 2);
+        assert_eq!(row[0], 2.0); // q=0, y=2
+        assert_eq!(row[8 * W + 5], 802.0); // q=8, y=2
+    }
+}

@@ -1,0 +1,11 @@
+//! Application workloads — the paper's case studies and benchmark drivers.
+//!
+//! * [`matmul`] — distributed large matrix multiplication (§6.4)
+//! * [`lbm`] — FluidX3D stand-in: multi-node D2Q9 lattice-Boltzmann (§7.2)
+//! * [`ar`] — smartphone point-cloud AR rendering with offloaded depth
+//!   sort (§7.1)
+//! * [`vpcc`] — the synthetic VPCC-like stream codec feeding the AR case
+pub mod ar;
+pub mod lbm;
+pub mod matmul;
+pub mod vpcc;

@@ -1,0 +1,237 @@
+//! Synthetic VPCC-like point-cloud stream codec (DESIGN.md §3).
+//!
+//! The paper's AR case study (§7.1) streams a Video-based Point Cloud
+//! Compression (HEVC) file; the server daemon exposes the hardware decoder
+//! as a *custom OpenCL device* with a built-in `decode` kernel, plus a
+//! second custom device that feeds stream chunks into OpenCL buffers.
+//!
+//! We reproduce the pipeline with a synthetic codec that preserves the two
+//! properties the evaluation depends on:
+//!
+//! * frames decode into a geometry (depth) plane + occupancy plane that the
+//!   `pc_reconstruct_*` artifact back-projects into points, and
+//! * the compressed size **varies strongly frame to frame** (run-length
+//!   encoding of an animated scene), which is what makes the
+//!   `cl_pocl_content_size` extension matter (Fig 15 "DYN" bars).
+//!
+//! Codec format (all little-endian):
+//! `u16 h ‖ u16 w ‖ u32 n_runs ‖ n_runs × (u16 run_len, u8 occ, u8 depth_q)`
+//! Depth is quantized to 8 bits in [0, 2): the decoded plane is
+//! `depth_q / 128.0`.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// A decoded frame: geometry + occupancy planes, f32 row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub h: usize,
+    pub w: usize,
+    pub geom: Vec<f32>,
+    pub occ: Vec<f32>,
+}
+
+/// Quantize depth to the codec's 8-bit representation.
+fn quant(d: f32) -> u8 {
+    (d.clamp(0.0, 1.999) * 128.0) as u8
+}
+
+fn dequant(q: u8) -> f32 {
+    q as f32 / 128.0
+}
+
+/// Encode a frame with run-length compression over (occ, depth_q) texels.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    assert_eq!(frame.geom.len(), frame.h * frame.w);
+    let mut out = Vec::with_capacity(1024);
+    out.extend_from_slice(&(frame.h as u16).to_le_bytes());
+    out.extend_from_slice(&(frame.w as u16).to_le_bytes());
+    let n_runs_pos = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes());
+
+    let texel = |i: usize| -> (u8, u8) {
+        let occ = frame.occ[i] > 0.5;
+        (occ as u8, if occ { quant(frame.geom[i]) } else { 0 })
+    };
+    let n = frame.h * frame.w;
+    let mut n_runs = 0u32;
+    let mut i = 0;
+    while i < n {
+        let (occ, q) = texel(i);
+        let mut run = 1usize;
+        while i + run < n && run < u16::MAX as usize && texel(i + run) == (occ, q) {
+            run += 1;
+        }
+        out.extend_from_slice(&(run as u16).to_le_bytes());
+        out.push(occ);
+        out.push(q);
+        n_runs += 1;
+        i += run;
+    }
+    out[n_runs_pos..n_runs_pos + 4].copy_from_slice(&n_runs.to_le_bytes());
+    out
+}
+
+/// Decode a compressed frame buffer (the `decode` built-in kernel's core).
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
+    if bytes.len() < 8 {
+        bail!("compressed frame truncated: {} bytes", bytes.len());
+    }
+    let h = u16::from_le_bytes(bytes[0..2].try_into().unwrap()) as usize;
+    let w = u16::from_le_bytes(bytes[2..4].try_into().unwrap()) as usize;
+    let n_runs = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let n = h * w;
+    if n == 0 || n > 1 << 24 {
+        bail!("bad frame dims {h}x{w}");
+    }
+    let mut geom = Vec::with_capacity(n);
+    let mut occ = Vec::with_capacity(n);
+    let mut off = 8;
+    for _ in 0..n_runs {
+        if off + 4 > bytes.len() {
+            bail!("compressed frame truncated mid-run");
+        }
+        let run = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap()) as usize;
+        let o = bytes[off + 2];
+        let q = bytes[off + 3];
+        off += 4;
+        for _ in 0..run {
+            occ.push(o as f32);
+            geom.push(if o > 0 { dequant(q) } else { 0.0 });
+        }
+    }
+    if geom.len() != n {
+        bail!("run lengths cover {} of {} texels", geom.len(), n);
+    }
+    Ok(Frame { h, w, geom, occ })
+}
+
+/// Generate an animated synthetic scene: a blob of occupied texels orbiting
+/// the frame center, with depth varying smoothly. Produces the
+/// variable-rate compression profile the content-size extension exploits.
+pub struct SceneGenerator {
+    pub h: usize,
+    pub w: usize,
+    t: f32,
+    rng: Rng,
+}
+
+impl SceneGenerator {
+    pub fn new(h: usize, w: usize, seed: u64) -> Self {
+        SceneGenerator {
+            h,
+            w,
+            t: 0.0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Produce the next frame of the animation.
+    pub fn next_frame(&mut self) -> Frame {
+        let (h, w) = (self.h, self.w);
+        self.t += 0.08;
+        let cx = w as f32 / 2.0 + (w as f32 / 4.0) * self.t.cos();
+        let cy = h as f32 / 2.0 + (h as f32 / 4.0) * self.t.sin();
+        // Radius (and therefore compressed size) oscillates strongly.
+        let r = (h.min(w) as f32 / 8.0) * (1.5 + (self.t * 0.7).sin());
+        let mut geom = vec![0.0f32; h * w];
+        let mut occ = vec![0.0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                let dx = x as f32 - cx;
+                let dy = y as f32 - cy;
+                let d2 = dx * dx + dy * dy;
+                if d2 < r * r {
+                    let i = y * w + x;
+                    occ[i] = 1.0;
+                    let base = 1.0 + 0.5 * (self.t + dx * 0.1).sin();
+                    let noise = 0.01 * self.rng.next_f32();
+                    geom[i] = (base + noise).clamp(0.05, 1.99);
+                }
+            }
+        }
+        Frame { h, w, geom, occ }
+    }
+
+    /// Pre-render a whole stream of encoded frames.
+    pub fn encode_stream(&mut self, n_frames: usize) -> Vec<Vec<u8>> {
+        (0..n_frames).map(|_| encode_frame(&self.next_frame())).collect()
+    }
+}
+
+/// Worst-case compressed size for an h x w frame (every texel its own run).
+pub fn max_compressed_size(h: usize, w: usize) -> usize {
+    8 + h * w * 4
+}
+
+/// Length of the encoded frame at the head of `bytes` (codec framing:
+/// header + n_runs * 4). Lets a forwarder trim conservative padding
+/// without decoding.
+pub fn compressed_len(bytes: &[u8]) -> Result<usize> {
+    if bytes.len() < 8 {
+        bail!("truncated header");
+    }
+    let n_runs = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let len = 8 + n_runs * 4;
+    if len > bytes.len() {
+        bail!("framing exceeds buffer: {len} > {}", bytes.len());
+    }
+    Ok(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_random_frame() {
+        let mut gen = SceneGenerator::new(32, 32, 7);
+        let frame = gen.next_frame();
+        let enc = encode_frame(&frame);
+        let dec = decode_frame(&enc).unwrap();
+        assert_eq!(dec.h, 32);
+        assert_eq!(dec.occ, frame.occ);
+        // geometry quantized to 1/128
+        for (a, b) in dec.geom.iter().zip(&frame.geom) {
+            assert!((a - b).abs() <= 1.0 / 128.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn compression_size_varies_across_frames() {
+        let mut gen = SceneGenerator::new(64, 64, 3);
+        let sizes: Vec<usize> = gen.encode_stream(40).iter().map(|f| f.len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max > min * 2, "expected variable rate, got {min}..{max}");
+        assert!(max < max_compressed_size(64, 64));
+    }
+
+    #[test]
+    fn empty_frame_compresses_tiny() {
+        let f = Frame {
+            h: 64,
+            w: 64,
+            geom: vec![0.0; 4096],
+            occ: vec![0.0; 4096],
+        };
+        let enc = encode_frame(&f);
+        assert!(enc.len() <= 8 + 4, "all-empty should be one run: {}", enc.len());
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        let mut gen = SceneGenerator::new(16, 16, 1);
+        let enc = encode_frame(&gen.next_frame());
+        assert!(decode_frame(&enc[..enc.len() - 3]).is_err());
+        assert!(decode_frame(&enc[..4]).is_err());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = SceneGenerator::new(32, 32, 5).encode_stream(3);
+        let b = SceneGenerator::new(32, 32, 5).encode_stream(3);
+        assert_eq!(a, b);
+    }
+}

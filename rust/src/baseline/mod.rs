@@ -1,0 +1,3 @@
+//! Comparison baselines reimplemented from their papers' descriptions
+//! (the originals are unavailable / segfault, as the paper also found).
+pub mod snucl;

@@ -1,0 +1,154 @@
+//! The "native driver" baseline: the same buffer/kernel surface as the
+//! remote [`super::Queue`], but executing directly on an in-process device
+//! with no network, no daemon, no protocol — what the paper labels
+//! *Native* in Figs 8-10 and 16 (calling the NVIDIA driver directly), and
+//! also the UE-local fallback device of Fig 4.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context as _, Result};
+
+use crate::proto::Timestamps;
+use crate::runtime::executor::{DeviceExecutor, DeviceKind, ExecRequest};
+use crate::runtime::Manifest;
+use crate::util::{fresh_id, now_ns};
+
+/// Handle to a local buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalBuffer(pub u64);
+
+/// A synchronous local execution queue over one device.
+pub struct LocalQueue {
+    exec: DeviceExecutor,
+    buffers: Mutex<HashMap<u64, Arc<Vec<u8>>>>,
+}
+
+impl LocalQueue {
+    /// A local PJRT-backed device.
+    pub fn gpu(manifest: Manifest) -> LocalQueue {
+        LocalQueue {
+            exec: DeviceExecutor::spawn(DeviceKind::Gpu, manifest, "local".into()),
+            buffers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A local custom device (decoder / camera).
+    pub fn custom(kind: DeviceKind, manifest: Manifest) -> LocalQueue {
+        LocalQueue {
+            exec: DeviceExecutor::spawn(kind, manifest, "local-custom".into()),
+            buffers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn warm(&self, artifact: &str) {
+        self.exec.warm(artifact);
+    }
+
+    pub fn create_buffer(&self, size: usize) -> LocalBuffer {
+        let id = fresh_id();
+        self.buffers
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(vec![0u8; size]));
+        LocalBuffer(id)
+    }
+
+    pub fn write(&self, buf: LocalBuffer, data: &[u8]) {
+        self.buffers
+            .lock()
+            .unwrap()
+            .insert(buf.0, Arc::new(data.to_vec()));
+    }
+
+    pub fn read(&self, buf: LocalBuffer) -> Result<Vec<u8>> {
+        Ok(self
+            .buffers
+            .lock()
+            .unwrap()
+            .get(&buf.0)
+            .context("unknown local buffer")?
+            .as_ref()
+            .clone())
+    }
+
+    /// Synchronously run an artifact; returns event-profiling-style
+    /// timestamps (queued==submit==host enqueue time).
+    pub fn run(
+        &self,
+        artifact: &str,
+        args: &[LocalBuffer],
+        outs: &[LocalBuffer],
+    ) -> Result<Timestamps> {
+        let queued_ns = now_ns();
+        let inputs = {
+            let m = self.buffers.lock().unwrap();
+            args.iter()
+                .map(|b| m.get(&b.0).cloned().context("unknown input buffer"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        let (tx, rx) = channel();
+        self.exec.submit(ExecRequest {
+            tag: 0,
+            artifact: artifact.to_string(),
+            inputs,
+            reply: tx,
+        });
+        let outcome = rx.recv().context("device gone")?;
+        let outputs = outcome.outputs?;
+        anyhow::ensure!(
+            outputs.len() == outs.len(),
+            "artifact returned {} outputs, caller bound {}",
+            outputs.len(),
+            outs.len()
+        );
+        let mut m = self.buffers.lock().unwrap();
+        for (o, bytes) in outs.iter().zip(outputs) {
+            m.insert(o.0, Arc::new(bytes));
+        }
+        Ok(Timestamps {
+            queued_ns,
+            submit_ns: queued_ns,
+            start_ns: outcome.start_ns,
+            end_ns: outcome.end_ns,
+        })
+    }
+
+    /// Device busy time so far (utilization metric).
+    pub fn busy_ns(&self) -> u64 {
+        self.exec.busy_ns.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_increment_roundtrip() {
+        let Ok(manifest) = Manifest::load_default() else {
+            return;
+        };
+        let q = LocalQueue::gpu(manifest);
+        q.warm("increment_s32_1");
+        let a = q.create_buffer(4);
+        let b = q.create_buffer(4);
+        q.write(a, &5i32.to_le_bytes());
+        let ts = q.run("increment_s32_1", &[a], &[b]).unwrap();
+        assert!(ts.end_ns >= ts.start_ns);
+        let out = q.read(b).unwrap();
+        assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 6);
+    }
+
+    #[test]
+    fn local_output_count_mismatch() {
+        let Ok(manifest) = Manifest::load_default() else {
+            return;
+        };
+        let q = LocalQueue::gpu(manifest);
+        let a = q.create_buffer(4);
+        q.write(a, &1i32.to_le_bytes());
+        assert!(q.run("increment_s32_1", &[a], &[]).is_err());
+    }
+}

@@ -1,0 +1,643 @@
+//! The PoCL-R *client remote driver* (paper §4.2) and its user-facing API.
+//!
+//! Linking an application against this module is the reproduction of
+//! "linking against PoCL-R": remote devices appear as ordinary queue/buffer
+//! /kernel handles, commands are pushed to the owning server immediately,
+//! buffer migrations between servers are injected automatically (sent to
+//! the *source* server, pushed P2P to the destination — §5.1), and
+//! connection loss is handled with session resume + command replay (§4.3).
+//!
+//! * [`Platform::connect`] dials the daemons and performs handshakes.
+//! * [`Context`] tracks buffer residency and the event task graph.
+//! * [`Queue`] is an (in-order by default) command queue bound to one
+//!   remote device.
+//! * [`local`] offers the same queue API over an in-process device — the
+//!   "native driver" baseline of Figs 8-10 and the UE-local fallback of
+//!   Fig 4.
+
+pub mod local;
+pub mod server_conn;
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::net::LinkProfile;
+use crate::ocl::Residency;
+use crate::proto::{Body, EventStatus, Timestamps};
+use crate::sched::{EventTable, WaitOutcome};
+use crate::util::fresh_id;
+
+use server_conn::ServerConn;
+
+/// Client-side configuration.
+#[derive(Clone)]
+pub struct ClientConfig {
+    /// Link shaping towards the servers (UE access network).
+    pub link: LinkProfile,
+    /// Commands kept for replay after reconnect.
+    pub backup_depth: usize,
+    /// Attempt session resume on connection loss.
+    pub reconnect: bool,
+    /// Use RDMA for server-to-server migrations.
+    pub rdma_migrations: bool,
+    /// Disable the content-size optimization even when buffers are linked
+    /// (Fig 15 ablation).
+    pub content_size_enabled: bool,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            link: LinkProfile::LOOPBACK,
+            backup_depth: 128,
+            reconnect: true,
+            rdma_migrations: false,
+            content_size_enabled: true,
+        }
+    }
+}
+
+/// Shared driver state.
+pub struct PlatformInner {
+    pub servers: Vec<Arc<ServerConn>>,
+    pub events: Arc<EventTable>,
+    pub read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    pub cfg: ClientConfig,
+}
+
+/// The OpenCL-style platform: the set of reachable remote servers.
+#[derive(Clone)]
+pub struct Platform {
+    inner: Arc<PlatformInner>,
+}
+
+impl Platform {
+    /// Dial every server and perform the session handshake.
+    pub fn connect(addrs: &[String], cfg: ClientConfig) -> Result<Platform> {
+        let events = Arc::new(EventTable::new());
+        let read_results = Arc::new(Mutex::new(HashMap::new()));
+        let mut servers = Vec::new();
+        for (i, addr) in addrs.iter().enumerate() {
+            servers.push(ServerConn::connect(
+                i as u32,
+                addr.clone(),
+                cfg.clone(),
+                Arc::clone(&events),
+                Arc::clone(&read_results),
+            )?);
+        }
+        if servers.is_empty() {
+            bail!("no servers given");
+        }
+        Ok(Platform {
+            inner: Arc::new(PlatformInner {
+                servers,
+                events,
+                read_results,
+                cfg,
+            }),
+        })
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.inner.servers.len()
+    }
+
+    /// Devices exposed by server `s` (count from its Welcome).
+    pub fn n_devices(&self, s: u32) -> u32 {
+        self.inner.servers[s as usize].n_devices()
+    }
+
+    /// Is the given server currently reachable ("device available")?
+    pub fn available(&self, s: u32) -> bool {
+        self.inner.servers[s as usize].available()
+    }
+
+    /// Create the context spanning all servers.
+    pub fn context(&self) -> Context {
+        Context {
+            plat: Arc::clone(&self.inner),
+            buffers: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+}
+
+struct BufState {
+    size: u64,
+    residency: Residency,
+    /// Event that produced the current contents (0 = none yet).
+    last_event: u64,
+    /// Linked content-size buffer id (0 = none).
+    content_size_buf: u64,
+    allocated_on: HashSet<u32>,
+}
+
+/// OpenCL-style context: owns buffers and their residency tracking.
+#[derive(Clone)]
+pub struct Context {
+    plat: Arc<PlatformInner>,
+    buffers: Arc<Mutex<HashMap<u64, BufState>>>,
+}
+
+/// Handle to a context buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Buffer(pub u64);
+
+/// Handle to an event; waitable and profilable.
+#[derive(Clone)]
+pub struct Event {
+    pub id: u64,
+    events: Arc<EventTable>,
+}
+
+impl std::fmt::Debug for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Event")
+            .field("id", &self.id)
+            .field("status", &self.status())
+            .finish()
+    }
+}
+
+impl Event {
+    pub fn wait(&self) -> Result<()> {
+        match self.events.wait(self.id) {
+            WaitOutcome::Complete => Ok(()),
+            WaitOutcome::Failed => bail!("event {} failed", self.id),
+            WaitOutcome::TimedOut => bail!("event {} timed out", self.id),
+        }
+    }
+
+    pub fn wait_timeout(&self, t: Duration) -> WaitOutcome {
+        self.events.wait_timeout(self.id, t)
+    }
+
+    /// OpenCL profiling timestamps (daemon clock, ns).
+    pub fn profiling(&self) -> Option<Timestamps> {
+        self.events.timestamps(self.id)
+    }
+
+    pub fn status(&self) -> Option<EventStatus> {
+        self.events.status(self.id)
+    }
+}
+
+impl Context {
+    /// Allocate a buffer (lazy per-server allocation happens on first use).
+    pub fn create_buffer(&self, size: u64) -> Buffer {
+        let id = fresh_id();
+        self.buffers.lock().unwrap().insert(
+            id,
+            BufState {
+                size,
+                residency: Residency::Undefined,
+                last_event: 0,
+                content_size_buf: 0,
+                allocated_on: HashSet::new(),
+            },
+        );
+        Buffer(id)
+    }
+
+    /// Allocate a buffer with a linked `cl_pocl_content_size` buffer.
+    /// Returns `(payload, content_size_buffer)`.
+    pub fn create_buffer_with_content_size(&self, size: u64) -> (Buffer, Buffer) {
+        let cs = self.create_buffer(4);
+        let id = fresh_id();
+        self.buffers.lock().unwrap().insert(
+            id,
+            BufState {
+                size,
+                residency: Residency::Undefined,
+                last_event: 0,
+                content_size_buf: if self.plat.cfg.content_size_enabled {
+                    cs.0
+                } else {
+                    0
+                },
+                allocated_on: HashSet::new(),
+            },
+        );
+        (Buffer(id), cs)
+    }
+
+    pub fn buffer_size(&self, buf: Buffer) -> u64 {
+        self.buffers
+            .lock()
+            .unwrap()
+            .get(&buf.0)
+            .map(|b| b.size)
+            .unwrap_or(0)
+    }
+
+    /// Release a buffer: frees the server-side allocations (fire-and-
+    /// forget `FreeBuffer` to every server that holds one) and drops the
+    /// client-side tracking. Long-running drivers (the LBM loop creates
+    /// three buffers per domain per step) call this to bound daemon
+    /// memory.
+    pub fn release_buffer(&self, buf: Buffer) -> Result<()> {
+        let st = self.buffers.lock().unwrap().remove(&buf.0);
+        if let Some(st) = st {
+            for server in st.allocated_on {
+                if let Ok(conn) = self.conn(server) {
+                    // Ordered behind the producing event so in-flight
+                    // kernels never lose their operands.
+                    let wait = if st.last_event != 0 {
+                        vec![st.last_event]
+                    } else {
+                        Vec::new()
+                    };
+                    conn.send_command(0, 0, wait, Body::FreeBuffer { buf: buf.0 }, Vec::new())
+                        .ok();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn residency(&self, buf: Buffer) -> Residency {
+        self.buffers
+            .lock()
+            .unwrap()
+            .get(&buf.0)
+            .map(|b| b.residency)
+            .unwrap_or(Residency::Undefined)
+    }
+
+    /// Command queue bound to device `device` of server `server`.
+    pub fn queue(&self, server: u32, device: u32) -> Queue {
+        Queue {
+            ctx: self.clone(),
+            server,
+            device,
+            in_order: true,
+            last_event: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn out_of_order_queue(&self, server: u32, device: u32) -> Queue {
+        let mut q = self.queue(server, device);
+        q.in_order = false;
+        q
+    }
+
+    pub fn event(&self, id: u64) -> Event {
+        Event {
+            id,
+            events: Arc::clone(&self.plat.events),
+        }
+    }
+
+    fn conn(&self, server: u32) -> Result<&Arc<ServerConn>> {
+        self.plat
+            .servers
+            .get(server as usize)
+            .context("no such server")
+    }
+
+    /// Ensure `buf` has a server-side allocation on `server`; returns the
+    /// allocation event (0 if it already existed).
+    fn ensure_allocated(&self, server: u32, buf: Buffer) -> Result<u64> {
+        let (size, csbuf, need) = {
+            let mut m = self.buffers.lock().unwrap();
+            let st = m.get_mut(&buf.0).context("unknown buffer")?;
+            let need = !st.allocated_on.contains(&server);
+            if need {
+                st.allocated_on.insert(server);
+            }
+            (st.size, st.content_size_buf, need)
+        };
+        if !need {
+            return Ok(0);
+        }
+        // Allocate the linked content-size buffer first.
+        if csbuf != 0 {
+            self.ensure_allocated(server, Buffer(csbuf))?;
+        }
+        let conn = self.conn(server)?;
+        let ev = fresh_id();
+        self.plat.events.ensure(ev);
+        conn.send_command(
+            0,
+            ev,
+            Vec::new(),
+            Body::CreateBuffer {
+                buf: buf.0,
+                size,
+                content_size_buf: csbuf,
+            },
+            Vec::new(),
+        )?;
+        Ok(ev)
+    }
+
+    /// Enqueue a P2P migration of `buf` to `dst_server` (client sends one
+    /// command to the *source*; destination completes the event).
+    fn enqueue_migration(
+        &self,
+        buf: Buffer,
+        dst_server: u32,
+        extra_wait: &[u64],
+    ) -> Result<u64> {
+        let (src, size, last) = {
+            let m = self.buffers.lock().unwrap();
+            let st = m.get(&buf.0).context("unknown buffer")?;
+            match st.residency {
+                Residency::Server(s) => (s, st.size, st.last_event),
+                _ => bail!("migration source must be a server"),
+            }
+        };
+        if src == dst_server {
+            return Ok(0);
+        }
+        let ev = fresh_id();
+        self.plat.events.ensure(ev);
+        let mut wait: Vec<u64> = extra_wait.to_vec();
+        if last != 0 {
+            wait.push(last);
+        }
+        let conn = self.conn(src)?;
+        conn.send_command(
+            0,
+            ev,
+            wait,
+            Body::MigrateOut {
+                buf: buf.0,
+                dst_server,
+                size,
+                rdma: self.plat.cfg.rdma_migrations as u8,
+            },
+            Vec::new(),
+        )?;
+        {
+            let mut m = self.buffers.lock().unwrap();
+            if let Some(st) = m.get_mut(&buf.0) {
+                st.residency = Residency::Server(dst_server);
+                st.last_event = ev;
+                st.allocated_on.insert(dst_server);
+            }
+        }
+        Ok(ev)
+    }
+}
+
+/// An OpenCL-style command queue bound to one remote device.
+#[derive(Clone)]
+pub struct Queue {
+    ctx: Context,
+    pub server: u32,
+    pub device: u32,
+    in_order: bool,
+    last_event: Arc<AtomicU64>,
+}
+
+impl Queue {
+    fn implicit_wait(&self) -> Vec<u64> {
+        if self.in_order {
+            let last = self.last_event.load(Ordering::SeqCst);
+            if last != 0 {
+                return vec![last];
+            }
+        }
+        Vec::new()
+    }
+
+    fn note_event(&self, ev: u64) {
+        self.last_event.store(ev, Ordering::SeqCst);
+    }
+
+    /// Upload `data` into `buf` on this queue's server.
+    pub fn write(&self, buf: Buffer, data: &[u8]) -> Result<Event> {
+        let alloc_ev = self.ctx.ensure_allocated(self.server, buf)?;
+        let mut wait = self.implicit_wait();
+        if alloc_ev != 0 {
+            wait.push(alloc_ev);
+        }
+        // WAR/WAW with the previous producer.
+        {
+            let m = self.ctx.buffers.lock().unwrap();
+            if let Some(st) = m.get(&buf.0) {
+                if st.last_event != 0 {
+                    wait.push(st.last_event);
+                }
+            }
+        }
+        let ev = fresh_id();
+        self.ctx.plat.events.ensure(ev);
+        let conn = self.ctx.conn(self.server)?;
+        conn.send_command(
+            self.device,
+            ev,
+            wait,
+            Body::WriteBuffer {
+                buf: buf.0,
+                offset: 0,
+                len: data.len() as u64,
+            },
+            data.to_vec(),
+        )?;
+        {
+            let mut m = self.ctx.buffers.lock().unwrap();
+            if let Some(st) = m.get_mut(&buf.0) {
+                st.residency = Residency::Server(self.server);
+                st.last_event = ev;
+            }
+        }
+        self.note_event(ev);
+        Ok(self.ctx.event(ev))
+    }
+
+    /// Set the content size of a buffer (host-side extension update).
+    pub fn set_content_size(&self, buf: Buffer, size: u64) -> Result<Event> {
+        let conn = self.ctx.conn(self.server)?;
+        let ev = fresh_id();
+        self.ctx.plat.events.ensure(ev);
+        conn.send_command(
+            self.device,
+            ev,
+            self.implicit_wait(),
+            Body::SetContentSize { buf: buf.0, size },
+            Vec::new(),
+        )?;
+        self.note_event(ev);
+        Ok(self.ctx.event(ev))
+    }
+
+    /// Launch an artifact (or built-in kernel) with automatic migrations.
+    pub fn run(&self, artifact: &str, args: &[Buffer], outs: &[Buffer]) -> Result<Event> {
+        self.run_with_waits(artifact, args, outs, &[])
+    }
+
+    pub fn run_with_waits(
+        &self,
+        artifact: &str,
+        args: &[Buffer],
+        outs: &[Buffer],
+        user_waits: &[&Event],
+    ) -> Result<Event> {
+        let mut wait = self.implicit_wait();
+        for w in user_waits {
+            if w.id != 0 {
+                wait.push(w.id);
+            }
+        }
+        // Inputs: make each resident on this queue's server.
+        for a in args {
+            let (residency, last) = {
+                let m = self.ctx.buffers.lock().unwrap();
+                let st = m.get(&a.0).context("unknown arg buffer")?;
+                (st.residency, st.last_event)
+            };
+            match residency {
+                Residency::Server(s) if s == self.server => {
+                    if last != 0 {
+                        wait.push(last);
+                    }
+                }
+                Residency::Server(_) => {
+                    let mig = self.ctx.enqueue_migration(*a, self.server, &[])?;
+                    if mig != 0 {
+                        wait.push(mig);
+                    }
+                }
+                Residency::Undefined | Residency::Host => {
+                    // Zero-initialized allocation on first use.
+                    let alloc = self.ctx.ensure_allocated(self.server, *a)?;
+                    if alloc != 0 {
+                        wait.push(alloc);
+                    }
+                }
+            }
+        }
+        // Outputs are (re)defined by the kernel on this server.
+        for o in outs {
+            let alloc = self.ctx.ensure_allocated(self.server, *o)?;
+            if alloc != 0 {
+                wait.push(alloc);
+            }
+            let m = self.ctx.buffers.lock().unwrap();
+            if let Some(st) = m.get(&o.0) {
+                if st.last_event != 0 {
+                    // WAW/WAR ordering on the output buffer.
+                    wait.push(st.last_event);
+                }
+            }
+        }
+        wait.sort_unstable();
+        wait.dedup();
+
+        let ev = fresh_id();
+        self.ctx.plat.events.ensure(ev);
+        let conn = self.ctx.conn(self.server)?;
+        conn.send_command(
+            self.device,
+            ev,
+            wait,
+            Body::RunKernel {
+                artifact: artifact.to_string(),
+                args: args.iter().map(|b| b.0).collect(),
+                outs: outs.iter().map(|b| b.0).collect(),
+            },
+            Vec::new(),
+        )?;
+        {
+            let mut m = self.ctx.buffers.lock().unwrap();
+            for o in outs {
+                if let Some(st) = m.get_mut(&o.0) {
+                    st.residency = Residency::Server(self.server);
+                    st.last_event = ev;
+                }
+            }
+        }
+        self.note_event(ev);
+        Ok(self.ctx.event(ev))
+    }
+
+    /// Explicitly migrate `buf` to this queue's server (the
+    /// clEnqueueMigrateMemObjects analogue used by Figs 10-11).
+    pub fn migrate(&self, buf: Buffer) -> Result<Event> {
+        let wait = self.implicit_wait();
+        let ev = self.ctx.enqueue_migration(buf, self.server, &wait)?;
+        if ev != 0 {
+            self.note_event(ev);
+        }
+        Ok(self.ctx.event(ev))
+    }
+
+    /// Download only the meaningful prefix of a buffer (content-size-aware
+    /// read; the server resolves the linked extension buffer).
+    pub fn read_content(&self, buf: Buffer) -> Result<Vec<u8>> {
+        self.read_inner(buf, u64::MAX)
+    }
+
+    /// Download a buffer's bytes. Reads from wherever the freshest copy
+    /// resides; waits for the producing event server-side.
+    pub fn read(&self, buf: Buffer) -> Result<Vec<u8>> {
+        let size = self.ctx.buffer_size(buf);
+        self.read_inner(buf, size)
+    }
+
+    fn read_inner(&self, buf: Buffer, len: u64) -> Result<Vec<u8>> {
+        let (server, last) = {
+            let m = self.ctx.buffers.lock().unwrap();
+            let st = m.get(&buf.0).context("unknown buffer")?;
+            let server = match st.residency {
+                Residency::Server(s) => s,
+                _ => bail!("buffer has no server-side contents"),
+            };
+            (server, st.last_event)
+        };
+        let mut wait = self.implicit_wait();
+        if last != 0 {
+            wait.push(last);
+        }
+        let ev = fresh_id();
+        self.ctx.plat.events.ensure(ev);
+        let conn = self.ctx.conn(server)?;
+        conn.send_command(
+            self.device,
+            ev,
+            wait,
+            Body::ReadBuffer {
+                buf: buf.0,
+                offset: 0,
+                len,
+            },
+            Vec::new(),
+        )?;
+        self.note_event(ev);
+        let event = self.ctx.event(ev);
+        event.wait()?;
+        self.ctx
+            .plat
+            .read_results
+            .lock()
+            .unwrap()
+            .remove(&ev)
+            .context("read completed but payload missing")
+    }
+
+    /// Block until everything enqueued on this queue has completed.
+    pub fn finish(&self) -> Result<()> {
+        let last = self.last_event.load(Ordering::SeqCst);
+        self.ctx.event(last).wait()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = ClientConfig::default();
+        assert!(c.reconnect);
+        assert!(c.content_size_enabled);
+        assert!(!c.rdma_migrations);
+        assert_eq!(c.backup_depth, 128);
+    }
+}

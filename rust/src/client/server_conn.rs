@@ -1,0 +1,322 @@
+//! One client-side server connection: writer thread, reader thread,
+//! session handshake, command backup ring and reconnection (paper §4.3).
+
+use std::collections::{HashMap, VecDeque};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::proto::{read_packet, write_packet, Body, EventStatus, Msg, Packet, SessionId};
+use crate::sched::EventTable;
+
+use super::ClientConfig;
+
+/// Shared connection state.
+pub struct ServerConn {
+    pub server_id: u32,
+    pub addr: String,
+    cfg: ClientConfig,
+    events: Arc<EventTable>,
+    read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    tx: Sender<Packet>,
+    session: Mutex<SessionId>,
+    next_cmd_id: AtomicU64,
+    n_devices: AtomicU32,
+    available: Arc<AtomicBool>,
+    /// Backup ring of recent commands for replay (cmd_id, packet).
+    backup: Mutex<VecDeque<(u64, Packet)>>,
+}
+
+impl ServerConn {
+    /// Dial, handshake, spawn I/O threads.
+    pub fn connect(
+        server_id: u32,
+        addr: String,
+        cfg: ClientConfig,
+        events: Arc<EventTable>,
+        read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    ) -> Result<Arc<ServerConn>> {
+        let (tx, rx) = channel::<Packet>();
+        let conn = Arc::new(ServerConn {
+            server_id,
+            addr,
+            cfg,
+            events,
+            read_results,
+            tx,
+            session: Mutex::new([0u8; 16]),
+            next_cmd_id: AtomicU64::new(1),
+            n_devices: AtomicU32::new(0),
+            available: Arc::new(AtomicBool::new(false)),
+            backup: Mutex::new(VecDeque::new()),
+        });
+        let stream = conn.dial_and_handshake()?;
+        conn.spawn_reader(stream.try_clone()?);
+        Self::spawn_writer(Arc::clone(&conn), stream, rx);
+        Ok(conn)
+    }
+
+    pub fn available(&self) -> bool {
+        self.available.load(Ordering::SeqCst)
+    }
+
+    pub fn n_devices(&self) -> u32 {
+        self.n_devices.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a command towards this server. Fails fast with "device
+    /// unavailable" while disconnected (the Fig 4 fallback signal).
+    pub fn send_command(
+        &self,
+        device: u32,
+        event: u64,
+        wait: Vec<u64>,
+        body: Body,
+        payload: Vec<u8>,
+    ) -> Result<()> {
+        if !self.available() {
+            bail!("device unavailable: server {} is disconnected", self.server_id);
+        }
+        let cmd_id = self.next_cmd_id.fetch_add(1, Ordering::SeqCst);
+        let msg = Msg {
+            cmd_id,
+            queue: 0,
+            device,
+            event,
+            wait,
+            body,
+        };
+        let pkt = Packet {
+            msg,
+            payload,
+        };
+        {
+            let mut backup = self.backup.lock().unwrap();
+            backup.push_back((cmd_id, pkt.clone()));
+            while backup.len() > self.cfg.backup_depth {
+                backup.pop_front();
+            }
+        }
+        self.tx.send(pkt).context("writer gone")?;
+        Ok(())
+    }
+
+    fn dial_and_handshake(&self) -> Result<TcpStream> {
+        let mut stream = crate::net::tcp::connect(self.addr.as_str())?;
+        let session = *self.session.lock().unwrap();
+        write_packet(
+            &mut stream,
+            &Msg::control(Body::Hello {
+                session,
+                role: crate::proto::ROLE_CLIENT,
+                peer_id: 0,
+            }),
+            &[],
+        )?;
+        let pkt = read_packet(&mut stream).context("reading Welcome")?;
+        let Body::Welcome {
+            session: sid,
+            n_devices,
+            last_seen_cmd,
+            ..
+        } = pkt.msg.body
+        else {
+            bail!("expected Welcome, got {:?}", pkt.msg.body);
+        };
+        *self.session.lock().unwrap() = sid;
+        self.n_devices.store(n_devices, Ordering::SeqCst);
+        self.available.store(true, Ordering::SeqCst);
+        // Replay commands the server never processed (paper §4.3).
+        let backup = self.backup.lock().unwrap();
+        for (cmd_id, pkt) in backup.iter() {
+            if *cmd_id > last_seen_cmd {
+                write_packet(&mut stream, &pkt.msg, &pkt.payload)?;
+            }
+        }
+        Ok(stream)
+    }
+
+    /// Writer thread: pace the access link once per packet, write, and on
+    /// failure run the reconnect loop (marking devices unavailable
+    /// meanwhile).
+    fn spawn_writer(conn: Arc<ServerConn>, stream: TcpStream, rx: Receiver<Packet>) {
+        std::thread::Builder::new()
+            .name(format!("poclr-cw{}", conn.server_id))
+            .spawn(move || {
+                let mut stream = Some(stream);
+                while let Ok(pkt) = rx.recv() {
+                    loop {
+                        let Some(s) = stream.as_mut() else { break };
+                        let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
+                        conn.cfg.link.pace(bytes);
+                        if write_packet(s, &pkt.msg, &pkt.payload).is_ok() {
+                            break;
+                        }
+                        // Connection lost mid-command.
+                        conn.available.store(false, Ordering::SeqCst);
+                        if !conn.cfg.reconnect {
+                            return;
+                        }
+                        match conn.reconnect_blocking() {
+                            Some(new_stream) => {
+                                // The replay in dial_and_handshake already
+                                // resent this packet (it is in the backup
+                                // ring), so move on to the next one.
+                                stream = Some(new_stream);
+                                break;
+                            }
+                            None => return,
+                        }
+                    }
+                    if stream.is_none() && !conn.cfg.reconnect {
+                        return;
+                    }
+                    if stream.is_none() {
+                        // Reconnect loop also replays; get a fresh stream.
+                        match conn.reconnect_blocking() {
+                            Some(s) => stream = Some(s),
+                            None => return,
+                        }
+                    }
+                }
+            })
+            .expect("spawn client writer");
+    }
+
+    fn reconnect_blocking(&self) -> Option<TcpStream> {
+        for attempt in 0..600 {
+            std::thread::sleep(Duration::from_millis(10.min(2 + attempt)));
+            match self.dial_and_handshake() {
+                Ok(stream) => {
+                    if let Ok(rd) = stream.try_clone() {
+                        self.spawn_reader_arcless(rd);
+                    }
+                    return Some(stream);
+                }
+                Err(_) => continue,
+            }
+        }
+        None
+    }
+
+    fn spawn_reader(self: &Arc<Self>, stream: TcpStream) {
+        let conn = Arc::clone(self);
+        std::thread::Builder::new()
+            .name(format!("poclr-cr{}", conn.server_id))
+            .spawn(move || conn.reader_loop(stream))
+            .expect("spawn client reader");
+    }
+
+    /// Reader spawn path used from &self (reconnect inside writer thread).
+    fn spawn_reader_arcless(&self, stream: TcpStream) {
+        // Safety of lifetime: the reader only uses cloned Arcs of the
+        // tables, not &self.
+        let events = Arc::clone(&self.events);
+        let read_results = Arc::clone(&self.read_results);
+        let available = Arc::clone(&self.available);
+        let server_id = self.server_id;
+        std::thread::Builder::new()
+            .name(format!("poclr-cr{server_id}"))
+            .spawn(move || {
+                reader_loop_impl(stream, events, read_results, available);
+            })
+            .expect("spawn client reader");
+    }
+
+    fn reader_loop(&self, stream: TcpStream) {
+        reader_loop_impl(
+            stream,
+            Arc::clone(&self.events),
+            Arc::clone(&self.read_results),
+            Arc::clone(&self.available),
+        );
+    }
+}
+
+fn reader_loop_impl(
+    mut stream: TcpStream,
+    events: Arc<EventTable>,
+    read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    available: Arc<AtomicBool>,
+) {
+    loop {
+        match read_packet(&mut stream) {
+            Ok(pkt) => {
+                if let Body::Completion {
+                    event, status, ts, ..
+                } = pkt.msg.body
+                {
+                    if !pkt.payload.is_empty() {
+                        read_results.lock().unwrap().insert(event, pkt.payload);
+                    }
+                    match EventStatus::from_i8(status) {
+                        EventStatus::Failed => events.fail(event),
+                        _ => events.complete(event, ts),
+                    }
+                }
+            }
+            Err(_) => {
+                available.store(false, Ordering::SeqCst);
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unavailable_conn_rejects_commands() {
+        // Construct a conn struct directly in the unavailable state.
+        let (tx, _rx) = channel();
+        let conn = ServerConn {
+            server_id: 0,
+            addr: "127.0.0.1:1".into(),
+            cfg: ClientConfig::default(),
+            events: Arc::new(EventTable::new()),
+            read_results: Arc::new(Mutex::new(HashMap::new())),
+            tx,
+            session: Mutex::new([0u8; 16]),
+            next_cmd_id: AtomicU64::new(1),
+            n_devices: AtomicU32::new(0),
+            available: Arc::new(AtomicBool::new(false)),
+            backup: Mutex::new(VecDeque::new()),
+        };
+        let err = conn
+            .send_command(0, 1, vec![], Body::Barrier, vec![])
+            .unwrap_err();
+        assert!(err.to_string().contains("device unavailable"), "{err}");
+    }
+
+    #[test]
+    fn backup_ring_is_bounded() {
+        let (tx, _rx) = channel();
+        let mut cfg = ClientConfig::default();
+        cfg.backup_depth = 4;
+        let conn = ServerConn {
+            server_id: 0,
+            addr: "127.0.0.1:1".into(),
+            cfg,
+            events: Arc::new(EventTable::new()),
+            read_results: Arc::new(Mutex::new(HashMap::new())),
+            tx,
+            session: Mutex::new([0u8; 16]),
+            next_cmd_id: AtomicU64::new(1),
+            n_devices: AtomicU32::new(0),
+            available: Arc::new(AtomicBool::new(true)),
+            backup: Mutex::new(VecDeque::new()),
+        };
+        for _ in 0..10 {
+            conn.send_command(0, 0, vec![], Body::Barrier, vec![]).unwrap();
+        }
+        assert_eq!(conn.backup.lock().unwrap().len(), 4);
+        // ids keep increasing even when the ring rotates
+        assert_eq!(conn.backup.lock().unwrap().back().unwrap().0, 10);
+    }
+}

@@ -1,0 +1,81 @@
+//! Testbed presets: the paper's hardware configurations expressed as
+//! cluster/link/device parameters, used by benches and the DES.
+
+use crate::net::LinkProfile;
+
+/// A named testbed matching one of the paper's evaluation setups.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub name: &'static str,
+    pub n_servers: usize,
+    pub gpus_per_server: usize,
+    pub client_link: LinkProfile,
+    pub peer_link: LinkProfile,
+    /// Per-GPU dense f32 throughput used by the DES cost model (GFLOP/s).
+    pub gpu_gflops: f64,
+}
+
+/// §6.1/6.2: two 2x2080Ti servers, 100 Mb switched Ethernet.
+pub const LATENCY_BED: Testbed = Testbed {
+    name: "latency(2x2080Ti,100Mb)",
+    n_servers: 2,
+    gpus_per_server: 2,
+    client_link: LinkProfile::ETH_100M,
+    peer_link: LinkProfile::ETH_100M,
+    gpu_gflops: 13_450.0, // 2080 Ti fp32
+};
+
+/// §6.2/6.3: same servers with the 40 Gb direct link between them.
+pub const DIRECT_40G_BED: Testbed = Testbed {
+    name: "latency(2x2080Ti,40Gb-direct)",
+    n_servers: 2,
+    gpus_per_server: 2,
+    client_link: LinkProfile::ETH_100M,
+    peer_link: LinkProfile::ETH_40G_DIRECT,
+    gpu_gflops: 13_450.0,
+};
+
+/// §6.4: 3x(4xP100) + 1x(4xV100), 56 Gb LAN -> 16 GPUs.
+pub const MATMUL_BED: Testbed = Testbed {
+    name: "matmul(16xP100/V100,56Gb)",
+    n_servers: 4,
+    gpus_per_server: 4,
+    client_link: LinkProfile::LAN_56G,
+    peer_link: LinkProfile::LAN_56G,
+    gpu_gflops: 9_300.0, // P100 fp32
+};
+
+/// §7.2: 3 A6000 servers on 100 Gb fiber, gigabit desktop client.
+pub const FLUID_BED: Testbed = Testbed {
+    name: "fluidx3d(3xA6000,100Gb)",
+    n_servers: 3,
+    gpus_per_server: 1,
+    client_link: LinkProfile::ETH_1G,
+    peer_link: LinkProfile::LAN_100G,
+    gpu_gflops: 38_700.0, // A6000 fp32
+};
+
+/// §7.1: GTX 1060 server behind Wi-Fi 6.
+pub const AR_BED: Testbed = Testbed {
+    name: "ar(1060,wifi6)",
+    n_servers: 1,
+    gpus_per_server: 1,
+    client_link: LinkProfile::WIFI6,
+    peer_link: LinkProfile::ETH_1G,
+    gpu_gflops: 4_400.0, // GTX 1060
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beds_are_sane() {
+        for bed in [&LATENCY_BED, &DIRECT_40G_BED, &MATMUL_BED, &FLUID_BED, &AR_BED] {
+            assert!(bed.n_servers >= 1);
+            assert!(bed.gpus_per_server >= 1);
+            assert!(bed.gpu_gflops > 0.0);
+        }
+        assert_eq!(MATMUL_BED.n_servers * MATMUL_BED.gpus_per_server, 16);
+    }
+}

@@ -1,0 +1,246 @@
+//! Daemon socket handling: the accept loop plus one reader thread and one
+//! writer thread per connection (paper §4.2).
+//!
+//! * Client connections begin with `Hello{role=CLIENT}`; the daemon replies
+//!   `Welcome{session, last_seen_cmd}` (fresh session for all-zero ids,
+//!   resumed session otherwise — paper §4.3).
+//! * Peer connections begin with `Hello{role=PEER, peer_id}`; both ends
+//!   register reader/writer threads for the mesh.
+//!
+//! Writer threads drain an mpsc channel, pace the emulated link once per
+//! packet, then perform the size/struct/payload writes.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::LinkProfile;
+use crate::proto::{read_packet, write_packet, Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
+
+use super::dispatch::Work;
+use super::state::DaemonState;
+
+/// Accept connections until shutdown.
+pub fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, work_tx: Sender<Work>) {
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let state = Arc::clone(&state);
+        let work_tx = work_tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_new_connection(stream, state, work_tx) {
+                eprintln!("[pocld] connection setup failed: {e:#}");
+            }
+        });
+    }
+}
+
+fn handle_new_connection(
+    stream: TcpStream,
+    state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+) -> Result<()> {
+    crate::net::tcp::tune(&stream).ok();
+    let mut rd = stream.try_clone().context("clone stream")?;
+    let first = read_packet(&mut rd).context("reading handshake")?;
+    let Body::Hello {
+        session,
+        role,
+        peer_id,
+    } = first.msg.body
+    else {
+        bail!("expected Hello, got {:?}", first.msg.body);
+    };
+    match role {
+        ROLE_CLIENT => handle_client_conn(stream, session, state, work_tx),
+        ROLE_PEER => {
+            start_peer_io(stream, peer_id, Arc::clone(&state), work_tx)?;
+            // Advertise our RDMA shadow region to the dialing peer (the
+            // dialer does the same from `Daemon::connect_peer`).
+            if let Some(rdma) = &state.rdma {
+                let (rkey, size) = rdma.local_advert();
+                state.send_to_peer(
+                    peer_id,
+                    Packet::bare(Msg::control(Body::RdmaAdvertise {
+                        rkey,
+                        shadow_size: size,
+                    })),
+                );
+            }
+            Ok(())
+        }
+        r => bail!("unknown role {r}"),
+    }
+}
+
+fn handle_client_conn(
+    stream: TcpStream,
+    presented: [u8; 16],
+    state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+) -> Result<()> {
+    // Session attach: all-zero = fresh client; otherwise must match the
+    // session we handed out (paper: ids map connections to contexts).
+    let (sid, last_seen) = {
+        let mut sess = state.session.lock().unwrap();
+        if presented != [0u8; 16] && presented != sess.id {
+            // Unknown session: treat as fresh (the old context is gone).
+            sess.last_seen_cmd = 0;
+        }
+        if presented == [0u8; 16] {
+            sess.last_seen_cmd = 0;
+        }
+        (sess.id, sess.last_seen_cmd)
+    };
+
+    let welcome = Msg::control(Body::Welcome {
+        session: sid,
+        server_id: state.server_id,
+        n_devices: state.devices.len() as u32,
+        last_seen_cmd: last_seen,
+    });
+    let mut ws = stream.try_clone()?;
+    write_packet(&mut ws, &welcome, &[])?;
+    *state.client_stream.lock().unwrap() = Some(stream.try_clone()?);
+
+    // Writer thread for completions (and read-back payloads).
+    let (tx, rx) = channel::<Packet>();
+    {
+        let mut guard = state.client_tx.lock().unwrap();
+        // Flush completions that raced the disconnection window.
+        for pkt in state.undelivered.lock().unwrap().drain(..) {
+            tx.send(pkt).ok();
+        }
+        *guard = Some(tx);
+    }
+    spawn_writer(
+        stream.try_clone()?,
+        rx,
+        state.client_link,
+        format!("pocld{}-cw", state.server_id),
+    );
+
+    // Reader loop (this thread becomes the reader).
+    let mut rd = stream;
+    loop {
+        match read_packet(&mut rd) {
+            Ok(pkt) => {
+                // Replay dedup after reconnect ("the server simply ignores
+                // commands it has already processed"). Idempotent reads are
+                // exempt — re-executing them regenerates the lost payload.
+                let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
+                let dup = {
+                    let mut sess = state.session.lock().unwrap();
+                    if pkt.msg.cmd_id != 0 && pkt.msg.cmd_id <= sess.last_seen_cmd {
+                        !idempotent
+                    } else {
+                        if pkt.msg.cmd_id != 0 {
+                            sess.last_seen_cmd = pkt.msg.cmd_id;
+                        }
+                        false
+                    }
+                };
+                if dup {
+                    // If the duplicate already completed, the client lost
+                    // the completion in the disconnect — resend it.
+                    if pkt.msg.event != 0 {
+                        if let Some(st) = state.events.status(pkt.msg.event) {
+                            if st.is_terminal() {
+                                let ts = state
+                                    .events
+                                    .timestamps(pkt.msg.event)
+                                    .unwrap_or_default();
+                                state.send_to_client(Packet::bare(Msg::control(
+                                    Body::Completion {
+                                        event: pkt.msg.event,
+                                        status: st.to_i8(),
+                                        ts,
+                                        payload_len: 0,
+                                    },
+                                )));
+                            }
+                        }
+                    }
+                    continue;
+                }
+                if work_tx
+                    .send(Work::Packet {
+                        from_peer: None,
+                        pkt,
+                        via_rdma: false,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Err(_) => break, // connection lost; client will reconnect
+        }
+    }
+    // Drop the writer channel: a half-dead connection must not swallow
+    // completions silently — they requeue when the client reconnects.
+    let mut guard = state.client_tx.lock().unwrap();
+    *guard = None;
+    Ok(())
+}
+
+/// Register peer reader/writer threads over an established peer stream.
+pub fn start_peer_io(
+    stream: TcpStream,
+    peer_id: u32,
+    state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+) -> Result<()> {
+    let (tx, rx) = channel::<Packet>();
+    state.peer_txs.lock().unwrap().insert(peer_id, tx);
+    spawn_writer(
+        stream.try_clone()?,
+        rx,
+        state.peer_link,
+        format!("pocld{}-pw{}", state.server_id, peer_id),
+    );
+    let label = format!("pocld{}-pr{}", state.server_id, peer_id);
+    std::thread::Builder::new().name(label).spawn(move || {
+        let mut rd = stream;
+        loop {
+            match read_packet(&mut rd) {
+                Ok(pkt) => {
+                    if work_tx
+                        .send(Work::Packet {
+                            from_peer: Some(peer_id),
+                            pkt,
+                            via_rdma: false,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        state.peer_txs.lock().unwrap().remove(&peer_id);
+    })?;
+    Ok(())
+}
+
+/// Writer thread: drain packets, pace the link once per packet, write.
+fn spawn_writer(mut stream: TcpStream, rx: Receiver<Packet>, link: LinkProfile, name: String) {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            while let Ok(pkt) = rx.recv() {
+                let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
+                link.pace(bytes);
+                if write_packet(&mut stream, &pkt.msg, &pkt.payload).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn writer");
+}

@@ -1,0 +1,504 @@
+//! The daemon dispatcher: one thread that owns command ordering.
+//!
+//! Readers (client, peers, RDMA poller) funnel packets here; device
+//! executors report completions back through per-device forwarder threads.
+//! The dispatcher resolves wait lists against the event table, parks
+//! blocked commands, and on every completion (local or a peer's
+//! `NotifyEvent`) rescans the parked set — the paper's decentralized
+//! scheduling: *"Any server that has received a command depending on a
+//! command executing on a different server can begin executing such blocked
+//! commands immediately when it receives completion notifications"* (§5.2).
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
+use crate::runtime::executor::{ExecOutcome, ExecRequest};
+use crate::sched::table::DepsState;
+use crate::util::now_ns;
+
+use super::migrate::{self, MigrationJob};
+use super::state::DaemonState;
+
+/// Work items feeding the dispatcher.
+pub enum Work {
+    Packet {
+        from_peer: Option<u32>,
+        pkt: Packet,
+        via_rdma: bool,
+    },
+    ExecDone(ExecOutcome),
+    Shutdown,
+}
+
+/// A parked command whose wait list is not yet satisfied.
+struct Pending {
+    from_peer: Option<u32>,
+    pkt: Packet,
+    via_rdma: bool,
+    queued_ns: u64,
+}
+
+/// An in-flight kernel launch, keyed by executor tag.
+struct Inflight {
+    event: u64,
+    outs: Vec<u64>,
+    queued_ns: u64,
+    submit_ns: u64,
+}
+
+pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
+    // Per-device forwarders: executor outcomes -> Work::ExecDone.
+    let mut exec_txs = Vec::new();
+    for dev in &state.devices {
+        let (otx, orx) = std::sync::mpsc::channel::<ExecOutcome>();
+        let fwd = self_tx.clone();
+        let label = dev.label.clone();
+        std::thread::Builder::new()
+            .name(format!("{label}-fwd"))
+            .spawn(move || {
+                while let Ok(o) = orx.recv() {
+                    if fwd.send(Work::ExecDone(o)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn forwarder");
+        exec_txs.push(otx);
+    }
+
+    // Migration worker: buffer reads + pushes happen off the dispatch
+    // thread (they block on link pacing / big memcpys).
+    let migrate_tx = migrate::spawn_worker(Arc::clone(&state));
+
+    let mut d = Dispatcher {
+        state,
+        exec_txs,
+        migrate_tx,
+        pending: Vec::new(),
+        inflight: HashMap::new(),
+    };
+
+    while let Ok(work) = rx.recv() {
+        match work {
+            Work::Shutdown => break,
+            Work::Packet {
+                from_peer,
+                pkt,
+                via_rdma,
+            } => {
+                d.state.commands_seen.fetch_add(1, Ordering::Relaxed);
+                d.admit(from_peer, pkt, via_rdma, now_ns());
+                d.rescan();
+            }
+            Work::ExecDone(outcome) => {
+                d.finish_kernel(outcome);
+                d.rescan();
+            }
+        }
+    }
+}
+
+struct Dispatcher {
+    state: Arc<DaemonState>,
+    exec_txs: Vec<Sender<ExecOutcome>>,
+    migrate_tx: Sender<MigrationJob>,
+    pending: Vec<Pending>,
+    inflight: HashMap<u64, Inflight>,
+}
+
+impl Dispatcher {
+    /// Admit a fresh packet: run it, park it, or poison it.
+    fn admit(&mut self, from_peer: Option<u32>, pkt: Packet, via_rdma: bool, queued_ns: u64) {
+        match self.state.events.deps_state(&pkt.msg.wait) {
+            DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns),
+            DepsState::Blocked => {
+                // Materialize user events for unseen foreign dependencies.
+                for e in &pkt.msg.wait {
+                    self.state.events.ensure(*e);
+                }
+                self.pending.push(Pending {
+                    from_peer,
+                    pkt,
+                    via_rdma,
+                    queued_ns,
+                });
+            }
+            DepsState::Poisoned => self.fail_command(&pkt.msg),
+        }
+    }
+
+    /// Re-examine parked commands after any completion.
+    fn rescan(&mut self) {
+        loop {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < self.pending.len() {
+                match self.state.events.deps_state(&self.pending[i].pkt.msg.wait) {
+                    DepsState::Ready => {
+                        let p = self.pending.swap_remove(i);
+                        self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns);
+                        progressed = true;
+                    }
+                    DepsState::Poisoned => {
+                        let p = self.pending.swap_remove(i);
+                        self.fail_command(&p.pkt.msg);
+                        progressed = true;
+                    }
+                    DepsState::Blocked => i += 1,
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    /// Execute a dependency-satisfied command.
+    fn execute(
+        &mut self,
+        from_peer: Option<u32>,
+        pkt: Packet,
+        via_rdma: bool,
+        queued_ns: u64,
+    ) {
+        let submit_ns = now_ns();
+        let msg = pkt.msg;
+        let event = msg.event;
+        match msg.body {
+            Body::CreateBuffer {
+                buf,
+                size,
+                content_size_buf,
+            } => {
+                self.state.ensure_buffer(buf, size, content_size_buf);
+                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+            }
+            Body::FreeBuffer { buf } => {
+                self.state.buffers.lock().unwrap().remove(&buf);
+                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+            }
+            Body::WriteBuffer { buf, offset, len } => {
+                let ok = {
+                    let buffers = self.state.buffers.lock().unwrap();
+                    match buffers.get(&buf) {
+                        Some(entry) => {
+                            let mut data = entry.data.write().unwrap();
+                            let end = (offset + len) as usize;
+                            if data.len() < end {
+                                data.resize(end, 0);
+                            }
+                            data[offset as usize..end].copy_from_slice(&pkt.payload);
+                            true
+                        }
+                        None => false,
+                    }
+                };
+                if ok {
+                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                } else {
+                    self.fail_event(event);
+                }
+            }
+            Body::SetContentSize { buf, size } => {
+                let mut buffers = self.state.buffers.lock().unwrap();
+                if let Some(entry) = buffers.get_mut(&buf) {
+                    entry.content_size = size;
+                    // Mirror into the linked extension buffer when present.
+                    if entry.content_size_buf != 0 {
+                        let cs = entry.content_size_buf;
+                        if let Some(cse) = buffers.get(&cs) {
+                            let mut d = cse.data.write().unwrap();
+                            if d.len() >= 4 {
+                                d[..4].copy_from_slice(&(size as u32).to_le_bytes());
+                            }
+                        }
+                    }
+                }
+                drop(buffers);
+                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+            }
+            Body::ReadBuffer { buf, offset, len } => {
+                // len == u64::MAX requests a content-size-limited read
+                // (cl_pocl_content_size aware download).
+                let len = if len == u64::MAX {
+                    self.state.content_size_of(buf)
+                } else {
+                    len
+                };
+                let data = {
+                    let buffers = self.state.buffers.lock().unwrap();
+                    buffers.get(&buf).map(|entry| {
+                        let d = entry.data.read().unwrap();
+                        let end = ((offset + len) as usize).min(d.len());
+                        d[offset as usize..end].to_vec()
+                    })
+                };
+                match data {
+                    Some(payload) => {
+                        self.complete_inline(event, queued_ns, submit_ns, payload)
+                    }
+                    None => self.fail_event(event),
+                }
+            }
+            Body::RunKernel {
+                artifact,
+                args,
+                outs,
+            } => {
+                let dev = msg.device as usize;
+                if dev >= self.state.devices.len() {
+                    self.fail_event(event);
+                    return;
+                }
+                let mut inputs = Vec::with_capacity(args.len());
+                for a in &args {
+                    match self.state.snapshot_buffer(*a) {
+                        Some(b) => inputs.push(b),
+                        None => {
+                            self.fail_event(event);
+                            return;
+                        }
+                    }
+                }
+                let tag = crate::util::fresh_id();
+                self.inflight.insert(
+                    tag,
+                    Inflight {
+                        event,
+                        outs,
+                        queued_ns,
+                        submit_ns,
+                    },
+                );
+                self.state.events.set_status(
+                    event,
+                    EventStatus::Submitted,
+                    Timestamps::default(),
+                );
+                self.state.devices[dev].submit(ExecRequest {
+                    tag,
+                    artifact,
+                    inputs,
+                    reply: self.exec_txs[dev].clone(),
+                });
+            }
+            Body::MigrateOut {
+                buf,
+                dst_server,
+                size,
+                rdma,
+            } => {
+                // Heavy lifting happens on the migration worker.
+                self.migrate_tx
+                    .send(MigrationJob {
+                        buf,
+                        dst_server,
+                        alloc_size: size,
+                        event,
+                        use_rdma: rdma != 0,
+                    })
+                    .ok();
+            }
+            Body::MigrateData {
+                buf,
+                content_size,
+                total_size,
+                len,
+            } => {
+                // Data arrived from a peer (TCP payload, or already placed
+                // in our RDMA shadow region).
+                self.state.ensure_buffer(buf, total_size, 0);
+                {
+                    let mut buffers = self.state.buffers.lock().unwrap();
+                    let entry = buffers.get_mut(&buf).expect("just ensured");
+                    {
+                        let mut data = entry.data.write().unwrap();
+                        if data.len() < total_size as usize {
+                            data.resize(total_size as usize, 0);
+                        }
+                        if via_rdma {
+                            // Drain the shadow region (second copy of the
+                            // paper's shadow-buffer scheme), then free the
+                            // inbound window.
+                            if let Some(rdma_state) = &self.state.rdma {
+                                let shadow = rdma_state.shadow.buf.read().unwrap();
+                                data[..content_size as usize]
+                                    .copy_from_slice(&shadow[..content_size as usize]);
+                            }
+                        } else {
+                            data[..len as usize].copy_from_slice(&pkt.payload);
+                        }
+                    }
+                    entry.content_size = content_size;
+                    if entry.content_size_buf != 0 {
+                        let cs = entry.content_size_buf;
+                        if let Some(cse) = buffers.get(&cs) {
+                            let mut d = cse.data.write().unwrap();
+                            if d.len() >= 4 {
+                                d[..4].copy_from_slice(&(content_size as u32).to_le_bytes());
+                            }
+                        }
+                    }
+                }
+                if via_rdma {
+                    if let Some(rdma_state) = &self.state.rdma {
+                        rdma_state.endpoint.window_release_local();
+                    }
+                }
+                // Destination completes the migration event and tells
+                // everyone (paper §5.1: "only the destination server
+                // notifies the client of the migration's completion").
+                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+            }
+            Body::NotifyEvent {
+                event: ev,
+                status,
+            } => {
+                let st = EventStatus::from_i8(status);
+                if st == EventStatus::Failed {
+                    self.state.events.fail(ev);
+                } else {
+                    self.state.events.complete(ev, Timestamps::default());
+                }
+            }
+            Body::RdmaAdvertise { rkey, shadow_size } => {
+                // Arrives over a peer connection; key by the sending peer.
+                if let (Some(rdma_state), Some(peer)) = (&self.state.rdma, from_peer) {
+                    rdma_state
+                        .peer_keys
+                        .lock()
+                        .unwrap()
+                        .insert(peer, (rkey, shadow_size));
+                }
+            }
+            Body::Barrier => {
+                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+            }
+            Body::Hello { .. } | Body::Welcome { .. } | Body::Completion { .. } => {
+                // Handshakes are handled at accept time; Completion never
+                // flows client-ward into a daemon.
+            }
+        }
+    }
+
+    /// A kernel finished on a device executor.
+    fn finish_kernel(&mut self, outcome: ExecOutcome) {
+        let Some(inf) = self.inflight.remove(&outcome.tag) else {
+            return;
+        };
+        match outcome.outputs {
+            Ok(outputs) => {
+                if outputs.len() != inf.outs.len() {
+                    self.fail_event(inf.event);
+                    return;
+                }
+                {
+                    let mut buffers = self.state.buffers.lock().unwrap();
+                    for (out_id, bytes) in inf.outs.iter().zip(outputs) {
+                        let len = bytes.len() as u64;
+                        let entry =
+                            buffers.entry(*out_id).or_insert_with(|| super::state::BufEntry {
+                                data: Arc::new(std::sync::RwLock::new(Vec::new())),
+                                size: len,
+                                content_size_buf: 0,
+                                content_size: len,
+                            });
+                        *entry.data.write().unwrap() = bytes;
+                        entry.content_size = len;
+                        if entry.size < len {
+                            entry.size = len;
+                        }
+                        if entry.content_size_buf != 0 {
+                            let cs = entry.content_size_buf;
+                            if let Some(cse) = buffers.get(&cs) {
+                                let mut d = cse.data.write().unwrap();
+                                if d.len() >= 4 {
+                                    d[..4].copy_from_slice(&(len as u32).to_le_bytes());
+                                }
+                            }
+                        }
+                    }
+                }
+                let ts = Timestamps {
+                    queued_ns: inf.queued_ns,
+                    submit_ns: inf.submit_ns,
+                    start_ns: outcome.start_ns,
+                    end_ns: outcome.end_ns,
+                };
+                self.broadcast_completion(inf.event, ts, Vec::new());
+            }
+            Err(e) => {
+                eprintln!("[pocld{}] kernel failed: {e:#}", self.state.server_id);
+                self.fail_event(inf.event);
+            }
+        }
+    }
+
+    /// Complete an event for an inline (non-kernel) command and notify.
+    fn complete_inline(
+        &mut self,
+        event: u64,
+        queued_ns: u64,
+        submit_ns: u64,
+        payload: Vec<u8>,
+    ) {
+        let now = now_ns();
+        let ts = Timestamps {
+            queued_ns,
+            submit_ns,
+            start_ns: submit_ns,
+            end_ns: now,
+        };
+        self.broadcast_completion(event, ts, payload);
+    }
+
+    /// Mark complete locally, send Completion to the client and NotifyEvent
+    /// to every peer (paper Fig 3).
+    fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Vec<u8>) {
+        if event == 0 {
+            return;
+        }
+        self.state.events.complete(event, ts);
+        let completion = Msg::control(Body::Completion {
+            event,
+            status: EventStatus::Complete.to_i8(),
+            ts,
+            payload_len: payload.len() as u64,
+        });
+        self.state.send_to_client(Packet {
+            msg: completion,
+            payload,
+        });
+        let notify = Packet::bare(Msg::control(Body::NotifyEvent {
+            event,
+            status: EventStatus::Complete.to_i8(),
+        }));
+        self.state.broadcast_to_peers(&notify);
+    }
+
+    fn fail_event(&mut self, event: u64) {
+        if event == 0 {
+            return;
+        }
+        self.state.events.fail(event);
+        let completion = Msg::control(Body::Completion {
+            event,
+            status: EventStatus::Failed.to_i8(),
+            ts: Timestamps::default(),
+            payload_len: 0,
+        });
+        self.state.send_to_client(Packet::bare(completion));
+        let notify = Packet::bare(Msg::control(Body::NotifyEvent {
+            event,
+            status: EventStatus::Failed.to_i8(),
+        }));
+        self.state.broadcast_to_peers(&notify);
+    }
+
+    fn fail_command(&mut self, msg: &Msg) {
+        self.fail_event(msg.event);
+    }
+}

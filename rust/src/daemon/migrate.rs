@@ -1,0 +1,145 @@
+//! P2P buffer migration worker (paper §5.1, §5.4).
+//!
+//! The client only sends a `MigrateOut` to the *source* server; this worker
+//! pushes the bytes directly to the destination peer — TCP peer socket or
+//! RDMA chain — and the *destination* completes the migration event for
+//! everyone. Only the content-size prefix crosses the wire when the buffer
+//! has a `cl_pocl_content_size` link (§5.3).
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::net::rdma::Wr;
+use crate::proto::{Body, Msg, Packet};
+
+use super::state::DaemonState;
+
+/// One migration to perform.
+pub struct MigrationJob {
+    pub buf: u64,
+    pub dst_server: u32,
+    /// Destination allocation size (the buffer's full size).
+    pub alloc_size: u64,
+    /// The migration event, completed by the destination.
+    pub event: u64,
+    pub use_rdma: bool,
+}
+
+/// Spawn the migration worker thread; returns its job channel.
+pub fn spawn_worker(state: Arc<DaemonState>) -> Sender<MigrationJob> {
+    let (tx, rx) = channel::<MigrationJob>();
+    std::thread::Builder::new()
+        .name(format!("pocld{}-migrate", state.server_id))
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                if let Err(e) = run_job(&state, &job) {
+                    eprintln!(
+                        "[pocld{}] migration of buf {} failed: {e:#}",
+                        state.server_id, job.buf
+                    );
+                    // Local failure: fail the event ourselves (the
+                    // destination never learns of this migration).
+                    state.events.fail(job.event);
+                    let note = Packet::bare(Msg::control(Body::NotifyEvent {
+                        event: job.event,
+                        status: crate::proto::EventStatus::Failed.to_i8(),
+                    }));
+                    state.broadcast_to_peers(&note);
+                    state.send_to_client(Packet::bare(Msg::control(Body::Completion {
+                        event: job.event,
+                        status: crate::proto::EventStatus::Failed.to_i8(),
+                        ts: Default::default(),
+                        payload_len: 0,
+                    })));
+                }
+            }
+        })
+        .expect("spawn migration worker");
+    tx
+}
+
+fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
+    // Content-size extension: transfer only the meaningful prefix.
+    // Single staging copy (hot path, see EXPERIMENTS.md §Perf): the
+    // content prefix is read out under the buffer lock directly into the
+    // outgoing payload — no full-buffer snapshot, no second staging copy.
+    let content_limit = state.content_size_of(job.buf);
+    let (staged, total_len) = {
+        let buffers = state.buffers.lock().unwrap();
+        let entry = buffers
+            .get(&job.buf)
+            .ok_or_else(|| anyhow::anyhow!("unknown buffer {}", job.buf))?;
+        let data = entry.data.read().unwrap();
+        let content = (content_limit as usize).min(data.len());
+        (data[..content].to_vec(), data.len())
+    };
+    let content = staged.len();
+    let snapshot_len = total_len;
+
+    let data_msg = Msg {
+        cmd_id: 0,
+        queue: 0,
+        device: 0,
+        event: job.event,
+        wait: Vec::new(),
+        body: Body::MigrateData {
+            buf: job.buf,
+            content_size: content as u64,
+            total_size: job.alloc_size.max(snapshot_len as u64),
+            len: if job.use_rdma { 0 } else { content as u64 },
+        },
+    };
+
+    if job.use_rdma {
+        let rdma = state
+            .rdma
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("RDMA requested but no fabric attached"))?;
+        let (rkey, remote_size) = rdma
+            .peer_keys
+            .lock()
+            .unwrap()
+            .get(&job.dst_server)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no rkey advertised by peer {}", job.dst_server))?;
+        if (content as u64) > remote_size {
+            anyhow::bail!(
+                "content {} exceeds peer shadow region {}",
+                content,
+                remote_size
+            );
+        }
+        // Shadow-buffer scheme (paper §5.4): `staged` above *is* the copy
+        // into the registered send staging area. Claim the destination's
+        // inbound window and post ONE chained doorbell:
+        // RDMA_WRITE(payload) -> RDMA_SEND(command).
+        let staged = Arc::new(staged);
+        rdma.endpoint.window_acquire(job.dst_server);
+        rdma.endpoint.post_chain(&[
+            Wr::Write {
+                dst_node: job.dst_server,
+                rkey,
+                offset: 0,
+                data: staged,
+                len: content,
+            },
+            Wr::Send {
+                dst_node: job.dst_server,
+                msg: data_msg.encode(),
+            },
+        ])?;
+        // The window is released by the destination after it drains the
+        // shadow into the OpenCL buffer.
+    } else {
+        // TCP path: command struct + payload over the peer socket (size /
+        // struct / payload writes on the peer writer thread).
+        state.send_to_peer(
+            job.dst_server,
+            Packet {
+                msg: data_msg,
+                payload: staged,
+            },
+        );
+    }
+    Ok(())
+}

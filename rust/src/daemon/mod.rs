@@ -1,0 +1,284 @@
+//! `pocld` — the PoCL-R server daemon (paper §4.2).
+//!
+//! One daemon runs per MEC server. It accepts a client connection plus one
+//! peer connection per other server, and is structured exactly as the paper
+//! describes: *"Each socket has a reader thread and a writer thread. The
+//! readers do blocking reads on the socket until they manage to read a new
+//! command, which they then dispatch"*. Dispatch resolves event
+//! dependencies against the daemon's [`crate::sched::EventTable`] (native +
+//! user events), forwards ready kernel launches to per-device executor
+//! threads, performs P2P buffer migrations (TCP or RDMA), and fans
+//! completion notifications out to the client and all peers.
+//!
+//! Daemons are plain structs — tests, benches and examples spawn several in
+//! one process connected over real loopback TCP (shaped per DESIGN.md §3),
+//! and `poclr daemon` runs one standalone.
+
+pub mod connection;
+pub mod dispatch;
+pub mod migrate;
+pub mod state;
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::net::rdma::Fabric;
+use crate::net::tcp;
+use crate::net::LinkProfile;
+use crate::proto::{Body, Msg, Packet, ROLE_PEER};
+use crate::runtime::executor::DeviceKind;
+use crate::runtime::Manifest;
+
+use dispatch::Work;
+use state::DaemonState;
+
+/// Configuration of one daemon instance.
+pub struct DaemonConfig {
+    pub server_id: u32,
+    /// Number of PJRT-backed ("GPU") devices to expose.
+    pub n_gpus: usize,
+    /// Extra custom devices (decoder, camera, ...).
+    pub custom_devices: Vec<DeviceKind>,
+    /// Link emulation towards the client (the UE access network).
+    pub client_link: LinkProfile,
+    /// Link emulation between servers (the MEC interconnect).
+    pub peer_link: LinkProfile,
+    /// Attach to a simulated RDMA fabric for peer migrations.
+    pub fabric: Option<Arc<Fabric>>,
+    pub manifest: Manifest,
+    /// Artifacts to pre-compile at startup.
+    pub warm: Vec<String>,
+}
+
+impl DaemonConfig {
+    pub fn local(server_id: u32, n_gpus: usize, manifest: Manifest) -> Self {
+        DaemonConfig {
+            server_id,
+            n_gpus,
+            custom_devices: Vec::new(),
+            client_link: LinkProfile::LOOPBACK,
+            peer_link: LinkProfile::LOOPBACK,
+            fabric: None,
+            manifest,
+            warm: Vec::new(),
+        }
+    }
+}
+
+/// A running daemon. Dropping it shuts the threads down.
+pub struct Daemon {
+    pub server_id: u32,
+    pub port: u16,
+    pub state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Start a daemon listening on an OS-assigned loopback port.
+    pub fn spawn(cfg: DaemonConfig) -> Result<Daemon> {
+        let (listener, port) = tcp::listen_loopback()?;
+        Self::spawn_on(cfg, listener, port)
+    }
+
+    /// Start a daemon on a specific loopback port (reconnection tests
+    /// revive a daemon at a known address).
+    pub fn spawn_on_port(cfg: DaemonConfig, port: u16) -> Result<Daemon> {
+        let listener = TcpListener::bind(("127.0.0.1", port)).context("bind fixed port")?;
+        Self::spawn_on(cfg, listener, port)
+    }
+
+    fn spawn_on(mut cfg: DaemonConfig, listener: TcpListener, port: u16) -> Result<Daemon> {
+        let server_id = cfg.server_id;
+        let state = DaemonState::new(&mut cfg)?;
+
+        // Warm requested artifacts on every GPU device.
+        for dev in state.devices.iter().filter(|d| !d.is_custom) {
+            for a in &cfg.warm {
+                dev.warm(a);
+            }
+        }
+
+        let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
+
+        // Dispatcher thread.
+        {
+            let state = Arc::clone(&state);
+            let tx = work_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pocld{server_id}-dispatch"))
+                .spawn(move || dispatch::run(state, work_rx, tx))
+                .context("spawn dispatcher")?;
+        }
+
+        // RDMA completion poller (peer pushes arriving over the fabric).
+        if let Some(rdma) = &state.rdma {
+            let cq = rdma.cq.lock().unwrap().take().expect("cq taken once");
+            let tx = work_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pocld{server_id}-rdma-cq"))
+                .spawn(move || {
+                    while let Ok(c) = cq.poll() {
+                        match Msg::decode(&c.msg) {
+                            Ok(msg) => {
+                                if tx
+                                    .send(Work::Packet {
+                                        from_peer: Some(c.from_node),
+                                        pkt: Packet::bare(msg),
+                                        via_rdma: true,
+                                    })
+                                    .is_err()
+                                {
+                                    break;
+                                }
+                            }
+                            Err(e) => eprintln!("[pocld{server_id}] bad RDMA send: {e}"),
+                        }
+                    }
+                })
+                .context("spawn rdma poller")?;
+        }
+
+        // Accept loop.
+        let accept_handle = {
+            let state = Arc::clone(&state);
+            let tx = work_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pocld{server_id}-accept"))
+                .spawn(move || connection::accept_loop(listener, state, tx))
+                .context("spawn accept loop")?
+        };
+
+        Ok(Daemon {
+            server_id,
+            port,
+            state,
+            work_tx,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    pub fn addr(&self) -> String {
+        format!("127.0.0.1:{}", self.port)
+    }
+
+    /// Dial a peer daemon and register the connection on both ends.
+    /// Call once per unordered pair (convention: lower id dials higher).
+    pub fn connect_peer(&self, peer_id: u32, peer_addr: &str) -> Result<()> {
+        let stream = tcp::connect(peer_addr)?;
+        let hello = Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_PEER,
+            peer_id: self.server_id,
+        });
+        let mut s = stream.try_clone()?;
+        crate::proto::write_packet(&mut s, &hello, &[])?;
+        connection::start_peer_io(
+            stream,
+            peer_id,
+            Arc::clone(&self.state),
+            self.work_tx.clone(),
+        )?;
+        // Advertise our RDMA shadow region to the new peer.
+        if let Some(rdma) = &self.state.rdma {
+            let (rkey, size) = rdma.local_advert();
+            self.state.send_to_peer(
+                peer_id,
+                Packet::bare(Msg::control(Body::RdmaAdvertise {
+                    rkey,
+                    shadow_size: size,
+                })),
+            );
+        }
+        Ok(())
+    }
+
+    /// Sever the live client connection without touching daemon state —
+    /// simulates an access-network drop or the UE roaming to a new IP
+    /// (paper §4.3). The client driver is expected to reconnect with its
+    /// session id and replay unacknowledged commands.
+    pub fn kick_client(&self) {
+        if let Some(s) = self.state.client_stream.lock().unwrap().take() {
+            s.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+
+    /// Total device-busy nanoseconds (Fig 17 utilization).
+    pub fn busy_ns(&self) -> u64 {
+        self.state
+            .devices
+            .iter()
+            .map(|d| d.busy_ns.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.work_tx.send(Work::Shutdown).ok();
+        // Poke the accept loop awake so it can observe shutdown.
+        let _ = std::net::TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(h) = self.accept_handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Convenience: an in-process cluster of daemons with a full peer mesh —
+/// the standard fixture for tests, benches and examples.
+pub struct Cluster {
+    pub daemons: Vec<Daemon>,
+    pub fabric: Option<Arc<Fabric>>,
+}
+
+impl Cluster {
+    /// Spawn `n` daemons with `gpus_per_server` devices each and connect
+    /// the peer mesh. `peer_link`/`client_link` shape the traffic; `rdma`
+    /// attaches all daemons to one simulated fabric.
+    pub fn start(
+        n: usize,
+        gpus_per_server: usize,
+        client_link: LinkProfile,
+        peer_link: LinkProfile,
+        rdma: bool,
+        manifest: &Manifest,
+        warm: &[&str],
+    ) -> Result<Cluster> {
+        let fabric = if rdma {
+            Some(Fabric::new(peer_link))
+        } else {
+            None
+        };
+        let mut daemons = Vec::new();
+        for id in 0..n as u32 {
+            let cfg = DaemonConfig {
+                server_id: id,
+                n_gpus: gpus_per_server,
+                custom_devices: Vec::new(),
+                client_link,
+                peer_link,
+                fabric: fabric.clone(),
+                manifest: manifest.clone(),
+                warm: warm.iter().map(|s| s.to_string()).collect(),
+            };
+            daemons.push(Daemon::spawn(cfg)?);
+        }
+        // Full mesh: lower id dials higher id.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let addr = daemons[j].addr();
+                daemons[i].connect_peer(j as u32, &addr)?;
+            }
+        }
+        Ok(Cluster { daemons, fabric })
+    }
+
+    pub fn addrs(&self) -> Vec<String> {
+        self.daemons.iter().map(|d| d.addr()).collect()
+    }
+}

@@ -1,0 +1,267 @@
+//! Shared daemon state: buffer store, event table, device executors,
+//! connection registries, session bookkeeping, RDMA shadow region.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::net::rdma::{Endpoint, Mr};
+use crate::net::LinkProfile;
+use crate::proto::{Packet, SessionId};
+use crate::runtime::executor::{DeviceExecutor, DeviceKind};
+use crate::sched::EventTable;
+use crate::util::rng::Rng;
+
+use super::DaemonConfig;
+
+/// One allocated OpenCL buffer on this server.
+pub struct BufEntry {
+    pub data: Arc<RwLock<Vec<u8>>>,
+    pub size: u64,
+    /// Linked cl_pocl_content_size buffer id (0 = none).
+    pub content_size_buf: u64,
+    /// Cached content size (bytes of meaningful data), updated by writes,
+    /// kernel output and migrations. Defaults to full size.
+    pub content_size: u64,
+}
+
+/// The daemon's RDMA attachment: endpoint + local shadow region +
+/// peer-advertised remote keys. The completion queue is moved out into the
+/// poller thread at daemon spawn.
+pub struct RdmaState {
+    pub endpoint: Arc<Endpoint>,
+    pub cq: Mutex<Option<crate::net::rdma::CompletionQueue>>,
+    pub shadow: Mr,
+    pub shadow_size: u64,
+    /// peer id -> (rkey, shadow size) learned from RdmaAdvertise.
+    pub peer_keys: Mutex<HashMap<u32, (u64, u64)>>,
+}
+
+impl RdmaState {
+    pub fn local_advert(&self) -> (u64, u64) {
+        (self.shadow.rkey, self.shadow_size)
+    }
+}
+
+/// Default shadow-region size: large enough for the biggest artifact buffer
+/// plus the Fig 11 sweep sizes (grown on demand in `migrate`).
+pub const SHADOW_BYTES: usize = 160 * 1024 * 1024;
+
+pub struct DaemonState {
+    pub server_id: u32,
+    pub client_link: LinkProfile,
+    pub peer_link: LinkProfile,
+    pub buffers: Mutex<HashMap<u64, BufEntry>>,
+    pub events: EventTable,
+    pub devices: Vec<DeviceExecutor>,
+    /// Writer channel to the connected client (None until it connects).
+    pub client_tx: Mutex<Option<Sender<Packet>>>,
+    /// Handle on the live client socket so tests can sever the connection
+    /// (simulating a network drop / UE roaming) without killing the daemon.
+    pub client_stream: Mutex<Option<std::net::TcpStream>>,
+    /// Completions produced while no client is connected; flushed in order
+    /// on (re)connect so the client driver can resolve its events.
+    pub undelivered: Mutex<Vec<Packet>>,
+    /// Writer channels to peers.
+    pub peer_txs: Mutex<HashMap<u32, Sender<Packet>>>,
+    /// Current client session and the replay-dedup cursor.
+    pub session: Mutex<SessionState>,
+    pub rdma: Option<RdmaState>,
+    pub shutdown: AtomicBool,
+    /// Commands processed (metrics).
+    pub commands_seen: AtomicU64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    pub id: SessionId,
+    /// Highest client cmd_id fully processed — commands at or below this
+    /// are dropped on replay after reconnect (paper §4.3: "the server
+    /// simply ignores commands it has already processed").
+    pub last_seen_cmd: u64,
+}
+
+impl DaemonState {
+    pub fn new(cfg: &mut DaemonConfig) -> Result<Arc<DaemonState>> {
+        let mut devices = Vec::new();
+        for i in 0..cfg.n_gpus {
+            devices.push(DeviceExecutor::spawn(
+                DeviceKind::Gpu,
+                cfg.manifest.clone(),
+                format!("s{}g{}", cfg.server_id, i),
+            ));
+        }
+        // Custom devices carry boxed state; the config hands ownership over.
+        for (i, kind) in std::mem::take(&mut cfg.custom_devices).into_iter().enumerate() {
+            devices.push(DeviceExecutor::spawn(
+                kind,
+                cfg.manifest.clone(),
+                format!("s{}c{}", cfg.server_id, i),
+            ));
+        }
+        let rdma = match &cfg.fabric {
+            Some(fabric) => {
+                let (endpoint, cq) = fabric.attach(cfg.server_id)?;
+                let endpoint = Arc::new(endpoint);
+                let region = Arc::new(RwLock::new(vec![0u8; SHADOW_BYTES]));
+                let shadow = endpoint.register_mr(region);
+                Some(RdmaState {
+                    endpoint,
+                    cq: Mutex::new(Some(cq)),
+                    shadow,
+                    shadow_size: SHADOW_BYTES as u64,
+                    peer_keys: Mutex::new(HashMap::new()),
+                })
+            }
+            None => None,
+        };
+        let mut session_seed = Rng::from_entropy();
+        let mut sid = [0u8; 16];
+        session_seed.fill_bytes(&mut sid);
+        Ok(Arc::new(DaemonState {
+            server_id: cfg.server_id,
+            client_link: cfg.client_link,
+            peer_link: cfg.peer_link,
+            buffers: Mutex::new(HashMap::new()),
+            events: EventTable::new(),
+            devices,
+            client_tx: Mutex::new(None),
+            client_stream: Mutex::new(None),
+            undelivered: Mutex::new(Vec::new()),
+            peer_txs: Mutex::new(HashMap::new()),
+            session: Mutex::new(SessionState {
+                id: sid,
+                last_seen_cmd: 0,
+            }),
+            rdma,
+            shutdown: AtomicBool::new(false),
+            commands_seen: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn send_to_client(&self, pkt: Packet) {
+        let guard = self.client_tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => {
+                if tx.send(pkt.clone()).is_err() {
+                    // Writer died mid-send: park for the next connection.
+                    self.undelivered.lock().unwrap().push(pkt);
+                }
+            }
+            None => self.undelivered.lock().unwrap().push(pkt),
+        }
+    }
+
+    pub fn send_to_peer(&self, peer: u32, pkt: Packet) {
+        if let Some(tx) = self.peer_txs.lock().unwrap().get(&peer) {
+            tx.send(pkt).ok();
+        }
+    }
+
+    pub fn broadcast_to_peers(&self, pkt: &Packet) {
+        for tx in self.peer_txs.lock().unwrap().values() {
+            tx.send(pkt.clone()).ok();
+        }
+    }
+
+    /// Snapshot a buffer's bytes for kernel input (copy-on-read: executors
+    /// must not observe later writes).
+    pub fn snapshot_buffer(&self, id: u64) -> Option<Arc<Vec<u8>>> {
+        let buffers = self.buffers.lock().unwrap();
+        let entry = buffers.get(&id)?;
+        let data = entry.data.read().unwrap();
+        Some(Arc::new(data.clone()))
+    }
+
+    /// Ensure a buffer exists (migrations allocate on demand).
+    pub fn ensure_buffer(&self, id: u64, size: u64, content_size_buf: u64) {
+        let mut buffers = self.buffers.lock().unwrap();
+        buffers.entry(id).or_insert_with(|| BufEntry {
+            data: Arc::new(RwLock::new(vec![0u8; size as usize])),
+            size,
+            content_size_buf,
+            content_size: size,
+        });
+    }
+
+    /// Effective content size of a buffer: the linked extension buffer's
+    /// u32 if present, else the cached value (paper §5.3).
+    pub fn content_size_of(&self, id: u64) -> u64 {
+        let buffers = self.buffers.lock().unwrap();
+        let Some(entry) = buffers.get(&id) else {
+            return 0;
+        };
+        if entry.content_size_buf != 0 {
+            if let Some(cs_entry) = buffers.get(&entry.content_size_buf) {
+                let data = cs_entry.data.read().unwrap();
+                if data.len() >= 4 {
+                    let v = u32::from_le_bytes(data[..4].try_into().unwrap()) as u64;
+                    return v.min(entry.size);
+                }
+            }
+        }
+        entry.content_size.min(entry.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn state() -> Arc<DaemonState> {
+        DaemonState::new(&mut DaemonConfig::local(0, 0, Manifest::default())).unwrap()
+    }
+
+    #[test]
+    fn ensure_and_snapshot() {
+        let s = state();
+        s.ensure_buffer(1, 8, 0);
+        s.buffers.lock().unwrap().get(&1).unwrap().data.write().unwrap()[0] = 42;
+        let snap = s.snapshot_buffer(1).unwrap();
+        assert_eq!(snap[0], 42);
+        assert!(s.snapshot_buffer(99).is_none());
+    }
+
+    #[test]
+    fn content_size_via_linked_buffer() {
+        let s = state();
+        s.ensure_buffer(10, 100, 11); // payload, linked to csbuf 11
+        s.ensure_buffer(11, 4, 0); // the content-size buffer
+        {
+            let b = s.buffers.lock().unwrap();
+            b.get(&11).unwrap().data.write().unwrap()[..4]
+                .copy_from_slice(&27u32.to_le_bytes());
+        }
+        assert_eq!(s.content_size_of(10), 27);
+        // without linkage, defaults to full size
+        s.ensure_buffer(12, 50, 0);
+        assert_eq!(s.content_size_of(12), 50);
+    }
+
+    #[test]
+    fn content_size_clamped_to_alloc() {
+        let s = state();
+        s.ensure_buffer(20, 10, 21);
+        s.ensure_buffer(21, 4, 0);
+        {
+            let b = s.buffers.lock().unwrap();
+            b.get(&21).unwrap().data.write().unwrap()[..4]
+                .copy_from_slice(&9999u32.to_le_bytes());
+        }
+        assert_eq!(s.content_size_of(20), 10);
+    }
+
+    #[test]
+    fn sessions_start_random_nonzero() {
+        let a = state();
+        let b = state();
+        let sa = a.session.lock().unwrap().id;
+        let sb = b.session.lock().unwrap().id;
+        assert_ne!(sa, [0u8; 16]);
+        assert_ne!(sa, sb);
+    }
+}

@@ -1,0 +1,40 @@
+//! # PoCL-R reproduction — an offloading layer for heterogeneous MEC
+//!
+//! This crate reimplements the system described in *"PoCL-R: An Open Standard
+//! Based Offloading Layer for Heterogeneous Multi-Access Edge Computing with
+//! Server Side Scalability"* (Solanti et al.) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a distributed
+//!   OpenCL-style runtime with a client *remote driver* ([`client`]), a
+//!   server *daemon* ([`daemon`]), peer-to-peer buffer migration and
+//!   completion signalling, decentralized command scheduling ([`sched`]),
+//!   session-based reconnection, an RDMA transport ([`net::rdma`]) and the
+//!   `cl_pocl_content_size` dynamic-buffer-size extension.
+//! * **Layer 2/1 (build time, `python/`)** — the compute the offloaded
+//!   OpenCL kernels perform, AOT-lowered to HLO text artifacts which the
+//!   daemons execute through the PJRT C API ([`runtime`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the binary
+//! is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod apps;
+pub mod baseline;
+pub mod client;
+pub mod config;
+pub mod daemon;
+pub mod energy;
+pub mod net;
+pub mod ocl;
+pub mod proto;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

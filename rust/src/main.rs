@@ -1,0 +1,132 @@
+//! `poclr` — command-line entry point.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline environment):
+//!
+//! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
+//! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
+//!   buffer-hopping smoke workload end to end.
+//! * `poclr sim fig12|fig13|fig16` — print a DES scenario table.
+//! * `poclr artifacts` — list the loaded artifact manifest.
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Cluster, Daemon, DaemonConfig};
+use poclr::net::LinkProfile;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios::{self, FluidMode};
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("daemon") => {
+            let manifest = Manifest::load_default()?;
+            let gpus: usize = flag_value(&args, "--gpus")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1);
+            let cfg = DaemonConfig::local(0, gpus, manifest);
+            let d = match flag_value(&args, "--port").and_then(|v| v.parse::<u16>().ok()) {
+                Some(port) => Daemon::spawn_on_port(cfg, port)?,
+                None => Daemon::spawn(cfg)?,
+            };
+            println!("pocld: {} device(s) on {}", gpus, d.addr());
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Some("quick") => {
+            let manifest = Manifest::load_default()?;
+            let n: usize = flag_value(&args, "--servers")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2);
+            let cluster = Cluster::start(
+                n,
+                1,
+                LinkProfile::LOOPBACK,
+                LinkProfile::LOOPBACK,
+                false,
+                &manifest,
+                &["vecadd_f32_4096", "increment_s32_1"],
+            )?;
+            let p = Platform::connect(&cluster.addrs(), ClientConfig::default())?;
+            let ctx = p.context();
+            let q0 = ctx.queue(0, 0);
+            let buf = ctx.create_buffer(4);
+            q0.write(buf, &0i32.to_le_bytes())?;
+            for s in 0..n as u32 {
+                let q = ctx.queue(s, 0);
+                q.run("increment_s32_1", &[buf], &[buf])?.wait()?;
+            }
+            let out = q0.read(buf)?;
+            let v = i32::from_le_bytes(out[..4].try_into().unwrap());
+            anyhow::ensure!(v == n as i32, "expected {n}, got {v}");
+            println!("quick: buffer hopped {n} servers via P2P migration, value = {v} OK");
+            Ok(())
+        }
+        Some("sim") => {
+            match args.get(1).map(|s| s.as_str()) {
+                Some("fig12") => {
+                    for (d, s) in scenarios::fig12_matmul_speedup(8192, &[1, 2, 4, 8, 12, 16]) {
+                        println!("{d:>2} GPUs: {s:.2}x");
+                    }
+                }
+                Some("fig13") => {
+                    for n in [2048usize, 4096, 8192] {
+                        for s in [4usize, 8, 12, 16] {
+                            println!(
+                                "N={n} servers={s}: {:.2}x",
+                                scenarios::fig13_rdma_speedup(n, s)
+                            );
+                        }
+                    }
+                }
+                Some("fig16") => {
+                    for mode in [
+                        FluidMode::Native,
+                        FluidMode::Localhost,
+                        FluidMode::PoclrTcp,
+                        FluidMode::PoclrRdma,
+                    ] {
+                        for nodes in [1usize, 2, 3] {
+                            let p = scenarios::fig16_fluidx3d(mode, nodes, 100);
+                            println!(
+                                "{mode:?} nodes={nodes}: {:.0} MLUPs util {:.0}%",
+                                p.mlups,
+                                p.utilization * 100.0
+                            );
+                        }
+                    }
+                }
+                other => anyhow::bail!("unknown sim scenario {other:?} (fig12|fig13|fig16)"),
+            }
+            Ok(())
+        }
+        Some("artifacts") => {
+            let manifest = Manifest::load_default()?;
+            for (name, a) in &manifest.artifacts {
+                println!(
+                    "{name:<28} {:>12} flop  in {:>10}  out {:>10}  {}",
+                    a.flops,
+                    poclr::util::fmt_bytes(a.bytes_in),
+                    poclr::util::fmt_bytes(a.bytes_out),
+                    a.description
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
+            eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
+            eprintln!("  quick  [--servers N]           in-process cluster smoke run");
+            eprintln!("  sim    fig12|fig13|fig16       DES scenario tables");
+            eprintln!("  artifacts                      list the AOT manifest");
+            std::process::exit(2);
+        }
+    }
+}

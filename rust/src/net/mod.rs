@@ -1,0 +1,19 @@
+//! Network substrate: tuned TCP sockets, link emulation, simulated RDMA.
+//!
+//! The paper measures over physical 100 Mb / 1 Gb / 40 Gb / 56 Gb / 100 Gb
+//! Ethernet and Wi-Fi 6 plus InfiniBand RDMA. This environment has only
+//! loopback, so (DESIGN.md §3):
+//!
+//! * [`tcp`] carries real TCP traffic with the same socket tuning the paper
+//!   describes (TCP_NODELAY, 9 MiB send/receive buffers),
+//! * [`shaper`] injects configurable propagation delay + bandwidth pacing so
+//!   round-trip-dominated measurements reproduce the paper's link mix,
+//! * [`rdma`] reimplements the *mechanism* of InfiniBand verbs (registered
+//!   memory regions, chained work requests, single doorbell, zero-syscall
+//!   data placement) over in-process shared memory.
+
+pub mod rdma;
+pub mod shaper;
+pub mod tcp;
+
+pub use shaper::LinkProfile;

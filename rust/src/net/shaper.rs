@@ -1,0 +1,145 @@
+//! Link emulation: propagation delay + bandwidth pacing.
+//!
+//! All the paper's measurements are taken over specific physical links
+//! (100 Mb switched Ethernet with 0.122 ms ping, a 40 Gb direct machine-to-
+//! machine cable, 56/100 Gb datacenter LANs, Wi-Fi 6). The reproduction
+//! runs over loopback; connection writer threads call
+//! [`LinkProfile::pace`] once per packet to inject one-way propagation
+//! delay and serialization time, so round-trip-dominated figures (8-11)
+//! keep the paper's structure.
+
+use std::time::Duration;
+
+/// A (half-duplex view of a) network link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    pub name: &'static str,
+    /// Full round-trip time ("ping" in the paper's tables).
+    pub rtt: Duration,
+    /// Usable bandwidth in bits per second. 0 = unlimited.
+    pub bandwidth_bps: u64,
+}
+
+impl LinkProfile {
+    /// Raw loopback: no injected delay (the "Localhost" rows).
+    pub const LOOPBACK: LinkProfile = LinkProfile {
+        name: "localhost",
+        rtt: Duration::ZERO,
+        bandwidth_bps: 0,
+    };
+
+    /// 100 Mb switched Ethernet — the Fig 8/10 client/server LAN.
+    /// Paper reports ICMP ping fluctuating around 0.122 ms.
+    pub const ETH_100M: LinkProfile = LinkProfile {
+        name: "100Mbit-eth",
+        rtt: Duration::from_micros(122),
+        bandwidth_bps: 100_000_000,
+    };
+
+    /// 1 Gb wired Ethernet (AR case study router uplink).
+    pub const ETH_1G: LinkProfile = LinkProfile {
+        name: "1Gbit-eth",
+        rtt: Duration::from_micros(200),
+        bandwidth_bps: 1_000_000_000,
+    };
+
+    /// 40 Gb direct machine-to-machine link (Fig 10 "direct" rows).
+    pub const ETH_40G_DIRECT: LinkProfile = LinkProfile {
+        name: "40Gbit-direct",
+        rtt: Duration::from_micros(30),
+        bandwidth_bps: 40_000_000_000,
+    };
+
+    /// 56 Gb cluster LAN (Fig 12 matmul cluster).
+    pub const LAN_56G: LinkProfile = LinkProfile {
+        name: "56Gbit-lan",
+        rtt: Duration::from_micros(40),
+        bandwidth_bps: 56_000_000_000,
+    };
+
+    /// 100 Gb fiber (FluidX3D cluster, Figs 16-17).
+    pub const LAN_100G: LinkProfile = LinkProfile {
+        name: "100Gbit-lan",
+        rtt: Duration::from_micros(30),
+        bandwidth_bps: 100_000_000_000,
+    };
+
+    /// Wi-Fi 6 access link of the AR smartphone (Fig 15). Bandwidth is
+    /// effective TCP goodput under the interference/congestion the paper
+    /// calls typical for the UE access network, not the PHY rate.
+    pub const WIFI6: LinkProfile = LinkProfile {
+        name: "wifi6",
+        rtt: Duration::from_micros(2_000),
+        bandwidth_bps: 450_000_000,
+    };
+
+    /// One-way propagation + serialization delay for a packet of `bytes`.
+    pub fn delay_for(&self, bytes: usize) -> Duration {
+        let prop = self.rtt / 2;
+        let ser = if self.bandwidth_bps == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos((bytes as u128 * 8 * 1_000_000_000 / self.bandwidth_bps as u128) as u64)
+        };
+        prop + ser
+    }
+
+    /// Sleep for the link traversal of a packet. Called by connection writer
+    /// threads once per packet (not per syscall).
+    pub fn pace(&self, bytes: usize) {
+        let d = self.delay_for(bytes);
+        if !d.is_zero() {
+            spin_sleep(d);
+        }
+    }
+}
+
+/// Hybrid sleep: OS sleep for the bulk, spin for the tail. `thread::sleep`
+/// alone overshoots by ~50 µs on this kernel which would swamp the 60 µs
+/// command-overhead signal the Fig 8 benchmark measures.
+pub fn spin_sleep(d: Duration) {
+    let start = std::time::Instant::now();
+    if d > Duration::from_micros(300) {
+        std::thread::sleep(d - Duration::from_micros(200));
+    }
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_is_free() {
+        assert_eq!(LinkProfile::LOOPBACK.delay_for(1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn delay_components() {
+        let p = LinkProfile::ETH_100M;
+        // 100 Mb/s -> 1 MiB takes ~83.9 ms of serialization + 61 µs prop
+        let d = p.delay_for(1 << 20);
+        assert!(d > Duration::from_millis(83) && d < Duration::from_millis(86), "{d:?}");
+        // empty packet: pure propagation = rtt/2
+        assert_eq!(p.delay_for(0), Duration::from_micros(61));
+    }
+
+    #[test]
+    fn spin_sleep_accuracy() {
+        let d = Duration::from_micros(100);
+        let t0 = std::time::Instant::now();
+        spin_sleep(d);
+        let e = t0.elapsed();
+        assert!(e >= d, "{e:?}");
+        assert!(e < d + Duration::from_micros(150), "overshoot: {e:?}");
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        let big = 128 << 20;
+        assert!(LinkProfile::ETH_100M.delay_for(big) > LinkProfile::ETH_1G.delay_for(big));
+        assert!(LinkProfile::ETH_1G.delay_for(big) > LinkProfile::LAN_100G.delay_for(big));
+    }
+}

@@ -1,0 +1,101 @@
+//! TCP socket setup mirroring the paper's tuning: Nagle off for command
+//! latency, kernel send/receive buffers at 9 MiB (the Fig 11 knee: transfers
+//! larger than this split into multiple write syscalls).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// The paper's configured kernel-side socket buffer size (§6.3: "the
+/// internal send buffer size configured on the TCP socket" is 9 MiB).
+pub const SOCKET_BUF_BYTES: usize = 9 * 1024 * 1024;
+
+/// Apply PoCL-R socket tuning to a connected stream.
+pub fn tune(stream: &TcpStream) -> Result<()> {
+    stream.set_nodelay(true).context("TCP_NODELAY")?;
+    set_buf(stream, libc::SO_SNDBUF, SOCKET_BUF_BYTES)?;
+    set_buf(stream, libc::SO_RCVBUF, SOCKET_BUF_BYTES)?;
+    Ok(())
+}
+
+fn set_buf(stream: &TcpStream, opt: libc::c_int, bytes: usize) -> Result<()> {
+    let fd = stream.as_raw_fd();
+    let val: libc::c_int = bytes as libc::c_int;
+    // Safety: valid fd, correct optlen for a c_int option.
+    let rc = unsafe {
+        libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            opt,
+            &val as *const _ as *const libc::c_void,
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        )
+    };
+    if rc != 0 {
+        return Err(std::io::Error::last_os_error()).context("setsockopt");
+    }
+    Ok(())
+}
+
+/// Connect with tuning applied; retries briefly so in-process daemons that
+/// are still binding their listeners do not race the client.
+pub fn connect<A: ToSocketAddrs + Clone + std::fmt::Debug>(addr: A) -> Result<TcpStream> {
+    let mut last_err = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr.clone()) {
+            Ok(s) => {
+                tune(&s)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    Err(last_err.unwrap()).with_context(|| format!("connect {addr:?}"))
+}
+
+/// Bind a listener on 127.0.0.1 with an OS-assigned port.
+pub fn listen_loopback() -> Result<(TcpListener, u16)> {
+    let l = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    let port = l.local_addr()?.port();
+    Ok((l, port))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn tuned_roundtrip() {
+        let (l, port) = listen_loopback().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = l.accept().unwrap();
+            tune(&s).unwrap();
+            let mut b = [0u8; 5];
+            s.read_exact(&mut b).unwrap();
+            s.write_all(&b).unwrap();
+        });
+        let mut c = connect(("127.0.0.1", port)).unwrap();
+        c.write_all(b"hello").unwrap();
+        let mut b = [0u8; 5];
+        c.read_exact(&mut b).unwrap();
+        assert_eq!(&b, b"hello");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn nodelay_is_set() {
+        let (l, port) = listen_loopback().unwrap();
+        let t = std::thread::spawn(move || {
+            let _ = l.accept();
+        });
+        let c = connect(("127.0.0.1", port)).unwrap();
+        assert!(c.nodelay().unwrap());
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,84 @@
+//! OpenCL-style object model shared by the client driver and the daemon.
+//!
+//! This is not a full OpenCL binding — it is the subset the paper's runtime
+//! actually exercises: contexts spanning heterogeneous devices, fixed-size
+//! buffers (plus the `cl_pocl_content_size` extension), programs exposing
+//! AOT artifacts as (built-in) kernels, events with profiling info, and
+//! in-order/out-of-order command queues. The client-facing handle types
+//! live in [`crate::client`]; here are the descriptors both sides share.
+
+use crate::runtime::artifact::TensorSpec;
+
+/// OpenCL-ish device classification (cl_device_type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceType {
+    Cpu,
+    Gpu,
+    Accelerator,
+    /// CL_DEVICE_TYPE_CUSTOM: built-in kernels only (paper §7.1).
+    Custom,
+}
+
+/// Static description of a device exposed by a server.
+#[derive(Debug, Clone)]
+pub struct DeviceInfo {
+    /// Server-local device index.
+    pub index: u32,
+    pub dtype: DeviceType,
+    pub name: String,
+    /// Built-in kernels (custom devices) or empty (program devices).
+    pub builtin_kernels: Vec<String>,
+}
+
+/// Buffer allocation flags (subset of cl_mem_flags semantics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BufferFlags {
+    pub read_only: bool,
+    pub write_only: bool,
+}
+
+/// Where the freshest copy of a buffer lives. Maintained by the client
+/// driver to decide migration sources (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Only the host has the valid bytes.
+    Host,
+    /// Server `id` holds the freshest copy.
+    Server(u32),
+    /// Never written yet.
+    Undefined,
+}
+
+/// A kernel's interface: the artifact (or built-in) name plus its I/O specs
+/// when known from the manifest.
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_transitions_are_values() {
+        let mut r = Residency::Host;
+        assert_eq!(r, Residency::Host);
+        r = Residency::Server(2);
+        assert!(matches!(r, Residency::Server(2)));
+    }
+
+    #[test]
+    fn device_info_carries_builtins() {
+        let d = DeviceInfo {
+            index: 0,
+            dtype: DeviceType::Custom,
+            name: "vpcc-decoder".into(),
+            builtin_kernels: vec!["vpcc.decode".into()],
+        };
+        assert_eq!(d.dtype, DeviceType::Custom);
+        assert_eq!(d.builtin_kernels.len(), 1);
+    }
+}

@@ -1,0 +1,575 @@
+//! Command and reply message definitions + their flat codec.
+//!
+//! One `Msg` per OpenCL command or runtime notification. The `event` field is
+//! the client-assigned OpenCL event id this command will complete; `wait` is
+//! the application-provided event wait list (the task graph edges of §5.2).
+//! Bulk data (buffer contents) is *not* part of the struct: its length lives
+//! in the body and the bytes follow the struct on the wire (paper Fig 6).
+
+use super::wire::{R, W, WireError};
+
+/// 16-byte session id used for reconnection (paper §4.3). A fresh client
+/// sends all-zeroes; the server assigns a random id in its `Welcome`.
+pub type SessionId = [u8; 16];
+
+pub const ROLE_CLIENT: u8 = 0;
+pub const ROLE_PEER: u8 = 1;
+
+/// OpenCL-style event status. Matches the sign convention of cl_int status
+/// codes: negative = error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventStatus {
+    Queued,
+    Submitted,
+    Running,
+    Complete,
+    Failed,
+}
+
+impl EventStatus {
+    pub fn to_i8(self) -> i8 {
+        match self {
+            EventStatus::Queued => 3,
+            EventStatus::Submitted => 2,
+            EventStatus::Running => 1,
+            EventStatus::Complete => 0,
+            EventStatus::Failed => -1,
+        }
+    }
+
+    pub fn from_i8(v: i8) -> Self {
+        match v {
+            3 => EventStatus::Queued,
+            2 => EventStatus::Submitted,
+            1 => EventStatus::Running,
+            0 => EventStatus::Complete,
+            _ => EventStatus::Failed,
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, EventStatus::Complete | EventStatus::Failed)
+    }
+}
+
+/// OpenCL event profiling timestamps in daemon-local ns (paper Fig 9 uses
+/// the event profiling API; these four are CL_PROFILING_COMMAND_*).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Timestamps {
+    pub queued_ns: u64,
+    pub submit_ns: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Per-command payload body. Tags are part of the wire format.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Body {
+    /// Client or peer handshake. `session` all-zero on first connect.
+    Hello {
+        session: SessionId,
+        role: u8,
+        /// Peer server id when role == ROLE_PEER.
+        peer_id: u32,
+    },
+    /// Server handshake reply: the session to present when reconnecting and
+    /// the id of the last command the server has fully processed (replay
+    /// dedup point).
+    Welcome {
+        session: SessionId,
+        server_id: u32,
+        n_devices: u32,
+        last_seen_cmd: u64,
+    },
+    /// Allocate a buffer of `size` bytes on the server.
+    /// `content_size_buf` links the cl_pocl_content_size extension buffer
+    /// (0 = none): migrations then transfer only the designated used size.
+    CreateBuffer {
+        buf: u64,
+        size: u64,
+        content_size_buf: u64,
+    },
+    FreeBuffer {
+        buf: u64,
+    },
+    /// Host -> server buffer write. `len` payload bytes follow the struct.
+    WriteBuffer {
+        buf: u64,
+        offset: u64,
+        len: u64,
+    },
+    /// Server -> host read request; the reply `Completion` carries the data.
+    ReadBuffer {
+        buf: u64,
+        offset: u64,
+        len: u64,
+    },
+    /// Launch an AOT artifact. `args` are input buffer ids in artifact
+    /// input order, `outs` receive the tuple outputs.
+    RunKernel {
+        artifact: String,
+        args: Vec<u64>,
+        outs: Vec<u64>,
+    },
+    /// Sent to the *source* server: push `buf` to peer `dst_server` in P2P
+    /// fashion (paper §5.1). The destination completes the event.
+    MigrateOut {
+        buf: u64,
+        dst_server: u32,
+        size: u64,
+        /// Transport selector: 0 = TCP peer socket, 1 = RDMA.
+        rdma: u8,
+    },
+    /// Peer -> peer buffer content push. `len` payload bytes follow.
+    /// `content_size` is the meaningful prefix (cl_pocl_content_size);
+    /// `total_size` the allocated size on the destination.
+    MigrateData {
+        buf: u64,
+        content_size: u64,
+        total_size: u64,
+        len: u64,
+    },
+    /// Peer -> peer event completion notification (paper Fig 3 green arrow).
+    NotifyEvent {
+        event: u64,
+        status: i8,
+    },
+    /// Command completion (server -> client). For ReadBuffer, `payload_len`
+    /// bytes of buffer contents follow.
+    Completion {
+        event: u64,
+        status: i8,
+        ts: Timestamps,
+        payload_len: u64,
+    },
+    /// In-order queue barrier.
+    Barrier,
+    /// Explicitly set the content size of a buffer (host-side update of the
+    /// extension buffer without a full write).
+    SetContentSize {
+        buf: u64,
+        size: u64,
+    },
+    /// Peer control: advertise this server's registered RDMA shadow-buffer
+    /// region so peers can RDMA_WRITE migrations into it (paper §5.4).
+    RdmaAdvertise {
+        rkey: u64,
+        shadow_size: u64,
+    },
+}
+
+const T_HELLO: u8 = 1;
+const T_WELCOME: u8 = 2;
+const T_CREATE: u8 = 3;
+const T_FREE: u8 = 4;
+const T_WRITE: u8 = 5;
+const T_READ: u8 = 6;
+const T_RUN: u8 = 7;
+const T_MIGRATE_OUT: u8 = 8;
+const T_MIGRATE_DATA: u8 = 9;
+const T_NOTIFY: u8 = 10;
+const T_COMPLETION: u8 = 11;
+const T_BARRIER: u8 = 12;
+const T_SET_CSIZE: u8 = 13;
+const T_RDMA_ADVERT: u8 = 14;
+
+/// A protocol message: routing header + body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Msg {
+    /// Client-assigned command id, monotonically increasing per session.
+    /// Used for replay dedup after reconnect.
+    pub cmd_id: u64,
+    /// Target command queue (0 = default / control).
+    pub queue: u32,
+    /// Target device index on the server.
+    pub device: u32,
+    /// Event id this command completes (0 = fire-and-forget).
+    pub event: u64,
+    /// Wait list: event ids that must complete first.
+    pub wait: Vec<u64>,
+    pub body: Body,
+}
+
+impl Msg {
+    pub fn control(body: Body) -> Self {
+        Msg {
+            cmd_id: 0,
+            queue: 0,
+            device: 0,
+            event: 0,
+            wait: Vec::new(),
+            body,
+        }
+    }
+
+    /// Number of bulk payload bytes that follow this struct on the wire.
+    pub fn payload_len(&self) -> u64 {
+        match &self.body {
+            Body::WriteBuffer { len, .. } => *len,
+            Body::MigrateData { len, .. } => *len,
+            Body::Completion { payload_len, .. } => *payload_len,
+            _ => 0,
+        }
+    }
+
+    pub fn encode_into(&self, w: &mut W) {
+        w.u64(self.cmd_id);
+        w.u32(self.queue);
+        w.u32(self.device);
+        w.u64(self.event);
+        w.ids(&self.wait);
+        match &self.body {
+            Body::Hello {
+                session,
+                role,
+                peer_id,
+            } => {
+                w.u8(T_HELLO);
+                w.bytes(session);
+                w.u8(*role);
+                w.u32(*peer_id);
+            }
+            Body::Welcome {
+                session,
+                server_id,
+                n_devices,
+                last_seen_cmd,
+            } => {
+                w.u8(T_WELCOME);
+                w.bytes(session);
+                w.u32(*server_id);
+                w.u32(*n_devices);
+                w.u64(*last_seen_cmd);
+            }
+            Body::CreateBuffer {
+                buf,
+                size,
+                content_size_buf,
+            } => {
+                w.u8(T_CREATE);
+                w.u64(*buf);
+                w.u64(*size);
+                w.u64(*content_size_buf);
+            }
+            Body::FreeBuffer { buf } => {
+                w.u8(T_FREE);
+                w.u64(*buf);
+            }
+            Body::WriteBuffer { buf, offset, len } => {
+                w.u8(T_WRITE);
+                w.u64(*buf);
+                w.u64(*offset);
+                w.u64(*len);
+            }
+            Body::ReadBuffer { buf, offset, len } => {
+                w.u8(T_READ);
+                w.u64(*buf);
+                w.u64(*offset);
+                w.u64(*len);
+            }
+            Body::RunKernel {
+                artifact,
+                args,
+                outs,
+            } => {
+                w.u8(T_RUN);
+                w.str16(artifact);
+                w.ids(args);
+                w.ids(outs);
+            }
+            Body::MigrateOut {
+                buf,
+                dst_server,
+                size,
+                rdma,
+            } => {
+                w.u8(T_MIGRATE_OUT);
+                w.u64(*buf);
+                w.u32(*dst_server);
+                w.u64(*size);
+                w.u8(*rdma);
+            }
+            Body::MigrateData {
+                buf,
+                content_size,
+                total_size,
+                len,
+            } => {
+                w.u8(T_MIGRATE_DATA);
+                w.u64(*buf);
+                w.u64(*content_size);
+                w.u64(*total_size);
+                w.u64(*len);
+            }
+            Body::NotifyEvent { event, status } => {
+                w.u8(T_NOTIFY);
+                w.u64(*event);
+                w.i8(*status);
+            }
+            Body::Completion {
+                event,
+                status,
+                ts,
+                payload_len,
+            } => {
+                w.u8(T_COMPLETION);
+                w.u64(*event);
+                w.i8(*status);
+                w.u64(ts.queued_ns);
+                w.u64(ts.submit_ns);
+                w.u64(ts.start_ns);
+                w.u64(ts.end_ns);
+                w.u64(*payload_len);
+            }
+            Body::Barrier => w.u8(T_BARRIER),
+            Body::SetContentSize { buf, size } => {
+                w.u8(T_SET_CSIZE);
+                w.u64(*buf);
+                w.u64(*size);
+            }
+            Body::RdmaAdvertise { rkey, shadow_size } => {
+                w.u8(T_RDMA_ADVERT);
+                w.u64(*rkey);
+                w.u64(*shadow_size);
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = W::with_capacity(64 + 8 * self.wait.len());
+        self.encode_into(&mut w);
+        w.buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Msg, WireError> {
+        let mut r = R::new(bytes);
+        let cmd_id = r.u64()?;
+        let queue = r.u32()?;
+        let device = r.u32()?;
+        let event = r.u64()?;
+        let wait = r.ids()?;
+        let tag = r.u8()?;
+        let body = match tag {
+            T_HELLO => Body::Hello {
+                session: r.bytes(16)?.try_into().unwrap(),
+                role: r.u8()?,
+                peer_id: r.u32()?,
+            },
+            T_WELCOME => Body::Welcome {
+                session: r.bytes(16)?.try_into().unwrap(),
+                server_id: r.u32()?,
+                n_devices: r.u32()?,
+                last_seen_cmd: r.u64()?,
+            },
+            T_CREATE => Body::CreateBuffer {
+                buf: r.u64()?,
+                size: r.u64()?,
+                content_size_buf: r.u64()?,
+            },
+            T_FREE => Body::FreeBuffer { buf: r.u64()? },
+            T_WRITE => Body::WriteBuffer {
+                buf: r.u64()?,
+                offset: r.u64()?,
+                len: r.u64()?,
+            },
+            T_READ => Body::ReadBuffer {
+                buf: r.u64()?,
+                offset: r.u64()?,
+                len: r.u64()?,
+            },
+            T_RUN => Body::RunKernel {
+                artifact: r.str16()?,
+                args: r.ids()?,
+                outs: r.ids()?,
+            },
+            T_MIGRATE_OUT => Body::MigrateOut {
+                buf: r.u64()?,
+                dst_server: r.u32()?,
+                size: r.u64()?,
+                rdma: r.u8()?,
+            },
+            T_MIGRATE_DATA => Body::MigrateData {
+                buf: r.u64()?,
+                content_size: r.u64()?,
+                total_size: r.u64()?,
+                len: r.u64()?,
+            },
+            T_NOTIFY => Body::NotifyEvent {
+                event: r.u64()?,
+                status: r.i8()?,
+            },
+            T_COMPLETION => Body::Completion {
+                event: r.u64()?,
+                status: r.i8()?,
+                ts: Timestamps {
+                    queued_ns: r.u64()?,
+                    submit_ns: r.u64()?,
+                    start_ns: r.u64()?,
+                    end_ns: r.u64()?,
+                },
+                payload_len: r.u64()?,
+            },
+            T_BARRIER => Body::Barrier,
+            T_SET_CSIZE => Body::SetContentSize {
+                buf: r.u64()?,
+                size: r.u64()?,
+            },
+            T_RDMA_ADVERT => Body::RdmaAdvertise {
+                rkey: r.u64()?,
+                shadow_size: r.u64()?,
+            },
+            t => {
+                return Err(WireError::BadTag {
+                    tag: t as u32,
+                    what: "command body",
+                })
+            }
+        };
+        Ok(Msg {
+            cmd_id,
+            queue,
+            device,
+            event,
+            wait,
+            body,
+        })
+    }
+}
+
+/// A message together with its bulk payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    pub msg: Msg,
+    pub payload: Vec<u8>,
+}
+
+impl Packet {
+    pub fn bare(msg: Msg) -> Self {
+        Packet {
+            msg,
+            payload: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let enc = m.encode();
+        let dec = Msg::decode(&enc).unwrap();
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn roundtrip_all_bodies() {
+        let bodies = vec![
+            Body::Hello {
+                session: [7u8; 16],
+                role: ROLE_PEER,
+                peer_id: 3,
+            },
+            Body::Welcome {
+                session: [9u8; 16],
+                server_id: 2,
+                n_devices: 4,
+                last_seen_cmd: 77,
+            },
+            Body::CreateBuffer {
+                buf: 5,
+                size: 1 << 30,
+                content_size_buf: 6,
+            },
+            Body::FreeBuffer { buf: 5 },
+            Body::WriteBuffer {
+                buf: 1,
+                offset: 16,
+                len: 4096,
+            },
+            Body::ReadBuffer {
+                buf: 1,
+                offset: 0,
+                len: 8,
+            },
+            Body::RunKernel {
+                artifact: "matmul_f32_512".into(),
+                args: vec![1, 2],
+                outs: vec![3],
+            },
+            Body::MigrateOut {
+                buf: 9,
+                dst_server: 1,
+                size: 1024,
+                rdma: 1,
+            },
+            Body::MigrateData {
+                buf: 9,
+                content_size: 100,
+                total_size: 1024,
+                len: 100,
+            },
+            Body::NotifyEvent {
+                event: 42,
+                status: 0,
+            },
+            Body::Completion {
+                event: 42,
+                status: 0,
+                ts: Timestamps {
+                    queued_ns: 1,
+                    submit_ns: 2,
+                    start_ns: 3,
+                    end_ns: 4,
+                },
+                payload_len: 8,
+            },
+            Body::Barrier,
+            Body::SetContentSize { buf: 1, size: 10 },
+        ];
+        for (i, body) in bodies.into_iter().enumerate() {
+            roundtrip(Msg {
+                cmd_id: i as u64,
+                queue: 1,
+                device: 2,
+                event: 100 + i as u64,
+                wait: vec![1, 2, 3],
+                body,
+            });
+        }
+    }
+
+    #[test]
+    fn payload_len_matches_body() {
+        let m = Msg::control(Body::WriteBuffer {
+            buf: 1,
+            offset: 0,
+            len: 77,
+        });
+        assert_eq!(m.payload_len(), 77);
+        let m = Msg::control(Body::Barrier);
+        assert_eq!(m.payload_len(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_bad_tag() {
+        let mut enc = Msg::control(Body::Barrier).encode();
+        *enc.last_mut().unwrap() = 200;
+        assert!(Msg::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        for s in [
+            EventStatus::Queued,
+            EventStatus::Submitted,
+            EventStatus::Running,
+            EventStatus::Complete,
+            EventStatus::Failed,
+        ] {
+            assert_eq!(EventStatus::from_i8(s.to_i8()), s);
+        }
+        assert!(EventStatus::Complete.is_terminal());
+        assert!(!EventStatus::Running.is_terminal());
+    }
+}

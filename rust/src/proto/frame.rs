@@ -1,0 +1,130 @@
+//! Framed packet I/O over byte streams.
+//!
+//! Deliberately mirrors the paper's TCP communication scheme (Fig 6):
+//!
+//! 1. `write(u32 size)` — standalone size field so the receiver knows how
+//!    many command bytes follow (commands vary from tens of bytes to kB),
+//! 2. `write(command struct bytes)`,
+//! 3. `write(bulk payload)` if the body declares one.
+//!
+//! Three separate `write` syscalls minimum for a buffer transfer — the
+//! overhead the RDMA path (Fig 7) eliminates. Readers do blocking reads
+//! until a full packet is assembled (the daemon's reader-thread model).
+
+use std::io::{Read, Write};
+
+use super::command::{Msg, Packet};
+
+/// Sanity cap on a single command struct (not payload): 1 MiB.
+const MAX_CMD_BYTES: u32 = 1 << 20;
+/// Sanity cap on a payload: 1 GiB.
+const MAX_PAYLOAD: u64 = 1 << 30;
+
+/// Write one packet. Each logical section is its own `write_all` call on
+/// purpose — see module docs.
+pub fn write_packet<S: Write>(stream: &mut S, msg: &Msg, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert_eq!(msg.payload_len() as usize, payload.len());
+    let bytes = msg.encode();
+    stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    stream.write_all(&bytes)?;
+    if !payload.is_empty() {
+        stream.write_all(payload)?;
+    }
+    stream.flush()
+}
+
+/// Blocking read of one packet (size field, struct, payload).
+pub fn read_packet<S: Read>(stream: &mut S) -> std::io::Result<Packet> {
+    let mut szb = [0u8; 4];
+    stream.read_exact(&mut szb)?;
+    let sz = u32::from_le_bytes(szb);
+    if sz == 0 || sz > MAX_CMD_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("command size {sz} out of range"),
+        ));
+    }
+    let mut cmd = vec![0u8; sz as usize];
+    stream.read_exact(&mut cmd)?;
+    let msg = Msg::decode(&cmd)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    let plen = msg.payload_len();
+    if plen > MAX_PAYLOAD {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("payload {plen} exceeds cap"),
+        ));
+    }
+    let mut payload = vec![0u8; plen as usize];
+    if plen > 0 {
+        stream.read_exact(&mut payload)?;
+    }
+    Ok(Packet { msg, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::command::Body;
+
+    #[test]
+    fn roundtrip_over_in_memory_stream() {
+        let msg = Msg {
+            cmd_id: 1,
+            queue: 0,
+            device: 0,
+            event: 9,
+            wait: vec![5],
+            body: Body::WriteBuffer {
+                buf: 2,
+                offset: 0,
+                len: 5,
+            },
+        };
+        let mut wire = Vec::new();
+        write_packet(&mut wire, &msg, b"hello").unwrap();
+        let pkt = read_packet(&mut wire.as_slice()).unwrap();
+        assert_eq!(pkt.msg, msg);
+        assert_eq!(pkt.payload, b"hello");
+    }
+
+    #[test]
+    fn multiple_packets_stream() {
+        let mut wire = Vec::new();
+        for i in 0..10u64 {
+            let m = Msg {
+                cmd_id: i,
+                queue: 0,
+                device: 0,
+                event: i,
+                wait: vec![],
+                body: Body::Barrier,
+            };
+            write_packet(&mut wire, &m, &[]).unwrap();
+        }
+        let mut cur = wire.as_slice();
+        for i in 0..10u64 {
+            let pkt = read_packet(&mut cur).unwrap();
+            assert_eq!(pkt.msg.cmd_id, i);
+        }
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let msg = Msg::control(Body::ReadBuffer {
+            buf: 1,
+            offset: 0,
+            len: 4,
+        });
+        let mut wire = Vec::new();
+        write_packet(&mut wire, &msg, &[]).unwrap();
+        wire.truncate(wire.len() - 2);
+        assert!(read_packet(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn zero_size_frame_rejected() {
+        let wire = 0u32.to_le_bytes().to_vec();
+        assert!(read_packet(&mut wire.as_slice()).is_err());
+    }
+}

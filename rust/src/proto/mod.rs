@@ -1,0 +1,20 @@
+//! Wire protocol of the PoCL-R reproduction.
+//!
+//! Mirrors the paper's design (§5.4, Figs 6-7): commands are fixed-layout
+//! structs; the TCP scheme sends a standalone `u32` size field, then the
+//! command bytes, then any bulk payload — each as its *own* write so the
+//! syscall pattern the paper describes (≥2 writes per command, ≥3 with a
+//! payload) is faithfully reproduced and measurable. The RDMA scheme
+//! ([`crate::net::rdma`]) instead chains `RDMA_WRITE(payload)` +
+//! `RDMA_SEND(command)` with a single doorbell.
+//!
+//! The wire representation is produced by a hand-rolled flat codec
+//! ([`wire`]) — the moral equivalent of the paper's packed C structs: no
+//! translation step, no self-describing metadata.
+
+pub mod command;
+pub mod frame;
+pub mod wire;
+
+pub use command::{Body, EventStatus, Msg, Packet, SessionId, Timestamps, ROLE_CLIENT, ROLE_PEER};
+pub use frame::{read_packet, write_packet};

@@ -1,0 +1,182 @@
+//! Flat little-endian byte codec. The in-memory command layout *is* the wire
+//! layout (paper: "The wire representation of commands is kept identical to
+//! the in-memory one to avoid a translation step").
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum WireError {
+    #[error("buffer underrun: wanted {wanted} bytes, {left} left")]
+    Underrun { wanted: usize, left: usize },
+    #[error("invalid tag {tag} for {what}")]
+    BadTag { tag: u32, what: &'static str },
+    #[error("string is not utf-8")]
+    BadUtf8,
+    #[error("length field {len} exceeds sanity limit {limit}")]
+    TooLong { len: u64, limit: u64 },
+}
+
+/// Append-only writer over a reusable Vec<u8>.
+#[derive(Default)]
+pub struct W {
+    pub buf: Vec<u8>,
+}
+
+impl W {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn i8(&mut self, v: i8) {
+        self.buf.push(v as u8);
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed short string (u16 length).
+    pub fn str16(&mut self, s: &str) {
+        debug_assert!(s.len() <= u16::MAX as usize);
+        self.buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// u32-count-prefixed vector of u64 ids.
+    pub fn ids(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for id in v {
+            self.u64(*id);
+        }
+    }
+}
+
+/// Cursor reader over a byte slice.
+pub struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Underrun {
+                wanted: n,
+                left: self.remaining(),
+            });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn i8(&mut self) -> Result<i8, WireError> {
+        Ok(self.take(1)?[0] as i8)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        self.take(n)
+    }
+
+    pub fn str16(&mut self) -> Result<String, WireError> {
+        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    pub fn ids(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            return Err(WireError::TooLong {
+                len: n as u64,
+                limit: 1 << 20,
+            });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = W::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX);
+        w.i8(-5);
+        w.str16("kernel_name");
+        w.ids(&[1, 2, 3]);
+        let mut r = R::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i8().unwrap(), -5);
+        assert_eq!(r.str16().unwrap(), "kernel_name");
+        assert_eq!(r.ids().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn underrun_reported() {
+        let mut r = R::new(&[1, 2]);
+        assert!(matches!(r.u32(), Err(WireError::Underrun { .. })));
+    }
+
+    #[test]
+    fn id_count_sanity_limit() {
+        let mut w = W::new();
+        w.u32(u32::MAX); // absurd count
+        let mut r = R::new(&w.buf);
+        assert!(matches!(r.ids(), Err(WireError::TooLong { .. })));
+    }
+}

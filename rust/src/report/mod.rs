@@ -1,0 +1,73 @@
+//! Benchmark reporting: uniform tables/series for the figure harnesses
+//! (no criterion offline — `[[bench]] harness = false` binaries print
+//! through these helpers and EXPERIMENTS.md quotes them).
+
+use crate::util::stats::Samples;
+
+/// A labelled measurement series (one figure line / bar group).
+pub struct Series {
+    pub name: String,
+    pub rows: Vec<(String, f64)>,
+    pub unit: &'static str,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, unit: &'static str) -> Series {
+        Series {
+            name: name.into(),
+            rows: Vec::new(),
+            unit,
+        }
+    }
+
+    pub fn push(&mut self, label: impl Into<String>, value: f64) {
+        self.rows.push((label.into(), value));
+    }
+
+    pub fn print(&self) {
+        println!("## {} [{}]", self.name, self.unit);
+        for (label, value) in &self.rows {
+            println!("  {label:<32} {value:>14.3}");
+        }
+    }
+}
+
+/// Print a figure header in a grep-friendly format.
+pub fn figure(tag: &str, title: &str) {
+    println!("\n=== {tag}: {title} ===");
+}
+
+/// Render a latency sample set as one table row.
+pub fn latency_row(label: &str, s: &mut Samples) {
+    println!("  {label:<32} {}", s.summary_ns());
+}
+
+/// Simple timer helper: run `f` `n` times, return per-iteration ns samples.
+pub fn time_n<F: FnMut()>(n: usize, mut f: F) -> Samples {
+    let mut samples = Samples::new();
+    for _ in 0..n {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_accumulates() {
+        let mut s = Series::new("x", "ms");
+        s.push("a", 1.0);
+        s.push("b", 2.0);
+        assert_eq!(s.rows.len(), 2);
+    }
+
+    #[test]
+    fn time_n_returns_n_samples() {
+        let s = time_n(5, || { std::hint::black_box(1 + 1); });
+        assert_eq!(s.len(), 5);
+    }
+}

@@ -1,0 +1,200 @@
+//! Artifact registry: the rust-side mirror of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtypes used by the artifacts (subset of XLA primitive types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn to_xla(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::S32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// One AOT-compiled HLO module and its interface contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub description: String,
+    pub flops: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// The loaded manifest: artifact name -> info.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for item in j.as_arr().context("specs not an array")? {
+        let shape = item
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            item.get("dtype")
+                .and_then(|d| d.as_str())
+                .context("missing dtype")?,
+        )?;
+        out.push(TensorSpec { shape, dtype });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+        if version != 1 {
+            bail!("manifest version {version} unsupported");
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("missing artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .context("artifact missing name")?
+                .to_string();
+            let info = ArtifactInfo {
+                name: name.clone(),
+                file: dir.join(a.get("file").and_then(|f| f.as_str()).context("file")?),
+                description: a
+                    .get("description")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                flops: a.get("flops").and_then(|f| f.as_u64()).unwrap_or(0),
+                inputs: parse_specs(a.get("inputs").context("inputs")?)?,
+                outputs: parse_specs(a.get("outputs").context("outputs")?)?,
+                bytes_in: a.get("bytes_in").and_then(|b| b.as_u64()).unwrap_or(0),
+                bytes_out: a.get("bytes_out").and_then(|b| b.as_u64()).unwrap_or(0),
+            };
+            artifacts.insert(name, info);
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Load from the conventional repo location (env override:
+    /// `POCLR_ARTIFACTS`).
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("POCLR_ARTIFACTS").unwrap_or_else(|_| {
+            // tests/benches run from the crate root
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+        });
+        Self::load(dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{"version": 1, "artifacts": [
+      {"name": "vecadd_f32_4096", "file": "vecadd_f32_4096.hlo.txt",
+       "description": "d", "flops": 4096,
+       "inputs": [{"shape": [4096], "dtype": "f32"}, {"shape": [4096], "dtype": "f32"}],
+       "outputs": [{"shape": [4096], "dtype": "f32"}],
+       "bytes_in": 32768, "bytes_out": 16384, "sha256": "x"}
+    ]}"#;
+
+    #[test]
+    fn parses_manifest_document() {
+        let dir = std::env::temp_dir().join(format!("poclr-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), DOC).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("vecadd_f32_4096").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].nbytes(), 16384);
+        assert_eq!(a.outputs[0].elems(), 4096);
+        assert_eq!(a.flops, 4096);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dtype_parse_and_size() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("s32").unwrap(), DType::S32);
+        assert!(DType::parse("f64").is_err());
+        assert_eq!(DType::F32.size(), 4);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Ok(m) = Manifest::load_default() {
+            assert!(m.artifacts.len() >= 10);
+            let mm = m.get("matmul_f32_512").unwrap();
+            assert_eq!(mm.inputs[0].shape, vec![512, 512]);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Device executors: one thread per simulated compute device.
+//!
+//! PJRT wrapper types are `!Send`, so each GPU-like device owns its engine
+//! inside its thread; custom devices (decoder, camera) hold their state the
+//! same way. The daemon dispatcher talks to executors through channels and
+//! receives completion timestamps back — these become the OpenCL event
+//! profiling values (CL_PROFILING_COMMAND_START/END).
+
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::builtin::CustomDevice;
+use super::pjrt::Engine;
+use crate::util::now_ns;
+
+/// What kind of device an executor simulates (subset of cl_device_type).
+pub enum DeviceKind {
+    /// PJRT-backed compute device (stands in for the paper's GPUs).
+    Gpu,
+    /// Custom device with built-in kernels only (decoder / camera).
+    Custom(Box<dyn CustomDevice>),
+}
+
+/// Execution request: run `artifact` (or built-in kernel name for custom
+/// devices) over input buffer snapshots. `tag` is an opaque correlation id
+/// echoed in the outcome (the daemon dispatcher correlates in-flight
+/// launches without blocking).
+pub struct ExecRequest {
+    pub tag: u64,
+    pub artifact: String,
+    pub inputs: Vec<Arc<Vec<u8>>>,
+    pub reply: Sender<ExecOutcome>,
+}
+
+/// Result of an execution, with device-side timestamps.
+pub struct ExecOutcome {
+    pub tag: u64,
+    pub outputs: Result<Vec<Vec<u8>>>,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+enum Op {
+    Exec(ExecRequest),
+    Warm(String),
+    Shutdown,
+}
+
+/// Handle to a running device executor thread.
+pub struct DeviceExecutor {
+    tx: SyncSender<Op>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub is_custom: bool,
+    pub label: String,
+    /// Cumulative device-busy nanoseconds (Fig 17 utilization metric).
+    pub busy_ns: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl DeviceExecutor {
+    /// Spawn the executor thread. GPU devices build their PJRT engine
+    /// inside the thread (the client type is !Send).
+    pub fn spawn(kind: DeviceKind, manifest: Manifest, label: String) -> DeviceExecutor {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Op>(1024);
+        let is_custom = matches!(kind, DeviceKind::Custom(_));
+        let thread_label = label.clone();
+        let busy_ns = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let busy = Arc::clone(&busy_ns);
+        let handle = std::thread::Builder::new()
+            .name(format!("dev-{label}"))
+            .spawn(move || run_loop(kind, manifest, rx, thread_label, busy))
+            .expect("spawning device executor");
+        DeviceExecutor {
+            tx,
+            handle: Some(handle),
+            is_custom,
+            label,
+            busy_ns,
+        }
+    }
+
+    /// Queue an execution. The outcome arrives on `req.reply`.
+    pub fn submit(&self, req: ExecRequest) {
+        self.tx.send(Op::Exec(req)).expect("executor alive");
+    }
+
+    /// Pre-compile an artifact so first-use latency does not pollute
+    /// measurements (daemons warm at startup; benches warm in setup).
+    pub fn warm(&self, artifact: &str) {
+        self.tx.send(Op::Warm(artifact.to_string())).ok();
+    }
+}
+
+impl Drop for DeviceExecutor {
+    fn drop(&mut self) {
+        self.tx.send(Op::Shutdown).ok();
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn run_loop(
+    kind: DeviceKind,
+    manifest: Manifest,
+    rx: Receiver<Op>,
+    label: String,
+    busy_ns: Arc<std::sync::atomic::AtomicU64>,
+) {
+    let mut engine: Option<Engine> = None;
+    let mut custom: Option<Box<dyn CustomDevice>> = None;
+    match kind {
+        DeviceKind::Gpu => match Engine::new(manifest) {
+            Ok(e) => engine = Some(e),
+            Err(e) => {
+                eprintln!("[{label}] PJRT engine failed: {e:#}");
+                // Drain requests with errors rather than deadlocking callers.
+            }
+        },
+        DeviceKind::Custom(c) => custom = Some(c),
+    }
+
+    while let Ok(op) = rx.recv() {
+        match op {
+            Op::Shutdown => break,
+            Op::Warm(name) => {
+                if let Some(engine) = engine.as_mut() {
+                    if let Err(e) = engine.warm(&name) {
+                        eprintln!("[{label}] warm({name}) failed: {e:#}");
+                    }
+                }
+            }
+            Op::Exec(req) => {
+                let start_ns = now_ns();
+                let inputs: Vec<&[u8]> = req.inputs.iter().map(|b| b.as_slice()).collect();
+                let outputs = if let Some(engine) = engine.as_mut() {
+                    engine.run(&req.artifact, &inputs)
+                } else if let Some(custom) = custom.as_mut() {
+                    custom.run(&req.artifact, &inputs)
+                } else {
+                    Err(anyhow::anyhow!("device {label} failed to initialize"))
+                };
+                let end_ns = now_ns();
+                busy_ns.fetch_add(end_ns - start_ns, std::sync::atomic::Ordering::Relaxed);
+                req.reply
+                    .send(ExecOutcome {
+                        tag: req.tag,
+                        outputs,
+                        start_ns,
+                        end_ns,
+                    })
+                    .ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin::StreamSource;
+
+    #[test]
+    fn custom_device_executes() {
+        let manifest = Manifest::default();
+        let exec = DeviceExecutor::spawn(
+            DeviceKind::Custom(Box::new(StreamSource::synthetic(16, 16, 3, 4))),
+            manifest,
+            "cam0".into(),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        exec.submit(ExecRequest {
+            tag: 0,
+            artifact: "vpcc.stream_next".into(),
+            inputs: vec![],
+            reply: tx,
+        });
+        let out = rx.recv().unwrap();
+        let bufs = out.outputs.unwrap();
+        assert_eq!(bufs.len(), 2);
+        assert!(out.end_ns >= out.start_ns);
+    }
+
+    #[test]
+    fn gpu_device_executes_artifact() {
+        let Ok(manifest) = Manifest::load_default() else {
+            return;
+        };
+        let exec = DeviceExecutor::spawn(DeviceKind::Gpu, manifest, "gpu0".into());
+        exec.warm("increment_s32_1");
+        let (tx, rx) = std::sync::mpsc::channel();
+        exec.submit(ExecRequest {
+            tag: 0,
+            artifact: "increment_s32_1".into(),
+            inputs: vec![Arc::new(7i32.to_le_bytes().to_vec())],
+            reply: tx,
+        });
+        let out = rx.recv().unwrap();
+        let bufs = out.outputs.unwrap();
+        assert_eq!(i32::from_le_bytes(bufs[0][..4].try_into().unwrap()), 8);
+    }
+
+    #[test]
+    fn unknown_artifact_reports_error() {
+        let Ok(manifest) = Manifest::load_default() else {
+            return;
+        };
+        let exec = DeviceExecutor::spawn(DeviceKind::Gpu, manifest, "gpu1".into());
+        let (tx, rx) = std::sync::mpsc::channel();
+        exec.submit(ExecRequest {
+            tag: 0,
+            artifact: "no_such_artifact".into(),
+            inputs: vec![],
+            reply: tx,
+        });
+        assert!(rx.recv().unwrap().outputs.is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Execution runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and runs them on PJRT CPU devices.
+//!
+//! This is the bridge between Layer 3 (the rust coordinator) and Layers 2/1
+//! (the JAX/Pallas compute). HLO **text** is the interchange format — the
+//! xla_extension 0.5.1 bundled with the `xla` crate rejects jax≥0.5's
+//! 64-bit-instruction-id protos, while the text parser reassigns ids.
+//!
+//! PJRT wrapper types are `!Send` (raw C pointers), so each simulated
+//! device runs a dedicated executor thread that owns its own
+//! `PjRtClient` + compiled executables ([`executor`]). Commands reach it
+//! through channels; buffer bytes cross as `Arc<Vec<u8>>`.
+
+pub mod artifact;
+pub mod builtin;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{ArtifactInfo, DType, Manifest, TensorSpec};
+pub use executor::{DeviceExecutor, ExecOutcome, ExecRequest};

@@ -1,0 +1,185 @@
+//! PJRT engine: compile HLO-text artifacts once, execute them on raw bytes.
+//!
+//! `!Send` by construction (wraps `xla::PjRtClient`); lives inside a device
+//! executor thread ([`super::executor`]).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactInfo, Manifest, TensorSpec};
+
+/// Convert a typed vector into its raw little-endian byte vector without
+/// copying (u8 alignment is always satisfied).
+pub fn vec_into_bytes<T: Copy>(mut v: Vec<T>) -> Vec<u8> {
+    let len = v.len() * std::mem::size_of::<T>();
+    let cap = v.capacity() * std::mem::size_of::<T>();
+    let ptr = v.as_mut_ptr() as *mut u8;
+    std::mem::forget(v);
+    // Safety: ptr comes from a Vec allocation of `cap` bytes; u8 has
+    // alignment 1 <= align_of::<T>(); length/capacity scaled consistently.
+    unsafe { Vec::from_raw_parts(ptr, len, cap) }
+}
+
+/// The per-thread PJRT execution engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client. Artifacts compile lazily on first use
+    /// (compilation of the bigger Pallas-derived modules takes ~100 ms
+    /// each; daemons typically warm the ones they serve at startup).
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn warm(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn literal_from_bytes(spec: &TensorSpec, bytes: &[u8]) -> Result<xla::Literal> {
+        if bytes.len() < spec.nbytes() {
+            bail!(
+                "input too small: artifact wants {} bytes, buffer holds {}",
+                spec.nbytes(),
+                bytes.len()
+            );
+        }
+        xla::Literal::create_from_shape_and_untyped_data(
+            spec.dtype.to_xla(),
+            &spec.shape,
+            &bytes[..spec.nbytes()],
+        )
+        .context("creating literal")
+    }
+
+    fn literal_to_bytes(spec: &TensorSpec, lit: &xla::Literal) -> Result<Vec<u8>> {
+        Ok(match spec.dtype {
+            super::artifact::DType::F32 => vec_into_bytes(lit.to_vec::<f32>()?),
+            super::artifact::DType::S32 => vec_into_bytes(lit.to_vec::<i32>()?),
+            super::artifact::DType::U32 => vec_into_bytes(lit.to_vec::<u32>()?),
+        })
+    }
+
+    /// Execute `name` on raw input bytes; returns one byte vector per
+    /// artifact output. Inputs are validated against the manifest specs.
+    pub fn run(&mut self, name: &str, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        self.warm(name)?;
+        let info: ArtifactInfo = self.manifest.get(name)?.clone();
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "artifact {name} wants {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits = info
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, bytes)| Self::literal_from_bytes(spec, bytes))
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.executables.get(name).expect("warmed");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = tuple.to_tuple().context("destructuring tuple")?;
+        if parts.len() != info.outputs.len() {
+            bail!(
+                "artifact {name} returned {} outputs, manifest says {}",
+                parts.len(),
+                info.outputs.len()
+            );
+        }
+        info.outputs
+            .iter()
+            .zip(parts.iter())
+            .map(|(spec, lit)| Self::literal_to_bytes(spec, lit))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let m = Manifest::load_default().ok()?;
+        Engine::new(m).ok()
+    }
+
+    #[test]
+    fn vec_into_bytes_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let b = vec_into_bytes(v);
+        assert_eq!(b.len(), 12);
+        assert_eq!(f32::from_le_bytes(b[0..4].try_into().unwrap()), 1.0);
+        assert_eq!(f32::from_le_bytes(b[4..8].try_into().unwrap()), -2.5);
+    }
+
+    #[test]
+    fn run_increment_artifact() {
+        let Some(mut e) = engine() else { return };
+        let input = 41i32.to_le_bytes();
+        let out = e.run("increment_s32_1", &[&input]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(i32::from_le_bytes(out[0][..4].try_into().unwrap()), 42);
+    }
+
+    #[test]
+    fn run_vecadd_artifact() {
+        let Some(mut e) = engine() else { return };
+        let x: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..4096).map(|i| 2.0 * i as f32).collect();
+        let xb = vec_into_bytes(x);
+        let yb = vec_into_bytes(y);
+        let out = e.run("vecadd_f32_4096", &[&xb, &yb]).unwrap();
+        let first = f32::from_le_bytes(out[0][0..4].try_into().unwrap());
+        let last = f32::from_le_bytes(out[0][4 * 4095..].try_into().unwrap());
+        assert_eq!(first, 0.0);
+        assert_eq!(last, 3.0 * 4095.0);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(mut e) = engine() else { return };
+        let input = 1i32.to_le_bytes();
+        assert!(e.run("vecadd_f32_4096", &[&input]).is_err());
+    }
+
+    #[test]
+    fn short_input_rejected() {
+        let Some(mut e) = engine() else { return };
+        let tiny = [0u8; 2];
+        assert!(e.run("increment_s32_1", &[&tiny]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Decentralized command scheduling (paper §5.2).
+//!
+//! Every server mirrors the application's event task graph: events of
+//! commands executing locally are *native* entries, events of commands
+//! executing on other servers (or the client) materialize as *user events*
+//! the moment they are first referenced, and flip to complete when the
+//! owning server's `NotifyEvent` arrives over the peer mesh. A command
+//! becomes runnable the instant its whole wait list is terminal — no client
+//! round-trip involved.
+
+pub mod table;
+
+pub use table::{EventTable, WaitOutcome};

@@ -1,0 +1,280 @@
+//! The event table: shared status registry with blocking waits and
+//! completion callbacks. Used by the daemon dispatcher (native + user
+//! events) and by the client driver (application-visible events).
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::proto::{EventStatus, Timestamps};
+
+#[derive(Debug, Clone)]
+struct Entry {
+    status: EventStatus,
+    ts: Timestamps,
+}
+
+/// Outcome of waiting on an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitOutcome {
+    Complete,
+    Failed,
+    TimedOut,
+}
+
+/// Thread-safe event status registry.
+///
+/// Events are identified by the client-assigned u64 id. Entries are created
+/// lazily on first reference (`ensure`) — that lazy creation *is* the
+/// paper's "events of commands executed elsewhere are mapped to user
+/// events".
+#[derive(Default)]
+pub struct EventTable {
+    inner: Mutex<HashMap<u64, Entry>>,
+    cv: Condvar,
+}
+
+impl EventTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make sure an entry exists (status Queued if fresh).
+    pub fn ensure(&self, id: u64) {
+        if id == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.entry(id).or_insert(Entry {
+            status: EventStatus::Queued,
+            ts: Timestamps::default(),
+        });
+    }
+
+    /// Update status; notifies all waiters. Timestamps merge (non-zero
+    /// fields win) so Submitted/Running/Complete can each stamp their part.
+    pub fn set_status(&self, id: u64, status: EventStatus, ts: Timestamps) {
+        if id == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(id).or_insert(Entry {
+            status: EventStatus::Queued,
+            ts: Timestamps::default(),
+        });
+        // Terminal states are sticky: a late Running must not regress a
+        // Complete (can happen with reordered peer notifications).
+        if !e.status.is_terminal() {
+            e.status = status;
+        }
+        if ts.queued_ns != 0 {
+            e.ts.queued_ns = ts.queued_ns;
+        }
+        if ts.submit_ns != 0 {
+            e.ts.submit_ns = ts.submit_ns;
+        }
+        if ts.start_ns != 0 {
+            e.ts.start_ns = ts.start_ns;
+        }
+        if ts.end_ns != 0 {
+            e.ts.end_ns = ts.end_ns;
+        }
+        drop(m);
+        self.cv.notify_all();
+    }
+
+    pub fn complete(&self, id: u64, ts: Timestamps) {
+        self.set_status(id, EventStatus::Complete, ts);
+    }
+
+    pub fn fail(&self, id: u64) {
+        self.set_status(id, EventStatus::Failed, Timestamps::default());
+    }
+
+    pub fn status(&self, id: u64) -> Option<EventStatus> {
+        self.inner.lock().unwrap().get(&id).map(|e| e.status)
+    }
+
+    pub fn timestamps(&self, id: u64) -> Option<Timestamps> {
+        self.inner.lock().unwrap().get(&id).map(|e| e.ts)
+    }
+
+    /// Is every event in the wait list terminal-complete? Errors propagate:
+    /// a failed dependency poisons the dependent.
+    pub fn deps_state(&self, wait: &[u64]) -> DepsState {
+        let m = self.inner.lock().unwrap();
+        let mut all_done = true;
+        for id in wait {
+            if *id == 0 {
+                continue;
+            }
+            match m.get(id).map(|e| e.status) {
+                Some(EventStatus::Complete) => {}
+                Some(EventStatus::Failed) => return DepsState::Poisoned,
+                _ => all_done = false,
+            }
+        }
+        if all_done {
+            DepsState::Ready
+        } else {
+            DepsState::Blocked
+        }
+    }
+
+    /// Block until `id` reaches a terminal state (or timeout).
+    pub fn wait_timeout(&self, id: u64, timeout: Duration) -> WaitOutcome {
+        if id == 0 {
+            return WaitOutcome::Complete;
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut m = self.inner.lock().unwrap();
+        loop {
+            match m.get(&id).map(|e| e.status) {
+                Some(EventStatus::Complete) => return WaitOutcome::Complete,
+                Some(EventStatus::Failed) => return WaitOutcome::Failed,
+                _ => {}
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return WaitOutcome::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(m, deadline - now).unwrap();
+            m = guard;
+        }
+    }
+
+    pub fn wait(&self, id: u64) -> WaitOutcome {
+        self.wait_timeout(id, Duration::from_secs(120))
+    }
+
+    /// Number of tracked events (tests / metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop terminal entries older than the table cares about. Called
+    /// periodically by the daemon to bound memory (the paper's daemons are
+    /// long-running).
+    pub fn gc_terminal(&self, keep_latest: usize) {
+        let mut m = self.inner.lock().unwrap();
+        if m.len() <= keep_latest {
+            return;
+        }
+        let mut terminal: Vec<u64> = m
+            .iter()
+            .filter(|(_, e)| e.status.is_terminal())
+            .map(|(id, _)| *id)
+            .collect();
+        terminal.sort_unstable();
+        let excess = m.len().saturating_sub(keep_latest);
+        for id in terminal.into_iter().take(excess) {
+            m.remove(&id);
+        }
+    }
+}
+
+/// Readiness of a wait list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepsState {
+    Ready,
+    Blocked,
+    Poisoned,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn wait_unblocks_on_complete() {
+        let t = Arc::new(EventTable::new());
+        t.ensure(1);
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || t2.wait(1));
+        std::thread::sleep(Duration::from_millis(20));
+        t.complete(1, Timestamps::default());
+        assert_eq!(h.join().unwrap(), WaitOutcome::Complete);
+    }
+
+    #[test]
+    fn zero_event_is_always_complete() {
+        let t = EventTable::new();
+        assert_eq!(t.wait(0), WaitOutcome::Complete);
+        assert_eq!(t.deps_state(&[0, 0]), DepsState::Ready);
+    }
+
+    #[test]
+    fn deps_states() {
+        let t = EventTable::new();
+        t.complete(1, Timestamps::default());
+        t.ensure(2);
+        assert_eq!(t.deps_state(&[1]), DepsState::Ready);
+        assert_eq!(t.deps_state(&[1, 2]), DepsState::Blocked);
+        // unseen events are blocked, not errors (user events materialize)
+        assert_eq!(t.deps_state(&[99]), DepsState::Blocked);
+        t.fail(3);
+        assert_eq!(t.deps_state(&[1, 3]), DepsState::Poisoned);
+    }
+
+    #[test]
+    fn terminal_status_is_sticky() {
+        let t = EventTable::new();
+        t.complete(5, Timestamps::default());
+        t.set_status(5, EventStatus::Running, Timestamps::default());
+        assert_eq!(t.status(5), Some(EventStatus::Complete));
+    }
+
+    #[test]
+    fn timestamps_merge() {
+        let t = EventTable::new();
+        t.set_status(
+            7,
+            EventStatus::Running,
+            Timestamps {
+                queued_ns: 1,
+                submit_ns: 2,
+                start_ns: 0,
+                end_ns: 0,
+            },
+        );
+        t.set_status(
+            7,
+            EventStatus::Complete,
+            Timestamps {
+                queued_ns: 0,
+                submit_ns: 0,
+                start_ns: 3,
+                end_ns: 4,
+            },
+        );
+        let ts = t.timestamps(7).unwrap();
+        assert_eq!((ts.queued_ns, ts.submit_ns, ts.start_ns, ts.end_ns), (1, 2, 3, 4));
+    }
+
+    #[test]
+    fn wait_timeout_expires() {
+        let t = EventTable::new();
+        t.ensure(9);
+        assert_eq!(
+            t.wait_timeout(9, Duration::from_millis(30)),
+            WaitOutcome::TimedOut
+        );
+    }
+
+    #[test]
+    fn gc_keeps_recent() {
+        let t = EventTable::new();
+        for i in 1..=100 {
+            t.complete(i, Timestamps::default());
+        }
+        t.ensure(101); // non-terminal survives
+        t.gc_terminal(10);
+        assert!(t.len() <= 11);
+        assert_eq!(t.status(101), Some(EventStatus::Queued));
+    }
+}

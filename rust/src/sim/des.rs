@@ -1,0 +1,76 @@
+//! A small discrete-event engine: FIFO resources + a virtual clock.
+//!
+//! Jobs acquire resources (a device, a NIC, a link) for a duration; the
+//! engine advances time to completion events. Enough machinery to model
+//! staggered compute/collect overlap without wall-clock execution.
+
+use std::collections::HashMap;
+
+/// A FIFO resource: one job at a time, queued in arrival order.
+#[derive(Debug, Clone, Default)]
+pub struct Resource {
+    /// Virtual time at which the resource frees up.
+    free_at: f64,
+    /// Total busy seconds accumulated (utilization metric).
+    pub busy: f64,
+}
+
+/// The simulation: named resources + a clock.
+#[derive(Debug, Default)]
+pub struct Des {
+    resources: HashMap<String, Resource>,
+}
+
+impl Des {
+    pub fn new() -> Des {
+        Des::default()
+    }
+
+    /// Schedule `duration` seconds of exclusive work on `resource`,
+    /// starting no earlier than `earliest`. Returns the completion time.
+    pub fn schedule(&mut self, resource: &str, earliest: f64, duration: f64) -> f64 {
+        let r = self.resources.entry(resource.to_string()).or_default();
+        let start = earliest.max(r.free_at);
+        let end = start + duration;
+        r.free_at = end;
+        r.busy += duration;
+        end
+    }
+
+    /// When does a resource next free up?
+    pub fn free_at(&self, resource: &str) -> f64 {
+        self.resources.get(resource).map(|r| r.free_at).unwrap_or(0.0)
+    }
+
+    /// Busy seconds accumulated on a resource.
+    pub fn busy(&self, resource: &str) -> f64 {
+        self.resources.get(resource).map(|r| r.busy).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_serializes() {
+        let mut des = Des::new();
+        let a = des.schedule("nic", 0.0, 1.0);
+        let b = des.schedule("nic", 0.0, 1.0); // queues behind a
+        assert_eq!(a, 1.0);
+        assert_eq!(b, 2.0);
+        // a later arrival after the queue drains starts immediately
+        let c = des.schedule("nic", 5.0, 0.5);
+        assert_eq!(c, 5.5);
+        assert_eq!(des.busy("nic"), 2.5);
+    }
+
+    #[test]
+    fn independent_resources_overlap() {
+        let mut des = Des::new();
+        let a = des.schedule("gpu0", 0.0, 2.0);
+        let b = des.schedule("gpu1", 0.0, 2.0);
+        assert_eq!(a, 2.0);
+        assert_eq!(b, 2.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event cluster simulator for paper-scale figures.
+//!
+//! One CPU cannot physically exhibit 16 parallel P100s or 514³ LBM grids,
+//! so Figs 12, 13, 16 and 17 are regenerated on a virtual clock: the DES
+//! replays the *same scheduling policies* the real runtime implements
+//! (P2P vs client-routed collection, TCP framing vs RDMA chains, content
+//! sizes) over cost models calibrated against the real-mode
+//! micro-benchmarks (Figs 8-11) and the paper's hardware specs
+//! ([`crate::config`]). See DESIGN.md §6.
+pub mod des;
+pub mod model;
+pub mod scenarios;

@@ -1,0 +1,74 @@
+//! Small self-contained substrates: deterministic PRNG, streaming statistics
+//! and a minimal JSON parser (the environment is offline — no serde/rand).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide monotonically increasing id source (events, commands, ...).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh non-zero u64 id, unique within the process.
+pub fn fresh_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Monotonic nanoseconds since process start — the daemon-local clock used
+/// for OpenCL event profiling timestamps.
+pub fn now_ns() -> u64 {
+    static EPOCH: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
+    let epoch = *EPOCH.get_or_init(std::time::Instant::now);
+    epoch.elapsed().as_nanos() as u64
+}
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.1} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Format a byte count with an adaptive binary unit.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: u64 = 1024;
+    const MIB: u64 = 1024 * KIB;
+    const GIB: u64 = 1024 * MIB;
+    if b >= GIB {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b as f64 / KIB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let a = fresh_id();
+        let b = fresh_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(61_000.0), "61.0 µs");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(fmt_bytes(9 * 1024 * 1024), "9.00 MiB");
+    }
+}

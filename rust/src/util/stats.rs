@@ -1,0 +1,175 @@
+//! Streaming statistics and latency sampling for the benchmark harness.
+
+/// Reservoir of raw samples with summary statistics. All benchmark figures
+/// report through this so the output format is uniform.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.vals.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().sum::<f64>() / self.vals.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.vals.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on the sorted samples.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * (self.vals.len() - 1) as f64).round() as usize;
+        self.vals[rank.min(self.vals.len() - 1)]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// "mean ± σ [p50 min..max]" summary with ns formatting.
+    pub fn summary_ns(&mut self) -> String {
+        format!(
+            "{} ± {} [p50 {}, min {}, max {}] n={}",
+            super::fmt_ns(self.mean()),
+            super::fmt_ns(self.stddev()),
+            super::fmt_ns(self.median()),
+            super::fmt_ns(self.min()),
+            super::fmt_ns(self.max()),
+            self.len()
+        )
+    }
+}
+
+/// Welford online mean/variance — for metrics kept per-connection in the hot
+/// path where storing every sample would allocate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = Samples::new();
+        for v in 0..101 {
+            s.push(v as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(95.0), 95.0);
+    }
+
+    #[test]
+    fn welford_matches_samples() {
+        let mut w = Welford::default();
+        let mut s = Samples::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let v = rng.next_f64();
+            w.push(v);
+            s.push(v);
+        }
+        assert!((w.mean() - s.mean()).abs() < 1e-12);
+        assert!((w.stddev() - s.stddev()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let mut s = Samples::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Connection-loss handling (paper §4.3): session resume, command replay
+//! with server-side dedup, device-unavailable surfacing, local fallback.
+//!
+//! The paper's failure model is *connection* loss (roaming UE, flaky
+//! wireless, changing IP) — the daemon itself survives and keeps its
+//! session and buffer state. `Daemon::kick_client` severs the live socket
+//! to reproduce exactly that.
+
+use std::time::Duration;
+
+use poclr::client::{local::LocalQueue, ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn session_ids_are_issued_and_random() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    assert!(p.available(0));
+    let sess = d.state.session.lock().unwrap().clone();
+    assert_ne!(sess.id, [0u8; 16]);
+}
+
+#[test]
+fn kill_daemon_marks_device_unavailable() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let addr = d.addr();
+    let p = Platform::connect(
+        &[addr],
+        ClientConfig {
+            reconnect: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &1i32.to_le_bytes()).unwrap();
+    drop(d); // server goes away for good
+
+    // The driver notices on subsequent I/O; poll until the flag flips.
+    let mut unavailable = false;
+    for _ in 0..300 {
+        let _ = q.write(buf, &2i32.to_le_bytes());
+        if !p.available(0) {
+            unavailable = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(unavailable, "driver should mark the device unavailable");
+    // Commands now fail fast with the OpenCL-style error.
+    let err = q.write(buf, &3i32.to_le_bytes()).unwrap_err();
+    assert!(err.to_string().contains("device unavailable"), "{err}");
+}
+
+#[test]
+fn reconnect_resumes_session_and_replays() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &0i32.to_le_bytes()).unwrap();
+    q.run("increment_s32_1", &[buf], &[buf])
+        .unwrap()
+        .wait()
+        .unwrap();
+    let session_before = d.state.session.lock().unwrap().id;
+
+    // Sever the connection mid-session (roaming / interference).
+    d.kick_client();
+
+    // Keep issuing work; the driver reconnects with the same session id
+    // and replays whatever the daemon had not processed. Daemon state
+    // (buffers, events) is intact throughout.
+    let mut final_ev = None;
+    for _ in 0..100 {
+        match q.run("increment_s32_1", &[buf], &[buf]) {
+            Ok(ev) => {
+                final_ev = Some(ev);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let ev = final_ev.expect("driver should recover within the grace period");
+    ev.wait().unwrap();
+
+    let out = q.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 2);
+    // Same session resumed, not a fresh one.
+    assert_eq!(d.state.session.lock().unwrap().id, session_before);
+}
+
+#[test]
+fn repeated_kicks_are_survivable() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &0i32.to_le_bytes()).unwrap();
+
+    let mut expected = 0i32;
+    for round in 0..3 {
+        d.kick_client();
+        // Issue work until it sticks again.
+        let mut done = false;
+        for _ in 0..200 {
+            match q.run("increment_s32_1", &[buf], &[buf]) {
+                Ok(ev) => {
+                    ev.wait().unwrap();
+                    expected += 1;
+                    done = true;
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        assert!(done, "round {round} never recovered");
+    }
+    let out = q.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), expected);
+}
+
+#[test]
+fn local_fallback_device_keeps_app_running() {
+    // Fig 4: when remote devices are unavailable the application falls
+    // back to the UE-local device.
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(
+        &[d.addr()],
+        ClientConfig {
+            reconnect: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let local = LocalQueue::gpu(manifest());
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+
+    let remote_buf = ctx.create_buffer(4);
+    q.write(remote_buf, &7i32.to_le_bytes()).unwrap();
+    drop(d);
+
+    // Remote path dies...
+    let mut remote_dead = false;
+    for _ in 0..300 {
+        if q.write(remote_buf, &7i32.to_le_bytes()).is_err() {
+            remote_dead = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(remote_dead);
+
+    // ...application switches to the local device and continues.
+    let a = local.create_buffer(4);
+    let b = local.create_buffer(4);
+    local.write(a, &7i32.to_le_bytes());
+    local.run("increment_s32_1", &[a], &[b]).unwrap();
+    let out = local.read(b).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 8);
+}
