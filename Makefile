@@ -1,0 +1,12 @@
+# Build-time AOT export: lower the L2 JAX entries to HLO text + manifest.
+# The rust daemons load rust/artifacts/manifest.json at startup; the HLO
+# text files are kept for a future PJRT backend (execution currently runs
+# on the in-crate reference interpreter).
+
+.PHONY: artifacts test
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+test:
+	cargo build --release && cargo test -q

@@ -27,6 +27,17 @@ pub struct ServerConn {
     next_cmd_id: AtomicU64,
     n_devices: AtomicU32,
     available: Arc<AtomicBool>,
+    /// Connection generation, bumped on every successful handshake. Each
+    /// reader is tied to the generation it was spawned under, so a stale
+    /// reader noticing its (long-dead) socket failing cannot mark the
+    /// *current* link down after a successful reconnect.
+    conn_gen: Arc<AtomicU64>,
+    /// One-shot latch for the reconnect nudge: while the link is down, the
+    /// first rejected command enqueues a no-op probe packet so the writer
+    /// thread (blocked on its channel) notices the dead socket and runs
+    /// the reconnect loop. Without it, recovery only happened if a command
+    /// raced the disconnect into the writer.
+    probe_pending: AtomicBool,
     /// Backup ring of recent commands for replay (cmd_id, packet).
     backup: Mutex<VecDeque<(u64, Packet)>>,
 }
@@ -52,10 +63,12 @@ impl ServerConn {
             next_cmd_id: AtomicU64::new(1),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(false)),
+            conn_gen: Arc::new(AtomicU64::new(0)),
+            probe_pending: AtomicBool::new(false),
             backup: Mutex::new(VecDeque::new()),
         });
-        let stream = conn.dial_and_handshake()?;
-        conn.spawn_reader(stream.try_clone()?);
+        let (stream, generation) = conn.dial_and_handshake()?;
+        conn.spawn_reader(stream.try_clone()?, generation);
         Self::spawn_writer(Arc::clone(&conn), stream, rx);
         Ok(conn)
     }
@@ -79,6 +92,12 @@ impl ServerConn {
         payload: Vec<u8>,
     ) -> Result<()> {
         if !self.available() {
+            if self.cfg.reconnect && !self.probe_pending.swap(true, Ordering::SeqCst) {
+                // Wake the writer with a no-op probe (cmd_id 0, event 0 —
+                // invisible end to end): its write fails on the dead
+                // socket, which is what triggers the reconnect loop.
+                self.tx.send(Packet::bare(Msg::control(Body::Barrier))).ok();
+            }
             bail!("device unavailable: server {} is disconnected", self.server_id);
         }
         let cmd_id = self.next_cmd_id.fetch_add(1, Ordering::SeqCst);
@@ -105,7 +124,10 @@ impl ServerConn {
         Ok(())
     }
 
-    fn dial_and_handshake(&self) -> Result<TcpStream> {
+    /// Dial + handshake. On success the connection generation is bumped
+    /// (retiring every older reader) and the link is marked available.
+    /// Returns the fresh stream and its generation.
+    fn dial_and_handshake(&self) -> Result<(TcpStream, u64)> {
         let mut stream = crate::net::tcp::connect(self.addr.as_str())?;
         let session = *self.session.lock().unwrap();
         write_packet(
@@ -129,7 +151,11 @@ impl ServerConn {
         };
         *self.session.lock().unwrap() = sid;
         self.n_devices.store(n_devices, Ordering::SeqCst);
+        // Retire older readers *before* re-arming availability, so a stale
+        // reader racing this handshake can never flip the fresh link down.
+        let generation = self.conn_gen.fetch_add(1, Ordering::SeqCst) + 1;
         self.available.store(true, Ordering::SeqCst);
+        self.probe_pending.store(false, Ordering::SeqCst);
         // Replay commands the server never processed (paper §4.3).
         let backup = self.backup.lock().unwrap();
         for (cmd_id, pkt) in backup.iter() {
@@ -137,7 +163,7 @@ impl ServerConn {
                 write_packet(&mut stream, &pkt.msg, &pkt.payload)?;
             }
         }
-        Ok(stream)
+        Ok((stream, generation))
     }
 
     /// Writer thread: pace the access link once per packet, write, and on
@@ -154,6 +180,15 @@ impl ServerConn {
                         let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
                         conn.cfg.link.pace(bytes);
                         if write_packet(s, &pkt.msg, &pkt.payload).is_ok() {
+                            // A successful write proves the link is up:
+                            // re-arm availability. This also heals the
+                            // narrow check-then-act race where a stale
+                            // reader loaded its (still-current) generation,
+                            // lost the CPU across a reconnect, and then
+                            // flipped the fresh link down — the next probe
+                            // write lands here and undoes it.
+                            conn.available.store(true, Ordering::SeqCst);
+                            conn.probe_pending.store(false, Ordering::SeqCst);
                             break;
                         }
                         // Connection lost mid-command.
@@ -191,9 +226,9 @@ impl ServerConn {
         for attempt in 0..600 {
             std::thread::sleep(Duration::from_millis(10.min(2 + attempt)));
             match self.dial_and_handshake() {
-                Ok(stream) => {
+                Ok((stream, generation)) => {
                     if let Ok(rd) = stream.try_clone() {
-                        self.spawn_reader_arcless(rd);
+                        self.spawn_reader(rd, generation);
                     }
                     return Some(stream);
                 }
@@ -203,37 +238,21 @@ impl ServerConn {
         None
     }
 
-    fn spawn_reader(self: &Arc<Self>, stream: TcpStream) {
-        let conn = Arc::clone(self);
-        std::thread::Builder::new()
-            .name(format!("poclr-cr{}", conn.server_id))
-            .spawn(move || conn.reader_loop(stream))
-            .expect("spawn client reader");
-    }
-
-    /// Reader spawn path used from &self (reconnect inside writer thread).
-    fn spawn_reader_arcless(&self, stream: TcpStream) {
-        // Safety of lifetime: the reader only uses cloned Arcs of the
-        // tables, not &self.
+    /// Spawn the reader thread for one connection generation. The reader
+    /// only uses cloned Arcs of the tables, never `&self`, so this works
+    /// from the writer thread during reconnects too.
+    fn spawn_reader(&self, stream: TcpStream, generation: u64) {
         let events = Arc::clone(&self.events);
         let read_results = Arc::clone(&self.read_results);
         let available = Arc::clone(&self.available);
+        let conn_gen = Arc::clone(&self.conn_gen);
         let server_id = self.server_id;
         std::thread::Builder::new()
             .name(format!("poclr-cr{server_id}"))
             .spawn(move || {
-                reader_loop_impl(stream, events, read_results, available);
+                reader_loop_impl(stream, events, read_results, available, conn_gen, generation);
             })
             .expect("spawn client reader");
-    }
-
-    fn reader_loop(&self, stream: TcpStream) {
-        reader_loop_impl(
-            stream,
-            Arc::clone(&self.events),
-            Arc::clone(&self.read_results),
-            Arc::clone(&self.available),
-        );
     }
 }
 
@@ -242,6 +261,8 @@ fn reader_loop_impl(
     events: Arc<EventTable>,
     read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
     available: Arc<AtomicBool>,
+    conn_gen: Arc<AtomicU64>,
+    generation: u64,
 ) {
     loop {
         match read_packet(&mut stream) {
@@ -254,13 +275,31 @@ fn reader_loop_impl(
                         read_results.lock().unwrap().insert(event, pkt.payload);
                     }
                     match EventStatus::from_i8(status) {
-                        EventStatus::Failed => events.fail(event),
-                        _ => events.complete(event, ts),
+                        EventStatus::Failed => {
+                            events.fail(event);
+                        }
+                        _ => {
+                            events.complete(event, ts);
+                        }
                     }
                 }
             }
             Err(_) => {
-                available.store(false, Ordering::SeqCst);
+                // Only the reader of the *current* connection may declare
+                // the link down: a stale reader observing its dead socket
+                // after a successful reconnect must not clobber the fresh
+                // link's availability (that wedged the driver permanently —
+                // nothing ever re-armed it because commands fail fast
+                // before reaching the writer's reconnect path).
+                if conn_gen.load(Ordering::SeqCst) == generation {
+                    // Tear the write half down too: with no reader alive,
+                    // completions would never be consumed, so the writer
+                    // must not keep succeeding (and re-arming the link) on
+                    // a half-usable socket. Failing its next (probe) write
+                    // is what routes it into the reconnect loop.
+                    stream.shutdown(std::net::Shutdown::Both).ok();
+                    available.store(false, Ordering::SeqCst);
+                }
                 break;
             }
         }
@@ -286,6 +325,8 @@ mod tests {
             next_cmd_id: AtomicU64::new(1),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(false)),
+            conn_gen: Arc::new(AtomicU64::new(0)),
+            probe_pending: AtomicBool::new(false),
             backup: Mutex::new(VecDeque::new()),
         };
         let err = conn
@@ -310,6 +351,8 @@ mod tests {
             next_cmd_id: AtomicU64::new(1),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(true)),
+            conn_gen: Arc::new(AtomicU64::new(0)),
+            probe_pending: AtomicBool::new(false),
             backup: Mutex::new(VecDeque::new()),
         };
         for _ in 0..10 {
@@ -319,4 +362,9 @@ mod tests {
         // ids keep increasing even when the ring rotates
         assert_eq!(conn.backup.lock().unwrap().back().unwrap().0, 10);
     }
+
+    // The stale-reader/generation behavior is covered end to end by
+    // `reconnect_storm_leaves_link_stably_available` in
+    // tests/integration_reconnect.rs, which exercises the real reader
+    // threads across repeated kicks.
 }

@@ -2,25 +2,31 @@
 //!
 //! Readers (client, peers, RDMA poller) funnel packets here; device
 //! executors report completions back through per-device forwarder threads.
-//! The dispatcher resolves wait lists against the event table, parks
-//! blocked commands, and on every completion (local or a peer's
-//! `NotifyEvent`) rescans the parked set — the paper's decentralized
+//! The dispatcher resolves wait lists against the event table and parks
+//! blocked commands in a slab keyed by a park token. Completions drive the
+//! table's reverse waiter index ([`crate::sched::table::EventTable::park`]):
+//! each terminal event returns exactly the parked commands whose last
+//! dependency just resolved, so a completion costs O(affected commands),
+//! not a rescan of everything parked — the paper's decentralized
 //! scheduling: *"Any server that has received a command depending on a
 //! command executing on a different server can begin executing such blocked
 //! commands immediately when it receives completion notifications"* (§5.2).
+//! Failed events poison their waiters, and the poison propagates
+//! transitively through the waiter graph (a failed upstream event fails its
+//! whole dependent subtree).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
 use crate::runtime::executor::{ExecOutcome, ExecRequest};
-use crate::sched::table::DepsState;
+use crate::sched::table::{DepsState, Wakeup};
 use crate::util::now_ns;
 
 use super::migrate::{self, MigrationJob};
-use super::state::DaemonState;
+use super::state::{DaemonState, MAX_ALLOC};
 
 /// Work items feeding the dispatcher.
 pub enum Work {
@@ -30,6 +36,9 @@ pub enum Work {
         via_rdma: bool,
     },
     ExecDone(ExecOutcome),
+    /// Parked commands released by a completion recorded off the dispatch
+    /// thread (e.g. the migration worker failing an event).
+    Wake(Vec<Wakeup>),
     Shutdown,
 }
 
@@ -70,15 +79,18 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
     }
 
     // Migration worker: buffer reads + pushes happen off the dispatch
-    // thread (they block on link pacing / big memcpys).
-    let migrate_tx = migrate::spawn_worker(Arc::clone(&state));
+    // thread (they block on link pacing / big memcpys). It reports event
+    // failures back through Work::Wake so dependents of a failed migration
+    // are released without a rescan.
+    let migrate_tx = migrate::spawn_worker(Arc::clone(&state), self_tx.clone());
 
     let mut d = Dispatcher {
         state,
         exec_txs,
         migrate_tx,
-        pending: Vec::new(),
+        parked: HashMap::new(),
         inflight: HashMap::new(),
+        wake_queue: VecDeque::new(),
     };
 
     while let Ok(work) = rx.recv() {
@@ -91,11 +103,15 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
             } => {
                 d.state.commands_seen.fetch_add(1, Ordering::Relaxed);
                 d.admit(from_peer, pkt, via_rdma, now_ns());
-                d.rescan();
+                d.pump();
             }
             Work::ExecDone(outcome) => {
                 d.finish_kernel(outcome);
-                d.rescan();
+                d.pump();
+            }
+            Work::Wake(wakeups) => {
+                d.wake_queue.extend(wakeups);
+                d.pump();
             }
         }
     }
@@ -105,53 +121,53 @@ struct Dispatcher {
     state: Arc<DaemonState>,
     exec_txs: Vec<Sender<ExecOutcome>>,
     migrate_tx: Sender<MigrationJob>,
-    pending: Vec<Pending>,
+    /// Parked commands, keyed by the park token registered in the event
+    /// table's waiter index.
+    parked: HashMap<u64, Pending>,
     inflight: HashMap<u64, Inflight>,
+    /// Wakeups produced while handling the current work item; drained by
+    /// [`Dispatcher::pump`] so poison/readiness propagates transitively.
+    wake_queue: VecDeque<Wakeup>,
 }
 
 impl Dispatcher {
-    /// Admit a fresh packet: run it, park it, or poison it.
+    /// Admit a fresh packet: run it, park it, or poison it. Parking
+    /// registers the command in the waiter index atomically with the
+    /// dependency evaluation, so there is no re-check window.
     fn admit(&mut self, from_peer: Option<u32>, pkt: Packet, via_rdma: bool, queued_ns: u64) {
-        match self.state.events.deps_state(&pkt.msg.wait) {
+        let token = crate::util::fresh_id();
+        match self.state.events.park(token, &pkt.msg.wait) {
             DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns),
             DepsState::Blocked => {
-                // Materialize user events for unseen foreign dependencies.
-                for e in &pkt.msg.wait {
-                    self.state.events.ensure(*e);
-                }
-                self.pending.push(Pending {
-                    from_peer,
-                    pkt,
-                    via_rdma,
-                    queued_ns,
-                });
+                self.parked.insert(
+                    token,
+                    Pending {
+                        from_peer,
+                        pkt,
+                        via_rdma,
+                        queued_ns,
+                    },
+                );
             }
             DepsState::Poisoned => self.fail_command(&pkt.msg),
         }
     }
 
-    /// Re-examine parked commands after any completion.
-    fn rescan(&mut self) {
-        loop {
-            let mut progressed = false;
-            let mut i = 0;
-            while i < self.pending.len() {
-                match self.state.events.deps_state(&self.pending[i].pkt.msg.wait) {
-                    DepsState::Ready => {
-                        let p = self.pending.swap_remove(i);
-                        self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns);
-                        progressed = true;
-                    }
-                    DepsState::Poisoned => {
-                        let p = self.pending.swap_remove(i);
-                        self.fail_command(&p.pkt.msg);
-                        progressed = true;
-                    }
-                    DepsState::Blocked => i += 1,
-                }
-            }
-            if !progressed {
-                break;
+    /// Drain the wakeup queue: each entry names one parked command whose
+    /// fate was just decided. Executing or failing a command can complete
+    /// further events, which appends further wakeups — the loop runs until
+    /// the cascade is dry. Commands with untouched dependencies are never
+    /// visited (O(affected) per completion).
+    fn pump(&mut self) {
+        while let Some(w) = self.wake_queue.pop_front() {
+            let Some(p) = self.parked.remove(&w.token) else {
+                continue;
+            };
+            self.state.wake_examined.fetch_add(1, Ordering::Relaxed);
+            if w.poisoned {
+                self.fail_command(&p.pkt.msg);
+            } else {
+                self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns);
             }
         }
     }
@@ -173,29 +189,23 @@ impl Dispatcher {
                 size,
                 content_size_buf,
             } => {
+                if size > MAX_ALLOC {
+                    self.fail_event(event);
+                    return;
+                }
                 self.state.ensure_buffer(buf, size, content_size_buf);
                 self.complete_inline(event, queued_ns, submit_ns, Vec::new());
             }
             Body::FreeBuffer { buf } => {
-                self.state.buffers.lock().unwrap().remove(&buf);
+                self.state.buffers.remove(buf);
                 self.complete_inline(event, queued_ns, submit_ns, Vec::new());
             }
             Body::WriteBuffer { buf, offset, len } => {
-                let ok = {
-                    let buffers = self.state.buffers.lock().unwrap();
-                    match buffers.get(&buf) {
-                        Some(entry) => {
-                            let mut data = entry.data.write().unwrap();
-                            let end = (offset + len) as usize;
-                            if data.len() < end {
-                                data.resize(end, 0);
-                            }
-                            data[offset as usize..end].copy_from_slice(&pkt.payload);
-                            true
-                        }
-                        None => false,
-                    }
-                };
+                // A corrupt (or malicious) packet can declare a `len` that
+                // does not match the payload that actually arrived; copying
+                // would panic the daemon. Validate and fail the event.
+                let ok = pkt.payload.len() as u64 == len
+                    && self.state.write_buffer(buf, offset, &pkt.payload);
                 if ok {
                     self.complete_inline(event, queued_ns, submit_ns, Vec::new());
                 } else {
@@ -203,22 +213,11 @@ impl Dispatcher {
                 }
             }
             Body::SetContentSize { buf, size } => {
-                let mut buffers = self.state.buffers.lock().unwrap();
-                if let Some(entry) = buffers.get_mut(&buf) {
-                    entry.content_size = size;
-                    // Mirror into the linked extension buffer when present.
-                    if entry.content_size_buf != 0 {
-                        let cs = entry.content_size_buf;
-                        if let Some(cse) = buffers.get(&cs) {
-                            let mut d = cse.data.write().unwrap();
-                            if d.len() >= 4 {
-                                d[..4].copy_from_slice(&(size as u32).to_le_bytes());
-                            }
-                        }
-                    }
+                if self.state.set_content_size(buf, size) {
+                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                } else {
+                    self.fail_event(event);
                 }
-                drop(buffers);
-                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
             }
             Body::ReadBuffer { buf, offset, len } => {
                 // len == u64::MAX requests a content-size-limited read
@@ -228,15 +227,9 @@ impl Dispatcher {
                 } else {
                     len
                 };
-                let data = {
-                    let buffers = self.state.buffers.lock().unwrap();
-                    buffers.get(&buf).map(|entry| {
-                        let d = entry.data.read().unwrap();
-                        let end = ((offset + len) as usize).min(d.len());
-                        d[offset as usize..end].to_vec()
-                    })
-                };
-                match data {
+                // Out-of-range offsets fail the event instead of slicing
+                // with end < start (the seed's daemon-killing panic).
+                match self.state.read_buffer(buf, offset, len) {
                     Some(payload) => {
                         self.complete_inline(event, queued_ns, submit_ns, payload)
                     }
@@ -309,60 +302,67 @@ impl Dispatcher {
                 len,
             } => {
                 // Data arrived from a peer (TCP payload, or already placed
-                // in our RDMA shadow region).
-                self.state.ensure_buffer(buf, total_size, 0);
-                {
-                    let mut buffers = self.state.buffers.lock().unwrap();
-                    let entry = buffers.get_mut(&buf).expect("just ensured");
-                    {
-                        let mut data = entry.data.write().unwrap();
-                        if data.len() < total_size as usize {
-                            data.resize(total_size as usize, 0);
-                        }
-                        if via_rdma {
-                            // Drain the shadow region (second copy of the
-                            // paper's shadow-buffer scheme), then free the
-                            // inbound window.
-                            if let Some(rdma_state) = &self.state.rdma {
-                                let shadow = rdma_state.shadow.buf.read().unwrap();
-                                data[..content_size as usize]
-                                    .copy_from_slice(&shadow[..content_size as usize]);
-                            }
-                        } else {
-                            data[..len as usize].copy_from_slice(&pkt.payload);
-                        }
-                    }
-                    entry.content_size = content_size;
-                    if entry.content_size_buf != 0 {
-                        let cs = entry.content_size_buf;
-                        if let Some(cse) = buffers.get(&cs) {
-                            let mut d = cse.data.write().unwrap();
-                            if d.len() >= 4 {
-                                d[..4].copy_from_slice(&(content_size as u32).to_le_bytes());
+                // in our RDMA shadow region). Validate every size field
+                // before touching buffers: a corrupt packet must fail the
+                // event, not panic a copy or balloon an allocation.
+                let ok = total_size <= MAX_ALLOC && content_size <= total_size;
+                let committed = if !ok {
+                    false
+                } else if via_rdma {
+                    // Drain the shadow region (second copy of the paper's
+                    // shadow-buffer scheme).
+                    match &self.state.rdma {
+                        Some(rdma_state) => {
+                            let shadow = rdma_state.shadow.buf.read().unwrap();
+                            if (shadow.len() as u64) < content_size {
+                                false
+                            } else {
+                                self.state.commit_migration(
+                                    buf,
+                                    total_size,
+                                    content_size,
+                                    &shadow[..content_size as usize],
+                                );
+                                true
                             }
                         }
+                        None => false,
                     }
-                }
+                } else if pkt.payload.len() as u64 == len && len == content_size {
+                    self.state
+                        .commit_migration(buf, total_size, content_size, &pkt.payload);
+                    true
+                } else {
+                    false
+                };
                 if via_rdma {
+                    // Free the inbound window whether or not the commit
+                    // succeeded — a failed migration must not wedge every
+                    // later RDMA migration to this server.
                     if let Some(rdma_state) = &self.state.rdma {
                         rdma_state.endpoint.window_release_local();
                     }
                 }
-                // Destination completes the migration event and tells
-                // everyone (paper §5.1: "only the destination server
-                // notifies the client of the migration's completion").
-                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                if committed {
+                    // Destination completes the migration event and tells
+                    // everyone (paper §5.1: "only the destination server
+                    // notifies the client of the migration's completion").
+                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                } else {
+                    self.fail_event(event);
+                }
             }
             Body::NotifyEvent {
                 event: ev,
                 status,
             } => {
                 let st = EventStatus::from_i8(status);
-                if st == EventStatus::Failed {
-                    self.state.events.fail(ev);
+                let wakeups = if st == EventStatus::Failed {
+                    self.state.events.fail(ev)
                 } else {
-                    self.state.events.complete(ev, Timestamps::default());
-                }
+                    self.state.events.complete(ev, Timestamps::default())
+                };
+                self.wake_queue.extend(wakeups);
             }
             Body::RdmaAdvertise { rkey, shadow_size } => {
                 // Arrives over a peer connection; key by the sending peer.
@@ -395,32 +395,8 @@ impl Dispatcher {
                     self.fail_event(inf.event);
                     return;
                 }
-                {
-                    let mut buffers = self.state.buffers.lock().unwrap();
-                    for (out_id, bytes) in inf.outs.iter().zip(outputs) {
-                        let len = bytes.len() as u64;
-                        let entry =
-                            buffers.entry(*out_id).or_insert_with(|| super::state::BufEntry {
-                                data: Arc::new(std::sync::RwLock::new(Vec::new())),
-                                size: len,
-                                content_size_buf: 0,
-                                content_size: len,
-                            });
-                        *entry.data.write().unwrap() = bytes;
-                        entry.content_size = len;
-                        if entry.size < len {
-                            entry.size = len;
-                        }
-                        if entry.content_size_buf != 0 {
-                            let cs = entry.content_size_buf;
-                            if let Some(cse) = buffers.get(&cs) {
-                                let mut d = cse.data.write().unwrap();
-                                if d.len() >= 4 {
-                                    d[..4].copy_from_slice(&(len as u32).to_le_bytes());
-                                }
-                            }
-                        }
-                    }
+                for (out_id, bytes) in inf.outs.iter().zip(outputs) {
+                    self.state.commit_output(*out_id, bytes);
                 }
                 let ts = Timestamps {
                     queued_ns: inf.queued_ns,
@@ -455,13 +431,14 @@ impl Dispatcher {
         self.broadcast_completion(event, ts, payload);
     }
 
-    /// Mark complete locally, send Completion to the client and NotifyEvent
-    /// to every peer (paper Fig 3).
+    /// Mark complete locally (queueing any released waiters), send
+    /// Completion to the client and NotifyEvent to every peer (paper Fig 3).
     fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Vec<u8>) {
         if event == 0 {
             return;
         }
-        self.state.events.complete(event, ts);
+        let wakeups = self.state.events.complete(event, ts);
+        self.wake_queue.extend(wakeups);
         let completion = Msg::control(Body::Completion {
             event,
             status: EventStatus::Complete.to_i8(),
@@ -483,7 +460,8 @@ impl Dispatcher {
         if event == 0 {
             return;
         }
-        self.state.events.fail(event);
+        let wakeups = self.state.events.fail(event);
+        self.wake_queue.extend(wakeups);
         let completion = Msg::control(Body::Completion {
             event,
             status: EventStatus::Failed.to_i8(),

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use crate::net::rdma::Wr;
 use crate::proto::{Body, Msg, Packet};
 
+use super::dispatch::Work;
 use super::state::DaemonState;
 
 /// One migration to perform.
@@ -25,8 +26,10 @@ pub struct MigrationJob {
     pub use_rdma: bool,
 }
 
-/// Spawn the migration worker thread; returns its job channel.
-pub fn spawn_worker(state: Arc<DaemonState>) -> Sender<MigrationJob> {
+/// Spawn the migration worker thread; returns its job channel. `work_tx`
+/// feeds failure wakeups back to the dispatcher so commands parked on a
+/// failed migration event are released (and poisoned) without a rescan.
+pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<MigrationJob> {
     let (tx, rx) = channel::<MigrationJob>();
     std::thread::Builder::new()
         .name(format!("pocld{}-migrate", state.server_id))
@@ -38,8 +41,12 @@ pub fn spawn_worker(state: Arc<DaemonState>) -> Sender<MigrationJob> {
                         state.server_id, job.buf
                     );
                     // Local failure: fail the event ourselves (the
-                    // destination never learns of this migration).
-                    state.events.fail(job.event);
+                    // destination never learns of this migration) and hand
+                    // any released waiters to the dispatch thread.
+                    let wakeups = state.events.fail(job.event);
+                    if !wakeups.is_empty() {
+                        work_tx.send(Work::Wake(wakeups)).ok();
+                    }
                     let note = Packet::bare(Msg::control(Body::NotifyEvent {
                         event: job.event,
                         status: crate::proto::EventStatus::Failed.to_i8(),
@@ -61,15 +68,16 @@ pub fn spawn_worker(state: Arc<DaemonState>) -> Sender<MigrationJob> {
 fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
     // Content-size extension: transfer only the meaningful prefix.
     // Single staging copy (hot path, see EXPERIMENTS.md §Perf): the
-    // content prefix is read out under the buffer lock directly into the
-    // outgoing payload — no full-buffer snapshot, no second staging copy.
+    // content prefix is read out under the buffer's own data lock directly
+    // into the outgoing payload — no full-buffer snapshot, no second
+    // staging copy, and no store-wide lock held during the memcpy.
     let content_limit = state.content_size_of(job.buf);
     let (staged, total_len) = {
-        let buffers = state.buffers.lock().unwrap();
-        let entry = buffers
-            .get(&job.buf)
+        let handle = state
+            .buffers
+            .data(job.buf)
             .ok_or_else(|| anyhow::anyhow!("unknown buffer {}", job.buf))?;
-        let data = entry.data.read().unwrap();
+        let data = handle.read().unwrap();
         let content = (content_limit as usize).min(data.len());
         (data[..content].to_vec(), data.len())
     };
@@ -115,7 +123,7 @@ fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
         // RDMA_WRITE(payload) -> RDMA_SEND(command).
         let staged = Arc::new(staged);
         rdma.endpoint.window_acquire(job.dst_server);
-        rdma.endpoint.post_chain(&[
+        let posted = rdma.endpoint.post_chain(&[
             Wr::Write {
                 dst_node: job.dst_server,
                 rkey,
@@ -127,9 +135,15 @@ fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
                 dst_node: job.dst_server,
                 msg: data_msg.encode(),
             },
-        ])?;
-        // The window is released by the destination after it drains the
-        // shadow into the OpenCL buffer.
+        ]);
+        if let Err(e) = posted {
+            // On success the *destination* releases its window after
+            // draining the shadow; on failure it never learns the window
+            // was taken, so the source must release it here or every later
+            // RDMA migration to that peer wedges on acquire.
+            rdma.endpoint.window_release_remote(job.dst_server);
+            return Err(e);
+        }
     } else {
         // TCP path: command struct + payload over the peer socket (size /
         // struct / payload writes on the peer writer thread).

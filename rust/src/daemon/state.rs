@@ -1,5 +1,6 @@
-//! Shared daemon state: buffer store, event table, device executors,
-//! connection registries, session bookkeeping, RDMA shadow region.
+//! Shared daemon state: sharded buffer store, event table, device
+//! executors, connection registries, session bookkeeping, RDMA shadow
+//! region.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64};
@@ -17,6 +18,11 @@ use crate::util::rng::Rng;
 
 use super::DaemonConfig;
 
+/// Sanity cap on a single buffer allocation / migration target (2 GiB).
+/// Commands asking for more fail their event instead of taking the daemon
+/// down with an absurd `Vec` resize.
+pub const MAX_ALLOC: u64 = 1 << 31;
+
 /// One allocated OpenCL buffer on this server.
 pub struct BufEntry {
     pub data: Arc<RwLock<Vec<u8>>>,
@@ -26,6 +32,82 @@ pub struct BufEntry {
     /// Cached content size (bytes of meaningful data), updated by writes,
     /// kernel output and migrations. Defaults to full size.
     pub content_size: u64,
+}
+
+/// Number of independent buffer-store shards. Sixteen keeps the per-shard
+/// mutex uncontended for the workloads here while staying cheap to scan.
+pub const BUF_SHARDS: usize = 16;
+
+/// The daemon buffer store, sharded by buffer id so `WriteBuffer` /
+/// `ReadBuffer` / kernel-output commits on different buffers no longer
+/// serialize on one global mutex. Per-buffer byte contents additionally
+/// live behind their own `RwLock`, so shard locks are only held for map
+/// lookups, never for bulk copies.
+pub struct BufStore {
+    shards: Vec<Mutex<HashMap<u64, BufEntry>>>,
+}
+
+impl Default for BufStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufStore {
+    pub fn new() -> BufStore {
+        BufStore {
+            shards: (0..BUF_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<HashMap<u64, BufEntry>> {
+        // Fibonacci multiplicative hash: buffer ids are sequential
+        // (`fresh_id`), so taking low bits directly would stripe poorly.
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[(h >> 32) as usize % BUF_SHARDS]
+    }
+
+    /// Create the entry if absent (zero-filled allocation of `size`).
+    pub fn ensure(&self, id: u64, size: u64, content_size_buf: u64) {
+        let mut m = self.shard(id).lock().unwrap();
+        m.entry(id).or_insert_with(|| BufEntry {
+            data: Arc::new(RwLock::new(vec![0u8; size as usize])),
+            size,
+            content_size_buf,
+            content_size: size,
+        });
+    }
+
+    pub fn remove(&self, id: u64) {
+        self.shard(id).lock().unwrap().remove(&id);
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.shard(id).lock().unwrap().contains_key(&id)
+    }
+
+    /// Run `f` over the entry, holding only that shard's lock. Never nest
+    /// `with` calls: two buffers can share a shard.
+    pub fn with<R>(&self, id: u64, f: impl FnOnce(&mut BufEntry) -> R) -> Option<R> {
+        let mut m = self.shard(id).lock().unwrap();
+        m.get_mut(&id).map(f)
+    }
+
+    /// Clone out the byte-store handle so bulk reads/writes happen outside
+    /// any shard lock.
+    pub fn data(&self, id: u64) -> Option<Arc<RwLock<Vec<u8>>>> {
+        let m = self.shard(id).lock().unwrap();
+        m.get(&id).map(|e| Arc::clone(&e.data))
+    }
+
+    /// Total entries across shards (tests / metrics).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// The daemon's RDMA attachment: endpoint + local shadow region +
@@ -54,7 +136,7 @@ pub struct DaemonState {
     pub server_id: u32,
     pub client_link: LinkProfile,
     pub peer_link: LinkProfile,
-    pub buffers: Mutex<HashMap<u64, BufEntry>>,
+    pub buffers: BufStore,
     pub events: EventTable,
     pub devices: Vec<DeviceExecutor>,
     /// Writer channel to the connected client (None until it connects).
@@ -73,6 +155,10 @@ pub struct DaemonState {
     pub shutdown: AtomicBool,
     /// Commands processed (metrics).
     pub commands_seen: AtomicU64,
+    /// Parked commands examined by completion wakeups (metrics). Under the
+    /// indexed dispatcher this counts only commands whose last dependency
+    /// just resolved — an unrelated completion contributes zero.
+    pub wake_examined: AtomicU64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -125,7 +211,7 @@ impl DaemonState {
             server_id: cfg.server_id,
             client_link: cfg.client_link,
             peer_link: cfg.peer_link,
-            buffers: Mutex::new(HashMap::new()),
+            buffers: BufStore::new(),
             events: EventTable::new(),
             devices,
             client_tx: Mutex::new(None),
@@ -139,6 +225,7 @@ impl DaemonState {
             rdma,
             shutdown: AtomicBool::new(false),
             commands_seen: AtomicU64::new(0),
+            wake_examined: AtomicU64::new(0),
         }))
     }
 
@@ -170,40 +257,144 @@ impl DaemonState {
     /// Snapshot a buffer's bytes for kernel input (copy-on-read: executors
     /// must not observe later writes).
     pub fn snapshot_buffer(&self, id: u64) -> Option<Arc<Vec<u8>>> {
-        let buffers = self.buffers.lock().unwrap();
-        let entry = buffers.get(&id)?;
-        let data = entry.data.read().unwrap();
+        let handle = self.buffers.data(id)?;
+        let data = handle.read().unwrap();
         Some(Arc::new(data.clone()))
     }
 
     /// Ensure a buffer exists (migrations allocate on demand).
     pub fn ensure_buffer(&self, id: u64, size: u64, content_size_buf: u64) {
-        let mut buffers = self.buffers.lock().unwrap();
-        buffers.entry(id).or_insert_with(|| BufEntry {
-            data: Arc::new(RwLock::new(vec![0u8; size as usize])),
-            size,
-            content_size_buf,
-            content_size: size,
-        });
+        self.buffers.ensure(id, size, content_size_buf);
     }
 
     /// Effective content size of a buffer: the linked extension buffer's
     /// u32 if present, else the cached value (paper §5.3).
     pub fn content_size_of(&self, id: u64) -> u64 {
-        let buffers = self.buffers.lock().unwrap();
-        let Some(entry) = buffers.get(&id) else {
+        let Some((size, cached, cs_buf)) = self
+            .buffers
+            .with(id, |e| (e.size, e.content_size, e.content_size_buf))
+        else {
             return 0;
         };
-        if entry.content_size_buf != 0 {
-            if let Some(cs_entry) = buffers.get(&entry.content_size_buf) {
-                let data = cs_entry.data.read().unwrap();
+        if cs_buf != 0 {
+            if let Some(handle) = self.buffers.data(cs_buf) {
+                let data = handle.read().unwrap();
                 if data.len() >= 4 {
                     let v = u32::from_le_bytes(data[..4].try_into().unwrap()) as u64;
-                    return v.min(entry.size);
+                    return v.min(size);
                 }
             }
         }
-        entry.content_size.min(entry.size)
+        cached.min(size)
+    }
+
+    /// Mirror a content size into a linked extension buffer (first 4 bytes,
+    /// LE — the layout the `cl_pocl_content_size` clients read).
+    pub fn mirror_content_size(&self, cs_buf: u64, size: u64) {
+        if cs_buf == 0 {
+            return;
+        }
+        if let Some(handle) = self.buffers.data(cs_buf) {
+            let mut d = handle.write().unwrap();
+            if d.len() >= 4 {
+                d[..4].copy_from_slice(&(size as u32).to_le_bytes());
+            }
+        }
+    }
+
+    /// Record a buffer's content size (SetContentSize command). Returns
+    /// false if the buffer does not exist.
+    pub fn set_content_size(&self, buf: u64, size: u64) -> bool {
+        let Some(cs_buf) = self.buffers.with(buf, |e| {
+            e.content_size = size;
+            e.content_size_buf
+        }) else {
+            return false;
+        };
+        self.mirror_content_size(cs_buf, size);
+        true
+    }
+
+    /// Apply a validated host write: `payload` lands at `offset`, growing
+    /// the backing store as needed (never past the declared allocation).
+    /// Returns false if the buffer is unknown or the range is out of
+    /// bounds — the caller fails the event instead of panicking.
+    pub fn write_buffer(&self, buf: u64, offset: u64, payload: &[u8]) -> bool {
+        let Some(end) = offset.checked_add(payload.len() as u64) else {
+            return false;
+        };
+        let Some((handle, size)) = self.buffers.with(buf, |e| (Arc::clone(&e.data), e.size)) else {
+            return false;
+        };
+        if end > size {
+            return false;
+        }
+        let mut data = handle.write().unwrap();
+        let end = end as usize;
+        if data.len() < end {
+            data.resize(end, 0);
+        }
+        data[offset as usize..end].copy_from_slice(payload);
+        true
+    }
+
+    /// Read `len` bytes at `offset` (clamped to the bytes present).
+    /// `None` when the buffer is unknown or `offset` is past the end — the
+    /// caller fails the event instead of panicking on a bad slice.
+    pub fn read_buffer(&self, buf: u64, offset: u64, len: u64) -> Option<Vec<u8>> {
+        let handle = self.buffers.data(buf)?;
+        let data = handle.read().unwrap();
+        if offset > data.len() as u64 {
+            return None;
+        }
+        let start = offset as usize;
+        let end = (offset.saturating_add(len).min(data.len() as u64)) as usize;
+        Some(data[start..end].to_vec())
+    }
+
+    /// Commit one kernel output buffer: replace the contents, refresh the
+    /// size/content-size bookkeeping and mirror into a linked extension
+    /// buffer when present. The data swap happens under only the buffer's
+    /// own lock, never the shard lock (the store's locking contract).
+    pub fn commit_output(&self, out_id: u64, bytes: Vec<u8>) {
+        let len = bytes.len() as u64;
+        self.buffers.ensure(out_id, len, 0);
+        let Some((handle, cs_buf)) = self.buffers.with(out_id, |e| {
+            e.content_size = len;
+            if e.size < len {
+                e.size = len;
+            }
+            (Arc::clone(&e.data), e.content_size_buf)
+        }) else {
+            return;
+        };
+        *handle.write().unwrap() = bytes;
+        self.mirror_content_size(cs_buf, len);
+    }
+
+    /// Commit a peer migration push: allocate/grow to `total_size`, place
+    /// the content prefix, update content-size bookkeeping. The bulk
+    /// resize + copy runs under only the buffer's own data lock, never the
+    /// shard lock (the store's locking contract).
+    pub fn commit_migration(&self, buf: u64, total_size: u64, content_size: u64, src: &[u8]) {
+        self.buffers.ensure(buf, total_size, 0);
+        let Some((handle, cs_buf)) = self.buffers.with(buf, |e| {
+            e.content_size = content_size;
+            if e.size < total_size {
+                e.size = total_size;
+            }
+            (Arc::clone(&e.data), e.content_size_buf)
+        }) else {
+            return;
+        };
+        {
+            let mut data = handle.write().unwrap();
+            if data.len() < total_size as usize {
+                data.resize(total_size as usize, 0);
+            }
+            data[..src.len()].copy_from_slice(src);
+        }
+        self.mirror_content_size(cs_buf, content_size);
     }
 }
 
@@ -220,7 +411,7 @@ mod tests {
     fn ensure_and_snapshot() {
         let s = state();
         s.ensure_buffer(1, 8, 0);
-        s.buffers.lock().unwrap().get(&1).unwrap().data.write().unwrap()[0] = 42;
+        s.buffers.data(1).unwrap().write().unwrap()[0] = 42;
         let snap = s.snapshot_buffer(1).unwrap();
         assert_eq!(snap[0], 42);
         assert!(s.snapshot_buffer(99).is_none());
@@ -231,11 +422,8 @@ mod tests {
         let s = state();
         s.ensure_buffer(10, 100, 11); // payload, linked to csbuf 11
         s.ensure_buffer(11, 4, 0); // the content-size buffer
-        {
-            let b = s.buffers.lock().unwrap();
-            b.get(&11).unwrap().data.write().unwrap()[..4]
-                .copy_from_slice(&27u32.to_le_bytes());
-        }
+        s.buffers.data(11).unwrap().write().unwrap()[..4]
+            .copy_from_slice(&27u32.to_le_bytes());
         assert_eq!(s.content_size_of(10), 27);
         // without linkage, defaults to full size
         s.ensure_buffer(12, 50, 0);
@@ -247,11 +435,8 @@ mod tests {
         let s = state();
         s.ensure_buffer(20, 10, 21);
         s.ensure_buffer(21, 4, 0);
-        {
-            let b = s.buffers.lock().unwrap();
-            b.get(&21).unwrap().data.write().unwrap()[..4]
-                .copy_from_slice(&9999u32.to_le_bytes());
-        }
+        s.buffers.data(21).unwrap().write().unwrap()[..4]
+            .copy_from_slice(&9999u32.to_le_bytes());
         assert_eq!(s.content_size_of(20), 10);
     }
 
@@ -263,5 +448,68 @@ mod tests {
         let sb = b.session.lock().unwrap().id;
         assert_ne!(sa, [0u8; 16]);
         assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn store_spreads_ids_across_shards() {
+        let store = BufStore::new();
+        for id in 1..=64u64 {
+            store.ensure(id, 4, 0);
+        }
+        assert_eq!(store.len(), 64);
+        let occupied = store
+            .shards
+            .iter()
+            .filter(|s| !s.lock().unwrap().is_empty())
+            .count();
+        assert!(occupied > BUF_SHARDS / 2, "ids clumped: {occupied} shards");
+        store.remove(1);
+        assert!(!store.contains(1));
+        assert_eq!(store.len(), 63);
+    }
+
+    #[test]
+    fn write_buffer_validates_ranges() {
+        let s = state();
+        s.ensure_buffer(1, 8, 0);
+        assert!(s.write_buffer(1, 0, &[1, 2, 3, 4]));
+        assert!(s.write_buffer(1, 4, &[9, 9, 9, 9]));
+        // past the declared allocation
+        assert!(!s.write_buffer(1, 8, &[1]));
+        // offset overflow must not panic
+        assert!(!s.write_buffer(1, u64::MAX - 1, &[1, 2, 3]));
+        // unknown buffer
+        assert!(!s.write_buffer(404, 0, &[1]));
+        let snap = s.snapshot_buffer(1).unwrap();
+        assert_eq!(&snap[..], &[1, 2, 3, 4, 9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn read_buffer_clamps_and_rejects_bad_offsets() {
+        let s = state();
+        s.ensure_buffer(2, 4, 0);
+        s.buffers.data(2).unwrap().write().unwrap().copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(s.read_buffer(2, 0, 4).unwrap(), vec![1, 2, 3, 4]);
+        // length clamps to available bytes
+        assert_eq!(s.read_buffer(2, 2, 100).unwrap(), vec![3, 4]);
+        // reading the very end is an empty slice, not a panic
+        assert_eq!(s.read_buffer(2, 4, 1).unwrap(), Vec::<u8>::new());
+        // offset past the end fails cleanly
+        assert!(s.read_buffer(2, 5, 1).is_none());
+        // offset+len overflow must not panic
+        assert_eq!(s.read_buffer(2, 1, u64::MAX).unwrap(), vec![2, 3, 4]);
+        assert!(s.read_buffer(404, 0, 1).is_none());
+    }
+
+    #[test]
+    fn commit_output_updates_linked_content_size() {
+        let s = state();
+        s.ensure_buffer(30, 16, 31);
+        s.ensure_buffer(31, 4, 0);
+        s.commit_output(30, vec![7; 5]);
+        assert_eq!(s.content_size_of(30), 5);
+        let cs = s.buffers.data(31).unwrap();
+        let d = cs.read().unwrap();
+        assert_eq!(u32::from_le_bytes(d[..4].try_into().unwrap()), 5);
     }
 }

@@ -265,6 +265,13 @@ impl Endpoint {
     pub fn window_release_local(&self) {
         self.fabric.window_release(self.node_id);
     }
+
+    /// Release a *destination's* inbound window from the sender side: the
+    /// error path of a failed chain post, where the destination never
+    /// learns the window was claimed and so can never release it itself.
+    pub fn window_release_remote(&self, dst: u32) {
+        self.fabric.window_release(dst);
+    }
 }
 
 #[cfg(test)]
@@ -333,6 +340,41 @@ mod tests {
             len: 8,
         }]);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn failed_chain_releases_window_for_next_migration() {
+        // Regression: a failed post (bad rkey) used to leave the inbound
+        // window held, wedging every later RDMA migration to that peer.
+        let fabric = Fabric::new(LinkProfile::LOOPBACK);
+        let (a, _acq) = fabric.attach(0).unwrap();
+        let (b, _bcq) = fabric.attach(1).unwrap();
+        let mr = b.register_mr(Arc::new(RwLock::new(vec![0u8; 8])));
+
+        a.window_acquire(1);
+        let err = a.post_chain(&[Wr::Write {
+            dst_node: 1,
+            rkey: 999, // never registered
+            offset: 0,
+            data: Arc::new(vec![1u8; 4]),
+            len: 4,
+        }]);
+        assert!(err.is_err());
+        a.window_release_remote(1);
+
+        // The next migration must be able to claim the window again; this
+        // would deadlock (test timeout) before the release-on-error fix.
+        a.window_acquire(1);
+        a.post_chain(&[Wr::Write {
+            dst_node: 1,
+            rkey: mr.rkey,
+            offset: 0,
+            data: Arc::new(vec![7u8; 4]),
+            len: 4,
+        }])
+        .unwrap();
+        a.window_release_remote(1);
+        assert_eq!(mr.buf.read().unwrap()[0], 7);
     }
 
     #[test]

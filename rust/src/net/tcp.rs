@@ -3,6 +3,7 @@
 //! larger than this split into multiple write syscalls).
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
 use std::os::fd::AsRawFd;
 use std::time::Duration;
 
@@ -12,25 +13,58 @@ use anyhow::{Context, Result};
 /// internal send buffer size configured on the TCP socket" is 9 MiB).
 pub const SOCKET_BUF_BYTES: usize = 9 * 1024 * 1024;
 
+/// Raw `setsockopt` FFI — the offline build environment has no `libc`
+/// crate, and std exposes no socket-buffer knob.
+#[cfg(unix)]
+mod sys {
+    #[cfg(target_os = "linux")]
+    pub const SOL_SOCKET: i32 = 1;
+    #[cfg(target_os = "linux")]
+    pub const SO_SNDBUF: i32 = 7;
+    #[cfg(target_os = "linux")]
+    pub const SO_RCVBUF: i32 = 8;
+    // BSD-family values (macOS and friends).
+    #[cfg(not(target_os = "linux"))]
+    pub const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(not(target_os = "linux"))]
+    pub const SO_SNDBUF: i32 = 0x1001;
+    #[cfg(not(target_os = "linux"))]
+    pub const SO_RCVBUF: i32 = 0x1002;
+
+    extern "C" {
+        pub fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const std::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
+}
+
 /// Apply PoCL-R socket tuning to a connected stream.
 pub fn tune(stream: &TcpStream) -> Result<()> {
     stream.set_nodelay(true).context("TCP_NODELAY")?;
-    set_buf(stream, libc::SO_SNDBUF, SOCKET_BUF_BYTES)?;
-    set_buf(stream, libc::SO_RCVBUF, SOCKET_BUF_BYTES)?;
+    #[cfg(unix)]
+    {
+        set_buf(stream, sys::SO_SNDBUF, SOCKET_BUF_BYTES)?;
+        set_buf(stream, sys::SO_RCVBUF, SOCKET_BUF_BYTES)?;
+    }
     Ok(())
 }
 
-fn set_buf(stream: &TcpStream, opt: libc::c_int, bytes: usize) -> Result<()> {
+#[cfg(unix)]
+fn set_buf(stream: &TcpStream, opt: i32, bytes: usize) -> Result<()> {
     let fd = stream.as_raw_fd();
-    let val: libc::c_int = bytes as libc::c_int;
+    let val: i32 = bytes as i32;
     // Safety: valid fd, correct optlen for a c_int option.
     let rc = unsafe {
-        libc::setsockopt(
+        sys::setsockopt(
             fd,
-            libc::SOL_SOCKET,
+            sys::SOL_SOCKET,
             opt,
-            &val as *const _ as *const libc::c_void,
-            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            &val as *const i32 as *const std::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
         )
     };
     if rc != 0 {

@@ -2,19 +2,30 @@
 //! layout (paper: "The wire representation of commands is kept identical to
 //! the in-memory one to avoid a translation step").
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WireError {
-    #[error("buffer underrun: wanted {wanted} bytes, {left} left")]
     Underrun { wanted: usize, left: usize },
-    #[error("invalid tag {tag} for {what}")]
     BadTag { tag: u32, what: &'static str },
-    #[error("string is not utf-8")]
     BadUtf8,
-    #[error("length field {len} exceeds sanity limit {limit}")]
     TooLong { len: u64, limit: u64 },
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Underrun { wanted, left } => {
+                write!(f, "buffer underrun: wanted {wanted} bytes, {left} left")
+            }
+            WireError::BadTag { tag, what } => write!(f, "invalid tag {tag} for {what}"),
+            WireError::BadUtf8 => write!(f, "string is not utf-8"),
+            WireError::TooLong { len, limit } => {
+                write!(f, "length field {len} exceeds sanity limit {limit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Append-only writer over a reusable Vec<u8>.
 #[derive(Default)]

@@ -28,14 +28,6 @@ impl DType {
     pub fn size(self) -> usize {
         4
     }
-
-    pub fn to_xla(self) -> xla::ElementType {
-        match self {
-            DType::F32 => xla::ElementType::F32,
-            DType::S32 => xla::ElementType::S32,
-            DType::U32 => xla::ElementType::U32,
-        }
-    }
 }
 
 /// Shape + dtype of one artifact input/output.

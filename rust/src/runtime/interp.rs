@@ -1,0 +1,371 @@
+//! Reference interpreter for the AOT artifact families.
+//!
+//! The offline build environment has no XLA/PJRT shared library, so the
+//! daemons execute artifacts through this pure-Rust interpreter instead of
+//! `xla::PjRtClient`. Each artifact family implements exactly the semantics
+//! of its JAX reference oracle (`python/compile/kernels/ref.py`) — same
+//! loop nesting, same f32 accumulation order — so distributed decomposition
+//! tests comparing against the Rust oracles (and against each other across
+//! 1/2/4-way splits) see bitwise-stable results.
+//!
+//! Artifacts are dispatched by name family; shapes come from the manifest,
+//! which keeps this file agnostic of the concrete size variants.
+
+use anyhow::{bail, Result};
+
+use super::artifact::{ArtifactInfo, DType};
+
+/// Read an f32 tensor from raw little-endian bytes (length pre-validated).
+fn f32s(bytes: &[u8], n: usize) -> Vec<f32> {
+    bytes[..4 * n]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn i32s(bytes: &[u8], n: usize) -> Vec<i32> {
+    bytes[..4 * n]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn f32_bytes(v: Vec<f32>) -> Vec<u8> {
+    super::pjrt::vec_into_bytes(v)
+}
+
+fn i32_bytes(v: Vec<i32>) -> Vec<u8> {
+    super::pjrt::vec_into_bytes(v)
+}
+
+/// Execute one artifact over raw input bytes. Inputs are already validated
+/// against the manifest arity and minimum byte sizes by the caller.
+pub fn execute(info: &ArtifactInfo, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    let name = info.name.as_str();
+    if name.starts_with("noop") || name.starts_with("passthrough") {
+        let n = info.inputs[0].nbytes();
+        Ok(vec![inputs[0][..n].to_vec()])
+    } else if name.starts_with("increment") {
+        match info.inputs[0].dtype {
+            DType::S32 | DType::U32 => {
+                let v = i32s(inputs[0], info.inputs[0].elems());
+                Ok(vec![i32_bytes(v.into_iter().map(|x| x.wrapping_add(1)).collect())])
+            }
+            DType::F32 => {
+                let v = f32s(inputs[0], info.inputs[0].elems());
+                Ok(vec![f32_bytes(v.into_iter().map(|x| x + 1.0).collect())])
+            }
+        }
+    } else if name.starts_with("vecadd") {
+        let n = info.inputs[0].elems();
+        let x = f32s(inputs[0], n);
+        let y = f32s(inputs[1], n);
+        Ok(vec![f32_bytes(
+            x.iter().zip(&y).map(|(a, b)| a + b).collect(),
+        )])
+    } else if name.starts_with("saxpy") {
+        let a = f32s(inputs[0], 1)[0];
+        let n = info.inputs[1].elems();
+        let x = f32s(inputs[1], n);
+        let y = f32s(inputs[2], n);
+        Ok(vec![f32_bytes(
+            x.iter().zip(&y).map(|(xi, yi)| a * xi + yi).collect(),
+        )])
+    } else if name.starts_with("matmul") {
+        matmul(info, inputs)
+    } else if name.starts_with("lbm_step") {
+        lbm_step(info, inputs)
+    } else if name.starts_with("pc_reconstruct") {
+        let (h, w) = (info.inputs[0].shape[0], info.inputs[0].shape[1]);
+        let geom = f32s(inputs[0], h * w);
+        let occ = f32s(inputs[1], h * w);
+        Ok(vec![f32_bytes(reconstruct(&geom, &occ, h, w))])
+    } else if name.starts_with("pc_depth_order") {
+        let n = info.inputs[0].shape[0];
+        let pts = f32s(inputs[0], n * 3);
+        let cam = f32s(inputs[1], 3);
+        Ok(vec![i32_bytes(depth_order(&pts, &cam, n))])
+    } else if name.starts_with("ar_frame") {
+        let (h, w) = (info.inputs[0].shape[0], info.inputs[0].shape[1]);
+        let geom = f32s(inputs[0], h * w);
+        let occ = f32s(inputs[1], h * w);
+        let cam = f32s(inputs[2], 3);
+        let pts = reconstruct(&geom, &occ, h, w);
+        let order = depth_order(&pts, &cam, h * w);
+        Ok(vec![f32_bytes(pts), i32_bytes(order)])
+    } else {
+        bail!("no interpreter for artifact family of '{name}'");
+    }
+}
+
+/// `A[m,k] @ B[k,n]` with ascending-k f32 accumulation (the same order as
+/// `MatmulInputs::reference_at`, so row-block decompositions are bitwise
+/// identical to the full multiply).
+fn matmul(info: &ArtifactInfo, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    let (m, k) = (info.inputs[0].shape[0], info.inputs[0].shape[1]);
+    let (k2, n) = (info.inputs[1].shape[0], info.inputs[1].shape[1]);
+    if k != k2 {
+        bail!("matmul shape mismatch: [{m},{k}] x [{k2},{n}]");
+    }
+    let a = f32s(inputs[0], m * k);
+    let b = f32s(inputs[1], k * n);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                c_row[j] += aik * b_row[j];
+            }
+        }
+    }
+    Ok(vec![f32_bytes(c)])
+}
+
+/// D2Q9 velocity set — must match `python/compile/kernels/ref.py` and
+/// `crate::apps::lbm`.
+const EX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];
+const EY: [i32; 9] = [0, 0, 1, 0, -1, 1, 1, -1, -1];
+const WEIGHT: [f32; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+/// One D2Q9 stream+collide step over a row-decomposed slab; omega = 1.
+/// Inputs: f[9,h,w], halo_top[9,w], halo_bot[9,w].
+/// Outputs: (f'[9,h,w], f'[:,0,:], f'[:,h-1,:]).
+fn lbm_step(info: &ArtifactInfo, inputs: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    let (h, w) = (info.inputs[0].shape[1], info.inputs[0].shape[2]);
+    let hw = h * w;
+    let f = f32s(inputs[0], 9 * hw);
+    let halo_top = f32s(inputs[1], 9 * w);
+    let halo_bot = f32s(inputs[2], 9 * w);
+
+    // Streaming (pull): interior row y reads extended row y + 1 - ey,
+    // where extended row 0 is halo_top and extended row h+1 is halo_bot;
+    // x is periodic within the slab width.
+    let mut fs = vec![0f32; 9 * hw];
+    for q in 0..9 {
+        for y in 0..h {
+            let src = (y as i32 + 1 - EY[q]) as usize; // in 0..=h+1
+            let src_row: &[f32] = if src == 0 {
+                &halo_top[q * w..(q + 1) * w]
+            } else if src == h + 1 {
+                &halo_bot[q * w..(q + 1) * w]
+            } else {
+                &f[q * hw + (src - 1) * w..q * hw + src * w]
+            };
+            let dst = &mut fs[q * hw + y * w..q * hw + (y + 1) * w];
+            for (x, d) in dst.iter_mut().enumerate() {
+                let sx = (x as i32 - EX[q]).rem_euclid(w as i32) as usize;
+                *d = src_row[sx];
+            }
+        }
+    }
+
+    // Collision (BGK, omega = 1), same expression order as the oracle.
+    let mut out = vec![0f32; 9 * hw];
+    let omega = 1.0f32;
+    for i in 0..hw {
+        let mut rho = 0f32;
+        let mut jx = 0f32;
+        let mut jy = 0f32;
+        for q in 0..9 {
+            let v = fs[q * hw + i];
+            rho += v;
+            jx += EX[q] as f32 * v;
+            jy += EY[q] as f32 * v;
+        }
+        let ux = jx / rho;
+        let uy = jy / rho;
+        let usq = ux * ux + uy * uy;
+        for q in 0..9 {
+            let eu = EX[q] as f32 * ux + EY[q] as f32 * uy;
+            let feq = WEIGHT[q] * rho * (1.0 + 3.0 * eu + 4.5 * eu * eu - 1.5 * usq);
+            let v = fs[q * hw + i];
+            out[q * hw + i] = v + omega * (feq - v);
+        }
+    }
+
+    // Boundary rows of the post-collision slab.
+    let mut top = vec![0f32; 9 * w];
+    let mut bot = vec![0f32; 9 * w];
+    for q in 0..9 {
+        top[q * w..(q + 1) * w].copy_from_slice(&out[q * hw..q * hw + w]);
+        bot[q * w..(q + 1) * w].copy_from_slice(&out[q * hw + (h - 1) * w..q * hw + h * w]);
+    }
+    Ok(vec![f32_bytes(out), f32_bytes(top), f32_bytes(bot)])
+}
+
+/// Back-project a geometry/occupancy map into `f32[h*w, 3]` points
+/// (fx = 0.5; unoccupied texels pushed to z = 1e9).
+fn reconstruct(geom: &[f32], occ: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let fx = 0.5f32;
+    let cx = (w as f32 - 1.0) / 2.0;
+    let cy = (h as f32 - 1.0) / 2.0;
+    let mut pts = vec![0f32; h * w * 3];
+    for r in 0..h {
+        for c in 0..w {
+            let i = r * w + c;
+            let g = geom[i];
+            pts[i * 3] = (c as f32 - cx) * g * fx;
+            pts[i * 3 + 1] = (r as f32 - cy) * g * fx;
+            pts[i * 3 + 2] = if occ[i] > 0.5 { g } else { 1e9 };
+        }
+    }
+    pts
+}
+
+/// Indices ordering points back-to-front: descending squared distance to
+/// `cam`, ties broken by ascending index (fully deterministic).
+fn depth_order(pts: &[f32], cam: &[f32], n: usize) -> Vec<i32> {
+    let mut d = vec![0f32; n];
+    for i in 0..n {
+        let dx = pts[i * 3] - cam[0];
+        let dy = pts[i * 3 + 1] - cam[1];
+        let dz = pts[i * 3 + 2] - cam[2];
+        d[i] = dx * dx + dy * dy + dz * dz;
+    }
+    let mut order: Vec<i32> = (0..n as i32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        d[b as usize]
+            .partial_cmp(&d[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::TensorSpec;
+    use std::path::PathBuf;
+
+    fn info(name: &str, ins: Vec<(Vec<usize>, DType)>, outs: Vec<(Vec<usize>, DType)>) -> ArtifactInfo {
+        let spec = |(shape, dtype): (Vec<usize>, DType)| TensorSpec { shape, dtype };
+        ArtifactInfo {
+            name: name.into(),
+            file: PathBuf::new(),
+            description: String::new(),
+            flops: 0,
+            inputs: ins.into_iter().map(spec).collect(),
+            outputs: outs.into_iter().map(spec).collect(),
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    #[test]
+    fn increment_adds_one() {
+        let i = info(
+            "increment_s32_1",
+            vec![(vec![1], DType::S32)],
+            vec![(vec![1], DType::S32)],
+        );
+        let input = 41i32.to_le_bytes();
+        let out = execute(&i, &[input.as_slice()]).unwrap();
+        assert_eq!(i32::from_le_bytes(out[0][..4].try_into().unwrap()), 42);
+    }
+
+    #[test]
+    fn matmul_blocks_match_full() {
+        let n = 8;
+        let a: Vec<f32> = (0..n * n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let full = info(
+            "matmul_f32_8",
+            vec![(vec![n, n], DType::F32), (vec![n, n], DType::F32)],
+            vec![(vec![n, n], DType::F32)],
+        );
+        let ab = f32_bytes(a.clone());
+        let bb = f32_bytes(b.clone());
+        let c_full = execute(&full, &[ab.as_slice(), bb.as_slice()])
+            .unwrap()
+            .remove(0);
+        // 2-way row-block decomposition must be bitwise identical.
+        let block = info(
+            "matmul_block_4x8",
+            vec![(vec![n / 2, n], DType::F32), (vec![n, n], DType::F32)],
+            vec![(vec![n / 2, n], DType::F32)],
+        );
+        let top = f32_bytes(a[..n * n / 2].to_vec());
+        let bot = f32_bytes(a[n * n / 2..].to_vec());
+        let c_top = execute(&block, &[top.as_slice(), bb.as_slice()])
+            .unwrap()
+            .remove(0);
+        let c_bot = execute(&block, &[bot.as_slice(), bb.as_slice()])
+            .unwrap()
+            .remove(0);
+        assert_eq!(&c_full[..c_top.len()], &c_top[..]);
+        assert_eq!(&c_full[c_top.len()..], &c_bot[..]);
+        // And matches a scalar reference dot product.
+        let c = f32s(&c_full, n * n);
+        let want: f32 = (0..n).map(|k| a[2 * n + k] * b[k * n + 3]).sum();
+        assert_eq!(c[2 * n + 3], want);
+    }
+
+    #[test]
+    fn lbm_uniform_equilibrium_is_fixed_point() {
+        let (h, w) = (4, 8);
+        let i = info(
+            "lbm_step_9x4x8",
+            vec![
+                (vec![9, h, w], DType::F32),
+                (vec![9, w], DType::F32),
+                (vec![9, w], DType::F32),
+            ],
+            vec![
+                (vec![9, h, w], DType::F32),
+                (vec![9, w], DType::F32),
+                (vec![9, w], DType::F32),
+            ],
+        );
+        let mut f = vec![0f32; 9 * h * w];
+        let mut halo = vec![0f32; 9 * w];
+        for q in 0..9 {
+            for x in &mut f[q * h * w..(q + 1) * h * w] {
+                *x = WEIGHT[q];
+            }
+            for x in &mut halo[q * w..(q + 1) * w] {
+                *x = WEIGHT[q];
+            }
+        }
+        let fb = f32_bytes(f.clone());
+        let hb = f32_bytes(halo);
+        let out = execute(&i, &[fb.as_slice(), hb.as_slice(), hb.as_slice()]).unwrap();
+        let got = f32s(&out[0], 9 * h * w);
+        for (a, b) in got.iter().zip(&f) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(out[1].len(), 4 * 9 * w);
+        assert_eq!(out[2].len(), 4 * 9 * w);
+    }
+
+    #[test]
+    fn depth_order_sorts_back_to_front_with_index_ties() {
+        // Three points at distances 1, 4, 1 from the origin camera.
+        let pts = vec![1.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let cam = vec![0.0, 0.0, 0.0];
+        let order = depth_order(&pts, &cam, 3);
+        assert_eq!(order, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn reconstruct_pushes_unoccupied_far() {
+        let geom = vec![2.0f32; 4];
+        let occ = vec![1.0, 0.0, 1.0, 0.0];
+        let pts = reconstruct(&geom, &occ, 2, 2);
+        assert_eq!(pts.len(), 12);
+        assert_eq!(pts[2], 2.0); // occupied keeps depth
+        assert_eq!(pts[5], 1e9); // unoccupied pushed away
+    }
+}

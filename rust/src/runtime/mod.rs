@@ -1,19 +1,21 @@
-//! Execution runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` and runs them on PJRT CPU devices.
+//! Execution runtime: loads the AOT artifact manifest produced by
+//! `python/compile/aot.py` and executes launches on per-device engines.
 //!
 //! This is the bridge between Layer 3 (the rust coordinator) and Layers 2/1
-//! (the JAX/Pallas compute). HLO **text** is the interchange format — the
-//! xla_extension 0.5.1 bundled with the `xla` crate rejects jax≥0.5's
-//! 64-bit-instruction-id protos, while the text parser reassigns ids.
+//! (the JAX/Pallas compute). The manifest (shapes, dtypes, flops) is the
+//! contract; execution runs on the pure-Rust reference interpreter
+//! ([`interp`]) because the offline build environment has no XLA/PJRT
+//! shared library — the engine surface ([`pjrt`]) is kept PJRT-shaped so a
+//! real backend can slot back in.
 //!
-//! PJRT wrapper types are `!Send` (raw C pointers), so each simulated
-//! device runs a dedicated executor thread that owns its own
-//! `PjRtClient` + compiled executables ([`executor`]). Commands reach it
-//! through channels; buffer bytes cross as `Arc<Vec<u8>>`.
+//! Each simulated device runs a dedicated executor thread that owns its own
+//! engine ([`executor`]). Commands reach it through channels; buffer bytes
+//! cross as `Arc<Vec<u8>>`.
 
 pub mod artifact;
 pub mod builtin;
 pub mod executor;
+pub mod interp;
 pub mod pjrt;
 
 pub use artifact::{ArtifactInfo, DType, Manifest, TensorSpec};

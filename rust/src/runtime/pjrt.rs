@@ -1,13 +1,19 @@
-//! PJRT engine: compile HLO-text artifacts once, execute them on raw bytes.
+//! Artifact execution engine: validates launches against the manifest and
+//! runs them on the in-process reference interpreter ([`super::interp`]).
 //!
-//! `!Send` by construction (wraps `xla::PjRtClient`); lives inside a device
-//! executor thread ([`super::executor`]).
+//! Historically this wrapped `xla::PjRtClient` (compiling the HLO-text
+//! artifacts through the PJRT C API). The offline build environment has no
+//! XLA shared library, so execution is delegated to the pure-Rust
+//! interpreter; the engine keeps the same surface — per-device instance,
+//! explicit `warm`, byte-level I/O — so a PJRT backend can slot back in
+//! behind it without touching the daemon.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use super::artifact::{ArtifactInfo, Manifest, TensorSpec};
+use super::artifact::{ArtifactInfo, Manifest};
+use super::interp;
 
 /// Convert a typed vector into its raw little-endian byte vector without
 /// copying (u8 alignment is always satisfied).
@@ -21,23 +27,20 @@ pub fn vec_into_bytes<T: Copy>(mut v: Vec<T>) -> Vec<u8> {
     unsafe { Vec::from_raw_parts(ptr, len, cap) }
 }
 
-/// The per-thread PJRT execution engine.
+/// The per-device execution engine.
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    warmed: HashSet<String>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client. Artifacts compile lazily on first use
-    /// (compilation of the bigger Pallas-derived modules takes ~100 ms
-    /// each; daemons typically warm the ones they serve at startup).
+    /// Create an engine over a loaded manifest. Artifacts "compile" lazily
+    /// on first use (warming validates the manifest entry up front, the
+    /// analogue of PJRT compilation).
     pub fn new(manifest: Manifest) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine {
-            client,
             manifest,
-            executables: HashMap::new(),
+            warmed: HashSet::new(),
         })
     }
 
@@ -45,45 +48,14 @@ impl Engine {
         &self.manifest
     }
 
-    /// Compile (and cache) the named artifact.
+    /// Validate (and cache) the named artifact.
     pub fn warm(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
+        if self.warmed.contains(name) {
             return Ok(());
         }
-        let info = self.manifest.get(name)?.clone();
-        let proto = xla::HloModuleProto::from_text_file(&info.file)
-            .with_context(|| format!("parsing HLO text {:?}", info.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.executables.insert(name.to_string(), exe);
+        self.manifest.get(name)?;
+        self.warmed.insert(name.to_string());
         Ok(())
-    }
-
-    fn literal_from_bytes(spec: &TensorSpec, bytes: &[u8]) -> Result<xla::Literal> {
-        if bytes.len() < spec.nbytes() {
-            bail!(
-                "input too small: artifact wants {} bytes, buffer holds {}",
-                spec.nbytes(),
-                bytes.len()
-            );
-        }
-        xla::Literal::create_from_shape_and_untyped_data(
-            spec.dtype.to_xla(),
-            &spec.shape,
-            &bytes[..spec.nbytes()],
-        )
-        .context("creating literal")
-    }
-
-    fn literal_to_bytes(spec: &TensorSpec, lit: &xla::Literal) -> Result<Vec<u8>> {
-        Ok(match spec.dtype {
-            super::artifact::DType::F32 => vec_into_bytes(lit.to_vec::<f32>()?),
-            super::artifact::DType::S32 => vec_into_bytes(lit.to_vec::<i32>()?),
-            super::artifact::DType::U32 => vec_into_bytes(lit.to_vec::<u32>()?),
-        })
     }
 
     /// Execute `name` on raw input bytes; returns one byte vector per
@@ -98,33 +70,24 @@ impl Engine {
                 inputs.len()
             );
         }
-        let lits = info
-            .inputs
-            .iter()
-            .zip(inputs)
-            .map(|(spec, bytes)| Self::literal_from_bytes(spec, bytes))
-            .collect::<Result<Vec<_>>>()?;
-        let exe = self.executables.get(name).expect("warmed");
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {name}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = tuple.to_tuple().context("destructuring tuple")?;
-        if parts.len() != info.outputs.len() {
+        for (spec, bytes) in info.inputs.iter().zip(inputs) {
+            if bytes.len() < spec.nbytes() {
+                bail!(
+                    "input too small: artifact wants {} bytes, buffer holds {}",
+                    spec.nbytes(),
+                    bytes.len()
+                );
+            }
+        }
+        let outputs = interp::execute(&info, inputs)?;
+        if outputs.len() != info.outputs.len() {
             bail!(
                 "artifact {name} returned {} outputs, manifest says {}",
-                parts.len(),
+                outputs.len(),
                 info.outputs.len()
             );
         }
-        info.outputs
-            .iter()
-            .zip(parts.iter())
-            .map(|(spec, lit)| Self::literal_to_bytes(spec, lit))
-            .collect()
+        Ok(outputs)
     }
 }
 

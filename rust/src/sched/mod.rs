@@ -10,4 +10,4 @@
 
 pub mod table;
 
-pub use table::{EventTable, WaitOutcome};
+pub use table::{EventTable, WaitOutcome, Wakeup};

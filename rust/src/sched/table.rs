@@ -1,6 +1,14 @@
-//! The event table: shared status registry with blocking waits and
-//! completion callbacks. Used by the daemon dispatcher (native + user
-//! events) and by the client driver (application-visible events).
+//! The event table: shared status registry with blocking waits and an
+//! indexed dependency-resolution engine. Used by the daemon dispatcher
+//! (native + user events) and by the client driver (application-visible
+//! events).
+//!
+//! The dispatcher-facing half is the reverse waiter index: parked commands
+//! register once per unresolved dependency ([`EventTable::park`]), and a
+//! completion returns exactly the commands whose last dependency just
+//! resolved ([`Wakeup`]) — O(affected) per completion instead of a rescan
+//! of everything parked. Failed events poison their waiters immediately so
+//! the dispatcher can fail whole dependent subtrees transitively.
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
@@ -22,15 +30,35 @@ pub enum WaitOutcome {
     TimedOut,
 }
 
+/// A parked command released by a completion: either all its dependencies
+/// completed (`poisoned == false`) or one of them failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Wakeup {
+    /// The token the command was parked under (see [`EventTable::park`]).
+    pub token: u64,
+    pub poisoned: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    events: HashMap<u64, Entry>,
+    /// Reverse waiter index: event id -> tokens parked on it (one entry
+    /// per registration, so duplicate wait-list ids stay consistent with
+    /// the per-token counters).
+    waiters: HashMap<u64, Vec<u64>>,
+    /// Parked token -> number of unresolved dependency registrations.
+    parked: HashMap<u64, usize>,
+}
+
 /// Thread-safe event status registry.
 ///
 /// Events are identified by the client-assigned u64 id. Entries are created
-/// lazily on first reference (`ensure`) — that lazy creation *is* the
-/// paper's "events of commands executed elsewhere are mapped to user
+/// lazily on first reference (`ensure`/`park`) — that lazy creation *is*
+/// the paper's "events of commands executed elsewhere are mapped to user
 /// events".
 #[derive(Default)]
 pub struct EventTable {
-    inner: Mutex<HashMap<u64, Entry>>,
+    inner: Mutex<Inner>,
     cv: Condvar,
 }
 
@@ -45,25 +73,86 @@ impl EventTable {
             return;
         }
         let mut m = self.inner.lock().unwrap();
-        m.entry(id).or_insert(Entry {
+        Self::ensure_entry(&mut m, id);
+    }
+
+    fn ensure_entry(m: &mut Inner, id: u64) {
+        m.events.entry(id).or_insert(Entry {
             status: EventStatus::Queued,
             ts: Timestamps::default(),
         });
     }
 
+    /// Atomically evaluate a wait list and, if it is unresolved, register
+    /// `token` under every blocking dependency. Returns:
+    ///
+    /// * `Ready` — every dependency is complete; nothing was registered.
+    /// * `Poisoned` — some dependency already failed; nothing registered.
+    /// * `Blocked` — the token is now parked; a later completion of its
+    ///   last open dependency emits a [`Wakeup`] for it, and a failure of
+    ///   any dependency emits a poisoned [`Wakeup`] immediately.
+    ///
+    /// Unseen dependency ids materialize as Queued user events, exactly
+    /// like [`EventTable::ensure`]. The evaluation and the registration
+    /// happen under one lock, so a concurrent completion can never slip
+    /// between them (no lost wakeups).
+    pub fn park(&self, token: u64, wait: &[u64]) -> DepsState {
+        let mut m = self.inner.lock().unwrap();
+        let mut blocking: Vec<u64> = Vec::new();
+        for id in wait {
+            if *id == 0 {
+                continue;
+            }
+            match m.events.get(id).map(|e| e.status) {
+                Some(EventStatus::Complete) => {}
+                Some(EventStatus::Failed) => return DepsState::Poisoned,
+                Some(_) => blocking.push(*id),
+                None => {
+                    Self::ensure_entry(&mut m, *id);
+                    blocking.push(*id);
+                }
+            }
+        }
+        if blocking.is_empty() {
+            return DepsState::Ready;
+        }
+        let n = blocking.len();
+        for id in blocking {
+            m.waiters.entry(id).or_default().push(token);
+        }
+        m.parked.insert(token, n);
+        DepsState::Blocked
+    }
+
+    /// Drop a parked token without waking it (e.g. the daemon is shedding
+    /// state). Registrations under its events are cleaned up lazily.
+    pub fn unpark(&self, token: u64) {
+        self.inner.lock().unwrap().parked.remove(&token);
+    }
+
+    /// Number of tokens currently parked (tests / metrics).
+    pub fn parked_len(&self) -> usize {
+        self.inner.lock().unwrap().parked.len()
+    }
+
     /// Update status; notifies all waiters. Timestamps merge (non-zero
     /// fields win) so Submitted/Running/Complete can each stamp their part.
-    pub fn set_status(&self, id: u64, status: EventStatus, ts: Timestamps) {
+    ///
+    /// Returns the parked commands this transition released: on a
+    /// completion, every token whose remaining-dependency counter just hit
+    /// zero; on a failure, every token parked on the event (poisoned).
+    /// Non-terminal transitions release nothing.
+    pub fn set_status(&self, id: u64, status: EventStatus, ts: Timestamps) -> Vec<Wakeup> {
         if id == 0 {
-            return;
+            return Vec::new();
         }
         let mut m = self.inner.lock().unwrap();
-        let e = m.entry(id).or_insert(Entry {
-            status: EventStatus::Queued,
-            ts: Timestamps::default(),
-        });
+        Self::ensure_entry(&mut m, id);
+        let e = m.events.get_mut(&id).expect("just ensured");
         // Terminal states are sticky: a late Running must not regress a
-        // Complete (can happen with reordered peer notifications).
+        // Complete (can happen with reordered peer notifications), and a
+        // second terminal transition must not re-release waiters.
+        let became_terminal = !e.status.is_terminal() && status.is_terminal();
         if !e.status.is_terminal() {
             e.status = status;
         }
@@ -79,28 +168,59 @@ impl EventTable {
         if ts.end_ns != 0 {
             e.ts.end_ns = ts.end_ns;
         }
+        let mut wakeups = Vec::new();
+        if became_terminal {
+            let failed = status == EventStatus::Failed;
+            if let Some(tokens) = m.waiters.remove(&id) {
+                for token in tokens {
+                    // Tokens absent from `parked` were already released
+                    // (poisoned earlier, or dropped via `unpark`).
+                    let Some(remaining) = m.parked.get_mut(&token) else {
+                        continue;
+                    };
+                    if failed {
+                        m.parked.remove(&token);
+                        wakeups.push(Wakeup {
+                            token,
+                            poisoned: true,
+                        });
+                    } else {
+                        *remaining -= 1;
+                        if *remaining == 0 {
+                            m.parked.remove(&token);
+                            wakeups.push(Wakeup {
+                                token,
+                                poisoned: false,
+                            });
+                        }
+                    }
+                }
+            }
+        }
         drop(m);
         self.cv.notify_all();
+        wakeups
     }
 
-    pub fn complete(&self, id: u64, ts: Timestamps) {
-        self.set_status(id, EventStatus::Complete, ts);
+    pub fn complete(&self, id: u64, ts: Timestamps) -> Vec<Wakeup> {
+        self.set_status(id, EventStatus::Complete, ts)
     }
 
-    pub fn fail(&self, id: u64) {
-        self.set_status(id, EventStatus::Failed, Timestamps::default());
+    pub fn fail(&self, id: u64) -> Vec<Wakeup> {
+        self.set_status(id, EventStatus::Failed, Timestamps::default())
     }
 
     pub fn status(&self, id: u64) -> Option<EventStatus> {
-        self.inner.lock().unwrap().get(&id).map(|e| e.status)
+        self.inner.lock().unwrap().events.get(&id).map(|e| e.status)
     }
 
     pub fn timestamps(&self, id: u64) -> Option<Timestamps> {
-        self.inner.lock().unwrap().get(&id).map(|e| e.ts)
+        self.inner.lock().unwrap().events.get(&id).map(|e| e.ts)
     }
 
     /// Is every event in the wait list terminal-complete? Errors propagate:
-    /// a failed dependency poisons the dependent.
+    /// a failed dependency poisons the dependent. (Read-only sibling of
+    /// [`EventTable::park`], kept for callers that never park.)
     pub fn deps_state(&self, wait: &[u64]) -> DepsState {
         let m = self.inner.lock().unwrap();
         let mut all_done = true;
@@ -108,7 +228,7 @@ impl EventTable {
             if *id == 0 {
                 continue;
             }
-            match m.get(id).map(|e| e.status) {
+            match m.events.get(id).map(|e| e.status) {
                 Some(EventStatus::Complete) => {}
                 Some(EventStatus::Failed) => return DepsState::Poisoned,
                 _ => all_done = false,
@@ -129,7 +249,7 @@ impl EventTable {
         let deadline = std::time::Instant::now() + timeout;
         let mut m = self.inner.lock().unwrap();
         loop {
-            match m.get(&id).map(|e| e.status) {
+            match m.events.get(&id).map(|e| e.status) {
                 Some(EventStatus::Complete) => return WaitOutcome::Complete,
                 Some(EventStatus::Failed) => return WaitOutcome::Failed,
                 _ => {}
@@ -149,7 +269,7 @@ impl EventTable {
 
     /// Number of tracked events (tests / metrics).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap().events.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -158,21 +278,24 @@ impl EventTable {
 
     /// Drop terminal entries older than the table cares about. Called
     /// periodically by the daemon to bound memory (the paper's daemons are
-    /// long-running).
+    /// long-running). Events with live waiter registrations are terminal-
+    /// only by construction (waiters drain at the terminal transition), so
+    /// this never strands a parked command.
     pub fn gc_terminal(&self, keep_latest: usize) {
         let mut m = self.inner.lock().unwrap();
-        if m.len() <= keep_latest {
+        if m.events.len() <= keep_latest {
             return;
         }
         let mut terminal: Vec<u64> = m
+            .events
             .iter()
             .filter(|(_, e)| e.status.is_terminal())
             .map(|(id, _)| *id)
             .collect();
         terminal.sort_unstable();
-        let excess = m.len().saturating_sub(keep_latest);
+        let excess = m.events.len().saturating_sub(keep_latest);
         for id in terminal.into_iter().take(excess) {
-            m.remove(&id);
+            m.events.remove(&id);
         }
     }
 }
@@ -206,6 +329,7 @@ mod tests {
         let t = EventTable::new();
         assert_eq!(t.wait(0), WaitOutcome::Complete);
         assert_eq!(t.deps_state(&[0, 0]), DepsState::Ready);
+        assert_eq!(t.park(7, &[0, 0]), DepsState::Ready);
     }
 
     #[test]
@@ -276,5 +400,122 @@ mod tests {
         t.gc_terminal(10);
         assert!(t.len() <= 11);
         assert_eq!(t.status(101), Some(EventStatus::Queued));
+    }
+
+    // ---- reverse waiter index -------------------------------------------
+
+    #[test]
+    fn park_wakes_on_last_dependency_only() {
+        let t = EventTable::new();
+        t.ensure(1);
+        t.ensure(2);
+        assert_eq!(t.park(100, &[1, 2]), DepsState::Blocked);
+        assert_eq!(t.parked_len(), 1);
+        // First completion: still one dependency open, nothing released.
+        assert!(t.complete(1, Timestamps::default()).is_empty());
+        assert_eq!(t.parked_len(), 1);
+        // Last completion releases exactly the parked token.
+        let w = t.complete(2, Timestamps::default());
+        assert_eq!(
+            w,
+            vec![Wakeup {
+                token: 100,
+                poisoned: false
+            }]
+        );
+        assert_eq!(t.parked_len(), 0);
+    }
+
+    #[test]
+    fn unrelated_completion_does_not_touch_parked_commands() {
+        // The O(affected) contract: a parked command whose dependencies are
+        // untouched is never re-examined — completions of unrelated events
+        // release nothing and leave its counter alone.
+        let t = EventTable::new();
+        assert_eq!(t.park(100, &[42]), DepsState::Blocked);
+        for unrelated in 1000..1100 {
+            assert!(t.complete(unrelated, Timestamps::default()).is_empty());
+        }
+        assert_eq!(t.parked_len(), 1);
+        let w = t.complete(42, Timestamps::default());
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].token, 100);
+    }
+
+    #[test]
+    fn failure_poisons_waiters_immediately() {
+        let t = EventTable::new();
+        assert_eq!(t.park(7, &[1, 2, 3]), DepsState::Blocked);
+        let w = t.fail(2);
+        assert_eq!(
+            w,
+            vec![Wakeup {
+                token: 7,
+                poisoned: true
+            }]
+        );
+        // The other registrations are now stale; later completions of the
+        // remaining dependencies release nothing.
+        assert!(t.complete(1, Timestamps::default()).is_empty());
+        assert!(t.complete(3, Timestamps::default()).is_empty());
+        assert_eq!(t.parked_len(), 0);
+    }
+
+    #[test]
+    fn park_on_already_failed_is_poisoned_without_registration() {
+        let t = EventTable::new();
+        t.fail(5);
+        assert_eq!(t.park(1, &[5]), DepsState::Poisoned);
+        assert_eq!(t.parked_len(), 0);
+    }
+
+    #[test]
+    fn park_materializes_unseen_dependencies() {
+        let t = EventTable::new();
+        assert_eq!(t.park(1, &[77]), DepsState::Blocked);
+        assert_eq!(t.status(77), Some(EventStatus::Queued));
+        let w = t.complete(77, Timestamps::default());
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_wait_ids_resolve_consistently() {
+        let t = EventTable::new();
+        assert_eq!(t.park(9, &[4, 4]), DepsState::Blocked);
+        let w = t.complete(4, Timestamps::default());
+        // Both registrations resolve in the same transition: one wakeup.
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].token, 9);
+        assert_eq!(t.parked_len(), 0);
+    }
+
+    #[test]
+    fn one_completion_wakes_many_waiters() {
+        let t = EventTable::new();
+        for token in 1..=10 {
+            assert_eq!(t.park(token, &[500]), DepsState::Blocked);
+        }
+        let mut w = t.complete(500, Timestamps::default());
+        w.sort_by_key(|w| w.token);
+        assert_eq!(w.len(), 10);
+        assert!(w.iter().all(|w| !w.poisoned));
+    }
+
+    #[test]
+    fn repeated_terminal_transitions_release_once() {
+        let t = EventTable::new();
+        assert_eq!(t.park(1, &[8]), DepsState::Blocked);
+        assert_eq!(t.complete(8, Timestamps::default()).len(), 1);
+        assert!(t.complete(8, Timestamps::default()).is_empty());
+        assert!(t.fail(8).is_empty());
+    }
+
+    #[test]
+    fn unpark_drops_token_silently() {
+        let t = EventTable::new();
+        assert_eq!(t.park(3, &[6]), DepsState::Blocked);
+        t.unpark(3);
+        assert!(t.complete(6, Timestamps::default()).is_empty());
+        assert_eq!(t.parked_len(), 0);
     }
 }

@@ -1,0 +1,336 @@
+//! The indexed dispatcher contract (paper §5.2 decentralized scheduling):
+//! completions wake exactly the parked commands whose last dependency just
+//! resolved — O(affected), not a rescan of everything parked — and failed
+//! events poison their dependent subtree transitively.
+//!
+//! These tests speak the raw wire protocol over a real client socket so
+//! they can park commands on never-completing user events and observe the
+//! daemon's wakeup metrics directly.
+
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::proto::{read_packet, write_packet, Body, EventStatus, Msg, ROLE_CLIENT};
+use poclr::runtime::Manifest;
+
+/// Connect + handshake as a bare client (no driver, no replay machinery).
+fn raw_client(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_packet(
+        &mut s,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        }),
+        &[],
+    )
+    .unwrap();
+    let pkt = read_packet(&mut s).unwrap();
+    assert!(
+        matches!(pkt.msg.body, Body::Welcome { .. }),
+        "expected Welcome, got {:?}",
+        pkt.msg.body
+    );
+    s
+}
+
+fn cmd(event: u64, wait: Vec<u64>, body: Body) -> Msg {
+    Msg {
+        cmd_id: 0,
+        queue: 0,
+        device: 0,
+        event,
+        wait,
+        body,
+    }
+}
+
+fn send(s: &mut TcpStream, msg: Msg) {
+    write_packet(s, &msg, &[]).unwrap();
+}
+
+/// Read the next Completion, returning (event, status).
+fn next_completion(s: &mut TcpStream) -> (u64, EventStatus) {
+    loop {
+        let pkt = read_packet(s).unwrap();
+        if let Body::Completion { event, status, .. } = pkt.msg.body {
+            return (event, EventStatus::from_i8(status));
+        }
+    }
+}
+
+fn daemon() -> Daemon {
+    // Barriers need no devices; an empty manifest keeps the fixture free of
+    // the artifacts directory.
+    Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap()
+}
+
+#[test]
+fn unrelated_completions_never_reexamine_parked_commands() {
+    let d = daemon();
+    let mut s = raw_client(&d.addr());
+
+    // Park one command on a user event nothing will complete for a while.
+    send(&mut s, cmd(100, vec![99], Body::Barrier));
+
+    // Drive plenty of unrelated traffic through the dispatcher.
+    const N: u64 = 50;
+    for i in 0..N {
+        send(&mut s, cmd(200 + i, vec![], Body::Barrier));
+    }
+    for _ in 0..N {
+        let (ev, st) = next_completion(&mut s);
+        assert_ne!(ev, 100, "parked command must not have run");
+        assert_eq!(st, EventStatus::Complete);
+    }
+
+    // The O(affected) contract: none of those completions examined the
+    // parked command (the rescan dispatcher would have visited it N times).
+    assert_eq!(d.state.wake_examined.load(Ordering::Relaxed), 0);
+    assert_eq!(d.state.events.parked_len(), 1);
+
+    // Completing the real dependency wakes it — exactly once.
+    send(&mut s, cmd(99, vec![], Body::Barrier));
+    assert_eq!(next_completion(&mut s), (99, EventStatus::Complete));
+    assert_eq!(next_completion(&mut s), (100, EventStatus::Complete));
+    assert_eq!(d.state.wake_examined.load(Ordering::Relaxed), 1);
+    assert_eq!(d.state.events.parked_len(), 0);
+}
+
+#[test]
+fn failed_event_poisons_dependent_subtree_transitively() {
+    let d = daemon();
+    let mut s = raw_client(&d.addr());
+
+    // 300 <- 301 <- 302 all hang off user event 666.
+    send(&mut s, cmd(300, vec![666], Body::Barrier));
+    send(&mut s, cmd(301, vec![300], Body::Barrier));
+    send(&mut s, cmd(302, vec![301], Body::Barrier));
+    // Flush: a dependency-free barrier completing proves the dispatcher
+    // admitted (and parked) everything sent before it.
+    send(&mut s, cmd(350, vec![], Body::Barrier));
+    assert_eq!(next_completion(&mut s), (350, EventStatus::Complete));
+    assert_eq!(d.state.events.parked_len(), 3);
+
+    // Fail the root: the whole subtree must fail, in dependency order.
+    send(
+        &mut s,
+        cmd(
+            0,
+            vec![],
+            Body::NotifyEvent {
+                event: 666,
+                status: EventStatus::Failed.to_i8(),
+            },
+        ),
+    );
+    assert_eq!(next_completion(&mut s), (300, EventStatus::Failed));
+    assert_eq!(next_completion(&mut s), (301, EventStatus::Failed));
+    assert_eq!(next_completion(&mut s), (302, EventStatus::Failed));
+    assert_eq!(d.state.events.parked_len(), 0);
+}
+
+#[test]
+fn deep_dependency_chain_cascades_in_one_notification() {
+    let d = daemon();
+    let mut s = raw_client(&d.addr());
+
+    // A 100-deep chain rooted at user event 7000, plus one bystander that
+    // must never be examined by the cascade.
+    send(&mut s, cmd(9999, vec![8888], Body::Barrier));
+    const DEPTH: u64 = 100;
+    for i in 0..DEPTH {
+        let wait = if i == 0 { 7000 } else { 400 + i - 1 };
+        send(&mut s, cmd(400 + i, vec![wait], Body::Barrier));
+    }
+    send(
+        &mut s,
+        cmd(
+            0,
+            vec![],
+            Body::NotifyEvent {
+                event: 7000,
+                status: EventStatus::Complete.to_i8(),
+            },
+        ),
+    );
+    for i in 0..DEPTH {
+        assert_eq!(next_completion(&mut s), (400 + i, EventStatus::Complete));
+    }
+    // Exactly the chain was examined; the bystander was not.
+    assert_eq!(d.state.wake_examined.load(Ordering::Relaxed), DEPTH);
+    assert_eq!(d.state.events.parked_len(), 1);
+}
+
+#[test]
+fn mixed_dependency_fanout_wakes_each_dependent_once() {
+    let d = daemon();
+    let mut s = raw_client(&d.addr());
+
+    // Three commands all waiting on BOTH user events 51 and 52.
+    for e in [600u64, 601, 602] {
+        send(&mut s, cmd(e, vec![51, 52], Body::Barrier));
+    }
+    send(
+        &mut s,
+        cmd(
+            0,
+            vec![],
+            Body::NotifyEvent {
+                event: 51,
+                status: EventStatus::Complete.to_i8(),
+            },
+        ),
+    );
+    // Half-resolved: nothing runs, nothing examined.
+    send(&mut s, cmd(610, vec![], Body::Barrier));
+    assert_eq!(next_completion(&mut s), (610, EventStatus::Complete));
+    assert_eq!(d.state.wake_examined.load(Ordering::Relaxed), 0);
+
+    send(
+        &mut s,
+        cmd(
+            0,
+            vec![],
+            Body::NotifyEvent {
+                event: 52,
+                status: EventStatus::Complete.to_i8(),
+            },
+        ),
+    );
+    let mut done: Vec<u64> = (0..3).map(|_| next_completion(&mut s).0).collect();
+    done.sort_unstable();
+    assert_eq!(done, vec![600, 601, 602]);
+    assert_eq!(d.state.wake_examined.load(Ordering::Relaxed), 3);
+}
+
+#[test]
+fn malformed_read_and_write_fail_cleanly_inline() {
+    // Focused regressions for the seed's two dispatcher panics, end to end:
+    // out-of-range ReadBuffer offsets and WriteBuffer length overflow.
+    let d = daemon();
+    let mut s = raw_client(&d.addr());
+
+    send(
+        &mut s,
+        cmd(
+            1,
+            vec![],
+            Body::CreateBuffer {
+                buf: 77,
+                size: 64,
+                content_size_buf: 0,
+            },
+        ),
+    );
+    assert_eq!(next_completion(&mut s), (1, EventStatus::Complete));
+
+    // Seed panic #1: offset past the end sliced d[offset..end] with
+    // end < offset.
+    send(
+        &mut s,
+        cmd(
+            2,
+            vec![],
+            Body::ReadBuffer {
+                buf: 77,
+                offset: 1_000_000,
+                len: 8,
+            },
+        ),
+    );
+    assert_eq!(next_completion(&mut s), (2, EventStatus::Failed));
+
+    // Overflowing offset+len must not panic either.
+    send(
+        &mut s,
+        cmd(
+            3,
+            vec![],
+            Body::ReadBuffer {
+                buf: 77,
+                offset: u64::MAX - 2,
+                len: u64::MAX - 1,
+            },
+        ),
+    );
+    assert_eq!(next_completion(&mut s), (3, EventStatus::Failed));
+
+    // Seed panic #2 family: WriteBuffer whose declared range can't hold the
+    // payload (offset near u64::MAX overflows the end computation).
+    let payload = vec![0xABu8; 8];
+    write_packet(
+        &mut s,
+        &cmd(
+            4,
+            vec![],
+            Body::WriteBuffer {
+                buf: 77,
+                offset: u64::MAX - 4,
+                len: 8,
+            },
+        ),
+        &payload,
+    )
+    .unwrap();
+    assert_eq!(next_completion(&mut s), (4, EventStatus::Failed));
+
+    // Write past the declared allocation fails the event (no silent grow).
+    write_packet(
+        &mut s,
+        &cmd(
+            5,
+            vec![],
+            Body::WriteBuffer {
+                buf: 77,
+                offset: 60,
+                len: 8,
+            },
+        ),
+        &payload,
+    )
+    .unwrap();
+    assert_eq!(next_completion(&mut s), (5, EventStatus::Failed));
+
+    // The daemon is still fully operational afterwards.
+    write_packet(
+        &mut s,
+        &cmd(
+            6,
+            vec![],
+            Body::WriteBuffer {
+                buf: 77,
+                offset: 0,
+                len: 8,
+            },
+        ),
+        &payload,
+    )
+    .unwrap();
+    assert_eq!(next_completion(&mut s), (6, EventStatus::Complete));
+    send(
+        &mut s,
+        cmd(
+            7,
+            vec![],
+            Body::ReadBuffer {
+                buf: 77,
+                offset: 0,
+                len: 8,
+            },
+        ),
+    );
+    let pkt = loop {
+        let pkt = read_packet(&mut s).unwrap();
+        if matches!(pkt.msg.body, Body::Completion { .. }) {
+            break pkt;
+        }
+    };
+    let Body::Completion { event, status, .. } = pkt.msg.body else {
+        unreachable!()
+    };
+    assert_eq!((event, EventStatus::from_i8(status)), (7, EventStatus::Complete));
+    assert_eq!(pkt.payload, vec![0xABu8; 8]);
+}

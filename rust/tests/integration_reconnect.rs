@@ -130,6 +130,50 @@ fn repeated_kicks_are_survivable() {
 }
 
 #[test]
+fn reconnect_storm_leaves_link_stably_available() {
+    // Regression for the stale-reader race: every kick leaves a dead
+    // reader behind; after a successful reconnect, one of those readers
+    // observing its dead socket used to flip `available` back to false —
+    // wedging the driver permanently, since fast-failing commands never
+    // reach the writer's reconnect path. With generation-tagged readers
+    // the link must stay up once re-established.
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &0i32.to_le_bytes()).unwrap();
+
+    let mut expected = 0i32;
+    for round in 0..8 {
+        d.kick_client();
+        // Issue work until it sticks again (each success is one increment).
+        let mut done = false;
+        for _ in 0..500 {
+            match q.run("increment_s32_1", &[buf], &[buf]) {
+                Ok(ev) => {
+                    ev.wait().unwrap();
+                    expected += 1;
+                    done = true;
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert!(done, "round {round} never recovered");
+    }
+
+    // Give any straggling stale readers ample time to observe their dead
+    // sockets, then insist the link is still up and usable.
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(p.available(0), "stale reader flipped the recovered link down");
+    q.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
+    expected += 1;
+    let out = q.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), expected);
+}
+
+#[test]
 fn local_fallback_device_keeps_app_running() {
     // Fig 4: when remote devices are unavailable the application falls
     // back to the UE-local device.

@@ -130,14 +130,20 @@ fn prop_event_table_completion_is_monotone() {
         let want = table.status(id).unwrap();
         for _ in 0..10 {
             match rng.gen_range(0, 4) {
-                0 => table.complete(id, Default::default()),
-                1 => table.fail(id),
+                0 => {
+                    table.complete(id, Default::default());
+                }
+                1 => {
+                    table.fail(id);
+                }
                 2 => table.ensure(id),
-                _ => table.set_status(
-                    id,
-                    poclr::proto::EventStatus::Running,
-                    Default::default(),
-                ),
+                _ => {
+                    table.set_status(
+                        id,
+                        poclr::proto::EventStatus::Running,
+                        Default::default(),
+                    );
+                }
             }
         }
         assert_eq!(table.status(id).unwrap(), want);
@@ -177,6 +183,61 @@ fn prop_deps_state_is_consistent_with_individual_statuses() {
         } else {
             assert_eq!(got, DepsState::Blocked);
         }
+    }
+}
+
+#[test]
+fn prop_waiter_index_releases_each_parked_token_exactly_once() {
+    // Random DAG-free stress of the reverse waiter index: park tokens on
+    // random dependency sets, then resolve every event in random order.
+    // Every token must be released exactly once, poisoned iff any of its
+    // dependencies failed before its completion could release it.
+    let mut rng = Rng::new(0xA11CE);
+    for _ in 0..60 {
+        let table = EventTable::new();
+        let n_events = rng.gen_range(1, 8);
+        let n_tokens = rng.gen_range(1, 12);
+        let mut deps: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+        for tok in 1..=n_tokens {
+            let k = rng.gen_range(1, 4) as usize;
+            let wait: Vec<u64> = (0..k).map(|_| 1 + rng.next_u64() % n_events).collect();
+            assert_eq!(table.park(tok, &wait), DepsState::Blocked);
+            deps.insert(tok, wait);
+        }
+        let mut order: Vec<u64> = (1..=n_events).collect();
+        // Fisher-Yates with the test rng.
+        for i in (1..order.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            order.swap(i, j);
+        }
+        let mut released: std::collections::HashMap<u64, bool> = Default::default();
+        let mut failed_events: std::collections::HashSet<u64> = Default::default();
+        for ev in order {
+            let fail = rng.next_u32() % 4 == 0;
+            let wakeups = if fail {
+                failed_events.insert(ev);
+                table.fail(ev)
+            } else {
+                table.complete(ev, Default::default())
+            };
+            for w in wakeups {
+                assert!(
+                    released.insert(w.token, w.poisoned).is_none(),
+                    "token {} released twice",
+                    w.token
+                );
+            }
+        }
+        assert_eq!(released.len() as u64, n_tokens, "every token released");
+        for (tok, poisoned) in released {
+            // Each event resolves exactly once and terminal states are
+            // sticky, so a token is poisoned iff any dependency failed: a
+            // failure while parked poisons immediately, and a clean release
+            // requires every dependency to have completed.
+            let any_failed = deps[&tok].iter().any(|d| failed_events.contains(d));
+            assert_eq!(poisoned, any_failed, "token {tok}");
+        }
+        assert_eq!(table.parked_len(), 0);
     }
 }
 
@@ -292,6 +353,154 @@ fn prop_energy_model_is_monotone() {
             assert!(m.energy(&more) >= e0 - 1e-12);
         }
         assert!(e0 > 0.0);
+    }
+}
+
+#[test]
+fn prop_dispatch_survives_malformed_command_streams() {
+    // Fuzz the daemon command hot path over a real client socket:
+    // out-of-range offsets, overflowing ranges, mismatched size fields,
+    // absurd allocation requests, unknown buffers. Every malformed command
+    // must fail its event cleanly — the daemon must keep serving (the seed
+    // dispatcher panicked on several of these).
+    use std::net::TcpStream;
+
+    use poclr::daemon::{Daemon, DaemonConfig};
+    use poclr::proto::{read_packet, write_packet, Body, EventStatus, Msg, ROLE_CLIENT};
+    use poclr::runtime::Manifest;
+
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let mut s = TcpStream::connect(d.addr()).unwrap();
+    write_packet(
+        &mut s,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        }),
+        &[],
+    )
+    .unwrap();
+    let welcome = read_packet(&mut s).unwrap();
+    assert!(matches!(welcome.msg.body, Body::Welcome { .. }));
+
+    let send = |s: &mut TcpStream, event: u64, body: Body, payload: &[u8]| {
+        let msg = Msg {
+            cmd_id: 0,
+            queue: 0,
+            device: 0,
+            event,
+            wait: Vec::new(),
+            body,
+        };
+        write_packet(s, &msg, payload).unwrap();
+    };
+
+    // One real 64-byte buffer to aim at.
+    send(
+        &mut s,
+        1,
+        Body::CreateBuffer {
+            buf: 7,
+            size: 64,
+            content_size_buf: 0,
+        },
+        &[],
+    );
+
+    let mut rng = Rng::new(0xD15EA5E);
+    let mut next_event = 10u64;
+    let mut expect_completion_for = vec![1u64];
+    for _ in 0..200 {
+        next_event += 1;
+        let ev = next_event;
+        expect_completion_for.push(ev);
+        // Hostile value generator: mostly-absurd offsets/lengths with the
+        // occasional overflow-bait near u64::MAX.
+        fn wild(rng: &mut Rng, cap: u64) -> u64 {
+            match rng.gen_range(0, 4) {
+                0 => rng.gen_range(0, cap.max(1)),
+                1 => rng.gen_range(0, 1 << 20),
+                2 => u64::MAX - rng.gen_range(0, 16),
+                _ => rng.next_u64(),
+            }
+        }
+        match rng.gen_range(0, 5) {
+            0 => {
+                let body = Body::ReadBuffer {
+                    buf: if rng.next_u32() % 2 == 0 { 7 } else { rng.next_u64() },
+                    offset: wild(&mut rng, 128),
+                    len: wild(&mut rng, 128),
+                };
+                send(&mut s, ev, body, &[]);
+            }
+            1 => {
+                // The payload on the wire always matches `len` (the framing
+                // reads exactly `len` bytes) — the malformed part is the
+                // offset/range, including offset+len overflow.
+                let len = rng.gen_range(0, 256);
+                let payload = vec![0x5Au8; len as usize];
+                let body = Body::WriteBuffer {
+                    buf: if rng.next_u32() % 2 == 0 { 7 } else { rng.next_u64() },
+                    offset: wild(&mut rng, 128),
+                    len,
+                };
+                send(&mut s, ev, body, &payload);
+            }
+            2 => {
+                // Absurd allocation sizes must fail, not abort on OOM.
+                let body = Body::CreateBuffer {
+                    buf: 100 + rng.gen_range(0, 8),
+                    size: if rng.next_u32() % 2 == 0 {
+                        rng.gen_range(0, 4096)
+                    } else {
+                        u64::MAX - rng.gen_range(0, 1 << 30)
+                    },
+                    content_size_buf: 0,
+                };
+                send(&mut s, ev, body, &[]);
+            }
+            3 => {
+                let body = Body::SetContentSize {
+                    buf: if rng.next_u32() % 2 == 0 { 7 } else { rng.next_u64() },
+                    size: rng.next_u64(),
+                };
+                send(&mut s, ev, body, &[]);
+            }
+            _ => {
+                // Peer-style data push with inconsistent size fields.
+                let len = rng.gen_range(0, 128);
+                let payload = vec![0xC3u8; len as usize];
+                let body = Body::MigrateData {
+                    buf: 7,
+                    content_size: wild(&mut rng, 256),
+                    total_size: wild(&mut rng, 256),
+                    len,
+                };
+                send(&mut s, ev, body, &payload);
+            }
+        }
+    }
+
+    // Every command must resolve (complete or failed) — and the daemon must
+    // still execute real work afterwards.
+    next_event += 1;
+    let probe = next_event;
+    send(&mut s, probe, Body::Barrier, &[]);
+    expect_completion_for.push(probe);
+
+    let mut seen = std::collections::HashSet::new();
+    while seen.len() < expect_completion_for.len() {
+        let pkt = read_packet(&mut s).expect("daemon died mid-stream");
+        if let Body::Completion { event, status, .. } = pkt.msg.body {
+            seen.insert(event);
+            if event == probe {
+                assert_eq!(EventStatus::from_i8(status), EventStatus::Complete);
+            }
+        }
+    }
+    for ev in &expect_completion_for {
+        assert!(seen.contains(ev), "event {ev} never resolved");
     }
 }
 

@@ -1,0 +1,236 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the API subset the workspace actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result`/`Option`, and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Semantics mirror the real
+//! crate where it matters:
+//!
+//! * `Display` shows the outermost message only; the `{:#}` alternate form
+//!   joins the whole cause chain with `": "`.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its source chain.
+//! * `.context(..)` wraps both foreign errors and existing [`Error`]s.
+
+use std::fmt::{self, Debug, Display};
+
+/// Drop-in result alias: `Result<T>` defaults the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (used by `anyhow!`).
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(e: &E) -> Error {
+        let source = e.source().map(|s| Box::new(Error::from_std(s)));
+        Error {
+            msg: e.to_string(),
+            source,
+        }
+    }
+
+    /// The innermost error in the chain (as a message).
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        cur
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msg)?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+mod private {
+    /// Sealed conversion: foreign std errors and our own `Error` both fold
+    /// into `Error` (the trick that lets `Context` apply to both).
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn context_on_option_and_error() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let e = anyhow!("base {}", 7);
+        let wrapped: Result<(), Error> = Err(e);
+        let w = wrapped.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{w:#}"), "outer: base 7");
+        assert_eq!(w.root_cause().to_string(), "base 7");
+        assert_eq!(w.chain().count(), 2);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(v: u32) -> Result<u32> {
+            ensure!(v < 10, "value {v} too big");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "value 12 too big");
+    }
+}
