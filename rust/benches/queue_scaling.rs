@@ -1,0 +1,147 @@
+//! Multi-queue client scaling: aggregate small-command throughput for
+//! 1/2/4/8 command queues against one loopback daemon, comparing the
+//! single shared connection (pre-redesign client, `per_queue_streams:
+//! false`) with one writer/reader socket pair per queue (paper §4.2, the
+//! Fig 13 multiple-queue experiment).
+//!
+//! Writes `BENCH_queue_scaling.json` at the repo root so the perf
+//! trajectory is tracked in-tree. `--tiny` (or QUEUE_SCALING_TINY=1) runs
+//! a CI-smoke-sized sweep.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios;
+
+/// Bytes per WriteBuffer command: big enough that socket I/O (the thing
+/// per-queue streams parallelize) dominates dispatcher bookkeeping.
+const PAYLOAD: usize = 4096;
+
+/// Aggregate commands/second for `n_queues` queues, each enqueueing
+/// `cmds_per_queue` in-order writes from its own thread.
+fn measure(
+    manifest: &Manifest,
+    n_queues: usize,
+    cmds_per_queue: usize,
+    per_queue_streams: bool,
+) -> f64 {
+    let daemon = Daemon::spawn(DaemonConfig::local(0, 1, manifest.clone())).unwrap();
+    let platform = Platform::connect(
+        &[daemon.addr()],
+        ClientConfig {
+            per_queue_streams,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = platform.context();
+
+    let start_gate = Arc::new(Barrier::new(n_queues + 1));
+    let handles: Vec<_> = (0..n_queues)
+        .map(|_| {
+            let ctx = ctx.clone();
+            let gate = Arc::clone(&start_gate);
+            std::thread::spawn(move || {
+                let q = ctx.queue(0, 0);
+                let buf = ctx.create_buffer(PAYLOAD as u64);
+                let data = vec![0xA5u8; PAYLOAD];
+                // Warm: attach the stream, allocate server-side.
+                q.write(buf, &data).unwrap();
+                q.finish().unwrap();
+                gate.wait(); // line up all queues
+                for _ in 0..cmds_per_queue {
+                    q.write(buf, &data).unwrap();
+                }
+                q.finish().unwrap();
+            })
+        })
+        .collect();
+
+    start_gate.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    (n_queues * cmds_per_queue) as f64 / elapsed
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny")
+        || std::env::var("QUEUE_SCALING_TINY").is_ok();
+    let cmds_per_queue = if tiny { 300 } else { 3000 };
+    let manifest = Manifest::load_default().expect("make artifacts first");
+
+    report::figure(
+        "Queue scaling",
+        "aggregate cmds/sec: single connection vs per-queue streams",
+    );
+    let mut single = report::Series::new("single connection", "cmd/s");
+    let mut multi = report::Series::new("per-queue streams", "cmd/s");
+
+    let mut rows = Vec::new();
+    for n_queues in [1usize, 2, 4, 8] {
+        let s = measure(&manifest, n_queues, cmds_per_queue, false);
+        let m = measure(&manifest, n_queues, cmds_per_queue, true);
+        single.push(format!("{n_queues} queue(s)"), s);
+        multi.push(format!("{n_queues} queue(s)"), m);
+        println!(
+            "  {n_queues} queue(s): single {s:>10.0}  per-queue {m:>10.0}  ({:.2}x)",
+            m / s
+        );
+        rows.push((n_queues, s, m));
+    }
+    single.print();
+    multi.print();
+
+    // The DES model of the same sweep, for calibration drift tracking.
+    let modeled: Vec<(usize, f64, f64)> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&qn| {
+            (
+                qn,
+                scenarios::queue_scaling_cmds_per_sec(qn, 1000, false),
+                scenarios::queue_scaling_cmds_per_sec(qn, 1000, true),
+            )
+        })
+        .collect();
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"queue_scaling\",\n");
+    json.push_str(&format!(
+        "  \"mode\": \"{}\",\n",
+        if tiny { "measured-tiny" } else { "measured-full" }
+    ));
+    json.push_str(&format!("  \"payload_bytes\": {PAYLOAD},\n"));
+    json.push_str(&format!("  \"cmds_per_queue\": {cmds_per_queue},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, (qn, s, m)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"queues\": {qn}, \"single_conn_cmds_per_sec\": {s:.0}, \
+             \"per_queue_cmds_per_sec\": {m:.0}, \"speedup\": {:.3}}}{}\n",
+            m / s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"modeled\": [\n");
+    for (i, (qn, s, m)) in modeled.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"queues\": {qn}, \"single_conn_cmds_per_sec\": {s:.0}, \
+             \"per_queue_cmds_per_sec\": {m:.0}}}{}\n",
+            if i + 1 < modeled.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_queue_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -305,10 +305,15 @@ impl ArHarness {
                         q_dec.run("vpcc.decode", &[frame_buf], &[geom_buf, occ_buf])?;
                     }
                     q_gpu.write(cam_buf, &cam_bytes)?;
-                    let ev =
-                        q_gpu.run("ar_frame_64x64", &[geom_buf, occ_buf, cam_buf], &[pts_buf, order_buf])?;
-                    ev.wait()?;
-                    let order = q_gpu.read(order_buf)?;
+                    let kernel_args = [geom_buf, occ_buf, cam_buf];
+                    q_gpu.run("ar_frame_64x64", &kernel_args, &[pts_buf, order_buf])?;
+                    // Enqueue the order-list download immediately: it is
+                    // ordered server-side behind the sort kernel, so the
+                    // transfer starts the instant the kernel finishes —
+                    // no wait-for-completion round trip from the phone,
+                    // and pose tracking overlaps the whole in-flight path.
+                    let pending = q_gpu.enqueue_read(order_buf)?;
+                    let order = pending.wait()?;
                     act.rx_bytes += order.len() as u64;
                     act.tx_bytes += 64; // command traffic upper bound
                     (t0.elapsed().as_nanos() as u64, order.len())

@@ -247,8 +247,16 @@ pub fn run(
                 ExchangeMode::HostRoundtrip => {
                     // Manual circulation: read rows via the client and
                     // upload as fresh buffers on this domain's server.
-                    let tb = dom.q.read(bots[up])?;
-                    let bb = dom.q.read(tops[down])?;
+                    // Both downloads are enqueued before either is
+                    // awaited: the second is already parked server-side
+                    // when the first completes (saving its request round
+                    // trip), though the in-order queue still serializes
+                    // the transfers themselves — faithful to FluidX3D's
+                    // original host-routed exchange.
+                    let tb_pending = dom.q.enqueue_read(bots[up])?;
+                    let bb_pending = dom.q.enqueue_read(tops[down])?;
+                    let tb = tb_pending.wait()?;
+                    let bb = bb_pending.wait()?;
                     let ht = ctx.create_buffer((4 * 9 * W) as u64);
                     let hb = ctx.create_buffer((4 * 9 * W) as u64);
                     dom.q.write(ht, &tb)?;
@@ -282,10 +290,15 @@ pub fn run(
     let elapsed = t0.elapsed();
     let mlups = (GRID_H * W * steps) as f64 / elapsed.as_secs_f64() / 1e6;
 
-    // Collect the final grid.
+    // Collect the final grid: enqueue every domain's download first so
+    // the slabs stream back from all servers concurrently, then merge.
+    let handles = domains
+        .iter()
+        .map(|dom| dom.q.enqueue_read(dom.f))
+        .collect::<Result<Vec<_>>>()?;
     let mut out = vec![0f32; 9 * GRID_H * W];
-    for (i, dom) in domains.iter().enumerate() {
-        let bytes = dom.q.read(dom.f)?;
+    for (i, handle) in handles.into_iter().enumerate() {
+        let bytes = handle.wait()?;
         let slab: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))

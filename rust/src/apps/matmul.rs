@@ -109,20 +109,21 @@ pub fn run(
     }
 
     let compute_t0 = Instant::now();
-    // Launch all blocks.
-    let events: Vec<_> = queues
-        .iter()
-        .enumerate()
-        .map(|(i, q)| q.run(artifact, &[a_bufs[i], b_bufs[i]], &[c_bufs[i]]))
-        .collect::<Result<Vec<_>>>()?;
-    for ev in &events {
-        ev.wait()?;
+    // Launch all blocks, enqueueing each partial's download right behind
+    // its kernel: the read is ordered server-side by the in-order queue,
+    // so device j's compute overlaps device i's download with no client
+    // round-trip in between (a kernel failure poisons its read's event,
+    // so errors still surface at the wait below).
+    let mut pending = Vec::with_capacity(d);
+    for (i, q) in queues.iter().enumerate() {
+        q.run(artifact, &[a_bufs[i], b_bufs[i]], &[c_bufs[i]])?;
+        pending.push(q.enqueue_read(c_bufs[i])?);
     }
 
     // Collect partials and merge into the final matrix (host timing!).
     let mut c = vec![0f32; n * n];
-    for (i, q) in queues.iter().enumerate() {
-        let bytes = q.read(c_bufs[i])?;
+    for (i, h) in pending.into_iter().enumerate() {
+        let bytes = h.wait()?;
         for (k, chunk) in bytes.chunks_exact(4).enumerate() {
             c[i * rows * n + k] = f32::from_le_bytes(chunk.try_into().unwrap());
         }

@@ -110,10 +110,9 @@ impl SnuclQueue {
             if let Residency::Server(s) = self.ctx.residency(*a) {
                 if s != self.inner.server {
                     spin_sleep(MPI_PACK_COST);
-                    let data = {
-                        let q = self.ctx.queue(s, 0);
-                        q.read(*a)?
-                    };
+                    // The read routes itself to the holding server's
+                    // control stream (no per-route queue/socket churn).
+                    let data = self.inner.read(*a)?;
                     staging_cost(data.len());
                     self.inner.write(*a, &data)?;
                 }

@@ -19,6 +19,18 @@ use crate::util::{fresh_id, now_ns};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LocalBuffer(pub u64);
 
+/// Resolved-at-enqueue read handle (the local device has no transfer to
+/// overlap; this keeps call sites symmetric with the remote driver's
+/// [`crate::client::ReadHandle`]).
+#[derive(Debug)]
+pub struct LocalReadHandle(Result<Vec<u8>>);
+
+impl LocalReadHandle {
+    pub fn wait(self) -> Result<Vec<u8>> {
+        self.0
+    }
+}
+
 /// A synchronous local execution queue over one device.
 pub struct LocalQueue {
     exec: DeviceExecutor,
@@ -71,6 +83,14 @@ impl LocalQueue {
             .context("unknown local buffer")?
             .as_ref()
             .clone())
+    }
+
+    /// Non-blocking read, mirroring [`crate::client::Queue::enqueue_read`]
+    /// so applications can swap remote and local queues without changing
+    /// their pipeline structure. The local queue is synchronous, so the
+    /// snapshot is taken at enqueue time and `wait` is free.
+    pub fn enqueue_read(&self, buf: LocalBuffer) -> LocalReadHandle {
+        LocalReadHandle(self.read(buf))
     }
 
     /// Synchronously run an artifact; returns event-profiling-style

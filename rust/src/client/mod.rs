@@ -7,10 +7,27 @@
 //! the *source* server, pushed P2P to the destination — §5.1), and
 //! connection loss is handled with session resume + command replay (§4.3).
 //!
+//! The **queue is the unit of connection and concurrency**: every
+//! [`Queue`] attaches its own socket pair to its server (paper §4.2:
+//! "each command queue has its own writer/reader thread pair"; the
+//! multi-queue scaling of Fig 13), so independent queues enqueue, write
+//! and read without serializing on one socket or one lock. Context-level
+//! commands (allocations, frees, migrations, cross-server reads) travel
+//! on a per-server *control stream*.
+//!
 //! * [`Platform::connect`] dials the daemons and performs handshakes.
-//! * [`Context`] tracks buffer residency and the event task graph.
-//! * [`Queue`] is an (in-order by default) command queue bound to one
-//!   remote device.
+//! * [`Context`] tracks buffer residency (a sharded, per-buffer-locked
+//!   map — concurrent queues never contend on a global mutex) and the
+//!   event task graph.
+//! * [`Context::queue`] / [`Context::out_of_order_queue`] create a
+//!   [`Queue`] bound to one remote device; the queue's dedicated stream
+//!   attaches lazily on first use via the `AttachQueue` handshake.
+//! * Downloads are **non-blocking first**: [`Queue::enqueue_read`]
+//!   returns a [`ReadHandle`] immediately (the request is ordered
+//!   server-side behind the producing event), and
+//!   [`ReadHandle::wait`] yields the bytes. [`Queue::read`] /
+//!   [`Queue::read_content`] remain as thin enqueue-then-wait wrappers,
+//!   so pre-redesign applications compile unchanged.
 //! * [`local`] offers the same queue API over an in-process device — the
 //!   "native driver" baseline of Figs 8-10 and the UE-local fallback of
 //!   Fig 4.
@@ -18,9 +35,9 @@
 pub mod local;
 pub mod server_conn;
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
@@ -31,14 +48,14 @@ use crate::proto::{Body, EventStatus, Timestamps};
 use crate::sched::{EventTable, WaitOutcome};
 use crate::util::fresh_id;
 
-use server_conn::ServerConn;
+use server_conn::{QueueStream, ServerConn};
 
 /// Client-side configuration.
 #[derive(Clone)]
 pub struct ClientConfig {
     /// Link shaping towards the servers (UE access network).
     pub link: LinkProfile,
-    /// Commands kept for replay after reconnect.
+    /// Commands kept for replay after reconnect (per stream).
     pub backup_depth: usize,
     /// Attempt session resume on connection loss.
     pub reconnect: bool,
@@ -47,6 +64,11 @@ pub struct ClientConfig {
     /// Disable the content-size optimization even when buffers are linked
     /// (Fig 15 ablation).
     pub content_size_enabled: bool,
+    /// Give each command queue its own socket pair (the redesigned
+    /// transport). `false` funnels every queue through the per-server
+    /// control stream — the pre-redesign single-connection baseline the
+    /// queue-scaling benchmark compares against.
+    pub per_queue_streams: bool,
 }
 
 impl Default for ClientConfig {
@@ -57,6 +79,7 @@ impl Default for ClientConfig {
             reconnect: true,
             rdma_migrations: false,
             content_size_enabled: true,
+            per_queue_streams: true,
         }
     }
 }
@@ -121,11 +144,12 @@ impl Platform {
     pub fn context(&self) -> Context {
         Context {
             plat: Arc::clone(&self.inner),
-            buffers: Arc::new(Mutex::new(HashMap::new())),
+            buffers: Arc::new(BufMap::new()),
         }
     }
 }
 
+#[derive(Clone)]
 struct BufState {
     size: u64,
     residency: Residency,
@@ -133,14 +157,76 @@ struct BufState {
     last_event: u64,
     /// Linked content-size buffer id (0 = none).
     content_size_buf: u64,
-    allocated_on: HashSet<u32>,
+    /// server id -> allocation event. The *event* (not just membership)
+    /// matters with per-queue streams: a second queue's command can no
+    /// longer rely on socket FIFO to order behind the control stream's
+    /// CreateBuffer, so every user of the allocation waits on its event.
+    allocated_on: HashMap<u32, u64>,
+    /// Events that consumed the current contents since the last producer
+    /// (reads, kernel arguments). Producers wait on these — the WAR edges
+    /// that single-socket FIFO used to provide implicitly — and clear the
+    /// list. Sequenced enqueues (one app thread) are fully protected;
+    /// racing an unsequenced producer against a consumer from another
+    /// thread has no defined order to preserve.
+    readers: Vec<u64>,
+}
+
+/// Number of independent client buffer-state shards (mirror of the daemon
+/// `BufStore`).
+const BUF_SHARDS: usize = 16;
+
+/// Sharded client-side buffer bookkeeping with per-buffer locking: shard
+/// read-locks are held only for map lookups, every state mutation happens
+/// under the buffer's own mutex — so N queues enqueuing on N buffers
+/// never contend on a single `Mutex<HashMap>`.
+struct BufMap {
+    shards: Vec<RwLock<HashMap<u64, Arc<Mutex<BufState>>>>>,
+}
+
+impl BufMap {
+    fn new() -> BufMap {
+        BufMap {
+            shards: (0..BUF_SHARDS)
+                .map(|_| RwLock::new(HashMap::new()))
+                .collect(),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &RwLock<HashMap<u64, Arc<Mutex<BufState>>>> {
+        // Fibonacci multiplicative hash: buffer ids are sequential
+        // (`fresh_id`), so taking low bits directly would stripe poorly.
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[(h >> 32) as usize % BUF_SHARDS]
+    }
+
+    fn insert(&self, id: u64, st: BufState) {
+        self.shard(id)
+            .write()
+            .unwrap()
+            .insert(id, Arc::new(Mutex::new(st)));
+    }
+
+    fn remove(&self, id: u64) -> Option<BufState> {
+        let entry = self.shard(id).write().unwrap().remove(&id)?;
+        let st = entry.lock().unwrap().clone();
+        Some(st)
+    }
+
+    /// Run `f` over the buffer's state under its own lock (the shard lock
+    /// is released before `f` runs). Never nest `with` calls on the same
+    /// buffer.
+    fn with<R>(&self, id: u64, f: impl FnOnce(&mut BufState) -> R) -> Option<R> {
+        let entry = self.shard(id).read().unwrap().get(&id).cloned()?;
+        let mut st = entry.lock().unwrap();
+        Some(f(&mut st))
+    }
 }
 
 /// OpenCL-style context: owns buffers and their residency tracking.
 #[derive(Clone)]
 pub struct Context {
     plat: Arc<PlatformInner>,
-    buffers: Arc<Mutex<HashMap<u64, BufState>>>,
+    buffers: Arc<BufMap>,
 }
 
 /// Handle to a context buffer.
@@ -186,18 +272,70 @@ impl Event {
     }
 }
 
+/// An in-flight buffer download: [`Queue::enqueue_read`] returns
+/// immediately with one of these; the request is ordered server-side
+/// behind the producing event, so the caller overlaps the transfer with
+/// other work and collects the bytes via [`ReadHandle::wait`].
+pub struct ReadHandle {
+    event: Event,
+    results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+}
+
+impl ReadHandle {
+    /// The read's completion event (waitable, profilable, usable in
+    /// `run_with_waits` dependency lists).
+    pub fn event(&self) -> &Event {
+        &self.event
+    }
+
+    /// Has the download completed (successfully or not)?
+    pub fn is_ready(&self) -> bool {
+        self.event
+            .status()
+            .is_some_and(|s| s.is_terminal())
+    }
+
+    /// Block until the download completes and take the payload.
+    pub fn wait(self) -> Result<Vec<u8>> {
+        self.event.wait()?;
+        self.results
+            .lock()
+            .unwrap()
+            .remove(&self.event.id)
+            .context("read completed but payload missing")
+    }
+}
+
+impl std::fmt::Debug for ReadHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReadHandle").field("event", &self.event).finish()
+    }
+}
+
+impl Drop for ReadHandle {
+    fn drop(&mut self) {
+        // An abandoned handle must not strand its payload in the shared
+        // results map. (A payload still in flight at drop time can slip
+        // in afterwards and linger until Platform teardown — bounded by
+        // the number of abandoned handles, which only error paths
+        // produce.)
+        self.results.lock().unwrap().remove(&self.event.id);
+    }
+}
+
 impl Context {
     /// Allocate a buffer (lazy per-server allocation happens on first use).
     pub fn create_buffer(&self, size: u64) -> Buffer {
         let id = fresh_id();
-        self.buffers.lock().unwrap().insert(
+        self.buffers.insert(
             id,
             BufState {
                 size,
                 residency: Residency::Undefined,
                 last_event: 0,
                 content_size_buf: 0,
-                allocated_on: HashSet::new(),
+                allocated_on: HashMap::new(),
+                readers: Vec::new(),
             },
         );
         Buffer(id)
@@ -208,7 +346,7 @@ impl Context {
     pub fn create_buffer_with_content_size(&self, size: u64) -> (Buffer, Buffer) {
         let cs = self.create_buffer(4);
         let id = fresh_id();
-        self.buffers.lock().unwrap().insert(
+        self.buffers.insert(
             id,
             BufState {
                 size,
@@ -219,19 +357,15 @@ impl Context {
                 } else {
                     0
                 },
-                allocated_on: HashSet::new(),
+                allocated_on: HashMap::new(),
+                readers: Vec::new(),
             },
         );
         (Buffer(id), cs)
     }
 
     pub fn buffer_size(&self, buf: Buffer) -> u64 {
-        self.buffers
-            .lock()
-            .unwrap()
-            .get(&buf.0)
-            .map(|b| b.size)
-            .unwrap_or(0)
+        self.buffers.with(buf.0, |b| b.size).unwrap_or(0)
     }
 
     /// Release a buffer: frees the server-side allocations (fire-and-
@@ -240,19 +374,26 @@ impl Context {
     /// three buffers per domain per step) call this to bound daemon
     /// memory.
     pub fn release_buffer(&self, buf: Buffer) -> Result<()> {
-        let st = self.buffers.lock().unwrap().remove(&buf.0);
-        if let Some(st) = st {
-            for server in st.allocated_on {
+        if let Some(st) = self.buffers.remove(buf.0) {
+            // Ordered behind the producing event AND every in-flight
+            // consumer, so kernels and downloads never lose their
+            // operands mid-flight.
+            let mut wait = st.readers;
+            if st.last_event != 0 {
+                wait.push(st.last_event);
+            }
+            wait.sort_unstable();
+            wait.dedup();
+            for server in st.allocated_on.into_keys() {
                 if let Ok(conn) = self.conn(server) {
-                    // Ordered behind the producing event so in-flight
-                    // kernels never lose their operands.
-                    let wait = if st.last_event != 0 {
-                        vec![st.last_event]
-                    } else {
-                        Vec::new()
-                    };
-                    conn.send_command(0, 0, wait, Body::FreeBuffer { buf: buf.0 }, Vec::new())
-                        .ok();
+                    conn.send_command(
+                        0,
+                        0,
+                        wait.clone(),
+                        Body::FreeBuffer { buf: buf.0 },
+                        Vec::new(),
+                    )
+                    .ok();
                 }
             }
         }
@@ -261,14 +402,12 @@ impl Context {
 
     pub fn residency(&self, buf: Buffer) -> Residency {
         self.buffers
-            .lock()
-            .unwrap()
-            .get(&buf.0)
-            .map(|b| b.residency)
+            .with(buf.0, |b| b.residency)
             .unwrap_or(Residency::Undefined)
     }
 
-    /// Command queue bound to device `device` of server `server`.
+    /// Command queue bound to device `device` of server `server`. The
+    /// queue's dedicated transport stream attaches lazily on first use.
     pub fn queue(&self, server: u32, device: u32) -> Queue {
         Queue {
             ctx: self.clone(),
@@ -276,6 +415,7 @@ impl Context {
             device,
             in_order: true,
             last_event: Arc::new(AtomicU64::new(0)),
+            stream: Arc::new(OnceLock::new()),
         }
     }
 
@@ -300,39 +440,76 @@ impl Context {
     }
 
     /// Ensure `buf` has a server-side allocation on `server`; returns the
-    /// allocation event (0 if it already existed).
+    /// allocation event. Callers order their commands behind it — with
+    /// per-queue streams there is no socket FIFO between the control
+    /// stream's CreateBuffer and another queue's first use, so the event
+    /// is the only ordering edge (the daemon parks the dependent command
+    /// until the allocation lands; an already-complete event is a cheap
+    /// no-op dependency).
     fn ensure_allocated(&self, server: u32, buf: Buffer) -> Result<u64> {
-        let (size, csbuf, need) = {
-            let mut m = self.buffers.lock().unwrap();
-            let st = m.get_mut(&buf.0).context("unknown buffer")?;
-            let need = !st.allocated_on.contains(&server);
-            if need {
-                st.allocated_on.insert(server);
-            }
-            (st.size, st.content_size_buf, need)
-        };
-        if !need {
-            return Ok(0);
+        let (size, csbuf, ev, fresh) = self
+            .buffers
+            .with(buf.0, |st| match st.allocated_on.get(&server) {
+                Some(&ev) => (st.size, st.content_size_buf, ev, false),
+                None => {
+                    let ev = fresh_id();
+                    st.allocated_on.insert(server, ev);
+                    (st.size, st.content_size_buf, ev, true)
+                }
+            })
+            .context("unknown buffer")?;
+        if !fresh {
+            return Ok(ev);
         }
-        // Allocate the linked content-size buffer first.
-        if csbuf != 0 {
-            self.ensure_allocated(server, Buffer(csbuf))?;
-        }
-        let conn = self.conn(server)?;
-        let ev = fresh_id();
         self.plat.events.ensure(ev);
-        conn.send_command(
-            0,
-            ev,
-            Vec::new(),
-            Body::CreateBuffer {
-                buf: buf.0,
-                size,
-                content_size_buf: csbuf,
-            },
-            Vec::new(),
-        )?;
+        let sent = (|| -> Result<()> {
+            // Allocate the linked content-size buffer first.
+            if csbuf != 0 {
+                self.ensure_allocated(server, Buffer(csbuf))?;
+            }
+            self.conn(server)?.send_command(
+                0,
+                ev,
+                Vec::new(),
+                Body::CreateBuffer {
+                    buf: buf.0,
+                    size,
+                    content_size_buf: csbuf,
+                },
+                Vec::new(),
+            )
+        })();
+        if let Err(e) = sent {
+            // Roll the reservation back: the CreateBuffer never left the
+            // client (fail-fast sends are not in the backup ring), so a
+            // later retry must re-send it rather than wait forever on an
+            // allocation event the daemon will never see. A concurrent
+            // queue that observed the reservation inside the failure
+            // window shares the link's unavailability (one flag per
+            // server), so its own send fails fast too; the residual race
+            // is sub-millisecond and surfaces as a wait timeout, not
+            // corruption.
+            self.buffers.with(buf.0, |st| {
+                st.allocated_on.remove(&server);
+            });
+            return Err(e);
+        }
         Ok(ev)
+    }
+
+    /// Register `ev` as a consumer of `buf` (the WAR edge a later
+    /// producer waits on). Already-terminal readers are pruned once the
+    /// list grows, so buffers that are consumed forever but never
+    /// rewritten (lookup tables, weights) don't accumulate stale ids.
+    fn note_reader(&self, buf: u64, ev: u64) {
+        let events = &self.plat.events;
+        self.buffers.with(buf, |st| {
+            if st.readers.len() >= 32 {
+                st.readers
+                    .retain(|r| !events.status(*r).is_some_and(|s| s.is_terminal()));
+            }
+            st.readers.push(ev);
+        });
     }
 
     /// Enqueue a P2P migration of `buf` to `dst_server` (client sends one
@@ -343,14 +520,13 @@ impl Context {
         dst_server: u32,
         extra_wait: &[u64],
     ) -> Result<u64> {
-        let (src, size, last) = {
-            let m = self.buffers.lock().unwrap();
-            let st = m.get(&buf.0).context("unknown buffer")?;
-            match st.residency {
-                Residency::Server(s) => (s, st.size, st.last_event),
+        let (src, size, last) = self
+            .buffers
+            .with(buf.0, |st| match st.residency {
+                Residency::Server(s) => Ok((s, st.size, st.last_event)),
                 _ => bail!("migration source must be a server"),
-            }
-        };
+            })
+            .context("unknown buffer")??;
         if src == dst_server {
             return Ok(0);
         }
@@ -373,19 +549,19 @@ impl Context {
             },
             Vec::new(),
         )?;
-        {
-            let mut m = self.buffers.lock().unwrap();
-            if let Some(st) = m.get_mut(&buf.0) {
-                st.residency = Residency::Server(dst_server);
-                st.last_event = ev;
-                st.allocated_on.insert(dst_server);
-            }
-        }
+        self.buffers.with(buf.0, |st| {
+            st.residency = Residency::Server(dst_server);
+            st.last_event = ev;
+            // The migration allocates at the destination; the migration
+            // event doubles as the allocation event.
+            st.allocated_on.entry(dst_server).or_insert(ev);
+        });
         Ok(ev)
     }
 }
 
-/// An OpenCL-style command queue bound to one remote device.
+/// An OpenCL-style command queue bound to one remote device, with its own
+/// transport stream to the server (clones share the stream).
 #[derive(Clone)]
 pub struct Queue {
     ctx: Context,
@@ -393,9 +569,24 @@ pub struct Queue {
     pub device: u32,
     in_order: bool,
     last_event: Arc<AtomicU64>,
+    /// The queue's dedicated stream, attached on first use (shared by
+    /// clones; falls back to the server's control stream when per-queue
+    /// streams are disabled or the attach fails). Dropping every clone of
+    /// the queue drops the stream handle, which tears the stream's
+    /// threads and socket down.
+    stream: Arc<OnceLock<QueueStream>>,
 }
 
 impl Queue {
+    /// This queue's transport stream, attaching it on first use.
+    fn stream(&self) -> Result<QueueStream> {
+        if let Some(s) = self.stream.get() {
+            return Ok(s.clone());
+        }
+        let conn = self.ctx.conn(self.server)?;
+        Ok(self.stream.get_or_init(|| conn.attach_queue()).clone())
+    }
+
     fn implicit_wait(&self) -> Vec<u64> {
         if self.in_order {
             let last = self.last_event.load(Ordering::SeqCst);
@@ -417,19 +608,18 @@ impl Queue {
         if alloc_ev != 0 {
             wait.push(alloc_ev);
         }
-        // WAR/WAW with the previous producer.
-        {
-            let m = self.ctx.buffers.lock().unwrap();
-            if let Some(st) = m.get(&buf.0) {
-                if st.last_event != 0 {
-                    wait.push(st.last_event);
-                }
+        // WAW with the previous producer, WAR with in-flight consumers.
+        self.ctx.buffers.with(buf.0, |st| {
+            if st.last_event != 0 {
+                wait.push(st.last_event);
             }
-        }
+            wait.extend_from_slice(&st.readers);
+        });
+        wait.sort_unstable();
+        wait.dedup();
         let ev = fresh_id();
         self.ctx.plat.events.ensure(ev);
-        let conn = self.ctx.conn(self.server)?;
-        conn.send_command(
+        self.stream()?.send_command(
             self.device,
             ev,
             wait,
@@ -440,29 +630,43 @@ impl Queue {
             },
             data.to_vec(),
         )?;
-        {
-            let mut m = self.ctx.buffers.lock().unwrap();
-            if let Some(st) = m.get_mut(&buf.0) {
-                st.residency = Residency::Server(self.server);
-                st.last_event = ev;
-            }
-        }
+        self.ctx.buffers.with(buf.0, |st| {
+            st.residency = Residency::Server(self.server);
+            st.last_event = ev;
+            st.readers.clear();
+        });
         self.note_event(ev);
         Ok(self.ctx.event(ev))
     }
 
-    /// Set the content size of a buffer (host-side extension update).
+    /// Set the content size of a buffer (host-side extension update). A
+    /// *producer* in the dependency graph: it orders behind the buffer's
+    /// previous producer and becomes its `last_event`, so consumers on any
+    /// stream (reads, kernels, migrations) observe the new size — there is
+    /// no socket FIFO between streams to rely on.
     pub fn set_content_size(&self, buf: Buffer, size: u64) -> Result<Event> {
-        let conn = self.ctx.conn(self.server)?;
+        let mut wait = self.implicit_wait();
+        self.ctx.buffers.with(buf.0, |st| {
+            if st.last_event != 0 {
+                wait.push(st.last_event);
+            }
+            wait.extend_from_slice(&st.readers);
+        });
+        wait.sort_unstable();
+        wait.dedup();
         let ev = fresh_id();
         self.ctx.plat.events.ensure(ev);
-        conn.send_command(
+        self.stream()?.send_command(
             self.device,
             ev,
-            self.implicit_wait(),
+            wait,
             Body::SetContentSize { buf: buf.0, size },
             Vec::new(),
         )?;
+        self.ctx.buffers.with(buf.0, |st| {
+            st.last_event = ev;
+            st.readers.clear();
+        });
         self.note_event(ev);
         Ok(self.ctx.event(ev))
     }
@@ -479,6 +683,7 @@ impl Queue {
         outs: &[Buffer],
         user_waits: &[&Event],
     ) -> Result<Event> {
+        let ev = fresh_id();
         let mut wait = self.implicit_wait();
         for w in user_waits {
             if w.id != 0 {
@@ -487,11 +692,11 @@ impl Queue {
         }
         // Inputs: make each resident on this queue's server.
         for a in args {
-            let (residency, last) = {
-                let m = self.ctx.buffers.lock().unwrap();
-                let st = m.get(&a.0).context("unknown arg buffer")?;
-                (st.residency, st.last_event)
-            };
+            let (residency, last) = self
+                .ctx
+                .buffers
+                .with(a.0, |st| (st.residency, st.last_event))
+                .context("unknown arg buffer")?;
             match residency {
                 Residency::Server(s) if s == self.server => {
                     if last != 0 {
@@ -519,21 +724,20 @@ impl Queue {
             if alloc != 0 {
                 wait.push(alloc);
             }
-            let m = self.ctx.buffers.lock().unwrap();
-            if let Some(st) = m.get(&o.0) {
+            self.ctx.buffers.with(o.0, |st| {
                 if st.last_event != 0 {
-                    // WAW/WAR ordering on the output buffer.
+                    // WAW ordering on the output buffer.
                     wait.push(st.last_event);
                 }
-            }
+                // WAR: in-flight consumers of the old contents.
+                wait.extend_from_slice(&st.readers);
+            });
         }
         wait.sort_unstable();
         wait.dedup();
 
-        let ev = fresh_id();
         self.ctx.plat.events.ensure(ev);
-        let conn = self.ctx.conn(self.server)?;
-        conn.send_command(
+        self.stream()?.send_command(
             self.device,
             ev,
             wait,
@@ -544,14 +748,21 @@ impl Queue {
             },
             Vec::new(),
         )?;
-        {
-            let mut m = self.ctx.buffers.lock().unwrap();
-            for o in outs {
-                if let Some(st) = m.get_mut(&o.0) {
-                    st.residency = Residency::Server(self.server);
-                    st.last_event = ev;
-                }
-            }
+        // Bookkeeping only after the send succeeded — a command that was
+        // never sent must leave no dependency edges behind (its event
+        // would never complete). Args register the kernel as a reader
+        // (the WAR edge a later producer on another stream waits on);
+        // outs are redefined, which clears their reader sets — an arg
+        // that is also an out therefore never waits on itself later.
+        for a in args {
+            self.ctx.note_reader(a.0, ev);
+        }
+        for o in outs {
+            self.ctx.buffers.with(o.0, |st| {
+                st.residency = Residency::Server(self.server);
+                st.last_event = ev;
+                st.readers.clear();
+            });
         }
         self.note_event(ev);
         Ok(self.ctx.event(ev))
@@ -568,62 +779,98 @@ impl Queue {
         Ok(self.ctx.event(ev))
     }
 
-    /// Download only the meaningful prefix of a buffer (content-size-aware
-    /// read; the server resolves the linked extension buffer).
-    pub fn read_content(&self, buf: Buffer) -> Result<Vec<u8>> {
-        self.read_inner(buf, u64::MAX)
+    /// Enqueue a download of the buffer's bytes **without blocking**: the
+    /// request is sent immediately (ordered server-side behind the
+    /// producing event) and the returned [`ReadHandle`] collects the
+    /// payload — overlap downloads with the next frame/step.
+    pub fn enqueue_read(&self, buf: Buffer) -> Result<ReadHandle> {
+        let size = self.ctx.buffer_size(buf);
+        self.enqueue_read_inner(buf, size)
     }
 
-    /// Download a buffer's bytes. Reads from wherever the freshest copy
+    /// Non-blocking content-size-aware download (only the meaningful
+    /// prefix crosses the link; the server resolves the linked extension
+    /// buffer).
+    pub fn enqueue_read_content(&self, buf: Buffer) -> Result<ReadHandle> {
+        self.enqueue_read_inner(buf, u64::MAX)
+    }
+
+    /// Download only the meaningful prefix of a buffer (blocking wrapper
+    /// over [`Queue::enqueue_read_content`]).
+    pub fn read_content(&self, buf: Buffer) -> Result<Vec<u8>> {
+        self.enqueue_read_content(buf)?.wait()
+    }
+
+    /// Download a buffer's bytes (blocking wrapper over
+    /// [`Queue::enqueue_read`]). Reads from wherever the freshest copy
     /// resides; waits for the producing event server-side.
     pub fn read(&self, buf: Buffer) -> Result<Vec<u8>> {
-        let size = self.ctx.buffer_size(buf);
-        self.read_inner(buf, size)
+        self.enqueue_read(buf)?.wait()
     }
 
-    fn read_inner(&self, buf: Buffer, len: u64) -> Result<Vec<u8>> {
-        let (server, last) = {
-            let m = self.ctx.buffers.lock().unwrap();
-            let st = m.get(&buf.0).context("unknown buffer")?;
-            let server = match st.residency {
-                Residency::Server(s) => s,
+    fn enqueue_read_inner(&self, buf: Buffer, len: u64) -> Result<ReadHandle> {
+        let ev = fresh_id();
+        let (holder, last) = self
+            .ctx
+            .buffers
+            .with(buf.0, |st| match st.residency {
+                Residency::Server(s) => Ok((s, st.last_event)),
                 _ => bail!("buffer has no server-side contents"),
-            };
-            (server, st.last_event)
-        };
+            })
+            .context("unknown buffer")??;
         let mut wait = self.implicit_wait();
         if last != 0 {
             wait.push(last);
         }
-        let ev = fresh_id();
         self.ctx.plat.events.ensure(ev);
-        let conn = self.ctx.conn(server)?;
-        conn.send_command(
-            self.device,
-            ev,
-            wait,
-            Body::ReadBuffer {
-                buf: buf.0,
-                offset: 0,
-                len,
-            },
-            Vec::new(),
-        )?;
+        // Route the read to wherever the freshest copy lives. On this
+        // queue's own server it rides the queue's stream; a foreign
+        // holder is reached over that server's control stream, and the
+        // read targets its device 0 — reads are not device-bound, and the
+        // queue's device index may not exist on the holder.
+        if holder == self.server {
+            self.stream()?.send_command(
+                self.device,
+                ev,
+                wait,
+                Body::ReadBuffer {
+                    buf: buf.0,
+                    offset: 0,
+                    len,
+                },
+                Vec::new(),
+            )?;
+        } else {
+            self.ctx.conn(holder)?.send_command(
+                0,
+                ev,
+                wait,
+                Body::ReadBuffer {
+                    buf: buf.0,
+                    offset: 0,
+                    len,
+                },
+                Vec::new(),
+            )?;
+        }
+        // Register as a consumer only once the request is actually in
+        // flight: later producers on other streams wait for this download
+        // (WAR); an unsent read must leave no such edge behind.
+        self.ctx.note_reader(buf.0, ev);
         self.note_event(ev);
-        let event = self.ctx.event(ev);
-        event.wait()?;
-        self.ctx
-            .plat
-            .read_results
-            .lock()
-            .unwrap()
-            .remove(&ev)
-            .context("read completed but payload missing")
+        Ok(ReadHandle {
+            event: self.ctx.event(ev),
+            results: Arc::clone(&self.ctx.plat.read_results),
+        })
     }
 
-    /// Block until everything enqueued on this queue has completed.
+    /// Block until everything enqueued on this queue has completed. A
+    /// never-used queue has nothing to wait for and returns immediately.
     pub fn finish(&self) -> Result<()> {
         let last = self.last_event.load(Ordering::SeqCst);
+        if last == 0 {
+            return Ok(());
+        }
         self.ctx.event(last).wait()
     }
 }
@@ -637,7 +884,53 @@ mod tests {
         let c = ClientConfig::default();
         assert!(c.reconnect);
         assert!(c.content_size_enabled);
+        assert!(c.per_queue_streams);
         assert!(!c.rdma_migrations);
         assert_eq!(c.backup_depth, 128);
+    }
+
+    #[test]
+    fn bufmap_spreads_ids_and_survives_concurrency() {
+        let m = Arc::new(BufMap::new());
+        for id in 1..=64u64 {
+            m.insert(
+                id,
+                BufState {
+                    size: id,
+                    residency: Residency::Undefined,
+                    last_event: 0,
+                    content_size_buf: 0,
+                    allocated_on: HashMap::new(),
+                    readers: Vec::new(),
+                },
+            );
+        }
+        let occupied = m
+            .shards
+            .iter()
+            .filter(|s| !s.read().unwrap().is_empty())
+            .count();
+        assert!(occupied > BUF_SHARDS / 2, "ids clumped: {occupied} shards");
+        // Concurrent per-buffer mutation from many threads.
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        let id = 1 + (t * 997 + i) % 64;
+                        m.with(id, |st| st.last_event += 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: u64 = (1..=64u64)
+            .map(|id| m.with(id, |st| st.last_event).unwrap())
+            .sum();
+        assert_eq!(total, 8 * 1000);
+        assert_eq!(m.remove(1).unwrap().size, 1);
+        assert!(m.with(1, |_| ()).is_none());
     }
 }

@@ -1,5 +1,19 @@
-//! One client-side server connection: writer thread, reader thread,
-//! session handshake, command backup ring and reconnection (paper §4.3).
+//! Client-side transport to one server: a shared *session core* plus one
+//! writer/reader thread pair **per command queue** (paper §4.2: "each
+//! command queue has its own writer/reader thread pair"), with session
+//! handshake, per-stream command backup rings and per-stream reconnection
+//! (paper §4.3).
+//!
+//! * [`SessionCore`] — what all streams to one server share: the session
+//!   id, the event/read-result tables and the link-availability flag.
+//! * [`QueueStream`] — one socket with its own writer thread, reader
+//!   thread, cmd-id counter, backup ring and reconnect loop. Stream 0 is
+//!   the session *control stream* (established via `Hello`, used for
+//!   context-level commands: allocations, frees, migrations); streams
+//!   N > 0 attach via `AttachQueue` and carry one command queue each, so
+//!   independent queues never serialize on one socket.
+//! * [`ServerConn`] — the per-server bundle: core + control stream +
+//!   attached queue streams.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
@@ -15,18 +29,41 @@ use crate::sched::EventTable;
 
 use super::ClientConfig;
 
-/// Shared connection state.
-pub struct ServerConn {
+/// State shared by every stream to one server.
+pub struct SessionCore {
     pub server_id: u32,
     pub addr: String,
-    cfg: ClientConfig,
-    events: Arc<EventTable>,
-    read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
-    tx: Sender<Packet>,
+    pub cfg: ClientConfig,
+    pub events: Arc<EventTable>,
+    pub read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    /// Session id from the control stream's Welcome; queue streams present
+    /// it in their `AttachQueue`.
     session: Mutex<SessionId>,
-    next_cmd_id: AtomicU64,
     n_devices: AtomicU32,
+    /// One availability flag per server: the access link either works or
+    /// it does not. Any stream discovering a dead socket marks the server
+    /// unavailable; any successful (re)handshake or write re-arms it.
     available: Arc<AtomicBool>,
+}
+
+/// Handle to one socket with its own writer/reader thread pair. Clones
+/// share the stream; dropping the last handle (and any queued packets)
+/// closes the writer's channel, which tears the writer thread, socket and
+/// reader down — transient queues leak nothing.
+#[derive(Clone)]
+pub struct QueueStream {
+    inner: Arc<StreamInner>,
+    /// Held only by handles (never by the I/O threads), so channel
+    /// disconnect *is* the teardown signal.
+    tx: Sender<Packet>,
+}
+
+/// Stream state shared between handles and the stream's I/O threads.
+struct StreamInner {
+    core: Arc<SessionCore>,
+    /// 0 = session control stream, N > 0 = command queue stream.
+    queue_id: u32,
+    next_cmd_id: AtomicU64,
     /// Connection generation, bumped on every successful handshake. Each
     /// reader is tied to the generation it was spawned under, so a stale
     /// reader noticing its (long-dead) socket failing cannot mark the
@@ -42,47 +79,36 @@ pub struct ServerConn {
     backup: Mutex<VecDeque<(u64, Packet)>>,
 }
 
-impl ServerConn {
-    /// Dial, handshake, spawn I/O threads.
-    pub fn connect(
-        server_id: u32,
-        addr: String,
-        cfg: ClientConfig,
-        events: Arc<EventTable>,
-        read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
-    ) -> Result<Arc<ServerConn>> {
+impl QueueStream {
+    /// Dial, handshake (Hello for stream 0, AttachQueue otherwise), spawn
+    /// the I/O threads.
+    fn open(core: Arc<SessionCore>, queue_id: u32) -> Result<QueueStream> {
         let (tx, rx) = channel::<Packet>();
-        let conn = Arc::new(ServerConn {
-            server_id,
-            addr,
-            cfg,
-            events,
-            read_results,
-            tx,
-            session: Mutex::new([0u8; 16]),
+        let inner = Arc::new(StreamInner {
+            core,
+            queue_id,
             next_cmd_id: AtomicU64::new(1),
-            n_devices: AtomicU32::new(0),
-            available: Arc::new(AtomicBool::new(false)),
             conn_gen: Arc::new(AtomicU64::new(0)),
             probe_pending: AtomicBool::new(false),
             backup: Mutex::new(VecDeque::new()),
         });
-        let (stream, generation) = conn.dial_and_handshake()?;
-        conn.spawn_reader(stream.try_clone()?, generation);
-        Self::spawn_writer(Arc::clone(&conn), stream, rx);
-        Ok(conn)
+        let (sock, generation) = inner.dial_and_handshake()?;
+        inner.spawn_reader(sock.try_clone()?, generation);
+        StreamInner::spawn_writer(Arc::clone(&inner), sock, rx);
+        Ok(QueueStream { inner, tx })
+    }
+
+    pub fn queue_id(&self) -> u32 {
+        self.inner.queue_id
     }
 
     pub fn available(&self) -> bool {
-        self.available.load(Ordering::SeqCst)
+        self.inner.core.available.load(Ordering::SeqCst)
     }
 
-    pub fn n_devices(&self) -> u32 {
-        self.n_devices.load(Ordering::SeqCst)
-    }
-
-    /// Enqueue a command towards this server. Fails fast with "device
-    /// unavailable" while disconnected (the Fig 4 fallback signal).
+    /// Enqueue a command towards this server on this stream. Fails fast
+    /// with "device unavailable" while disconnected (the Fig 4 fallback
+    /// signal).
     pub fn send_command(
         &self,
         device: u32,
@@ -91,54 +117,61 @@ impl ServerConn {
         body: Body,
         payload: Vec<u8>,
     ) -> Result<()> {
+        let inner = &self.inner;
         if !self.available() {
-            if self.cfg.reconnect && !self.probe_pending.swap(true, Ordering::SeqCst) {
+            if inner.core.cfg.reconnect && !inner.probe_pending.swap(true, Ordering::SeqCst) {
                 // Wake the writer with a no-op probe (cmd_id 0, event 0 —
                 // invisible end to end): its write fails on the dead
                 // socket, which is what triggers the reconnect loop.
                 self.tx.send(Packet::bare(Msg::control(Body::Barrier))).ok();
             }
-            bail!("device unavailable: server {} is disconnected", self.server_id);
+            bail!(
+                "device unavailable: server {} is disconnected",
+                inner.core.server_id
+            );
         }
-        let cmd_id = self.next_cmd_id.fetch_add(1, Ordering::SeqCst);
+        let cmd_id = inner.next_cmd_id.fetch_add(1, Ordering::SeqCst);
         let msg = Msg {
             cmd_id,
-            queue: 0,
+            queue: inner.queue_id,
             device,
             event,
             wait,
             body,
         };
-        let pkt = Packet {
-            msg,
-            payload,
-        };
+        let pkt = Packet { msg, payload };
         {
-            let mut backup = self.backup.lock().unwrap();
+            let mut backup = inner.backup.lock().unwrap();
             backup.push_back((cmd_id, pkt.clone()));
-            while backup.len() > self.cfg.backup_depth {
+            while backup.len() > inner.core.cfg.backup_depth {
                 backup.pop_front();
             }
         }
         self.tx.send(pkt).context("writer gone")?;
         Ok(())
     }
+}
 
+impl StreamInner {
     /// Dial + handshake. On success the connection generation is bumped
-    /// (retiring every older reader) and the link is marked available.
-    /// Returns the fresh stream and its generation.
+    /// (retiring every older reader of this stream) and the link is marked
+    /// available. Returns the fresh socket and its generation.
     fn dial_and_handshake(&self) -> Result<(TcpStream, u64)> {
-        let mut stream = crate::net::tcp::connect(self.addr.as_str())?;
-        let session = *self.session.lock().unwrap();
-        write_packet(
-            &mut stream,
-            &Msg::control(Body::Hello {
+        let mut stream = crate::net::tcp::connect(self.core.addr.as_str())?;
+        let session = *self.core.session.lock().unwrap();
+        let hello = if self.queue_id == 0 {
+            Body::Hello {
                 session,
                 role: crate::proto::ROLE_CLIENT,
                 peer_id: 0,
-            }),
-            &[],
-        )?;
+            }
+        } else {
+            Body::AttachQueue {
+                session,
+                queue: self.queue_id,
+            }
+        };
+        write_packet(&mut stream, &Msg::control(hello), &[])?;
         let pkt = read_packet(&mut stream).context("reading Welcome")?;
         let Body::Welcome {
             session: sid,
@@ -149,14 +182,18 @@ impl ServerConn {
         else {
             bail!("expected Welcome, got {:?}", pkt.msg.body);
         };
-        *self.session.lock().unwrap() = sid;
-        self.n_devices.store(n_devices, Ordering::SeqCst);
+        if self.queue_id == 0 {
+            // Only the control stream owns the session bookkeeping.
+            *self.core.session.lock().unwrap() = sid;
+            self.core.n_devices.store(n_devices, Ordering::SeqCst);
+        }
         // Retire older readers *before* re-arming availability, so a stale
         // reader racing this handshake can never flip the fresh link down.
         let generation = self.conn_gen.fetch_add(1, Ordering::SeqCst) + 1;
-        self.available.store(true, Ordering::SeqCst);
+        self.core.available.store(true, Ordering::SeqCst);
         self.probe_pending.store(false, Ordering::SeqCst);
-        // Replay commands the server never processed (paper §4.3).
+        // Replay commands the server never processed on this stream
+        // (paper §4.3; `last_seen_cmd` is this stream's replay cursor).
         let backup = self.backup.lock().unwrap();
         for (cmd_id, pkt) in backup.iter() {
             if *cmd_id > last_seen_cmd {
@@ -167,18 +204,19 @@ impl ServerConn {
     }
 
     /// Writer thread: pace the access link once per packet, write, and on
-    /// failure run the reconnect loop (marking devices unavailable
-    /// meanwhile).
-    fn spawn_writer(conn: Arc<ServerConn>, stream: TcpStream, rx: Receiver<Packet>) {
+    /// failure run the reconnect loop (marking the server unavailable
+    /// meanwhile). Exits when every stream handle is gone and the channel
+    /// drains, closing the socket (which in turn retires the reader).
+    fn spawn_writer(conn: Arc<StreamInner>, stream: TcpStream, rx: Receiver<Packet>) {
         std::thread::Builder::new()
-            .name(format!("poclr-cw{}", conn.server_id))
+            .name(format!("poclr-cw{}q{}", conn.core.server_id, conn.queue_id))
             .spawn(move || {
                 let mut stream = Some(stream);
                 while let Ok(pkt) = rx.recv() {
                     loop {
                         let Some(s) = stream.as_mut() else { break };
                         let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
-                        conn.cfg.link.pace(bytes);
+                        conn.core.cfg.link.pace(bytes);
                         if write_packet(s, &pkt.msg, &pkt.payload).is_ok() {
                             // A successful write proves the link is up:
                             // re-arm availability. This also heals the
@@ -187,13 +225,13 @@ impl ServerConn {
                             // lost the CPU across a reconnect, and then
                             // flipped the fresh link down — the next probe
                             // write lands here and undoes it.
-                            conn.available.store(true, Ordering::SeqCst);
+                            conn.core.available.store(true, Ordering::SeqCst);
                             conn.probe_pending.store(false, Ordering::SeqCst);
                             break;
                         }
                         // Connection lost mid-command.
-                        conn.available.store(false, Ordering::SeqCst);
-                        if !conn.cfg.reconnect {
+                        conn.core.available.store(false, Ordering::SeqCst);
+                        if !conn.core.cfg.reconnect {
                             return;
                         }
                         match conn.reconnect_blocking() {
@@ -207,7 +245,7 @@ impl ServerConn {
                             None => return,
                         }
                     }
-                    if stream.is_none() && !conn.cfg.reconnect {
+                    if stream.is_none() && !conn.core.cfg.reconnect {
                         return;
                     }
                     if stream.is_none() {
@@ -242,17 +280,117 @@ impl ServerConn {
     /// only uses cloned Arcs of the tables, never `&self`, so this works
     /// from the writer thread during reconnects too.
     fn spawn_reader(&self, stream: TcpStream, generation: u64) {
-        let events = Arc::clone(&self.events);
-        let read_results = Arc::clone(&self.read_results);
-        let available = Arc::clone(&self.available);
+        let events = Arc::clone(&self.core.events);
+        let read_results = Arc::clone(&self.core.read_results);
+        let available = Arc::clone(&self.core.available);
         let conn_gen = Arc::clone(&self.conn_gen);
-        let server_id = self.server_id;
+        let server_id = self.core.server_id;
+        let queue_id = self.queue_id;
         std::thread::Builder::new()
-            .name(format!("poclr-cr{server_id}"))
+            .name(format!("poclr-cr{server_id}q{queue_id}"))
             .spawn(move || {
                 reader_loop_impl(stream, events, read_results, available, conn_gen, generation);
             })
             .expect("spawn client reader");
+    }
+}
+
+/// A client's connection bundle to one server: shared session core, the
+/// control stream, and every attached queue stream.
+pub struct ServerConn {
+    pub core: Arc<SessionCore>,
+    control: QueueStream,
+    /// Queue streams attached over this connection's lifetime (metrics).
+    /// Only a counter — the queue owns its stream handle, so dropping the
+    /// last `Queue` clone tears the stream's threads and socket down.
+    queues_attached: AtomicU32,
+    next_queue: AtomicU32,
+}
+
+impl ServerConn {
+    /// Dial, perform the session handshake, spawn the control stream's
+    /// I/O threads.
+    pub fn connect(
+        server_id: u32,
+        addr: String,
+        cfg: ClientConfig,
+        events: Arc<EventTable>,
+        read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    ) -> Result<Arc<ServerConn>> {
+        let core = Arc::new(SessionCore {
+            server_id,
+            addr,
+            cfg,
+            events,
+            read_results,
+            session: Mutex::new([0u8; 16]),
+            n_devices: AtomicU32::new(0),
+            available: Arc::new(AtomicBool::new(false)),
+        });
+        let control = QueueStream::open(Arc::clone(&core), 0)?;
+        Ok(Arc::new(ServerConn {
+            core,
+            control,
+            queues_attached: AtomicU32::new(0),
+            next_queue: AtomicU32::new(1),
+        }))
+    }
+
+    /// Attach a dedicated stream for a new command queue. Falls back to
+    /// the shared control stream when per-queue streams are disabled
+    /// (single-connection baseline) or the attach dial fails — the queue
+    /// then behaves exactly like the pre-redesign shared-socket driver.
+    pub fn attach_queue(&self) -> QueueStream {
+        if !self.core.cfg.per_queue_streams {
+            return self.control.clone();
+        }
+        let queue_id = self.next_queue.fetch_add(1, Ordering::SeqCst);
+        match QueueStream::open(Arc::clone(&self.core), queue_id) {
+            Ok(stream) => {
+                self.queues_attached.fetch_add(1, Ordering::Relaxed);
+                stream
+            }
+            Err(e) => {
+                eprintln!(
+                    "[poclr] queue stream attach to server {} failed ({e:#}); \
+                     sharing the control stream",
+                    self.core.server_id
+                );
+                self.control.clone()
+            }
+        }
+    }
+
+    /// The session control stream (context-level commands: allocations,
+    /// frees, migrations, cross-server reads).
+    pub fn control(&self) -> &QueueStream {
+        &self.control
+    }
+
+    /// Send a context-level command on the control stream.
+    pub fn send_command(
+        &self,
+        device: u32,
+        event: u64,
+        wait: Vec<u64>,
+        body: Body,
+        payload: Vec<u8>,
+    ) -> Result<()> {
+        self.control.send_command(device, event, wait, body, payload)
+    }
+
+    pub fn available(&self) -> bool {
+        self.core.available.load(Ordering::SeqCst)
+    }
+
+    pub fn n_devices(&self) -> u32 {
+        self.core.n_devices.load(Ordering::SeqCst)
+    }
+
+    /// Queue streams attached over this connection's lifetime
+    /// (tests/metrics).
+    pub fn n_queue_streams(&self) -> usize {
+        self.queues_attached.load(Ordering::Relaxed) as usize
     }
 }
 
@@ -310,25 +448,32 @@ fn reader_loop_impl(
 mod tests {
     use super::*;
 
-    #[test]
-    fn unavailable_conn_rejects_commands() {
-        // Construct a conn struct directly in the unavailable state.
-        let (tx, _rx) = channel();
-        let conn = ServerConn {
+    fn bare_stream(cfg: ClientConfig, available: bool) -> (QueueStream, Receiver<Packet>) {
+        let (tx, rx) = channel();
+        let core = Arc::new(SessionCore {
             server_id: 0,
             addr: "127.0.0.1:1".into(),
-            cfg: ClientConfig::default(),
+            cfg,
             events: Arc::new(EventTable::new()),
             read_results: Arc::new(Mutex::new(HashMap::new())),
-            tx,
             session: Mutex::new([0u8; 16]),
-            next_cmd_id: AtomicU64::new(1),
             n_devices: AtomicU32::new(0),
-            available: Arc::new(AtomicBool::new(false)),
+            available: Arc::new(AtomicBool::new(available)),
+        });
+        let inner = Arc::new(StreamInner {
+            core,
+            queue_id: 3,
+            next_cmd_id: AtomicU64::new(1),
             conn_gen: Arc::new(AtomicU64::new(0)),
             probe_pending: AtomicBool::new(false),
             backup: Mutex::new(VecDeque::new()),
-        };
+        });
+        (QueueStream { inner, tx }, rx)
+    }
+
+    #[test]
+    fn unavailable_stream_rejects_commands() {
+        let (conn, _rx) = bare_stream(ClientConfig::default(), false);
         let err = conn
             .send_command(0, 1, vec![], Body::Barrier, vec![])
             .unwrap_err();
@@ -336,35 +481,26 @@ mod tests {
     }
 
     #[test]
-    fn backup_ring_is_bounded() {
-        let (tx, _rx) = channel();
-        let mut cfg = ClientConfig::default();
-        cfg.backup_depth = 4;
-        let conn = ServerConn {
-            server_id: 0,
-            addr: "127.0.0.1:1".into(),
-            cfg,
-            events: Arc::new(EventTable::new()),
-            read_results: Arc::new(Mutex::new(HashMap::new())),
-            tx,
-            session: Mutex::new([0u8; 16]),
-            next_cmd_id: AtomicU64::new(1),
-            n_devices: AtomicU32::new(0),
-            available: Arc::new(AtomicBool::new(true)),
-            conn_gen: Arc::new(AtomicU64::new(0)),
-            probe_pending: AtomicBool::new(false),
-            backup: Mutex::new(VecDeque::new()),
+    fn backup_ring_is_bounded_and_commands_stream_tagged() {
+        let cfg = ClientConfig {
+            backup_depth: 4,
+            ..Default::default()
         };
+        let (conn, rx) = bare_stream(cfg, true);
         for _ in 0..10 {
             conn.send_command(0, 0, vec![], Body::Barrier, vec![]).unwrap();
         }
-        assert_eq!(conn.backup.lock().unwrap().len(), 4);
+        assert_eq!(conn.inner.backup.lock().unwrap().len(), 4);
         // ids keep increasing even when the ring rotates
-        assert_eq!(conn.backup.lock().unwrap().back().unwrap().0, 10);
+        assert_eq!(conn.inner.backup.lock().unwrap().back().unwrap().0, 10);
+        // every packet carries the stream's queue tag
+        let pkt = rx.try_recv().unwrap();
+        assert_eq!(pkt.msg.queue, 3);
     }
 
     // The stale-reader/generation behavior is covered end to end by
     // `reconnect_storm_leaves_link_stably_available` in
     // tests/integration_reconnect.rs, which exercises the real reader
-    // threads across repeated kicks.
+    // threads across repeated kicks; multi-stream semantics by
+    // tests/multi_queue.rs.
 }

@@ -3,7 +3,13 @@
 //!
 //! * Client connections begin with `Hello{role=CLIENT}`; the daemon replies
 //!   `Welcome{session, last_seen_cmd}` (fresh session for all-zero ids,
-//!   resumed session otherwise — paper §4.3).
+//!   resumed session otherwise — paper §4.3). This socket is the session's
+//!   *control stream* (stream 0).
+//! * `AttachQueue{session, queue}` attaches one more socket pair to the
+//!   session, carrying exactly the commands of command queue `queue` — the
+//!   paper's "each command queue has its own writer/reader thread pair".
+//!   All queue streams funnel into the one dispatcher; each has its own
+//!   replay cursor and its own completion writer.
 //! * Peer connections begin with `Hello{role=PEER, peer_id}`; both ends
 //!   register reader/writer threads for the mesh.
 //!
@@ -48,17 +54,17 @@ fn handle_new_connection(
     crate::net::tcp::tune(&stream).ok();
     let mut rd = stream.try_clone().context("clone stream")?;
     let first = read_packet(&mut rd).context("reading handshake")?;
-    let Body::Hello {
-        session,
-        role,
-        peer_id,
-    } = first.msg.body
-    else {
-        bail!("expected Hello, got {:?}", first.msg.body);
-    };
-    match role {
-        ROLE_CLIENT => handle_client_conn(stream, session, state, work_tx),
-        ROLE_PEER => {
+    match first.msg.body {
+        Body::Hello {
+            session,
+            role: ROLE_CLIENT,
+            ..
+        } => handle_client_conn(stream, session, state, work_tx),
+        Body::Hello {
+            role: ROLE_PEER,
+            peer_id,
+            ..
+        } => {
             start_peer_io(stream, peer_id, Arc::clone(&state), work_tx)?;
             // Advertise our RDMA shadow region to the dialing peer (the
             // dialer does the same from `Daemon::connect_peer`).
@@ -74,10 +80,15 @@ fn handle_new_connection(
             }
             Ok(())
         }
-        r => bail!("unknown role {r}"),
+        Body::AttachQueue { session, queue } => {
+            handle_queue_conn(stream, session, queue, state, work_tx)
+        }
+        other => bail!("expected Hello/AttachQueue, got {other:?}"),
     }
 }
 
+/// Session control stream (stream 0): issues/resumes the session, then
+/// runs the shared client-stream loop.
 fn handle_client_conn(
     stream: TcpStream,
     presented: [u8; 16],
@@ -88,16 +99,51 @@ fn handle_client_conn(
     // session we handed out (paper: ids map connections to contexts).
     let (sid, last_seen) = {
         let mut sess = state.session.lock().unwrap();
-        if presented != [0u8; 16] && presented != sess.id {
-            // Unknown session: treat as fresh (the old context is gone).
-            sess.last_seen_cmd = 0;
+        if presented != sess.id {
+            // Fresh or unknown session: the old replay state is void for
+            // *every* stream of the session.
+            sess.reset_cursors();
         }
-        if presented == [0u8; 16] {
-            sess.last_seen_cmd = 0;
-        }
-        (sess.id, sess.last_seen_cmd)
+        (sess.id, sess.last_seen(0))
     };
+    run_client_stream(stream, 0, sid, last_seen, state, work_tx)
+}
 
+/// Queue-scoped stream: attaches to the existing session. An unknown
+/// session id is accepted (the daemon may have restarted and lost the
+/// session; the client replays its backup from scratch), but only that
+/// queue's cursor is reset.
+fn handle_queue_conn(
+    stream: TcpStream,
+    presented: [u8; 16],
+    queue: u32,
+    state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+) -> Result<()> {
+    if queue == 0 {
+        bail!("AttachQueue for stream 0 (the control stream attaches via Hello)");
+    }
+    let (sid, last_seen) = {
+        let mut sess = state.session.lock().unwrap();
+        if presented != sess.id {
+            sess.reset_cursor(queue);
+        }
+        (sess.id, sess.last_seen(queue))
+    };
+    run_client_stream(stream, queue, sid, last_seen, state, work_tx)
+}
+
+/// Shared client-stream machinery: Welcome reply, writer registration,
+/// reader loop with per-stream replay dedup. The calling thread becomes
+/// the reader.
+fn run_client_stream(
+    stream: TcpStream,
+    queue: u32,
+    sid: [u8; 16],
+    last_seen: u64,
+    state: Arc<DaemonState>,
+    work_tx: Sender<Work>,
+) -> Result<()> {
     let welcome = Msg::control(Body::Welcome {
         session: sid,
         server_id: state.server_id,
@@ -106,23 +152,32 @@ fn handle_client_conn(
     });
     let mut ws = stream.try_clone()?;
     write_packet(&mut ws, &welcome, &[])?;
-    *state.client_stream.lock().unwrap() = Some(stream.try_clone()?);
+    // The instance id ties both registrations (socket handle + writer
+    // channel) to this physical connection, so a stale stream's cleanup
+    // can never evict a reattached one.
+    let instance = crate::util::fresh_id();
+    state
+        .client_streams
+        .lock()
+        .unwrap()
+        .insert(queue, (instance, stream.try_clone()?));
 
     // Writer thread for completions (and read-back payloads).
     let (tx, rx) = channel::<Packet>();
     {
-        let mut guard = state.client_tx.lock().unwrap();
-        // Flush completions that raced the disconnection window.
+        let mut txs = state.client_txs.lock().unwrap();
+        // Flush completions that raced a disconnection window — any live
+        // stream will do, the client routes by event id.
         for pkt in state.undelivered.lock().unwrap().drain(..) {
             tx.send(pkt).ok();
         }
-        *guard = Some(tx);
+        txs.insert(queue, (instance, tx));
     }
     spawn_writer(
         stream.try_clone()?,
         rx,
         state.client_link,
-        format!("pocld{}-cw", state.server_id),
+        format!("pocld{}-cw{}", state.server_id, queue),
     );
 
     // Reader loop (this thread becomes the reader).
@@ -131,23 +186,25 @@ fn handle_client_conn(
         match read_packet(&mut rd) {
             Ok(pkt) => {
                 // Replay dedup after reconnect ("the server simply ignores
-                // commands it has already processed"). Idempotent reads are
-                // exempt — re-executing them regenerates the lost payload.
+                // commands it has already processed"), per-stream cursor.
+                // Idempotent reads are exempt — re-executing them
+                // regenerates the lost payload.
                 let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
                 let dup = {
                     let mut sess = state.session.lock().unwrap();
-                    if pkt.msg.cmd_id != 0 && pkt.msg.cmd_id <= sess.last_seen_cmd {
+                    if pkt.msg.cmd_id != 0 && pkt.msg.cmd_id <= sess.last_seen(queue) {
                         !idempotent
                     } else {
                         if pkt.msg.cmd_id != 0 {
-                            sess.last_seen_cmd = pkt.msg.cmd_id;
+                            sess.note_seen(queue, pkt.msg.cmd_id);
                         }
                         false
                     }
                 };
                 if dup {
                     // If the duplicate already completed, the client lost
-                    // the completion in the disconnect — resend it.
+                    // the completion in the disconnect — resend it on this
+                    // stream.
                     if pkt.msg.event != 0 {
                         if let Some(st) = state.events.status(pkt.msg.event) {
                             if st.is_terminal() {
@@ -155,14 +212,15 @@ fn handle_client_conn(
                                     .events
                                     .timestamps(pkt.msg.event)
                                     .unwrap_or_default();
-                                state.send_to_client(Packet::bare(Msg::control(
-                                    Body::Completion {
+                                state.send_to_client_on(
+                                    queue,
+                                    Packet::bare(Msg::control(Body::Completion {
                                         event: pkt.msg.event,
                                         status: st.to_i8(),
                                         ts,
                                         payload_len: 0,
-                                    },
-                                )));
+                                    })),
+                                );
                             }
                         }
                     }
@@ -183,9 +241,20 @@ fn handle_client_conn(
         }
     }
     // Drop the writer channel: a half-dead connection must not swallow
-    // completions silently — they requeue when the client reconnects.
-    let mut guard = state.client_tx.lock().unwrap();
-    *guard = None;
+    // completions silently — they requeue when the client reconnects. Only
+    // evict our own registrations (a fresh stream may have replaced them).
+    {
+        let mut txs = state.client_txs.lock().unwrap();
+        if txs.get(&queue).is_some_and(|(i, _)| *i == instance) {
+            txs.remove(&queue);
+        }
+    }
+    {
+        let mut streams = state.client_streams.lock().unwrap();
+        if streams.get(&queue).is_some_and(|(i, _)| *i == instance) {
+            streams.remove(&queue);
+        }
+    }
     Ok(())
 }
 

@@ -28,6 +28,20 @@ use crate::util::now_ns;
 use super::migrate::{self, MigrationJob};
 use super::state::{DaemonState, MAX_ALLOC};
 
+/// The dispatcher reclaims old Complete events every this many packets
+/// (ROADMAP "Event-table GC wiring"): completions for commands at or below
+/// a stream's replay cursor are implicitly acked — the client advanced
+/// past them — so a long-running daemon's table stays bounded.
+pub const GC_EVERY_CMDS: u64 = 1024;
+/// Complete events kept across a GC pass (recent history for replay
+/// resends and late cross-stream wait lists; older reclaimed ids are
+/// covered by the event table's gc floor). Deliberately deep: the floor
+/// treats unknown ids below it as Complete, so the keep-depth is the
+/// margin protecting events that are *pending elsewhere* — it must
+/// outlast any realistic kernel/migration duration measured in
+/// completions (see `sched::table` gc_floor docs).
+pub const EVENT_TABLE_KEEP: usize = 16384;
+
 /// Work items feeding the dispatcher.
 pub enum Work {
     Packet {
@@ -56,6 +70,14 @@ struct Inflight {
     outs: Vec<u64>,
     queued_ns: u64,
     submit_ns: u64,
+}
+
+impl Dispatcher {
+    /// Which client stream should carry this event's completion (the
+    /// stream its command arrived on; 0 = control stream fallback).
+    fn take_origin(&mut self, event: u64) -> u32 {
+        self.event_origin.remove(&event).unwrap_or(0)
+    }
 }
 
 pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
@@ -91,6 +113,7 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
         parked: HashMap::new(),
         inflight: HashMap::new(),
         wake_queue: VecDeque::new(),
+        event_origin: HashMap::new(),
     };
 
     while let Ok(work) = rx.recv() {
@@ -101,9 +124,12 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
                 pkt,
                 via_rdma,
             } => {
-                d.state.commands_seen.fetch_add(1, Ordering::Relaxed);
+                let seen = d.state.commands_seen.fetch_add(1, Ordering::Relaxed) + 1;
                 d.admit(from_peer, pkt, via_rdma, now_ns());
                 d.pump();
+                if seen % GC_EVERY_CMDS == 0 {
+                    d.gc();
+                }
             }
             Work::ExecDone(outcome) => {
                 d.finish_kernel(outcome);
@@ -128,6 +154,10 @@ struct Dispatcher {
     /// Wakeups produced while handling the current work item; drained by
     /// [`Dispatcher::pump`] so poison/readiness propagates transitively.
     wake_queue: VecDeque<Wakeup>,
+    /// event id -> client queue stream the command arrived on, so the
+    /// completion returns on the same stream. Entries for events that
+    /// complete elsewhere (migrations) are pruned by [`Dispatcher::gc`].
+    event_origin: HashMap<u64, u32>,
 }
 
 impl Dispatcher {
@@ -135,6 +165,12 @@ impl Dispatcher {
     /// registers the command in the waiter index atomically with the
     /// dependency evaluation, so there is no re-check window.
     fn admit(&mut self, from_peer: Option<u32>, pkt: Packet, via_rdma: bool, queued_ns: u64) {
+        // Remember which client stream carried the command so its
+        // completion goes back out on that stream (queue 0 needs no entry:
+        // it is the routing default).
+        if from_peer.is_none() && pkt.msg.event != 0 && pkt.msg.queue != 0 {
+            self.event_origin.insert(pkt.msg.event, pkt.msg.queue);
+        }
         let token = crate::util::fresh_id();
         match self.state.events.park(token, &pkt.msg.wait) {
             DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns),
@@ -284,7 +320,11 @@ impl Dispatcher {
                 size,
                 rdma,
             } => {
-                // Heavy lifting happens on the migration worker.
+                // Heavy lifting happens on the migration worker. On
+                // success the *destination* completes the event, so this
+                // daemon never sends the completion — hand the origin
+                // stream to the worker for its local-failure path.
+                let origin = self.take_origin(event);
                 self.migrate_tx
                     .send(MigrationJob {
                         buf,
@@ -292,6 +332,7 @@ impl Dispatcher {
                         alloc_size: size,
                         event,
                         use_rdma: rdma != 0,
+                        origin_queue: origin,
                     })
                     .ok();
             }
@@ -356,6 +397,9 @@ impl Dispatcher {
                 event: ev,
                 status,
             } => {
+                // The event reached terminal state on another server; any
+                // local origin entry (e.g. a MigrateOut race) is stale.
+                self.event_origin.remove(&ev);
                 let st = EventStatus::from_i8(status);
                 let wakeups = if st == EventStatus::Failed {
                     self.state.events.fail(ev)
@@ -377,9 +421,11 @@ impl Dispatcher {
             Body::Barrier => {
                 self.complete_inline(event, queued_ns, submit_ns, Vec::new());
             }
-            Body::Hello { .. } | Body::Welcome { .. } | Body::Completion { .. } => {
-                // Handshakes are handled at accept time; Completion never
-                // flows client-ward into a daemon.
+            Body::Hello { .. } | Body::AttachQueue { .. } | Body::Welcome { .. }
+            | Body::Completion { .. } => {
+                // Handshakes (session + queue-stream attach) are handled
+                // at accept time; Completion never flows client-ward into
+                // a daemon.
             }
         }
     }
@@ -432,11 +478,13 @@ impl Dispatcher {
     }
 
     /// Mark complete locally (queueing any released waiters), send
-    /// Completion to the client and NotifyEvent to every peer (paper Fig 3).
+    /// Completion to the client — on the stream the command arrived on —
+    /// and NotifyEvent to every peer (paper Fig 3).
     fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Vec<u8>) {
         if event == 0 {
             return;
         }
+        let origin = self.take_origin(event);
         let wakeups = self.state.events.complete(event, ts);
         self.wake_queue.extend(wakeups);
         let completion = Msg::control(Body::Completion {
@@ -445,10 +493,13 @@ impl Dispatcher {
             ts,
             payload_len: payload.len() as u64,
         });
-        self.state.send_to_client(Packet {
-            msg: completion,
-            payload,
-        });
+        self.state.send_to_client_on(
+            origin,
+            Packet {
+                msg: completion,
+                payload,
+            },
+        );
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Complete.to_i8(),
@@ -460,6 +511,7 @@ impl Dispatcher {
         if event == 0 {
             return;
         }
+        let origin = self.take_origin(event);
         let wakeups = self.state.events.fail(event);
         self.wake_queue.extend(wakeups);
         let completion = Msg::control(Body::Completion {
@@ -468,7 +520,7 @@ impl Dispatcher {
             ts: Timestamps::default(),
             payload_len: 0,
         });
-        self.state.send_to_client(Packet::bare(completion));
+        self.state.send_to_client_on(origin, Packet::bare(completion));
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Failed.to_i8(),
@@ -478,5 +530,18 @@ impl Dispatcher {
 
     fn fail_command(&mut self, msg: &Msg) {
         self.fail_event(msg.event);
+    }
+
+    /// Periodic housekeeping: reclaim old Complete events (keeping recent
+    /// history for replay resends) and drop origin entries whose events
+    /// already reached terminal state elsewhere.
+    fn gc(&mut self) {
+        self.state.events.gc_terminal(EVENT_TABLE_KEEP);
+        let events = &self.state.events;
+        // Keep entries for events not yet terminal locally (parked or
+        // in-flight commands have no terminal status); drop only entries
+        // whose completion was already observed some other way.
+        self.event_origin
+            .retain(|ev, _| !events.status(*ev).is_some_and(|s| s.is_terminal()));
     }
 }

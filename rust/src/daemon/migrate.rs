@@ -24,6 +24,8 @@ pub struct MigrationJob {
     /// The migration event, completed by the destination.
     pub event: u64,
     pub use_rdma: bool,
+    /// Client stream the MigrateOut arrived on (failure-completion routing).
+    pub origin_queue: u32,
 }
 
 /// Spawn the migration worker thread; returns its job channel. `work_tx`
@@ -52,12 +54,15 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
                         status: crate::proto::EventStatus::Failed.to_i8(),
                     }));
                     state.broadcast_to_peers(&note);
-                    state.send_to_client(Packet::bare(Msg::control(Body::Completion {
-                        event: job.event,
-                        status: crate::proto::EventStatus::Failed.to_i8(),
-                        ts: Default::default(),
-                        payload_len: 0,
-                    })));
+                    state.send_to_client_on(
+                        job.origin_queue,
+                        Packet::bare(Msg::control(Body::Completion {
+                            event: job.event,
+                            status: crate::proto::EventStatus::Failed.to_i8(),
+                            ts: Default::default(),
+                            payload_len: 0,
+                        })),
+                    );
                 }
             }
         })

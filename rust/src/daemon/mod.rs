@@ -197,12 +197,13 @@ impl Daemon {
         Ok(())
     }
 
-    /// Sever the live client connection without touching daemon state —
-    /// simulates an access-network drop or the UE roaming to a new IP
-    /// (paper §4.3). The client driver is expected to reconnect with its
+    /// Sever the live client connection — every attached stream, control
+    /// and queue-scoped alike — without touching daemon state; simulates
+    /// an access-network drop or the UE roaming to a new IP (paper §4.3).
+    /// The client driver is expected to reconnect each stream with its
     /// session id and replay unacknowledged commands.
     pub fn kick_client(&self) {
-        if let Some(s) = self.state.client_stream.lock().unwrap().take() {
+        for (_, (_, s)) in self.state.client_streams.lock().unwrap().drain() {
             s.shutdown(std::net::Shutdown::Both).ok();
         }
     }

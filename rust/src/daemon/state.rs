@@ -139,13 +139,20 @@ pub struct DaemonState {
     pub buffers: BufStore,
     pub events: EventTable,
     pub devices: Vec<DeviceExecutor>,
-    /// Writer channel to the connected client (None until it connects).
-    pub client_tx: Mutex<Option<Sender<Packet>>>,
-    /// Handle on the live client socket so tests can sever the connection
-    /// (simulating a network drop / UE roaming) without killing the daemon.
-    pub client_stream: Mutex<Option<std::net::TcpStream>>,
-    /// Completions produced while no client is connected; flushed in order
-    /// on (re)connect so the client driver can resolve its events.
+    /// Writer channels to the connected client, one per attached stream
+    /// (0 = the session control stream, N = the stream of command queue N).
+    /// Values are `(instance, sender)`: the instance id ties a channel to
+    /// one physical connection so a stale reader's cleanup can never evict
+    /// a reattached stream's fresh channel.
+    pub client_txs: Mutex<HashMap<u32, (u64, Sender<Packet>)>>,
+    /// Handles on the live client sockets (keyed and instance-guarded
+    /// like `client_txs`) so tests can sever every stream of the
+    /// connection (simulating a network drop / UE roaming) without
+    /// killing the daemon. Entries are removed when their reader exits.
+    pub client_streams: Mutex<HashMap<u32, (u64, std::net::TcpStream)>>,
+    /// Completions produced while no usable client stream exists; flushed
+    /// in order when any stream (re)connects so the client driver can
+    /// resolve its events.
     pub undelivered: Mutex<Vec<Packet>>,
     /// Writer channels to peers.
     pub peer_txs: Mutex<HashMap<u32, Sender<Packet>>>,
@@ -161,13 +168,39 @@ pub struct DaemonState {
     pub wake_examined: AtomicU64,
 }
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct SessionState {
     pub id: SessionId,
-    /// Highest client cmd_id fully processed — commands at or below this
-    /// are dropped on replay after reconnect (paper §4.3: "the server
-    /// simply ignores commands it has already processed").
-    pub last_seen_cmd: u64,
+    /// Per-stream replay-dedup cursors: queue id -> highest cmd_id fully
+    /// processed on that stream. Commands at or below the cursor are
+    /// dropped on replay after reconnect (paper §4.3: "the server simply
+    /// ignores commands it has already processed"). cmd_ids are allocated
+    /// per stream, so each stream needs its own cursor.
+    cursors: HashMap<u32, u64>,
+}
+
+impl SessionState {
+    pub fn last_seen(&self, queue: u32) -> u64 {
+        self.cursors.get(&queue).copied().unwrap_or(0)
+    }
+
+    pub fn note_seen(&mut self, queue: u32, cmd_id: u64) {
+        let c = self.cursors.entry(queue).or_insert(0);
+        if cmd_id > *c {
+            *c = cmd_id;
+        }
+    }
+
+    /// Forget all replay cursors (fresh client, or unknown session id).
+    pub fn reset_cursors(&mut self) {
+        self.cursors.clear();
+    }
+
+    /// Reset one stream's cursor (a queue attaching under an unknown
+    /// session replays from scratch).
+    pub fn reset_cursor(&mut self, queue: u32) {
+        self.cursors.remove(&queue);
+    }
 }
 
 impl DaemonState {
@@ -214,13 +247,13 @@ impl DaemonState {
             buffers: BufStore::new(),
             events: EventTable::new(),
             devices,
-            client_tx: Mutex::new(None),
-            client_stream: Mutex::new(None),
+            client_txs: Mutex::new(HashMap::new()),
+            client_streams: Mutex::new(HashMap::new()),
             undelivered: Mutex::new(Vec::new()),
             peer_txs: Mutex::new(HashMap::new()),
             session: Mutex::new(SessionState {
                 id: sid,
-                last_seen_cmd: 0,
+                cursors: HashMap::new(),
             }),
             rdma,
             shutdown: AtomicBool::new(false),
@@ -229,17 +262,31 @@ impl DaemonState {
         }))
     }
 
-    pub fn send_to_client(&self, pkt: Packet) {
-        let guard = self.client_tx.lock().unwrap();
-        match guard.as_ref() {
-            Some(tx) => {
-                if tx.send(pkt.clone()).is_err() {
-                    // Writer died mid-send: park for the next connection.
-                    self.undelivered.lock().unwrap().push(pkt);
+    /// Send to the client over the stream of queue `queue`, falling back
+    /// to the session control stream (queue 0), then to the undelivered
+    /// backlog. Completions for commands that arrived on a queue stream go
+    /// back out on the same stream, so replies never serialize on one
+    /// socket — the receiving side routes by event id, so any stream is
+    /// *correct*, this is about throughput.
+    pub fn send_to_client_on(&self, queue: u32, pkt: Packet) {
+        let txs = self.client_txs.lock().unwrap();
+        for q in [queue, 0] {
+            if let Some((_, tx)) = txs.get(&q) {
+                if tx.send(pkt.clone()).is_ok() {
+                    return;
                 }
             }
-            None => self.undelivered.lock().unwrap().push(pkt),
+            if queue == 0 {
+                break; // both probes are the same channel
+            }
         }
+        drop(txs);
+        // No usable stream: park for the next (re)connection.
+        self.undelivered.lock().unwrap().push(pkt);
+    }
+
+    pub fn send_to_client(&self, pkt: Packet) {
+        self.send_to_client_on(0, pkt);
     }
 
     pub fn send_to_peer(&self, peer: u32, pkt: Packet) {

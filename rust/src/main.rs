@@ -5,7 +5,7 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16` — print a DES scenario table.
+//! * `poclr sim fig12|fig13|fig16|queues` — print a DES scenario table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
 use poclr::client::{ClientConfig, Platform};
@@ -86,6 +86,17 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                 }
+                Some("queues") => {
+                    for qn in [1usize, 2, 4, 8] {
+                        let single = scenarios::queue_scaling_cmds_per_sec(qn, 1000, false);
+                        let multi = scenarios::queue_scaling_cmds_per_sec(qn, 1000, true);
+                        println!(
+                            "{qn} queue(s): single-conn {single:>9.0} cmd/s   \
+                             per-queue streams {multi:>9.0} cmd/s   ({:.2}x)",
+                            multi / single
+                        );
+                    }
+                }
                 Some("fig16") => {
                     for mode in [
                         FluidMode::Native,
@@ -103,7 +114,7 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                 }
-                other => anyhow::bail!("unknown sim scenario {other:?} (fig12|fig13|fig16)"),
+                other => anyhow::bail!("unknown sim scenario {other:?} (fig12|fig13|fig16|queues)"),
             }
             Ok(())
         }

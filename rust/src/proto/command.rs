@@ -73,13 +73,23 @@ pub enum Body {
         peer_id: u32,
     },
     /// Server handshake reply: the session to present when reconnecting and
-    /// the id of the last command the server has fully processed (replay
-    /// dedup point).
+    /// the id of the last command the server has fully processed **on the
+    /// stream being attached** (replay dedup point; per-queue streams each
+    /// have their own cursor).
     Welcome {
         session: SessionId,
         server_id: u32,
         n_devices: u32,
         last_seen_cmd: u64,
+    },
+    /// Client handshake for a *queue-scoped* stream: attach one more
+    /// socket pair to an already-established session, carrying exactly the
+    /// commands of command queue `queue` (the paper's "each command queue
+    /// has its own writer/reader thread pair", §4.2). The server replies
+    /// `Welcome` with the queue's replay cursor.
+    AttachQueue {
+        session: SessionId,
+        queue: u32,
     },
     /// Allocate a buffer of `size` bytes on the server.
     /// `content_size_buf` links the cl_pocl_content_size extension buffer
@@ -172,6 +182,7 @@ const T_COMPLETION: u8 = 11;
 const T_BARRIER: u8 = 12;
 const T_SET_CSIZE: u8 = 13;
 const T_RDMA_ADVERT: u8 = 14;
+const T_ATTACH_QUEUE: u8 = 15;
 
 /// A protocol message: routing header + body.
 #[derive(Debug, Clone, PartialEq)]
@@ -332,6 +343,11 @@ impl Msg {
                 w.u64(*rkey);
                 w.u64(*shadow_size);
             }
+            Body::AttachQueue { session, queue } => {
+                w.u8(T_ATTACH_QUEUE);
+                w.bytes(session);
+                w.u32(*queue);
+            }
         }
     }
 
@@ -417,6 +433,10 @@ impl Msg {
             T_RDMA_ADVERT => Body::RdmaAdvertise {
                 rkey: r.u64()?,
                 shadow_size: r.u64()?,
+            },
+            T_ATTACH_QUEUE => Body::AttachQueue {
+                session: r.bytes(16)?.try_into().unwrap(),
+                queue: r.u32()?,
             },
             t => {
                 return Err(WireError::BadTag {
@@ -526,6 +546,10 @@ mod tests {
             },
             Body::Barrier,
             Body::SetContentSize { buf: 1, size: 10 },
+            Body::AttachQueue {
+                session: [3u8; 16],
+                queue: 7,
+            },
         ];
         for (i, body) in bodies.into_iter().enumerate() {
             roundtrip(Msg {

@@ -48,6 +48,23 @@ struct Inner {
     waiters: HashMap<u64, Vec<u64>>,
     /// Parked token -> number of unresolved dependency registrations.
     parked: HashMap<u64, usize>,
+    /// Highest event id reclaimed by [`EventTable::gc_terminal`]. Only
+    /// *Complete* entries are ever reclaimed, so an unknown id at or below
+    /// the floor is known-Complete — without this, a wait list referencing
+    /// a reclaimed dependency would re-materialize it as Queued and park
+    /// forever (ids are allocated monotonically by `fresh_id`).
+    ///
+    /// Caveat: "unknown and below the floor" cannot be distinguished from
+    /// "exists elsewhere but still pending" — an event pending on another
+    /// server (or stranded in a severed stream's replay backlog) for
+    /// longer than keep-depth *completions* at this daemon, and only then
+    /// referenced here for the first time, would have its ordering edge
+    /// dropped. The deep keep-depth (see `dispatch::EVENT_TABLE_KEEP`)
+    /// makes that window unrealistic; the alternative — no floor — is a
+    /// guaranteed park-forever for every late reference to a
+    /// legitimately reclaimed event. Exact discrimination needs client
+    /// acks or a compressed reclaimed-id set (ROADMAP).
+    gc_floor: u64,
 }
 
 /// Thread-safe event status registry.
@@ -107,6 +124,8 @@ impl EventTable {
                 Some(EventStatus::Complete) => {}
                 Some(EventStatus::Failed) => return DepsState::Poisoned,
                 Some(_) => blocking.push(*id),
+                // Reclaimed ids were Complete (see `gc_floor`).
+                None if *id <= m.gc_floor => {}
                 None => {
                     Self::ensure_entry(&mut m, *id);
                     blocking.push(*id);
@@ -211,7 +230,14 @@ impl EventTable {
     }
 
     pub fn status(&self, id: u64) -> Option<EventStatus> {
-        self.inner.lock().unwrap().events.get(&id).map(|e| e.status)
+        let m = self.inner.lock().unwrap();
+        match m.events.get(&id) {
+            Some(e) => Some(e.status),
+            // Reclaimed entries were Complete; report that rather than
+            // "unknown" so replay dedup can still resend completions.
+            None if id != 0 && id <= m.gc_floor => Some(EventStatus::Complete),
+            None => None,
+        }
     }
 
     pub fn timestamps(&self, id: u64) -> Option<Timestamps> {
@@ -231,6 +257,7 @@ impl EventTable {
             match m.events.get(id).map(|e| e.status) {
                 Some(EventStatus::Complete) => {}
                 Some(EventStatus::Failed) => return DepsState::Poisoned,
+                None if *id <= m.gc_floor => {}
                 _ => all_done = false,
             }
         }
@@ -252,6 +279,7 @@ impl EventTable {
             match m.events.get(&id).map(|e| e.status) {
                 Some(EventStatus::Complete) => return WaitOutcome::Complete,
                 Some(EventStatus::Failed) => return WaitOutcome::Failed,
+                None if id <= m.gc_floor => return WaitOutcome::Complete,
                 _ => {}
             }
             let now = std::time::Instant::now();
@@ -276,26 +304,32 @@ impl EventTable {
         self.len() == 0
     }
 
-    /// Drop terminal entries older than the table cares about. Called
-    /// periodically by the daemon to bound memory (the paper's daemons are
-    /// long-running). Events with live waiter registrations are terminal-
-    /// only by construction (waiters drain at the terminal transition), so
-    /// this never strands a parked command.
+    /// Drop old *Complete* entries so a long-running daemon's table stays
+    /// bounded (wired into the dispatcher loop; see
+    /// `daemon::dispatch::GC_EVERY_CMDS`). Failed entries are kept: they
+    /// carry poison that must keep propagating to late dependents, and
+    /// they are rare. Reclaimed ids are remembered via `gc_floor` so later
+    /// wait lists referencing them still read as Complete. Events with
+    /// live waiter registrations are non-terminal by construction (waiters
+    /// drain at the terminal transition), so this never strands a parked
+    /// command.
     pub fn gc_terminal(&self, keep_latest: usize) {
         let mut m = self.inner.lock().unwrap();
         if m.events.len() <= keep_latest {
             return;
         }
-        let mut terminal: Vec<u64> = m
+        let mut complete: Vec<u64> = m
             .events
             .iter()
-            .filter(|(_, e)| e.status.is_terminal())
+            .filter(|(_, e)| e.status == EventStatus::Complete)
             .map(|(id, _)| *id)
             .collect();
-        terminal.sort_unstable();
+        complete.sort_unstable();
         let excess = m.events.len().saturating_sub(keep_latest);
-        for id in terminal.into_iter().take(excess) {
+        for id in complete.into_iter().take(excess) {
             m.events.remove(&id);
+            m.waiters.remove(&id);
+            m.gc_floor = m.gc_floor.max(id);
         }
     }
 }
@@ -400,6 +434,31 @@ mod tests {
         t.gc_terminal(10);
         assert!(t.len() <= 11);
         assert_eq!(t.status(101), Some(EventStatus::Queued));
+    }
+
+    #[test]
+    fn gc_reclaimed_ids_still_read_complete() {
+        let t = EventTable::new();
+        for i in 1..=100 {
+            t.complete(i, Timestamps::default());
+        }
+        t.gc_terminal(5);
+        // A wait list referencing a reclaimed dependency must be Ready,
+        // not park forever on a re-materialized Queued ghost.
+        assert_eq!(t.park(7, &[1, 2, 3]), DepsState::Ready);
+        assert_eq!(t.deps_state(&[4]), DepsState::Ready);
+        assert_eq!(t.wait(2), WaitOutcome::Complete);
+        // Replay dedup still sees the event as terminal.
+        assert_eq!(t.status(3), Some(EventStatus::Complete));
+        // Failed entries survive GC so poison keeps propagating.
+        let t2 = EventTable::new();
+        for i in 1..=50 {
+            t2.complete(i, Timestamps::default());
+        }
+        t2.fail(51);
+        t2.gc_terminal(2);
+        assert_eq!(t2.status(51), Some(EventStatus::Failed));
+        assert_eq!(t2.park(9, &[51]), DepsState::Poisoned);
     }
 
     // ---- reverse waiter index -------------------------------------------

@@ -91,6 +91,51 @@ pub fn fig13_rdma_speedup(n: usize, servers: usize) -> f64 {
     done_tcp / done_rdma
 }
 
+/// Multi-queue client scaling (paper §4.2 / the Fig 13 multiple-queue
+/// experiment): aggregate small-command throughput for `n_queues` command
+/// queues, either funneled through one shared connection (the
+/// pre-redesign client) or with one writer/reader socket pair per queue.
+///
+/// Policy replayed: each command costs the client writer thread its
+/// serialization + 2 write syscalls, the daemon reader thread 2 read
+/// syscalls, and the shared dispatcher its dependency-resolution slice.
+/// With a single connection every queue contends on one writer and one
+/// reader resource; per-queue streams give each queue its own pair, so
+/// only the dispatcher is shared. Returns aggregate commands/second.
+pub fn queue_scaling_cmds_per_sec(
+    n_queues: usize,
+    cmds_per_queue: usize,
+    per_queue_streams: bool,
+) -> f64 {
+    // Client-side encode + size/struct write syscalls per command.
+    let writer_cost = 2.0 * SYSCALL_S;
+    // Daemon-side size/struct read syscalls per command.
+    let reader_cost = 2.0 * SYSCALL_S;
+    // Shared dispatcher: O(deps) resolution + inline execution.
+    let dispatch_cost = 1.0e-6;
+
+    let mut des = Des::new();
+    let mut done = 0.0f64;
+    for q in 0..n_queues {
+        let (w, r) = if per_queue_streams {
+            (format!("writer{q}"), format!("reader{q}"))
+        } else {
+            ("writer".to_string(), "reader".to_string())
+        };
+        let mut enqueue_t = 0.0f64;
+        for _ in 0..cmds_per_queue {
+            // The app thread hands off to the writer; the stream pipelines
+            // (the next command only waits for the writer resource).
+            let sent = des.schedule(&w, enqueue_t, writer_cost);
+            let rcvd = des.schedule(&r, sent, reader_cost);
+            let disp = des.schedule("dispatch", rcvd, dispatch_cost);
+            enqueue_t = sent;
+            done = done.max(disp);
+        }
+    }
+    (n_queues * cmds_per_queue) as f64 / done
+}
+
 /// LBM run configuration for Figs 16-17.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FluidMode {
@@ -200,6 +245,22 @@ mod tests {
         let local = fig16_fluidx3d(FluidMode::Localhost, 1, 100);
         let native = fig16_fluidx3d(FluidMode::Native, 1, 100);
         assert!((local.mlups / native.mlups) > 0.95);
+    }
+
+    #[test]
+    fn queue_scaling_needs_per_queue_streams() {
+        let single_1 = queue_scaling_cmds_per_sec(1, 1000, false);
+        let single_4 = queue_scaling_cmds_per_sec(4, 1000, false);
+        let multi_4 = queue_scaling_cmds_per_sec(4, 1000, true);
+        let multi_8 = queue_scaling_cmds_per_sec(8, 1000, true);
+        // One shared socket: more queues add nothing (the writer/reader
+        // pair serializes every queue's commands).
+        assert!(single_4 < single_1 * 1.1, "{single_1} vs {single_4}");
+        // Per-queue streams: 4 queues beat the shared socket clearly.
+        assert!(multi_4 > single_4 * 1.5, "{single_4} vs {multi_4}");
+        // Scaling continues but sublinearly (shared dispatcher).
+        assert!(multi_8 > multi_4, "{multi_4} vs {multi_8}");
+        assert!(multi_8 < multi_4 * 2.0, "{multi_4} vs {multi_8}");
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! Event-table GC wiring (ROADMAP item): a long-running daemon must
+//! reclaim terminal events once the client has moved past them, keeping
+//! the table bounded — while late wait lists referencing reclaimed
+//! (Complete) events still resolve instead of parking forever.
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{dispatch, Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn long_running_daemon_event_table_stays_bounded() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+
+    // Written once up front: its producing event will be long reclaimed
+    // by the time it is referenced again at the end.
+    let early = ctx.create_buffer(4);
+    q.write(early, &7u32.to_le_bytes()).unwrap();
+
+    let buf = ctx.create_buffer(4);
+    // Several times the GC keep-depth worth of commands, each completing
+    // its own event.
+    let total = 3 * dispatch::EVENT_TABLE_KEEP;
+    for i in 0..total {
+        q.write(buf, &(i as u32).to_le_bytes()).unwrap();
+        if i % 512 == 511 {
+            q.finish().unwrap();
+        }
+    }
+    q.finish().unwrap();
+
+    // The daemon stayed correct end to end...
+    let out = q.read(buf).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(out[..4].try_into().unwrap()),
+        (total - 1) as u32
+    );
+    // ...and its event table is bounded by the GC watermark, not by the
+    // total command count.
+    let len = d.state.events.len();
+    assert!(
+        len <= dispatch::EVENT_TABLE_KEEP + dispatch::GC_EVERY_CMDS as usize,
+        "daemon event table unbounded after {total} commands: {len} entries"
+    );
+    assert!(len < total, "GC never reclaimed anything: {len}");
+
+    // A fresh command waiting on a long-reclaimed dependency must not
+    // park forever: `early`'s producing event is gone from the table, and
+    // this read's wait list references it — reclaimed ids read as
+    // Complete via the GC floor.
+    let out = q.read(early).unwrap();
+    assert_eq!(u32::from_le_bytes(out[..4].try_into().unwrap()), 7);
+}

@@ -1,0 +1,213 @@
+//! Multi-queue client semantics over real loopback TCP: per-queue
+//! transport streams (one socket pair per command queue, attached via the
+//! `AttachQueue` handshake), concurrent enqueue from many threads with
+//! per-queue ordering, cross-queue independence, and the non-blocking
+//! `ReadHandle` download path.
+
+use std::sync::Arc;
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+fn one_server(warm: &[&str]) -> (Daemon, Platform) {
+    let mut cfg = DaemonConfig::local(0, 1, manifest());
+    cfg.warm = warm.iter().map(|s| s.to_string()).collect();
+    let d = Daemon::spawn(cfg).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    (d, p)
+}
+
+#[test]
+fn queues_attach_dedicated_streams() {
+    let (d, p) = one_server(&[]);
+    let ctx = p.context();
+    let q1 = ctx.queue(0, 0);
+    let q2 = ctx.queue(0, 0);
+    let a = ctx.create_buffer(4);
+    let b = ctx.create_buffer(4);
+    q1.write(a, &1i32.to_le_bytes()).unwrap();
+    q2.write(b, &2i32.to_le_bytes()).unwrap();
+    q1.finish().unwrap();
+    q2.finish().unwrap();
+    // Daemon side: the control stream plus one stream per used queue.
+    let n_streams = d.state.client_txs.lock().unwrap().len();
+    assert_eq!(n_streams, 3, "expected control + 2 queue streams");
+}
+
+#[test]
+fn single_conn_mode_shares_the_control_stream() {
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(
+        &[d.addr()],
+        ClientConfig {
+            per_queue_streams: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = p.context();
+    let q1 = ctx.queue(0, 0);
+    let q2 = ctx.queue(0, 0);
+    let a = ctx.create_buffer(4);
+    q1.write(a, &1i32.to_le_bytes()).unwrap();
+    let out = q2.read(a).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 1);
+    assert_eq!(
+        d.state.client_txs.lock().unwrap().len(),
+        1,
+        "baseline mode must keep every queue on the control stream"
+    );
+}
+
+#[test]
+fn n_threads_enqueue_concurrently_with_per_queue_ordering() {
+    const N_QUEUES: usize = 4;
+    const CHAIN: usize = 25;
+    let (_d, p) = one_server(&["increment_s32_1"]);
+    let ctx = p.context();
+
+    let handles: Vec<_> = (0..N_QUEUES)
+        .map(|_| {
+            let ctx = ctx.clone();
+            std::thread::spawn(move || {
+                // Each thread drives its own in-order queue: a chain of
+                // increments ordered purely by queue semantics.
+                let q = ctx.queue(0, 0);
+                let buf = ctx.create_buffer(4);
+                q.write(buf, &0i32.to_le_bytes()).unwrap();
+                for _ in 0..CHAIN {
+                    q.run("increment_s32_1", &[buf], &[buf]).unwrap();
+                }
+                let out = q.read(buf).unwrap();
+                i32::from_le_bytes(out[..4].try_into().unwrap())
+            })
+        })
+        .collect();
+    for h in handles {
+        // In-order semantics must hold per queue despite N queues
+        // enqueueing into the daemon concurrently over distinct sockets.
+        assert_eq!(h.join().unwrap(), CHAIN as i32);
+    }
+}
+
+#[test]
+fn failure_on_one_queue_leaves_other_queues_healthy() {
+    let (_d, p) = one_server(&["increment_s32_1"]);
+    let ctx = p.context();
+    let q_bad = ctx.queue(0, 0);
+    let q_ok = ctx.queue(0, 0);
+    let a = ctx.create_buffer(4);
+    let b = ctx.create_buffer(4);
+    q_bad.write(a, &1i32.to_le_bytes()).unwrap();
+    q_ok.write(b, &5i32.to_le_bytes()).unwrap();
+    // Poison q_bad's chain with an unknown artifact...
+    let bad = q_bad.run("definitely_not_an_artifact", &[a], &[a]).unwrap();
+    assert!(bad.wait().is_err());
+    // ...q_ok's independent chain is unaffected.
+    q_ok.run("increment_s32_1", &[b], &[b]).unwrap();
+    let out = q_ok.read(b).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 6);
+}
+
+#[test]
+fn read_handle_overlaps_on_out_of_order_queue() {
+    let (_d, p) = one_server(&["increment_s32_1", "vecadd_f32_4096"]);
+    let ctx = p.context();
+    let q = ctx.out_of_order_queue(0, 0);
+
+    let a = ctx.create_buffer(4);
+    let w = q.write(a, &41i32.to_le_bytes()).unwrap();
+    let b = ctx.create_buffer(4);
+    let run = q
+        .run_with_waits("increment_s32_1", &[a], &[b], &[&w])
+        .unwrap();
+
+    // Start the download without blocking; it is ordered behind the
+    // producing event server-side even on an out-of-order queue.
+    let pending = q.enqueue_read(b).unwrap();
+
+    // Overlap: more independent work is enqueued while the first
+    // download is in flight.
+    let x: Vec<u8> = (0..4096)
+        .flat_map(|i| (i as f32).to_le_bytes())
+        .collect();
+    let bx = ctx.create_buffer(4 * 4096);
+    let by = ctx.create_buffer(4 * 4096);
+    let bo = ctx.create_buffer(4 * 4096);
+    q.write(bx, &x).unwrap();
+    q.write(by, &x).unwrap();
+    q.run("vecadd_f32_4096", &[bx, by], &[bo]).unwrap();
+    let overlap_pending = q.enqueue_read(bo).unwrap();
+
+    let out = pending.wait().unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 42);
+    assert!(run.status().unwrap().is_terminal());
+    let sums = overlap_pending.wait().unwrap();
+    let v0 = f32::from_le_bytes(sums[..4].try_into().unwrap());
+    let v9 = f32::from_le_bytes(sums[36..40].try_into().unwrap());
+    assert_eq!(v0, 0.0);
+    assert_eq!(v9, 18.0);
+}
+
+#[test]
+fn finish_on_never_used_queue_is_a_noop() {
+    let (_d, p) = one_server(&[]);
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    // Regression: this used to wait on nonexistent event 0.
+    q.finish().unwrap();
+}
+
+#[test]
+fn read_routes_to_holder_device_zero() {
+    // Server 0 exposes ONE device; server 1 exposes TWO. A queue bound to
+    // device 1 of server 1 reads a buffer resident on server 0 — the read
+    // must target device 0 of the holder (reads are not device-bound; the
+    // queue's device index does not even exist over there).
+    let m = manifest();
+    let d0 = Daemon::spawn(DaemonConfig::local(0, 1, m.clone())).unwrap();
+    let d1 = Daemon::spawn(DaemonConfig::local(1, 2, m.clone())).unwrap();
+    d0.connect_peer(1, &d1.addr()).unwrap();
+    let p = Platform::connect(
+        &[d0.addr(), d1.addr()],
+        ClientConfig::default(),
+    )
+    .unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 1); // device 1 exists only on server 1
+    let buf = ctx.create_buffer(8);
+    q0.write(buf, &[9u8; 8]).unwrap();
+    // Residency stays on server 0; the read is routed there, device 0.
+    let out = q1.read(buf).unwrap();
+    assert_eq!(out, vec![9u8; 8]);
+}
+
+#[test]
+fn read_handles_work_across_many_threads() {
+    const N: usize = 4;
+    let (_d, p) = one_server(&[]);
+    let ctx = p.context();
+    let ctx = Arc::new(ctx);
+    let handles: Vec<_> = (0..N)
+        .map(|t| {
+            let ctx = Arc::clone(&ctx);
+            std::thread::spawn(move || {
+                let q = ctx.queue(0, 0);
+                let buf = ctx.create_buffer(64);
+                let pattern = vec![t as u8 + 1; 64];
+                q.write(buf, &pattern).unwrap();
+                let h = q.enqueue_read(buf).unwrap();
+                assert_eq!(h.wait().unwrap(), pattern);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
