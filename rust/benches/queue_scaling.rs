@@ -1,8 +1,17 @@
 //! Multi-queue client scaling: aggregate small-command throughput for
-//! 1/2/4/8 command queues against one loopback daemon, comparing the
-//! single shared connection (pre-redesign client, `per_queue_streams:
-//! false`) with one writer/reader socket pair per queue (paper §4.2, the
-//! Fig 13 multiple-queue experiment).
+//! 1/2/4/8 command queues against one loopback daemon.
+//!
+//! Two sweeps:
+//!
+//! * **transport** — single shared connection (pre-redesign client,
+//!   `per_queue_streams: false`) vs one writer/reader socket pair per
+//!   queue (paper §4.2, the Fig 13 multiple-queue experiment), all queues
+//!   on one device;
+//! * **dispatch** — per-queue streams with all queues on one device vs
+//!   each queue on its own device, isolating the per-device dispatch
+//!   workers: with distinct devices only the dispatcher's thin routing
+//!   slice is shared, so per-queue throughput should stay near-linear
+//!   where the single-device arrangement flattens.
 //!
 //! Writes `BENCH_queue_scaling.json` at the repo root so the perf
 //! trajectory is tracked in-tree. `--tiny` (or QUEUE_SCALING_TINY=1) runs
@@ -17,19 +26,22 @@ use poclr::report;
 use poclr::runtime::Manifest;
 use poclr::sim::scenarios;
 
-/// Bytes per WriteBuffer command: big enough that socket I/O (the thing
-/// per-queue streams parallelize) dominates dispatcher bookkeeping.
+/// Bytes per WriteBuffer command: big enough that socket I/O and the
+/// buffer-op memcpy (the things per-queue streams and per-device workers
+/// parallelize) dominate dispatcher bookkeeping.
 const PAYLOAD: usize = 4096;
 
 /// Aggregate commands/second for `n_queues` queues, each enqueueing
-/// `cmds_per_queue` in-order writes from its own thread.
+/// `cmds_per_queue` in-order writes from its own thread. The daemon
+/// exposes `n_devices` devices; queue `i` targets device `i % n_devices`.
 fn measure(
     manifest: &Manifest,
     n_queues: usize,
     cmds_per_queue: usize,
     per_queue_streams: bool,
+    n_devices: usize,
 ) -> f64 {
-    let daemon = Daemon::spawn(DaemonConfig::local(0, 1, manifest.clone())).unwrap();
+    let daemon = Daemon::spawn(DaemonConfig::local(0, n_devices, manifest.clone())).unwrap();
     let platform = Platform::connect(
         &[daemon.addr()],
         ClientConfig {
@@ -42,11 +54,12 @@ fn measure(
 
     let start_gate = Arc::new(Barrier::new(n_queues + 1));
     let handles: Vec<_> = (0..n_queues)
-        .map(|_| {
+        .map(|i| {
             let ctx = ctx.clone();
             let gate = Arc::clone(&start_gate);
+            let device = (i % n_devices) as u32;
             std::thread::spawn(move || {
-                let q = ctx.queue(0, 0);
+                let q = ctx.queue(0, device);
                 let buf = ctx.create_buffer(PAYLOAD as u64);
                 let data = vec![0xA5u8; PAYLOAD];
                 // Warm: attach the stream, allocate server-side.
@@ -78,34 +91,48 @@ fn main() {
 
     report::figure(
         "Queue scaling",
-        "aggregate cmds/sec: single connection vs per-queue streams",
+        "aggregate cmds/sec: transport (single conn vs per-queue streams) \
+         and dispatch (one device vs per-queue devices)",
     );
     let mut single = report::Series::new("single connection", "cmd/s");
     let mut multi = report::Series::new("per-queue streams", "cmd/s");
+    let mut fanned = report::Series::new("per-queue devices", "cmd/s");
 
     let mut rows = Vec::new();
     for n_queues in [1usize, 2, 4, 8] {
-        let s = measure(&manifest, n_queues, cmds_per_queue, false);
-        let m = measure(&manifest, n_queues, cmds_per_queue, true);
+        let s = measure(&manifest, n_queues, cmds_per_queue, false, 1);
+        let m = measure(&manifest, n_queues, cmds_per_queue, true, 1);
+        // One queue on one device IS the per-queue configuration; a
+        // third run would differ from `m` only by noise.
+        let f = if n_queues == 1 {
+            m
+        } else {
+            measure(&manifest, n_queues, cmds_per_queue, true, n_queues)
+        };
         single.push(format!("{n_queues} queue(s)"), s);
         multi.push(format!("{n_queues} queue(s)"), m);
+        fanned.push(format!("{n_queues} queue(s)"), f);
         println!(
-            "  {n_queues} queue(s): single {s:>10.0}  per-queue {m:>10.0}  ({:.2}x)",
-            m / s
+            "  {n_queues} queue(s): single {s:>10.0}  per-queue {m:>10.0} ({:.2}x)  \
+             +devices {f:>10.0} ({:.2}x)",
+            m / s,
+            f / m
         );
-        rows.push((n_queues, s, m));
+        rows.push((n_queues, s, m, f));
     }
     single.print();
     multi.print();
+    fanned.print();
 
-    // The DES model of the same sweep, for calibration drift tracking.
-    let modeled: Vec<(usize, f64, f64)> = [1usize, 2, 4, 8]
+    // The DES model of the same sweeps, for calibration drift tracking.
+    let modeled: Vec<(usize, f64, f64, f64)> = [1usize, 2, 4, 8]
         .iter()
         .map(|&qn| {
             (
                 qn,
                 scenarios::queue_scaling_cmds_per_sec(qn, 1000, false),
-                scenarios::queue_scaling_cmds_per_sec(qn, 1000, true),
+                scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, 1),
+                scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, qn),
             )
         })
         .collect();
@@ -120,20 +147,24 @@ fn main() {
     json.push_str(&format!("  \"payload_bytes\": {PAYLOAD},\n"));
     json.push_str(&format!("  \"cmds_per_queue\": {cmds_per_queue},\n"));
     json.push_str("  \"results\": [\n");
-    for (i, (qn, s, m)) in rows.iter().enumerate() {
+    for (i, (qn, s, m, f)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"queues\": {qn}, \"single_conn_cmds_per_sec\": {s:.0}, \
-             \"per_queue_cmds_per_sec\": {m:.0}, \"speedup\": {:.3}}}{}\n",
+             \"per_queue_cmds_per_sec\": {m:.0}, \
+             \"per_queue_per_device_cmds_per_sec\": {f:.0}, \
+             \"stream_speedup\": {:.3}, \"device_speedup\": {:.3}}}{}\n",
             m / s,
+            f / m,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
     json.push_str("  ],\n");
     json.push_str("  \"modeled\": [\n");
-    for (i, (qn, s, m)) in modeled.iter().enumerate() {
+    for (i, (qn, s, m, f)) in modeled.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"queues\": {qn}, \"single_conn_cmds_per_sec\": {s:.0}, \
-             \"per_queue_cmds_per_sec\": {m:.0}}}{}\n",
+             \"per_queue_cmds_per_sec\": {m:.0}, \
+             \"per_queue_per_device_cmds_per_sec\": {f:.0}}}{}\n",
             if i + 1 < modeled.len() { "," } else { "" }
         ));
     }

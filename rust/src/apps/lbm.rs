@@ -53,7 +53,7 @@ pub fn slab_artifact(h: usize) -> Result<&'static str> {
 }
 
 /// Initial condition: perturbed equilibrium, deterministic by seed.
-/// Layout f32[9][H][W] flattened.
+/// Layout `f32[9][H][W]` flattened.
 pub fn initial_state(h: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed);
     let mut rho = vec![0f32; h * W];
@@ -115,7 +115,7 @@ pub fn reference_step(f: &[f32], h: usize) -> Vec<f32> {
     out
 }
 
-/// Extract row `y` of a flattened slab as an f32[9][W] halo buffer.
+/// Extract row `y` of a flattened slab as an `f32[9][W]` halo buffer.
 pub fn extract_row(f: &[f32], h: usize, y: usize) -> Vec<f32> {
     let mut out = vec![0f32; 9 * W];
     for q in 0..9 {

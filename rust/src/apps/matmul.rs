@@ -59,7 +59,7 @@ impl MatmulInputs {
         }
     }
 
-    /// Reference C[i][j] for spot verification.
+    /// Reference `C[i][j]` for spot verification.
     pub fn reference_at(&self, i: usize, j: usize) -> f32 {
         let n = self.n;
         (0..n).map(|k| self.a[i * n + k] * self.b[k * n + j]).sum()

@@ -50,6 +50,20 @@ use crate::util::fresh_id;
 
 use server_conn::{QueueStream, ServerConn};
 
+/// The client driver reclaims old Complete events every this many
+/// completions observed on a stream reader (ROADMAP "client-side
+/// event-table GC"): mirrors the daemon's `gc_terminal` wiring so a
+/// long-lived [`Platform`] no longer accumulates an entry per command for
+/// its whole life.
+pub const GC_EVERY_COMPLETIONS: u64 = 1024;
+/// Complete events the client keeps across a GC pass. As deep as the
+/// daemon's keep-depth and for the same reason: reclaimed ids read as
+/// Complete via the table's gc floor, so the keep-depth is the margin
+/// protecting events that are still pending — which on the client side
+/// are non-terminal and therefore never reclaimed, making the floor
+/// exact for locally-created events (see `sched::table` gc_floor docs).
+pub const CLIENT_EVENT_KEEP: usize = 16384;
+
 /// Client-side configuration.
 #[derive(Clone)]
 pub struct ClientConfig {
@@ -126,6 +140,7 @@ impl Platform {
         })
     }
 
+    /// Number of servers this platform dialed.
     pub fn n_servers(&self) -> usize {
         self.inner.servers.len()
     }
@@ -138,6 +153,14 @@ impl Platform {
     /// Is the given server currently reachable ("device available")?
     pub fn available(&self, s: u32) -> bool {
         self.inner.servers[s as usize].available()
+    }
+
+    /// Events currently tracked by the driver's event table (tests /
+    /// metrics). Bounded by [`CLIENT_EVENT_KEEP`] plus the in-flight set:
+    /// stream readers reclaim old Complete entries as completions stream
+    /// in, so this does not grow with the total command count.
+    pub fn n_tracked_events(&self) -> usize {
+        self.inner.events.len()
     }
 
     /// Create the context spanning all servers.

@@ -402,6 +402,12 @@ fn reader_loop_impl(
     conn_gen: Arc<AtomicU64>,
     generation: u64,
 ) {
+    // Client-side mirror of the daemon's event-table GC: every stream
+    // reader reclaims old Complete entries as completions stream in, so
+    // the driver's table stays bounded for the life of the Platform.
+    // Pending events are non-terminal and never reclaimed; late waits on
+    // reclaimed ids read Complete via the table's gc floor.
+    let mut completions_seen = 0u64;
     loop {
         match read_packet(&mut stream) {
             Ok(pkt) => {
@@ -419,6 +425,10 @@ fn reader_loop_impl(
                         _ => {
                             events.complete(event, ts);
                         }
+                    }
+                    completions_seen += 1;
+                    if completions_seen % super::GC_EVERY_COMPLETIONS == 0 {
+                        events.gc_terminal(super::CLIENT_EVENT_KEEP);
                     }
                 }
             }

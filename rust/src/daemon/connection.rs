@@ -20,6 +20,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -226,6 +227,24 @@ fn run_client_stream(
                     }
                     continue;
                 }
+                // Backpressure edge (ROADMAP "bounded dispatch queue"):
+                // device-bound queue-stream commands take a slot of
+                // their device's bounded gate *on the reader thread*, so
+                // a saturated device stalls exactly the streams feeding
+                // it — TCP flow control pushes back to the client —
+                // while the dispatcher and every other stream keep
+                // flowing. The control stream (queue 0) is exempt: it
+                // carries context-level commands for *every* device (and
+                // the whole legacy single-connection client), so it must
+                // never wedge behind one device — its commands run
+                // slot-free on the device workers.
+                if pkt.msg.queue != 0 {
+                    if let Some(dev) = state.device_route(&pkt.msg) {
+                        if !admit_device_slot(&state, dev, &pkt.msg, queue, instance) {
+                            break; // daemon shutting down
+                        }
+                    }
+                }
                 if work_tx
                     .send(Work::Packet {
                         from_peer: None,
@@ -256,6 +275,48 @@ fn run_client_stream(
         }
     }
     Ok(())
+}
+
+/// Take a slot of device `dev`'s gate for a client reader's next
+/// command, waiting while the device pipeline is full or the stream is
+/// at its fairness share. Besides a grant there are two ways out:
+///
+/// * daemon shutdown — returns false, the reader exits;
+/// * stream supersession — the client reconnected this queue while we
+///   were parked, so a fresh reader owns the stream registration. The
+///   superseded reader *force-takes* a slot (bounded oversubscription,
+///   one command per superseded reader) so the command it already
+///   advanced the replay cursor past is forwarded rather than lost,
+///   then dies on its next read of the dead socket — a reconnect storm
+///   against a wedged device cannot accumulate parked reader threads.
+fn admit_device_slot(
+    state: &Arc<DaemonState>,
+    dev: usize,
+    msg: &Msg,
+    queue: u32,
+    instance: u64,
+) -> bool {
+    let gate = &state.device_gates[dev];
+    loop {
+        // Grant-or-park in one atomic step (no lost-wakeup window); the
+        // timeout keeps the exit conditions below live.
+        if gate.enter_or_wait(msg.queue, Duration::from_millis(50)) {
+            return true;
+        }
+        if state.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        let current = state
+            .client_streams
+            .lock()
+            .unwrap()
+            .get(&queue)
+            .is_some_and(|(i, _)| *i == instance);
+        if !current {
+            gate.force_enter(msg.queue);
+            return true;
+        }
+    }
 }
 
 /// Register peer reader/writer threads over an established peer stream.

@@ -1,0 +1,272 @@
+//! Per-device dispatch workers: the execution lane between the dispatcher
+//! and the device executors.
+//!
+//! The dispatcher thread owns command *ordering* (waiter index, replay
+//! state, completion routing) but no longer executes device work inline:
+//! once a command's wait list is resolved it is handed to the worker of
+//! its target device, which performs the data-plane work — buffer-op
+//! memcpys, kernel input snapshots, executor submission — on its own
+//! thread. A slow or saturated device therefore never serializes
+//! submissions to its siblings (the paper's §4/§6 claim that command
+//! handling stays off the critical path), and the per-device
+//! [`crate::daemon::state::DeviceGate`] gives the daemon its first real
+//! backpressure edge: when a device's pipeline is full, only the stream
+//! readers feeding *that* device block.
+//!
+//! Workers never complete events themselves. Every outcome flows back to
+//! the dispatcher as a [`Work`] item ([`Work::Finished`] for inline ops,
+//! [`Work::Submitted`] + [`Work::ExecDone`] for kernels) so terminal
+//! transitions and the parked-command wakeups they release are always
+//! handled on the dispatcher thread — the same discipline the migration
+//! worker already follows with [`Work::Wake`].
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::proto::{Body, EventStatus, Packet, Timestamps};
+use crate::runtime::executor::{ExecOutcome, ExecRequest};
+use crate::util::now_ns;
+
+use super::dispatch::Work;
+use super::state::{DaemonState, MAX_ALLOC};
+
+/// A dependency-resolved command bound for one device's worker.
+pub struct DeviceCmd {
+    pub pkt: Packet,
+    /// Dispatcher admission time (event profiling CL_QUEUED).
+    pub queued_ns: u64,
+    /// Client stream the command arrived on (gate fairness key).
+    pub stream: u32,
+    /// Whether this item holds a slot of its device's gate, released
+    /// when the command leaves the pipeline (see
+    /// [`crate::daemon::state::DeviceGate`]). Control-stream and peer
+    /// commands run slot-free: they are context-level ops that may
+    /// concern any device, so a saturated gate must never hold them up.
+    pub holds_slot: bool,
+}
+
+/// Worker -> dispatcher: an inline (non-kernel) command finished. The
+/// worker has already released the command's gate slot by the time this
+/// is sent — the dispatcher only records the terminal event transition
+/// and routes the completion.
+pub struct CmdDone {
+    pub event: u64,
+    pub queued_ns: u64,
+    pub submit_ns: u64,
+    /// ReadBuffer reply bytes (empty otherwise).
+    pub payload: Vec<u8>,
+    pub failed: bool,
+}
+
+/// Worker -> dispatcher: a kernel launch went to the device executor.
+/// Registers the in-flight record *before* the executor can possibly
+/// report the outcome (the work channel is FIFO, and the worker sends
+/// this ahead of submitting).
+pub struct KernelSubmitted {
+    pub tag: u64,
+    pub event: u64,
+    pub outs: Vec<u64>,
+    pub queued_ns: u64,
+    pub submit_ns: u64,
+    /// Gate bookkeeping: the slot (if held) is released when the
+    /// dispatcher processes the executor outcome.
+    pub device: usize,
+    pub stream: u32,
+    pub holds_slot: bool,
+}
+
+/// Is this body executed on a device dispatch worker? The single source
+/// of the routing decision (`DaemonState::device_route` delegates here),
+/// kept next to the code that executes routed bodies so the two cannot
+/// drift apart — [`exec_routed_body`]'s debug assertion backstops the
+/// remaining agreement.
+pub fn routed_body(body: &Body) -> bool {
+    matches!(
+        body,
+        Body::CreateBuffer { .. }
+            | Body::FreeBuffer { .. }
+            | Body::WriteBuffer { .. }
+            | Body::ReadBuffer { .. }
+            | Body::SetContentSize { .. }
+            | Body::RunKernel { .. }
+    )
+}
+
+/// Spawn one worker thread (plus one executor-outcome forwarder) per
+/// device; returns the per-device work channels, indexed like
+/// `state.devices`. Workers exit when the dispatcher drops the senders.
+pub fn spawn_workers(state: &Arc<DaemonState>, work_tx: &Sender<Work>) -> Vec<Sender<DeviceCmd>> {
+    let mut dev_txs = Vec::with_capacity(state.devices.len());
+    for (dev, device) in state.devices.iter().enumerate() {
+        let label = device.label.clone();
+        // Forwarder: executor outcomes -> Work::ExecDone.
+        let (exec_tx, exec_rx) = channel::<ExecOutcome>();
+        let fwd = work_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("{label}-fwd"))
+            .spawn(move || {
+                while let Ok(o) = exec_rx.recv() {
+                    if fwd.send(Work::ExecDone(o)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn forwarder");
+
+        // The dispatch worker itself.
+        let (tx, rx) = channel::<DeviceCmd>();
+        let state = Arc::clone(state);
+        let work_tx = work_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("{label}-disp"))
+            .spawn(move || {
+                while let Ok(item) = rx.recv() {
+                    run_item(&state, dev, item, &exec_tx, &work_tx);
+                }
+            })
+            .expect("spawn device worker");
+        dev_txs.push(tx);
+    }
+    dev_txs
+}
+
+/// Execute one routed command on its device worker thread.
+fn run_item(
+    state: &Arc<DaemonState>,
+    dev: usize,
+    item: DeviceCmd,
+    exec_tx: &Sender<ExecOutcome>,
+    work_tx: &Sender<Work>,
+) {
+    let submit_ns = now_ns();
+    let DeviceCmd {
+        pkt,
+        queued_ns,
+        stream,
+        holds_slot,
+    } = item;
+    if let Body::RunKernel {
+        artifact,
+        args,
+        outs,
+    } = pkt.msg.body
+    {
+        // Snapshot inputs off the dispatcher thread — for big operands
+        // this copy is the dominant pre-launch cost.
+        let mut inputs = Vec::with_capacity(args.len());
+        for a in &args {
+            match state.snapshot_buffer(*a) {
+                Some(b) => inputs.push(b),
+                None => {
+                    if holds_slot {
+                        state.device_gates[dev].release(stream);
+                    }
+                    work_tx
+                        .send(Work::Finished(CmdDone {
+                            event: pkt.msg.event,
+                            queued_ns,
+                            submit_ns,
+                            payload: Vec::new(),
+                            failed: true,
+                        }))
+                        .ok();
+                    return;
+                }
+            }
+        }
+        let tag = crate::util::fresh_id();
+        // Register the in-flight record before the executor can produce
+        // an outcome (FIFO work channel). The slot (if held) stays held
+        // until the dispatcher processes that outcome.
+        work_tx
+            .send(Work::Submitted(KernelSubmitted {
+                tag,
+                event: pkt.msg.event,
+                outs,
+                queued_ns,
+                submit_ns,
+                device: dev,
+                stream,
+                holds_slot,
+            }))
+            .ok();
+        state.events.set_status(pkt.msg.event, EventStatus::Submitted, Timestamps::default());
+        state.devices[dev].submit(ExecRequest {
+            tag,
+            artifact,
+            inputs,
+            reply: exec_tx.clone(),
+        });
+        return;
+    }
+    // Inline buffer op: execute, release the slot, report the outcome.
+    let outcome = exec_routed_body(state, &pkt);
+    if holds_slot {
+        state.device_gates[dev].release(stream);
+    }
+    let failed = outcome.is_none();
+    work_tx
+        .send(Work::Finished(CmdDone {
+            event: pkt.msg.event,
+            queued_ns,
+            submit_ns,
+            payload: outcome.unwrap_or_default(),
+            failed,
+        }))
+        .ok();
+}
+
+/// Execute a routed non-kernel body against shared state: `Some(payload)`
+/// completes the event (payload empty except for ReadBuffer), `None`
+/// fails it. Shared by the device workers and by the dispatcher's inline
+/// path (zero-device daemons, out-of-range device indexes).
+pub fn exec_routed_body(state: &DaemonState, pkt: &Packet) -> Option<Vec<u8>> {
+    match &pkt.msg.body {
+        &Body::CreateBuffer {
+            buf,
+            size,
+            content_size_buf,
+        } => {
+            if size > MAX_ALLOC {
+                return None;
+            }
+            state.ensure_buffer(buf, size, content_size_buf);
+            Some(Vec::new())
+        }
+        &Body::FreeBuffer { buf } => {
+            state.buffers.remove(buf);
+            Some(Vec::new())
+        }
+        &Body::WriteBuffer { buf, offset, len } => {
+            // A corrupt (or malicious) packet can declare a `len` that
+            // does not match the payload that actually arrived; copying
+            // would panic the daemon. Validate and fail the event.
+            let ok = pkt.payload.len() as u64 == len
+                && state.write_buffer(buf, offset, &pkt.payload);
+            ok.then(Vec::new)
+        }
+        &Body::SetContentSize { buf, size } => state.set_content_size(buf, size).then(Vec::new),
+        &Body::ReadBuffer { buf, offset, len } => {
+            // len == u64::MAX requests a content-size-limited read
+            // (cl_pocl_content_size aware download).
+            let len = if len == u64::MAX {
+                state.content_size_of(buf)
+            } else {
+                len
+            };
+            // Out-of-range offsets fail the event instead of slicing
+            // with end < start (the seed's daemon-killing panic).
+            state.read_buffer(buf, offset, len)
+        }
+        other => {
+            // Every routed body except RunKernel (the worker's kernel
+            // branch) must have an arm above — a new routed body falling
+            // through here would silently fail its event.
+            debug_assert!(
+                !routed_body(other) || matches!(other, Body::RunKernel { .. }),
+                "routed body without an executor arm: {other:?}"
+            );
+            None
+        }
+    }
+}

@@ -1,9 +1,9 @@
-//! The daemon dispatcher: one thread that owns command ordering.
+//! The daemon dispatcher: one thread that owns command *ordering* — and
+//! nothing else.
 //!
-//! Readers (client, peers, RDMA poller) funnel packets here; device
-//! executors report completions back through per-device forwarder threads.
-//! The dispatcher resolves wait lists against the event table and parks
-//! blocked commands in a slab keyed by a park token. Completions drive the
+//! Readers (client, peers, RDMA poller) funnel packets here. The
+//! dispatcher resolves wait lists against the event table and parks
+//! blocked commands in a slab keyed by a park token; completions drive the
 //! table's reverse waiter index ([`crate::sched::table::EventTable::park`]):
 //! each terminal event returns exactly the parked commands whose last
 //! dependency just resolved, so a completion costs O(affected commands),
@@ -14,6 +14,15 @@
 //! Failed events poison their waiters, and the poison propagates
 //! transitively through the waiter graph (a failed upstream event fails its
 //! whole dependent subtree).
+//!
+//! Ready commands are *not* executed inline: device-bound work (buffer-op
+//! memcpys, kernel input snapshots, launches) is fanned out to per-device
+//! dispatch workers ([`super::device`]), each fed through a bounded
+//! [`crate::daemon::state::DeviceGate`], so a slow kernel or a bulk write
+//! on device A never serializes submissions to device B and the dispatch
+//! hot path stays a few map operations per command. Workers, executors and
+//! the migration worker all report back through [`Work`] items, so parked
+//! commands are only ever released here.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -21,12 +30,13 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
-use crate::runtime::executor::{ExecOutcome, ExecRequest};
+use crate::runtime::executor::ExecOutcome;
 use crate::sched::table::{DepsState, Wakeup};
 use crate::util::now_ns;
 
+use super::device::{self, CmdDone, DeviceCmd, KernelSubmitted};
 use super::migrate::{self, MigrationJob};
-use super::state::{DaemonState, MAX_ALLOC};
+use super::state::{DaemonState, DEVICE_QUEUE_DEPTH, MAX_ALLOC};
 
 /// The dispatcher reclaims old Complete events every this many packets
 /// (ROADMAP "Event-table GC wiring"): completions for commands at or below
@@ -50,26 +60,24 @@ pub enum Work {
         via_rdma: bool,
     },
     ExecDone(ExecOutcome),
+    /// A device worker finished an inline (non-kernel) command.
+    Finished(CmdDone),
+    /// A device worker handed a kernel launch to its executor; registers
+    /// the in-flight record ahead of the outcome (FIFO channel).
+    Submitted(KernelSubmitted),
     /// Parked commands released by a completion recorded off the dispatch
     /// thread (e.g. the migration worker failing an event).
     Wake(Vec<Wakeup>),
     Shutdown,
 }
 
-/// A parked command whose wait list is not yet satisfied.
+/// A parked command whose wait list is not yet satisfied. Parked commands
+/// hold no device-gate slot (released at park, re-acquired at wakeup).
 struct Pending {
     from_peer: Option<u32>,
     pkt: Packet,
     via_rdma: bool,
     queued_ns: u64,
-}
-
-/// An in-flight kernel launch, keyed by executor tag.
-struct Inflight {
-    event: u64,
-    outs: Vec<u64>,
-    queued_ns: u64,
-    submit_ns: u64,
 }
 
 impl Dispatcher {
@@ -81,24 +89,10 @@ impl Dispatcher {
 }
 
 pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
-    // Per-device forwarders: executor outcomes -> Work::ExecDone.
-    let mut exec_txs = Vec::new();
-    for dev in &state.devices {
-        let (otx, orx) = std::sync::mpsc::channel::<ExecOutcome>();
-        let fwd = self_tx.clone();
-        let label = dev.label.clone();
-        std::thread::Builder::new()
-            .name(format!("{label}-fwd"))
-            .spawn(move || {
-                while let Ok(o) = orx.recv() {
-                    if fwd.send(Work::ExecDone(o)).is_err() {
-                        break;
-                    }
-                }
-            })
-            .expect("spawn forwarder");
-        exec_txs.push(otx);
-    }
+    // Per-device dispatch workers (and their executor-outcome
+    // forwarders): ready device-bound commands execute there, outcomes
+    // come back as Work items.
+    let dev_txs = device::spawn_workers(&state, &self_tx);
 
     // Migration worker: buffer reads + pushes happen off the dispatch
     // thread (they block on link pacing / big memcpys). It reports event
@@ -106,13 +100,15 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
     // are released without a rescan.
     let migrate_tx = migrate::spawn_worker(Arc::clone(&state), self_tx.clone());
 
+    let ready_backlog = (0..state.devices.len()).map(|_| VecDeque::new()).collect();
     let mut d = Dispatcher {
         state,
-        exec_txs,
+        dev_txs,
         migrate_tx,
         parked: HashMap::new(),
         inflight: HashMap::new(),
         wake_queue: VecDeque::new(),
+        ready_backlog,
         event_origin: HashMap::new(),
     };
 
@@ -135,25 +131,48 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
                 d.finish_kernel(outcome);
                 d.pump();
             }
+            Work::Finished(done) => {
+                if done.failed {
+                    d.fail_event(done.event);
+                } else {
+                    d.complete_inline(done.event, done.queued_ns, done.submit_ns, done.payload);
+                }
+                d.pump();
+            }
+            Work::Submitted(sub) => {
+                d.inflight.insert(sub.tag, sub);
+            }
             Work::Wake(wakeups) => {
                 d.wake_queue.extend(wakeups);
                 d.pump();
             }
         }
+        // Every slot release eventually surfaces here as a work item
+        // (Finished, ExecDone, or a parking admission), so draining once
+        // per item keeps the backlogs moving without extra signalling.
+        d.drain_backlogs();
     }
 }
 
 struct Dispatcher {
     state: Arc<DaemonState>,
-    exec_txs: Vec<Sender<ExecOutcome>>,
+    /// Work channels of the per-device dispatch workers.
+    dev_txs: Vec<Sender<DeviceCmd>>,
     migrate_tx: Sender<MigrationJob>,
     /// Parked commands, keyed by the park token registered in the event
     /// table's waiter index.
     parked: HashMap<u64, Pending>,
-    inflight: HashMap<u64, Inflight>,
+    /// In-flight kernel launches, keyed by executor tag; each holds one
+    /// gate slot of its device, released when the outcome lands.
+    inflight: HashMap<u64, KernelSubmitted>,
     /// Wakeups produced while handling the current work item; drained by
     /// [`Dispatcher::pump`] so poison/readiness propagates transitively.
     wake_queue: VecDeque<Wakeup>,
+    /// Per-device overflow for dependency-resolved commands that could
+    /// not take a gate slot non-blockingly (woken bursts, peer packets):
+    /// drained FIFO as releases free slots, so occupancy never exceeds
+    /// the gate bound and other streams' readers keep their headroom.
+    ready_backlog: Vec<VecDeque<DeviceCmd>>,
     /// event id -> client queue stream the command arrived on, so the
     /// completion returns on the same stream. Entries for events that
     /// complete elsewhere (migrations) are pruned by [`Dispatcher::gc`].
@@ -164,6 +183,12 @@ impl Dispatcher {
     /// Admit a fresh packet: run it, park it, or poison it. Parking
     /// registers the command in the waiter index atomically with the
     /// dependency evaluation, so there is no re-check window.
+    ///
+    /// Slot accounting: a client *queue-stream* packet with a device
+    /// route arrives already holding a gate slot (its stream reader
+    /// acquired it — control-stream and peer packets run slot-free, see
+    /// `execute`); the slot follows the command into the worker, or is
+    /// released here if the command parks or is poisoned at admission.
     fn admit(&mut self, from_peer: Option<u32>, pkt: Packet, via_rdma: bool, queued_ns: u64) {
         // Remember which client stream carried the command so its
         // completion goes back out on that stream (queue 0 needs no entry:
@@ -171,10 +196,16 @@ impl Dispatcher {
         if from_peer.is_none() && pkt.msg.event != 0 && pkt.msg.queue != 0 {
             self.event_origin.insert(pkt.msg.event, pkt.msg.queue);
         }
+        let holds_slot = from_peer.is_none()
+            && pkt.msg.queue != 0
+            && self.state.device_route(&pkt.msg).is_some();
         let token = crate::util::fresh_id();
         match self.state.events.park(token, &pkt.msg.wait) {
-            DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns),
+            DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns, holds_slot),
             DepsState::Blocked => {
+                if holds_slot {
+                    self.release_route_slot(&pkt.msg);
+                }
                 self.parked.insert(
                     token,
                     Pending {
@@ -185,7 +216,61 @@ impl Dispatcher {
                     },
                 );
             }
-            DepsState::Poisoned => self.fail_command(&pkt.msg),
+            DepsState::Poisoned => {
+                if holds_slot {
+                    self.release_route_slot(&pkt.msg);
+                }
+                self.fail_command(&pkt.msg);
+            }
+        }
+    }
+
+    /// Give back the gate slot a routed command holds (park/poison paths).
+    fn release_route_slot(&self, msg: &Msg) {
+        if let Some(dev) = self.state.device_route(msg) {
+            self.state.device_gates[dev].release(msg.queue);
+        }
+    }
+
+    /// Move backlogged ready commands into their device pipelines as far
+    /// as freed slots allow. FIFO *per stream*, but a stream sitting at
+    /// its fairness share never holds back other streams' entries queued
+    /// behind it — the scan skips past it (each stream is probed at most
+    /// once per pass, and a full gate skips the device entirely, so the
+    /// pass stays cheap exactly when the backlog is large).
+    fn drain_backlogs(&mut self) {
+        for dev in 0..self.ready_backlog.len() {
+            if self.ready_backlog[dev].is_empty() {
+                continue;
+            }
+            let gate = &self.state.device_gates[dev];
+            if gate.held() >= DEVICE_QUEUE_DEPTH {
+                continue;
+            }
+            let taken = std::mem::take(&mut self.ready_backlog[dev]);
+            let mut kept = VecDeque::new();
+            let mut capped: Vec<u32> = Vec::new();
+            for mut cmd in taken {
+                if capped.contains(&cmd.stream) {
+                    kept.push_back(cmd);
+                } else if gate.try_enter(cmd.stream) {
+                    cmd.holds_slot = true;
+                    self.dev_txs[dev].send(cmd).ok();
+                } else {
+                    capped.push(cmd.stream);
+                    kept.push_back(cmd);
+                }
+            }
+            self.ready_backlog[dev] = kept;
+        }
+        // Only now wake parked readers: releases deliberately do not
+        // notify, so the backlog above gets first claim on freed
+        // capacity ahead of every cv-parked reader (a timed-out re-probe
+        // can still race in — strong, not absolute, priority) and a
+        // flooding stream's reader cannot systematically starve its own
+        // older woken commands.
+        for gate in &self.state.device_gates {
+            gate.publish();
         }
     }
 
@@ -203,118 +288,69 @@ impl Dispatcher {
             if w.poisoned {
                 self.fail_command(&p.pkt.msg);
             } else {
-                self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns);
+                // Woken commands released their slot at park time.
+                self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns, false);
             }
         }
     }
 
-    /// Execute a dependency-satisfied command.
+    /// Execute a dependency-satisfied command: device-bound work goes to
+    /// the target device's dispatch worker, everything else runs inline.
     fn execute(
         &mut self,
         from_peer: Option<u32>,
         pkt: Packet,
         via_rdma: bool,
         queued_ns: u64,
+        holds_slot: bool,
     ) {
+        // Device-bound commands leave the dispatch thread here. Only
+        // queue-stream traffic is gated: control-stream and peer
+        // commands are context-level ops that may concern any device
+        // (the client hardwires device 0 on them), so they run slot-free
+        // — a saturated device must never wedge allocations or
+        // cross-server reads for its siblings. Woken queue-stream
+        // commands re-acquire a slot non-blockingly; when their device's
+        // pipeline is full they wait in the per-device ready backlog —
+        // the dispatcher never blocks, and the gate bound holds.
+        if let Some(dev) = self.state.device_route(&pkt.msg) {
+            let stream = pkt.msg.queue;
+            let gated = from_peer.is_none() && stream != 0;
+            let mut cmd = DeviceCmd {
+                pkt,
+                queued_ns,
+                stream,
+                holds_slot,
+            };
+            if !gated {
+                self.dev_txs[dev].send(cmd).ok();
+            } else if holds_slot || self.state.device_gates[dev].try_enter(stream) {
+                cmd.holds_slot = true;
+                self.dev_txs[dev].send(cmd).ok();
+            } else {
+                self.ready_backlog[dev].push_back(cmd);
+            }
+            return;
+        }
         let submit_ns = now_ns();
-        let msg = pkt.msg;
-        let event = msg.event;
-        match msg.body {
-            Body::CreateBuffer {
-                buf,
-                size,
-                content_size_buf,
-            } => {
-                if size > MAX_ALLOC {
-                    self.fail_event(event);
-                    return;
-                }
-                self.state.ensure_buffer(buf, size, content_size_buf);
-                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
-            }
-            Body::FreeBuffer { buf } => {
-                self.state.buffers.remove(buf);
-                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
-            }
-            Body::WriteBuffer { buf, offset, len } => {
-                // A corrupt (or malicious) packet can declare a `len` that
-                // does not match the payload that actually arrived; copying
-                // would panic the daemon. Validate and fail the event.
-                let ok = pkt.payload.len() as u64 == len
-                    && self.state.write_buffer(buf, offset, &pkt.payload);
-                if ok {
-                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
-                } else {
-                    self.fail_event(event);
-                }
-            }
-            Body::SetContentSize { buf, size } => {
-                if self.state.set_content_size(buf, size) {
-                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
-                } else {
-                    self.fail_event(event);
-                }
-            }
-            Body::ReadBuffer { buf, offset, len } => {
-                // len == u64::MAX requests a content-size-limited read
-                // (cl_pocl_content_size aware download).
-                let len = if len == u64::MAX {
-                    self.state.content_size_of(buf)
-                } else {
-                    len
-                };
-                // Out-of-range offsets fail the event instead of slicing
-                // with end < start (the seed's daemon-killing panic).
-                match self.state.read_buffer(buf, offset, len) {
-                    Some(payload) => {
-                        self.complete_inline(event, queued_ns, submit_ns, payload)
-                    }
+        let event = pkt.msg.event;
+        match &pkt.msg.body {
+            // Routed bodies reach this inline path only without a usable
+            // device (zero-device daemon, out-of-range device index). The
+            // buffer ops still work — they are device-agnostic — but a
+            // kernel launch without a device can only fail.
+            Body::CreateBuffer { .. }
+            | Body::FreeBuffer { .. }
+            | Body::WriteBuffer { .. }
+            | Body::SetContentSize { .. }
+            | Body::ReadBuffer { .. } => {
+                match device::exec_routed_body(&self.state, &pkt) {
+                    Some(payload) => self.complete_inline(event, queued_ns, submit_ns, payload),
                     None => self.fail_event(event),
                 }
             }
-            Body::RunKernel {
-                artifact,
-                args,
-                outs,
-            } => {
-                let dev = msg.device as usize;
-                if dev >= self.state.devices.len() {
-                    self.fail_event(event);
-                    return;
-                }
-                let mut inputs = Vec::with_capacity(args.len());
-                for a in &args {
-                    match self.state.snapshot_buffer(*a) {
-                        Some(b) => inputs.push(b),
-                        None => {
-                            self.fail_event(event);
-                            return;
-                        }
-                    }
-                }
-                let tag = crate::util::fresh_id();
-                self.inflight.insert(
-                    tag,
-                    Inflight {
-                        event,
-                        outs,
-                        queued_ns,
-                        submit_ns,
-                    },
-                );
-                self.state.events.set_status(
-                    event,
-                    EventStatus::Submitted,
-                    Timestamps::default(),
-                );
-                self.state.devices[dev].submit(ExecRequest {
-                    tag,
-                    artifact,
-                    inputs,
-                    reply: self.exec_txs[dev].clone(),
-                });
-            }
-            Body::MigrateOut {
+            Body::RunKernel { .. } => self.fail_event(event),
+            &Body::MigrateOut {
                 buf,
                 dst_server,
                 size,
@@ -336,7 +372,7 @@ impl Dispatcher {
                     })
                     .ok();
             }
-            Body::MigrateData {
+            &Body::MigrateData {
                 buf,
                 content_size,
                 total_size,
@@ -393,7 +429,7 @@ impl Dispatcher {
                     self.fail_event(event);
                 }
             }
-            Body::NotifyEvent {
+            &Body::NotifyEvent {
                 event: ev,
                 status,
             } => {
@@ -408,7 +444,7 @@ impl Dispatcher {
                 };
                 self.wake_queue.extend(wakeups);
             }
-            Body::RdmaAdvertise { rkey, shadow_size } => {
+            &Body::RdmaAdvertise { rkey, shadow_size } => {
                 // Arrives over a peer connection; key by the sending peer.
                 if let (Some(rdma_state), Some(peer)) = (&self.state.rdma, from_peer) {
                     rdma_state
@@ -435,6 +471,11 @@ impl Dispatcher {
         let Some(inf) = self.inflight.remove(&outcome.tag) else {
             return;
         };
+        // The launch's gate slot (if held) spans execution; give it back
+        // before the (possibly slow) output commit and completion fanout.
+        if inf.holds_slot {
+            self.state.device_gates[inf.device].release(inf.stream);
+        }
         match outcome.outputs {
             Ok(outputs) => {
                 if outputs.len() != inf.outs.len() {

@@ -5,6 +5,11 @@
 //! RDMA chain — and the *destination* completes the migration event for
 //! everyone. Only the content-size prefix crosses the wire when the buffer
 //! has a `cl_pocl_content_size` link (§5.3).
+//!
+//! Like the per-device dispatch workers ([`super::device`]), this thread
+//! never drives the waiter index itself: locally-failed migrations report
+//! back through [`Work::Wake`] so the dispatcher releases (and poisons)
+//! dependents from its own thread.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;

@@ -6,15 +6,18 @@
 //! readers do blocking reads on the socket until they manage to read a new
 //! command, which they then dispatch"*. Dispatch resolves event
 //! dependencies against the daemon's [`crate::sched::EventTable`] (native +
-//! user events), forwards ready kernel launches to per-device executor
-//! threads, performs P2P buffer migrations (TCP or RDMA), and fans
-//! completion notifications out to the client and all peers.
+//! user events), fans dependency-satisfied commands out to per-device
+//! dispatch workers ([`device`]) behind bounded per-device gates, runs
+//! kernels on per-device executor threads, performs P2P buffer migrations
+//! (TCP or RDMA), and broadcasts completion notifications to the client
+//! and all peers. See `docs/architecture.md` for the full threading model.
 //!
 //! Daemons are plain structs — tests, benches and examples spawn several in
 //! one process connected over real loopback TCP (shaped per DESIGN.md §3),
 //! and `poclr daemon` runs one standalone.
 
 pub mod connection;
+pub mod device;
 pub mod dispatch;
 pub mod migrate;
 pub mod state;

@@ -1,17 +1,18 @@
 //! Shared daemon state: sharded buffer store, event table, device
-//! executors, connection registries, session bookkeeping, RDMA shadow
-//! region.
+//! executors, per-device dispatch gates, connection registries, session
+//! bookkeeping, RDMA shadow region.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::net::rdma::{Endpoint, Mr};
 use crate::net::LinkProfile;
-use crate::proto::{Packet, SessionId};
+use crate::proto::{Msg, Packet, SessionId};
 use crate::runtime::executor::{DeviceExecutor, DeviceKind};
 use crate::sched::EventTable;
 use crate::util::rng::Rng;
@@ -132,6 +133,156 @@ impl RdmaState {
 /// plus the Fig 11 sweep sizes (grown on demand in `migrate`).
 pub const SHADOW_BYTES: usize = 160 * 1024 * 1024;
 
+/// Commands admitted into one device's dispatch pipeline at a time
+/// (queued at the worker, executing, or in flight through its executor).
+/// Past this, stream readers block in their admission loop
+/// (`daemon::connection::admit_device_slot`) — the backpressure edge the
+/// ROADMAP's "bounded queue with per-stream fairness" item asks for.
+pub const DEVICE_QUEUE_DEPTH: usize = 64;
+
+/// Of those, how many one stream may hold: a single greedy queue stream
+/// saturates at this share and leaves headroom for every other stream
+/// targeting the same device (the fairness policy across streams).
+pub const STREAM_SHARE: usize = 16;
+
+#[derive(Default)]
+struct GateInner {
+    /// Slots currently held (pipeline occupancy).
+    held: usize,
+    /// stream id -> slots held by commands that arrived on it.
+    per_stream: HashMap<u32, usize>,
+}
+
+/// Bounded admission gate for one device's dispatch pipeline.
+///
+/// A slot is held from admission until the command leaves the device
+/// pipeline: inline buffer ops release when their worker finishes them,
+/// kernel launches when the dispatcher processes their executor outcome.
+/// Commands that *park* on unresolved dependencies release their slot
+/// immediately (a parked command consumes no device resources, and
+/// holding slots across parks would deadlock a stream against its own
+/// dependency producer); when woken they re-acquire with
+/// [`DeviceGate::try_enter`], overflowing into the dispatcher's
+/// per-device ready backlog when the pipeline is full — so occupancy
+/// never exceeds the bound, and a dependency-gated burst from one stream
+/// can never lock other streams' readers out of the device.
+///
+/// Only stream readers ever *block* here, so a saturated device stalls
+/// exactly the streams feeding it; the dispatcher uses the non-blocking
+/// entry point. The sole bound exception is the superseded-reader
+/// recovery path, [`DeviceGate::force_enter`].
+pub struct DeviceGate {
+    inner: Mutex<GateInner>,
+    cv: Condvar,
+    /// Capacity freed since the last [`DeviceGate::publish`] — lets the
+    /// dispatcher's per-work-item publish pass skip gates (and their
+    /// parked readers) where nothing changed.
+    dirty: AtomicBool,
+}
+
+impl Default for DeviceGate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceGate {
+    pub fn new() -> DeviceGate {
+        DeviceGate {
+            inner: Mutex::new(GateInner::default()),
+            cv: Condvar::new(),
+            dirty: AtomicBool::new(false),
+        }
+    }
+
+    /// Grant one slot to `stream` if the device bound and the stream's
+    /// fair share both allow it.
+    fn grant(g: &mut GateInner, stream: u32) -> bool {
+        let stream_held = g.per_stream.get(&stream).copied().unwrap_or(0);
+        if g.held < DEVICE_QUEUE_DEPTH && stream_held < STREAM_SHARE {
+            g.held += 1;
+            *g.per_stream.entry(stream).or_insert(0) += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Non-blocking admission: grant a slot if the device bound and the
+    /// stream's fairness share both allow it. This is the dispatcher's
+    /// entry point — it overflows refused commands into its ready
+    /// backlog and must never block.
+    pub fn try_enter(&self, stream: u32) -> bool {
+        Self::grant(&mut self.inner.lock().unwrap(), stream)
+    }
+
+    /// One grant-or-park step of a stream reader's admission loop: under
+    /// a single lock hold, grant a slot if bounds allow, otherwise park
+    /// until the dispatcher republishes capacity ([`DeviceGate::publish`])
+    /// or `timeout` passes, then re-probe once. The single lock hold
+    /// closes the lost-wakeup window between a failed probe and the
+    /// wait; the timeout keeps the caller's exit conditions (shutdown,
+    /// stream supersession) live.
+    pub fn enter_or_wait(&self, stream: u32, timeout: Duration) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if Self::grant(&mut g, stream) {
+            return true;
+        }
+        let (mut g, _) = self.cv.wait_timeout(g, timeout).unwrap();
+        Self::grant(&mut g, stream)
+    }
+
+    /// Unconditionally take a slot, bounds notwithstanding — the
+    /// exactly-once recovery path for a reader superseded by a
+    /// reconnected stream while parked in its admission loop: its
+    /// already-read command must still reach the dispatcher (the replay
+    /// cursor moved past it, so no replayed copy will ever be admitted).
+    /// Transient, bounded oversubscription: at most one slot per
+    /// superseded reader.
+    pub fn force_enter(&self, stream: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.held += 1;
+        *g.per_stream.entry(stream).or_insert(0) += 1;
+    }
+
+    /// Release one slot held on behalf of `stream`. Deliberately does
+    /// NOT wake parked readers: every release is followed (causally, via
+    /// a Work item) by the dispatcher draining its ready backlog and
+    /// then calling [`DeviceGate::publish`] — so *cv-parked* readers
+    /// only compete for freed slots after the backlog's claim. (A reader
+    /// whose timed wait happens to expire inside that window can still
+    /// win the race — the priority is strong, not absolute — but a
+    /// flooding stream's reader can no longer systematically starve its
+    /// own woken backlog.)
+    pub fn release(&self, stream: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.held = g.held.saturating_sub(1);
+        if let Some(n) = g.per_stream.get_mut(&stream) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                g.per_stream.remove(&stream);
+            }
+        }
+        drop(g);
+        self.dirty.store(true, Ordering::Release);
+    }
+
+    /// Wake parked readers to re-probe — called by the dispatcher after
+    /// its ready backlog had first claim on freed capacity. A no-op (one
+    /// atomic load) for gates with no release since the last publish, so
+    /// the per-work-item publish pass costs nothing on idle devices.
+    pub fn publish(&self) {
+        if self.dirty.load(Ordering::Acquire) && self.dirty.swap(false, Ordering::AcqRel) {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Slots currently held (tests / metrics).
+    pub fn held(&self) -> usize {
+        self.inner.lock().unwrap().held
+    }
+}
+
 pub struct DaemonState {
     pub server_id: u32,
     pub client_link: LinkProfile,
@@ -139,6 +290,10 @@ pub struct DaemonState {
     pub buffers: BufStore,
     pub events: EventTable,
     pub devices: Vec<DeviceExecutor>,
+    /// One bounded admission gate per device, indexed like `devices` —
+    /// the backpressure edge between stream readers and the per-device
+    /// dispatch workers.
+    pub device_gates: Vec<DeviceGate>,
     /// Writer channels to the connected client, one per attached stream
     /// (0 = the session control stream, N = the stream of command queue N).
     /// Values are `(instance, sender)`: the instance id ties a channel to
@@ -240,6 +395,7 @@ impl DaemonState {
         let mut session_seed = Rng::from_entropy();
         let mut sid = [0u8; 16];
         session_seed.fill_bytes(&mut sid);
+        let device_gates = (0..devices.len()).map(|_| DeviceGate::new()).collect();
         Ok(Arc::new(DaemonState {
             server_id: cfg.server_id,
             client_link: cfg.client_link,
@@ -247,6 +403,7 @@ impl DaemonState {
             buffers: BufStore::new(),
             events: EventTable::new(),
             devices,
+            device_gates,
             client_txs: Mutex::new(HashMap::new()),
             client_streams: Mutex::new(HashMap::new()),
             undelivered: Mutex::new(Vec::new()),
@@ -260,6 +417,23 @@ impl DaemonState {
             commands_seen: AtomicU64::new(0),
             wake_examined: AtomicU64::new(0),
         }))
+    }
+
+    /// Which device's dispatch worker executes this command, or `None`
+    /// for dispatcher-inline handling (control traffic, migrations, peer
+    /// notifications, out-of-range device indexes, zero-device daemons).
+    ///
+    /// Stream readers and the dispatcher must agree on this decision —
+    /// the reader acquires the device-gate slot that the worker (or the
+    /// dispatcher, for kernels) later releases. The body classification
+    /// itself lives next to the worker ([`super::device::routed_body`])
+    /// so routing and execution cannot drift apart.
+    pub fn device_route(&self, msg: &Msg) -> Option<usize> {
+        if !super::device::routed_body(&msg.body) {
+            return None;
+        }
+        let dev = msg.device as usize;
+        (dev < self.devices.len()).then_some(dev)
     }
 
     /// Send to the client over the stream of queue `queue`, falling back
@@ -546,6 +720,75 @@ mod tests {
         // offset+len overflow must not panic
         assert_eq!(s.read_buffer(2, 1, u64::MAX).unwrap(), vec![2, 3, 4]);
         assert!(s.read_buffer(404, 0, 1).is_none());
+    }
+
+    #[test]
+    fn gate_bounds_total_and_per_stream_occupancy() {
+        let gate = DeviceGate::new();
+        // One stream saturates at its fair share...
+        for _ in 0..STREAM_SHARE {
+            assert!(gate.try_enter(7));
+        }
+        assert!(!gate.try_enter(7), "stream 7 is at its share");
+        assert_eq!(gate.held(), STREAM_SHARE);
+        // ...while other streams still get in, up to the device bound.
+        for s in 0..(DEVICE_QUEUE_DEPTH / STREAM_SHARE - 1) as u32 {
+            for _ in 0..STREAM_SHARE {
+                assert!(gate.try_enter(s));
+            }
+        }
+        assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
+        // A full device refuses even a fresh stream, never oversubscribing.
+        assert!(!gate.try_enter(99));
+        assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
+        // Releasing a slot re-admits, but only within the share.
+        gate.release(7);
+        assert!(!gate.try_enter(0), "stream 0 is at its share");
+        assert!(gate.try_enter(7));
+        assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
+        // The superseded-reader recovery path ignores the bounds.
+        gate.force_enter(7);
+        assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH + 1);
+    }
+
+    #[test]
+    fn gate_reader_loop_blocks_until_capacity() {
+        let gate = Arc::new(DeviceGate::new());
+        for _ in 0..STREAM_SHARE {
+            assert!(gate.try_enter(1));
+        }
+        let g2 = Arc::clone(&gate);
+        let h = std::thread::spawn(move || {
+            // The reader admission loop: grant-or-park, re-probe.
+            while !g2.enter_or_wait(1, Duration::from_millis(10)) {}
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "admission must block at the share cap");
+        // Releases do not notify (the dispatcher's backlog gets first
+        // claim); the parked reader picks the slot up on its next probe.
+        gate.release(1);
+        gate.publish();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn device_route_targets_existing_devices_only() {
+        let s = DaemonState::new(&mut DaemonConfig::local(0, 2, Manifest::default())).unwrap();
+        let mut msg = crate::proto::Msg::control(crate::proto::Body::WriteBuffer {
+            buf: 1,
+            offset: 0,
+            len: 0,
+        });
+        msg.device = 1;
+        assert_eq!(s.device_route(&msg), Some(1));
+        msg.device = 2; // out of range -> dispatcher-inline
+        assert_eq!(s.device_route(&msg), None);
+        // Control / peer bodies are never routed.
+        let barrier = crate::proto::Msg::control(crate::proto::Body::Barrier);
+        assert_eq!(s.device_route(&barrier), None);
+        // Zero-device daemons route nothing.
+        let z = state();
+        assert_eq!(z.device_route(&barrier), None);
     }
 
     #[test]

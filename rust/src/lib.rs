@@ -18,8 +18,10 @@
 //! Python never runs on the request path; after `make artifacts` the binary
 //! is self-contained.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `README.md` for the crate layout and quickstart,
+//! `docs/architecture.md` for the threading model and the life of a
+//! command, and `docs/wire-protocol.md` for the framing and every
+//! command tag.
 
 pub mod apps;
 pub mod baseline;

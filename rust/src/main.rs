@@ -89,11 +89,16 @@ fn main() -> anyhow::Result<()> {
                 Some("queues") => {
                     for qn in [1usize, 2, 4, 8] {
                         let single = scenarios::queue_scaling_cmds_per_sec(qn, 1000, false);
-                        let multi = scenarios::queue_scaling_cmds_per_sec(qn, 1000, true);
+                        let multi =
+                            scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, 1);
+                        let fanned =
+                            scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, qn);
                         println!(
                             "{qn} queue(s): single-conn {single:>9.0} cmd/s   \
-                             per-queue streams {multi:>9.0} cmd/s   ({:.2}x)",
-                            multi / single
+                             per-queue streams {multi:>9.0} cmd/s ({:.2}x)   \
+                             per-queue devices {fanned:>9.0} cmd/s ({:.2}x)",
+                            multi / single,
+                            fanned / multi
                         );
                     }
                 }
@@ -135,7 +140,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
-            eprintln!("  sim    fig12|fig13|fig16       DES scenario tables");
+            eprintln!("  sim    fig12|fig13|fig16|queues  DES scenario tables");
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);
         }

@@ -27,7 +27,7 @@ impl std::fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
-/// Append-only writer over a reusable Vec<u8>.
+/// Append-only writer over a reusable `Vec<u8>`.
 #[derive(Default)]
 pub struct W {
     pub buf: Vec<u8>,

@@ -304,9 +304,12 @@ impl EventTable {
         self.len() == 0
     }
 
-    /// Drop old *Complete* entries so a long-running daemon's table stays
-    /// bounded (wired into the dispatcher loop; see
-    /// `daemon::dispatch::GC_EVERY_CMDS`). Failed entries are kept: they
+    /// Drop old *Complete* entries so a long-running table stays bounded.
+    /// Wired into the daemon's dispatcher loop (see
+    /// `daemon::dispatch::GC_EVERY_CMDS`) and, mirrored driver-side, into
+    /// the client's stream readers (see `client::GC_EVERY_COMPLETIONS`),
+    /// so neither end accumulates an entry per command for the life of
+    /// the process. Failed entries are kept: they
     /// carry poison that must keep propagating to late dependents, and
     /// they are rare. Reclaimed ids are remembered via `gc_floor` so later
     /// wait lists referencing them still read as Complete. Events with

@@ -1,9 +1,11 @@
-//! Event-table GC wiring (ROADMAP item): a long-running daemon must
-//! reclaim terminal events once the client has moved past them, keeping
-//! the table bounded — while late wait lists referencing reclaimed
-//! (Complete) events still resolve instead of parking forever.
+//! Event-table GC wiring, both ends of the wire (ROADMAP items): a
+//! long-running daemon must reclaim terminal events once the client has
+//! moved past them, and the client driver's own `EventTable` must mirror
+//! the scheme (stream readers reclaim as completions arrive) instead of
+//! growing for the life of the `Platform` — while late references to
+//! reclaimed (Complete) events still resolve instead of parking forever.
 
-use poclr::client::{ClientConfig, Platform};
+use poclr::client::{self, ClientConfig, Platform};
 use poclr::daemon::{dispatch, Daemon, DaemonConfig};
 use poclr::runtime::Manifest;
 
@@ -12,7 +14,7 @@ fn manifest() -> Manifest {
 }
 
 #[test]
-fn long_running_daemon_event_table_stays_bounded() {
+fn long_running_session_event_tables_stay_bounded() {
     let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
     let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
     let ctx = p.context();
@@ -21,12 +23,14 @@ fn long_running_daemon_event_table_stays_bounded() {
     // Written once up front: its producing event will be long reclaimed
     // by the time it is referenced again at the end.
     let early = ctx.create_buffer(4);
-    q.write(early, &7u32.to_le_bytes()).unwrap();
+    let early_write = q.write(early, &7u32.to_le_bytes()).unwrap();
 
     let buf = ctx.create_buffer(4);
     // Several times the GC keep-depth worth of commands, each completing
-    // its own event.
+    // its own event. (Daemon and client keep-depths match, so one pass
+    // exercises both reclaimers.)
     let total = 3 * dispatch::EVENT_TABLE_KEEP;
+    assert_eq!(dispatch::EVENT_TABLE_KEEP, client::CLIENT_EVENT_KEEP);
     for i in 0..total {
         q.write(buf, &(i as u32).to_le_bytes()).unwrap();
         if i % 512 == 511 {
@@ -50,10 +54,31 @@ fn long_running_daemon_event_table_stays_bounded() {
     );
     assert!(len < total, "GC never reclaimed anything: {len}");
 
+    // The client driver's table is bounded the same way (ROADMAP
+    // "client-side event-table GC"): the stream readers reclaimed old
+    // Complete entries as the completions streamed in.
+    let client_len = p.n_tracked_events();
+    assert!(
+        client_len <= client::CLIENT_EVENT_KEEP + client::GC_EVERY_COMPLETIONS as usize,
+        "client event table unbounded after {total} commands: {client_len} entries"
+    );
+    assert!(
+        client_len < total,
+        "client GC never reclaimed anything: {client_len}"
+    );
+
     // A fresh command waiting on a long-reclaimed dependency must not
-    // park forever: `early`'s producing event is gone from the table, and
-    // this read's wait list references it — reclaimed ids read as
-    // Complete via the GC floor.
+    // park forever: `early`'s producing event is gone from the daemon's
+    // table, and this read's wait list references it — reclaimed ids read
+    // as Complete via the GC floor.
     let out = q.read(early).unwrap();
     assert_eq!(u32::from_le_bytes(out[..4].try_into().unwrap()), 7);
+
+    // Client-side floor semantics for application-held handles: the early
+    // write's event was reclaimed from the driver's table, yet its handle
+    // still reads terminal-Complete and waits resolve instantly (the
+    // paper's profiling timestamps are gone — that history was the cost
+    // of boundedness).
+    assert!(early_write.status().unwrap().is_terminal());
+    early_write.wait().unwrap();
 }
