@@ -1,0 +1,175 @@
+//! Per-command overhead on loopback — the paper's Fig 8 "~60 µs on top
+//! of the ping" claim, measured at the granularity the zero-copy payload
+//! path optimizes: one empty-wait command, enqueue to completion-wait.
+//!
+//! Three command classes against one loopback daemon:
+//!
+//! * **barrier** — the lightest round trip the protocol has (no buffers,
+//!   no payload, no device work): pure framing + dispatch + completion
+//!   overhead;
+//! * **write 4 B / 4 KiB** — the enqueue-heavy small-upload path whose
+//!   payload now enters `Bytes` once and is shared by the backup ring
+//!   and the socket write;
+//! * **read 4 KiB** — the reply-payload path (store copy-out shared all
+//!   the way onto the completion stream).
+//!
+//! Reports mean and p50/p90/p99 per class and writes
+//! `BENCH_command_latency.json` at the repo root so the perf trajectory
+//! is tracked in-tree, alongside the DES model of the same quantities
+//! (`poclr sim latency`). `--tiny` (or COMMAND_LATENCY_TINY=1) runs a
+//! CI-smoke-sized sweep.
+
+use std::time::Instant;
+
+use poclr::client::{ClientConfig, Platform, Queue};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::report;
+use poclr::runtime::Manifest;
+use poclr::sim::scenarios;
+use poclr::util::stats::Samples;
+
+struct Row {
+    label: &'static str,
+    mean_ns: f64,
+    p50_ns: f64,
+    p90_ns: f64,
+    p99_ns: f64,
+    n: usize,
+}
+
+fn measure(label: &'static str, iters: usize, mut op: impl FnMut()) -> Row {
+    // Warm-up: stream attach, server-side allocation, branch predictors.
+    for _ in 0..(iters / 10).max(10) {
+        op();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        op();
+        s.push(t0.elapsed().as_nanos() as f64);
+    }
+    let row = Row {
+        label,
+        mean_ns: s.mean(),
+        p50_ns: s.percentile(50.0),
+        p90_ns: s.percentile(90.0),
+        p99_ns: s.percentile(99.0),
+        n: s.len(),
+    };
+    println!(
+        "  {:<14} mean {:>9}  p50 {:>9}  p90 {:>9}  p99 {:>9}  (n={})",
+        row.label,
+        poclr::util::fmt_ns(row.mean_ns),
+        poclr::util::fmt_ns(row.p50_ns),
+        poclr::util::fmt_ns(row.p90_ns),
+        poclr::util::fmt_ns(row.p99_ns),
+        row.n
+    );
+    row
+}
+
+fn write_case(
+    q: &Queue,
+    ctx: &poclr::client::Context,
+    bytes: usize,
+) -> (poclr::client::Buffer, Vec<u8>) {
+    let buf = ctx.create_buffer(bytes as u64);
+    let data = vec![0xA5u8; bytes];
+    q.write(buf, &data).unwrap();
+    q.finish().unwrap();
+    (buf, data)
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny")
+        || std::env::var("COMMAND_LATENCY_TINY").is_ok();
+    let iters = if tiny { 200 } else { 2000 };
+
+    report::figure(
+        "Command latency",
+        "empty-wait command round trips on loopback (Fig 8 granularity)",
+    );
+
+    // Zero GPU devices: barrier/write/read are handled without touching
+    // an executor, isolating exactly the framing + dispatch + completion
+    // path the zero-copy rewrite targets.
+    let daemon = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let platform = Platform::connect(&[daemon.addr()], ClientConfig::default()).unwrap();
+    let ctx = platform.context();
+    // Out-of-order queue: no implicit ordering edge, so every measured
+    // command carries an empty (or already-terminal) wait list.
+    let q = ctx.out_of_order_queue(0, 0);
+
+    let mut rows = vec![measure("barrier", iters, || {
+        q.barrier().unwrap().wait().unwrap();
+    })];
+
+    let (wbuf4, wdata4) = write_case(&q, &ctx, 4);
+    rows.push(measure("write 4B", iters, || {
+        q.write(wbuf4, &wdata4).unwrap().wait().unwrap();
+    }));
+
+    let (wbuf4k, wdata4k) = write_case(&q, &ctx, 4096);
+    rows.push(measure("write 4KiB", iters, || {
+        q.write(wbuf4k, &wdata4k).unwrap().wait().unwrap();
+    }));
+
+    let (rbuf, _) = write_case(&q, &ctx, 4096);
+    rows.push(measure("read 4KiB", iters, || {
+        let out = q.read(rbuf).unwrap();
+        assert_eq!(out.len(), 4096);
+    }));
+
+    // The DES model of the same path (loopback, so no link terms).
+    let modeled = [
+        ("barrier", 0usize),
+        ("write 4B", 4),
+        ("write 4KiB", 4096),
+        ("read 4KiB", 4096),
+    ];
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"command_latency\",\n");
+    json.push_str(&format!(
+        "  \"mode\": \"{}\",\n",
+        if tiny { "measured-tiny" } else { "measured-full" }
+    ));
+    json.push_str(&format!("  \"iters\": {iters},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"command\": \"{}\", \"mean_ns\": {:.0}, \"p50_ns\": {:.0}, \
+             \"p90_ns\": {:.0}, \"p99_ns\": {:.0}, \"n\": {}}}{}\n",
+            r.label,
+            r.mean_ns,
+            r.p50_ns,
+            r.p90_ns,
+            r.p99_ns,
+            r.n,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"modeled_us\": [\n");
+    for (i, (label, bytes)) in modeled.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"command\": \"{label}\", \"legacy_us\": {:.2}, \"zero_copy_us\": {:.2}}}{}\n",
+            scenarios::command_latency_us(*bytes, false),
+            scenarios::command_latency_us(*bytes, true),
+            if i + 1 < modeled.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(
+        "  \"note\": \"measured = loopback client->daemon->client round trips via the \
+         driver; modeled = poclr sim latency (framing+copy slice only)\"\n",
+    );
+    json.push_str("}\n");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_command_latency.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -95,7 +95,7 @@ impl SnuclQueue {
         self.inner.write(buf, data)
     }
 
-    pub fn read(&self, buf: Buffer) -> Result<Vec<u8>> {
+    pub fn read(&self, buf: Buffer) -> Result<crate::util::Bytes> {
         spin_sleep(MPI_PACK_COST);
         let data = self.inner.read(buf)?;
         staging_cost(data.len());

@@ -6,14 +6,14 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
 use anyhow::{Context as _, Result};
 
 use crate::proto::Timestamps;
 use crate::runtime::executor::{DeviceExecutor, DeviceKind, ExecRequest};
 use crate::runtime::Manifest;
-use crate::util::{fresh_id, now_ns};
+use crate::util::{fresh_id, now_ns, Bytes};
 
 /// Handle to a local buffer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,18 +23,20 @@ pub struct LocalBuffer(pub u64);
 /// overlap; this keeps call sites symmetric with the remote driver's
 /// [`crate::client::ReadHandle`]).
 #[derive(Debug)]
-pub struct LocalReadHandle(Result<Vec<u8>>);
+pub struct LocalReadHandle(Result<Bytes>);
 
 impl LocalReadHandle {
-    pub fn wait(self) -> Result<Vec<u8>> {
+    pub fn wait(self) -> Result<Bytes> {
         self.0
     }
 }
 
-/// A synchronous local execution queue over one device.
+/// A synchronous local execution queue over one device. Buffer contents
+/// are shared [`Bytes`] — reads and kernel-input snapshots are refcount
+/// bumps, mirroring the remote driver's zero-copy payload path.
 pub struct LocalQueue {
     exec: DeviceExecutor,
-    buffers: Mutex<HashMap<u64, Arc<Vec<u8>>>>,
+    buffers: Mutex<HashMap<u64, Bytes>>,
 }
 
 impl LocalQueue {
@@ -63,7 +65,7 @@ impl LocalQueue {
         self.buffers
             .lock()
             .unwrap()
-            .insert(id, Arc::new(vec![0u8; size]));
+            .insert(id, Bytes::from(vec![0u8; size]));
         LocalBuffer(id)
     }
 
@@ -71,18 +73,16 @@ impl LocalQueue {
         self.buffers
             .lock()
             .unwrap()
-            .insert(buf.0, Arc::new(data.to_vec()));
+            .insert(buf.0, Bytes::copy_from_slice(data));
     }
 
-    pub fn read(&self, buf: LocalBuffer) -> Result<Vec<u8>> {
-        Ok(self
-            .buffers
+    pub fn read(&self, buf: LocalBuffer) -> Result<Bytes> {
+        self.buffers
             .lock()
             .unwrap()
             .get(&buf.0)
-            .context("unknown local buffer")?
-            .as_ref()
-            .clone())
+            .cloned()
+            .context("unknown local buffer")
     }
 
     /// Non-blocking read, mirroring [`crate::client::Queue::enqueue_read`]
@@ -125,7 +125,7 @@ impl LocalQueue {
         );
         let mut m = self.buffers.lock().unwrap();
         for (o, bytes) in outs.iter().zip(outputs) {
-            m.insert(o.0, Arc::new(bytes));
+            m.insert(o.0, Bytes::from(bytes));
         }
         Ok(Timestamps {
             queued_ns,

@@ -46,7 +46,7 @@ use crate::net::LinkProfile;
 use crate::ocl::Residency;
 use crate::proto::{Body, EventStatus, Timestamps};
 use crate::sched::{EventTable, WaitOutcome};
-use crate::util::fresh_id;
+use crate::util::{fresh_id, Bytes};
 
 use server_conn::{QueueStream, ServerConn};
 
@@ -102,7 +102,7 @@ impl Default for ClientConfig {
 pub struct PlatformInner {
     pub servers: Vec<Arc<ServerConn>>,
     pub events: Arc<EventTable>,
-    pub read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    pub read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
     pub cfg: ClientConfig,
 }
 
@@ -301,7 +301,7 @@ impl Event {
 /// other work and collects the bytes via [`ReadHandle::wait`].
 pub struct ReadHandle {
     event: Event,
-    results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    results: Arc<Mutex<HashMap<u64, Bytes>>>,
 }
 
 impl ReadHandle {
@@ -318,8 +318,12 @@ impl ReadHandle {
             .is_some_and(|s| s.is_terminal())
     }
 
-    /// Block until the download completes and take the payload.
-    pub fn wait(self) -> Result<Vec<u8>> {
+    /// Block until the download completes and take the payload. The
+    /// returned [`Bytes`] is the very allocation the reader thread
+    /// received the completion payload into — no copy on the way out
+    /// (it dereferences to `&[u8]`; call `to_vec()` if an owned `Vec`
+    /// is genuinely needed).
+    pub fn wait(self) -> Result<Bytes> {
         self.event.wait()?;
         self.results
             .lock()
@@ -414,7 +418,7 @@ impl Context {
                         0,
                         wait.clone(),
                         Body::FreeBuffer { buf: buf.0 },
-                        Vec::new(),
+                        Bytes::new(),
                     )
                     .ok();
                 }
@@ -499,7 +503,7 @@ impl Context {
                     size,
                     content_size_buf: csbuf,
                 },
-                Vec::new(),
+                Bytes::new(),
             )
         })();
         if let Err(e) = sent {
@@ -570,7 +574,7 @@ impl Context {
                 size,
                 rdma: self.plat.cfg.rdma_migrations as u8,
             },
-            Vec::new(),
+            Bytes::new(),
         )?;
         self.buffers.with(buf.0, |st| {
             st.residency = Residency::Server(dst_server);
@@ -651,7 +655,9 @@ impl Queue {
                 offset: 0,
                 len: data.len() as u64,
             },
-            data.to_vec(),
+            // The single "entering Bytes" copy; the backup ring and the
+            // socket write both share this allocation from here on.
+            Bytes::copy_from_slice(data),
         )?;
         self.ctx.buffers.with(buf.0, |st| {
             st.residency = Residency::Server(self.server);
@@ -684,7 +690,7 @@ impl Queue {
             ev,
             wait,
             Body::SetContentSize { buf: buf.0, size },
-            Vec::new(),
+            Bytes::new(),
         )?;
         self.ctx.buffers.with(buf.0, |st| {
             st.last_event = ev;
@@ -769,7 +775,7 @@ impl Queue {
                 args: args.iter().map(|b| b.0).collect(),
                 outs: outs.iter().map(|b| b.0).collect(),
             },
-            Vec::new(),
+            Bytes::new(),
         )?;
         // Bookkeeping only after the send succeeded — a command that was
         // never sent must leave no dependency edges behind (its event
@@ -787,6 +793,22 @@ impl Queue {
                 st.readers.clear();
             });
         }
+        self.note_event(ev);
+        Ok(self.ctx.event(ev))
+    }
+
+    /// Enqueue an explicit barrier command (the clEnqueueBarrier
+    /// analogue): the lightest round trip the protocol has — no buffers,
+    /// no payload, no device work — which is exactly what the
+    /// command-latency benchmark measures as per-command overhead. On an
+    /// in-order queue it carries the implicit ordering edge; on an
+    /// out-of-order queue its wait list is empty.
+    pub fn barrier(&self) -> Result<Event> {
+        let wait = self.implicit_wait();
+        let ev = fresh_id();
+        self.ctx.plat.events.ensure(ev);
+        self.stream()?
+            .send_command(self.device, ev, wait, Body::Barrier, Bytes::new())?;
         self.note_event(ev);
         Ok(self.ctx.event(ev))
     }
@@ -820,14 +842,16 @@ impl Queue {
 
     /// Download only the meaningful prefix of a buffer (blocking wrapper
     /// over [`Queue::enqueue_read_content`]).
-    pub fn read_content(&self, buf: Buffer) -> Result<Vec<u8>> {
+    pub fn read_content(&self, buf: Buffer) -> Result<Bytes> {
         self.enqueue_read_content(buf)?.wait()
     }
 
     /// Download a buffer's bytes (blocking wrapper over
     /// [`Queue::enqueue_read`]). Reads from wherever the freshest copy
-    /// resides; waits for the producing event server-side.
-    pub fn read(&self, buf: Buffer) -> Result<Vec<u8>> {
+    /// resides; waits for the producing event server-side. The returned
+    /// [`Bytes`] derefs to `&[u8]` and is the reader thread's receive
+    /// allocation — no client-side copy.
+    pub fn read(&self, buf: Buffer) -> Result<Bytes> {
         self.enqueue_read(buf)?.wait()
     }
 
@@ -861,7 +885,7 @@ impl Queue {
                     offset: 0,
                     len,
                 },
-                Vec::new(),
+                Bytes::new(),
             )?;
         } else {
             self.ctx.conn(holder)?.send_command(
@@ -873,7 +897,7 @@ impl Queue {
                     offset: 0,
                     len,
                 },
-                Vec::new(),
+                Bytes::new(),
             )?;
         }
         // Register as a consumer only once the request is actually in

@@ -24,8 +24,12 @@ use std::time::Duration;
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::proto::{read_packet, write_packet, Body, EventStatus, Msg, Packet, SessionId};
+use crate::proto::wire::W;
+use crate::proto::{
+    frame, read_packet, read_packet_with, write_packet, Body, EventStatus, Msg, Packet, SessionId,
+};
 use crate::sched::EventTable;
+use crate::util::Bytes;
 
 use super::ClientConfig;
 
@@ -35,7 +39,7 @@ pub struct SessionCore {
     pub addr: String,
     pub cfg: ClientConfig,
     pub events: Arc<EventTable>,
-    pub read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    pub read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
     /// Session id from the control stream's Welcome; queue streams present
     /// it in their `AttachQueue`.
     session: Mutex<SessionId>,
@@ -109,13 +113,17 @@ impl QueueStream {
     /// Enqueue a command towards this server on this stream. Fails fast
     /// with "device unavailable" while disconnected (the Fig 4 fallback
     /// signal).
+    ///
+    /// `payload` is shared, not copied: the backup-ring entry and the
+    /// packet handed to the writer thread (and so the socket write) are
+    /// views of one allocation.
     pub fn send_command(
         &self,
         device: u32,
         event: u64,
         wait: Vec<u64>,
         body: Body,
-        payload: Vec<u8>,
+        payload: Bytes,
     ) -> Result<()> {
         let inner = &self.inner;
         if !self.available() {
@@ -203,56 +211,79 @@ impl StreamInner {
         Ok((stream, generation))
     }
 
-    /// Writer thread: pace the access link once per packet, write, and on
-    /// failure run the reconnect loop (marking the server unavailable
-    /// meanwhile). Exits when every stream handle is gone and the channel
-    /// drains, closing the socket (which in turn retires the reader).
+    /// Writer thread: drain the channel into a batch, pace the access
+    /// link once per coalesced burst, submit the burst as one vectored
+    /// write ([`frame::write_packets_paced`] — headers encode into a
+    /// reused scratch, payloads are referenced in place), and on failure
+    /// run the reconnect loop (marking the server unavailable meanwhile).
+    /// Exits when every stream handle is gone and the channel drains,
+    /// closing the socket (which in turn retires the reader).
     fn spawn_writer(conn: Arc<StreamInner>, stream: TcpStream, rx: Receiver<Packet>) {
         std::thread::Builder::new()
             .name(format!("poclr-cw{}q{}", conn.core.server_id, conn.queue_id))
             .spawn(move || {
                 let mut stream = Some(stream);
-                while let Ok(pkt) = rx.recv() {
-                    loop {
-                        let Some(s) = stream.as_mut() else { break };
-                        let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
-                        conn.core.cfg.link.pace(bytes);
-                        if write_packet(s, &pkt.msg, &pkt.payload).is_ok() {
-                            // A successful write proves the link is up:
-                            // re-arm availability. This also heals the
-                            // narrow check-then-act race where a stale
-                            // reader loaded its (still-current) generation,
-                            // lost the CPU across a reconnect, and then
-                            // flipped the fresh link down — the next probe
-                            // write lands here and undoes it.
-                            conn.core.available.store(true, Ordering::SeqCst);
-                            conn.probe_pending.store(false, Ordering::SeqCst);
-                            break;
-                        }
-                        // Connection lost mid-command.
-                        conn.core.available.store(false, Ordering::SeqCst);
-                        if !conn.core.cfg.reconnect {
-                            return;
-                        }
-                        match conn.reconnect_blocking() {
-                            Some(new_stream) => {
-                                // The replay in dial_and_handshake already
-                                // resent this packet (it is in the backup
-                                // ring), so move on to the next one.
-                                stream = Some(new_stream);
-                                break;
+                let mut scratch = W::with_capacity(256);
+                let mut batch: Vec<Packet> = Vec::new();
+                // Coalesce everything already queued: enqueue-heavy
+                // small-command streams ride one syscall per burst.
+                while frame::drain_batch(&rx, &mut batch) {
+                    let mut done = 0;
+                    while done < batch.len() {
+                        match stream.as_mut() {
+                            Some(s) => {
+                                let wrote = frame::write_packets_paced(
+                                    s,
+                                    &mut scratch,
+                                    &batch[done..],
+                                    |bytes| conn.core.cfg.link.pace(bytes),
+                                );
+                                match wrote {
+                                    Ok(n) => {
+                                        done += n;
+                                        // A successful write proves the link
+                                        // is up: re-arm availability. This
+                                        // also heals the narrow check-then-
+                                        // act race where a stale reader
+                                        // loaded its (still-current)
+                                        // generation, lost the CPU across a
+                                        // reconnect, and then flipped the
+                                        // fresh link down — the next probe
+                                        // write lands here and undoes it.
+                                        conn.core.available.store(true, Ordering::SeqCst);
+                                        conn.probe_pending.store(false, Ordering::SeqCst);
+                                    }
+                                    Err(_) => {
+                                        // Connection lost mid-burst.
+                                        conn.core.available.store(false, Ordering::SeqCst);
+                                        stream = None;
+                                    }
+                                }
                             }
-                            None => return,
-                        }
-                    }
-                    if stream.is_none() && !conn.core.cfg.reconnect {
-                        return;
-                    }
-                    if stream.is_none() {
-                        // Reconnect loop also replays; get a fresh stream.
-                        match conn.reconnect_blocking() {
-                            Some(s) => stream = Some(s),
-                            None => return,
+                            None => {
+                                if !conn.core.cfg.reconnect {
+                                    return;
+                                }
+                                match conn.reconnect_blocking() {
+                                    Some(s) => {
+                                        // The handshake replayed the backup
+                                        // ring past the server's cursor;
+                                        // the burst's unwritten remainder is
+                                        // then rewritten here rather than
+                                        // assumed to be in the ring — under
+                                        // a backlog deeper than backup_depth
+                                        // the ring has already rotated past
+                                        // the oldest queued packets, and
+                                        // skipping would lose them for good.
+                                        // Overlap with the replay is fine:
+                                        // the daemon drops duplicates by
+                                        // replay cursor, and probe packets
+                                        // (cmd_id 0) are invisible no-ops.
+                                        stream = Some(s);
+                                    }
+                                    None => return,
+                                }
+                            }
                         }
                     }
                 }
@@ -374,7 +405,7 @@ impl ServerConn {
         event: u64,
         wait: Vec<u64>,
         body: Body,
-        payload: Vec<u8>,
+        payload: Bytes,
     ) -> Result<()> {
         self.control.send_command(device, event, wait, body, payload)
     }
@@ -397,7 +428,7 @@ impl ServerConn {
 fn reader_loop_impl(
     mut stream: TcpStream,
     events: Arc<EventTable>,
-    read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
     available: Arc<AtomicBool>,
     conn_gen: Arc<AtomicU64>,
     generation: u64,
@@ -408,8 +439,11 @@ fn reader_loop_impl(
     // Pending events are non-terminal and never reclaimed; late waits on
     // reclaimed ids read Complete via the table's gc floor.
     let mut completions_seen = 0u64;
+    // Command structs decode from a reused scratch; payloads arrive as
+    // fresh shared `Bytes` that flow into `read_results` uncopied.
+    let mut scratch = Vec::new();
     loop {
-        match read_packet(&mut stream) {
+        match read_packet_with(&mut stream, &mut scratch) {
             Ok(pkt) => {
                 if let Body::Completion {
                     event, status, ts, ..
@@ -465,7 +499,7 @@ mod tests {
             addr: "127.0.0.1:1".into(),
             cfg,
             events: Arc::new(EventTable::new()),
-            read_results: Arc::new(Mutex::new(HashMap::new())),
+            read_results: Arc::new(Mutex::new(HashMap::<u64, Bytes>::new())),
             session: Mutex::new([0u8; 16]),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(available)),
@@ -485,7 +519,7 @@ mod tests {
     fn unavailable_stream_rejects_commands() {
         let (conn, _rx) = bare_stream(ClientConfig::default(), false);
         let err = conn
-            .send_command(0, 1, vec![], Body::Barrier, vec![])
+            .send_command(0, 1, vec![], Body::Barrier, Bytes::new())
             .unwrap_err();
         assert!(err.to_string().contains("device unavailable"), "{err}");
     }
@@ -498,7 +532,8 @@ mod tests {
         };
         let (conn, rx) = bare_stream(cfg, true);
         for _ in 0..10 {
-            conn.send_command(0, 0, vec![], Body::Barrier, vec![]).unwrap();
+            conn.send_command(0, 0, vec![], Body::Barrier, Bytes::new())
+                .unwrap();
         }
         assert_eq!(conn.inner.backup.lock().unwrap().len(), 4);
         // ids keep increasing even when the ring rotates
@@ -506,6 +541,42 @@ mod tests {
         // every packet carries the stream's queue tag
         let pkt = rx.try_recv().unwrap();
         assert_eq!(pkt.msg.queue, 3);
+    }
+
+    #[test]
+    fn backup_ring_and_writer_share_the_payload_allocation() {
+        // The zero-copy contract of the enqueue path: after the user's
+        // bytes enter `Bytes`, the ring entry and the packet the writer
+        // thread will put on the socket are views of ONE allocation.
+        let cfg = ClientConfig {
+            backup_depth: 4,
+            ..Default::default()
+        };
+        let (conn, rx) = bare_stream(cfg, true);
+        let payload = Bytes::copy_from_slice(&[0xAB; 4096]);
+        conn.send_command(
+            0,
+            7,
+            vec![],
+            Body::WriteBuffer {
+                buf: 1,
+                offset: 0,
+                len: 4096,
+            },
+            payload.clone(),
+        )
+        .unwrap();
+        let sent = rx.try_recv().unwrap();
+        assert!(
+            Bytes::ptr_eq(&sent.payload, &payload),
+            "socket-bound packet must share the caller's allocation"
+        );
+        let ring = conn.inner.backup.lock().unwrap();
+        let (_, ringed) = ring.back().unwrap();
+        assert!(
+            Bytes::ptr_eq(&ringed.payload, &payload),
+            "backup-ring retention must share the caller's allocation"
+        );
     }
 
     // The stale-reader/generation behavior is covered end to end by

@@ -13,8 +13,12 @@
 //! * Peer connections begin with `Hello{role=PEER, peer_id}`; both ends
 //!   register reader/writer threads for the mesh.
 //!
-//! Writer threads drain an mpsc channel, pace the emulated link once per
-//! packet, then perform the size/struct/payload writes.
+//! Writer threads drain an mpsc channel into a batch, pace the emulated
+//! link once per coalesced burst, and submit the whole burst as one
+//! vectored write ([`crate::proto::frame::write_packets_paced`]) —
+//! headers encode into a reused scratch, payloads are referenced in
+//! place. Reader threads reuse a per-connection scratch for command
+//! structs; payloads arrive as shared [`crate::util::Bytes`].
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
@@ -25,7 +29,10 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::net::LinkProfile;
-use crate::proto::{read_packet, write_packet, Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
+use crate::proto::wire::W;
+use crate::proto::{
+    frame, read_packet, read_packet_with, write_packet, Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER,
+};
 
 use super::dispatch::Work;
 use super::state::DaemonState;
@@ -181,10 +188,13 @@ fn run_client_stream(
         format!("pocld{}-cw{}", state.server_id, queue),
     );
 
-    // Reader loop (this thread becomes the reader).
+    // Reader loop (this thread becomes the reader). Command structs
+    // decode from a reused scratch; payloads arrive as fresh shared
+    // `Bytes` that flow to the dispatcher and store uncopied.
     let mut rd = stream;
+    let mut scratch = Vec::new();
     loop {
-        match read_packet(&mut rd) {
+        match read_packet_with(&mut rd, &mut scratch) {
             Ok(pkt) => {
                 // Replay dedup after reconnect ("the server simply ignores
                 // commands it has already processed"), per-stream cursor.
@@ -337,8 +347,9 @@ pub fn start_peer_io(
     let label = format!("pocld{}-pr{}", state.server_id, peer_id);
     std::thread::Builder::new().name(label).spawn(move || {
         let mut rd = stream;
+        let mut scratch = Vec::new();
         loop {
-            match read_packet(&mut rd) {
+            match read_packet_with(&mut rd, &mut scratch) {
                 Ok(pkt) => {
                     if work_tx
                         .send(Work::Packet {
@@ -359,16 +370,28 @@ pub fn start_peer_io(
     Ok(())
 }
 
-/// Writer thread: drain packets, pace the link once per packet, write.
+/// Writer thread: drain everything queued into a batch, pace the link
+/// once for the burst's total bytes, submit the burst as one vectored
+/// write. Completion storms towards one client stream collapse into a
+/// syscall per burst instead of three per packet.
 fn spawn_writer(mut stream: TcpStream, rx: Receiver<Packet>, link: LinkProfile, name: String) {
     std::thread::Builder::new()
         .name(name)
         .spawn(move || {
-            while let Ok(pkt) = rx.recv() {
-                let bytes = 4 + pkt.msg.encode().len() + pkt.payload.len();
-                link.pace(bytes);
-                if write_packet(&mut stream, &pkt.msg, &pkt.payload).is_err() {
-                    break;
+            let mut scratch = W::with_capacity(256);
+            let mut batch: Vec<Packet> = Vec::new();
+            while frame::drain_batch(&rx, &mut batch) {
+                let mut done = 0;
+                while done < batch.len() {
+                    match frame::write_packets_paced(
+                        &mut stream,
+                        &mut scratch,
+                        &batch[done..],
+                        |bytes| link.pace(bytes),
+                    ) {
+                        Ok(n) => done += n,
+                        Err(_) => return,
+                    }
                 }
             }
         })

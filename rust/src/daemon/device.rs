@@ -25,7 +25,7 @@ use std::sync::Arc;
 
 use crate::proto::{Body, EventStatus, Packet, Timestamps};
 use crate::runtime::executor::{ExecOutcome, ExecRequest};
-use crate::util::now_ns;
+use crate::util::{now_ns, Bytes};
 
 use super::dispatch::Work;
 use super::state::{DaemonState, MAX_ALLOC};
@@ -53,8 +53,9 @@ pub struct CmdDone {
     pub event: u64,
     pub queued_ns: u64,
     pub submit_ns: u64,
-    /// ReadBuffer reply bytes (empty otherwise).
-    pub payload: Vec<u8>,
+    /// ReadBuffer reply bytes (empty otherwise) — a shared view of the
+    /// store copy-out; the completion packet carries it uncopied.
+    pub payload: Bytes,
     pub failed: bool,
 }
 
@@ -166,7 +167,7 @@ fn run_item(
                             event: pkt.msg.event,
                             queued_ns,
                             submit_ns,
-                            payload: Vec::new(),
+                            payload: Bytes::new(),
                             failed: true,
                         }))
                         .ok();
@@ -220,7 +221,7 @@ fn run_item(
 /// completes the event (payload empty except for ReadBuffer), `None`
 /// fails it. Shared by the device workers and by the dispatcher's inline
 /// path (zero-device daemons, out-of-range device indexes).
-pub fn exec_routed_body(state: &DaemonState, pkt: &Packet) -> Option<Vec<u8>> {
+pub fn exec_routed_body(state: &DaemonState, pkt: &Packet) -> Option<Bytes> {
     match &pkt.msg.body {
         &Body::CreateBuffer {
             buf,
@@ -231,11 +232,11 @@ pub fn exec_routed_body(state: &DaemonState, pkt: &Packet) -> Option<Vec<u8>> {
                 return None;
             }
             state.ensure_buffer(buf, size, content_size_buf);
-            Some(Vec::new())
+            Some(Bytes::new())
         }
         &Body::FreeBuffer { buf } => {
             state.buffers.remove(buf);
-            Some(Vec::new())
+            Some(Bytes::new())
         }
         &Body::WriteBuffer { buf, offset, len } => {
             // A corrupt (or malicious) packet can declare a `len` that
@@ -243,9 +244,9 @@ pub fn exec_routed_body(state: &DaemonState, pkt: &Packet) -> Option<Vec<u8>> {
             // would panic the daemon. Validate and fail the event.
             let ok = pkt.payload.len() as u64 == len
                 && state.write_buffer(buf, offset, &pkt.payload);
-            ok.then(Vec::new)
+            ok.then(Bytes::new)
         }
-        &Body::SetContentSize { buf, size } => state.set_content_size(buf, size).then(Vec::new),
+        &Body::SetContentSize { buf, size } => state.set_content_size(buf, size).then(Bytes::new),
         &Body::ReadBuffer { buf, offset, len } => {
             // len == u64::MAX requests a content-size-limited read
             // (cl_pocl_content_size aware download).

@@ -32,7 +32,7 @@ use std::sync::Arc;
 use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
 use crate::runtime::executor::ExecOutcome;
 use crate::sched::table::{DepsState, Wakeup};
-use crate::util::now_ns;
+use crate::util::{now_ns, Bytes};
 
 use super::device::{self, CmdDone, DeviceCmd, KernelSubmitted};
 use super::migrate::{self, MigrationJob};
@@ -424,7 +424,7 @@ impl Dispatcher {
                     // Destination completes the migration event and tells
                     // everyone (paper §5.1: "only the destination server
                     // notifies the client of the migration's completion").
-                    self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                    self.complete_inline(event, queued_ns, submit_ns, Bytes::new());
                 } else {
                     self.fail_event(event);
                 }
@@ -455,7 +455,7 @@ impl Dispatcher {
                 }
             }
             Body::Barrier => {
-                self.complete_inline(event, queued_ns, submit_ns, Vec::new());
+                self.complete_inline(event, queued_ns, submit_ns, Bytes::new());
             }
             Body::Hello { .. } | Body::AttachQueue { .. } | Body::Welcome { .. }
             | Body::Completion { .. } => {
@@ -491,7 +491,7 @@ impl Dispatcher {
                     start_ns: outcome.start_ns,
                     end_ns: outcome.end_ns,
                 };
-                self.broadcast_completion(inf.event, ts, Vec::new());
+                self.broadcast_completion(inf.event, ts, Bytes::new());
             }
             Err(e) => {
                 eprintln!("[pocld{}] kernel failed: {e:#}", self.state.server_id);
@@ -506,7 +506,7 @@ impl Dispatcher {
         event: u64,
         queued_ns: u64,
         submit_ns: u64,
-        payload: Vec<u8>,
+        payload: Bytes,
     ) {
         let now = now_ns();
         let ts = Timestamps {
@@ -520,8 +520,10 @@ impl Dispatcher {
 
     /// Mark complete locally (queueing any released waiters), send
     /// Completion to the client — on the stream the command arrived on —
-    /// and NotifyEvent to every peer (paper Fig 3).
-    fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Vec<u8>) {
+    /// and NotifyEvent to every peer (paper Fig 3). `payload` is a
+    /// shared view; routing it onto a stream clones a refcount, never
+    /// the bytes.
+    fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Bytes) {
         if event == 0 {
             return;
         }

@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use crate::net::rdma::Wr;
 use crate::proto::{Body, Msg, Packet};
+use crate::util::Bytes;
 
 use super::dispatch::Work;
 use super::state::DaemonState;
@@ -80,7 +81,9 @@ fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
     // Single staging copy (hot path, see EXPERIMENTS.md §Perf): the
     // content prefix is read out under the buffer's own data lock directly
     // into the outgoing payload — no full-buffer snapshot, no second
-    // staging copy, and no store-wide lock held during the memcpy.
+    // staging copy, and no store-wide lock held during the memcpy. The
+    // staged prefix is a shared `Bytes`, so the RDMA work request or the
+    // peer writer's packet reference it without another copy.
     let content_limit = state.content_size_of(job.buf);
     let (staged, total_len) = {
         let handle = state
@@ -89,7 +92,7 @@ fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown buffer {}", job.buf))?;
         let data = handle.read().unwrap();
         let content = (content_limit as usize).min(data.len());
-        (data[..content].to_vec(), data.len())
+        (Bytes::copy_from_slice(&data[..content]), data.len())
     };
     let content = staged.len();
     let snapshot_len = total_len;
@@ -131,7 +134,6 @@ fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
         // into the registered send staging area. Claim the destination's
         // inbound window and post ONE chained doorbell:
         // RDMA_WRITE(payload) -> RDMA_SEND(command).
-        let staged = Arc::new(staged);
         rdma.endpoint.window_acquire(job.dst_server);
         let posted = rdma.endpoint.post_chain(&[
             Wr::Write {

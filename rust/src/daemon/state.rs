@@ -16,6 +16,7 @@ use crate::proto::{Msg, Packet, SessionId};
 use crate::runtime::executor::{DeviceExecutor, DeviceKind};
 use crate::sched::EventTable;
 use crate::util::rng::Rng;
+use crate::util::Bytes;
 
 use super::DaemonConfig;
 
@@ -476,11 +477,13 @@ impl DaemonState {
     }
 
     /// Snapshot a buffer's bytes for kernel input (copy-on-read: executors
-    /// must not observe later writes).
-    pub fn snapshot_buffer(&self, id: u64) -> Option<Arc<Vec<u8>>> {
+    /// must not observe later writes). One copy out of the store, shared
+    /// from there — a snapshot used by several pending launches is one
+    /// allocation, not one per launch.
+    pub fn snapshot_buffer(&self, id: u64) -> Option<Bytes> {
         let handle = self.buffers.data(id)?;
         let data = handle.read().unwrap();
-        Some(Arc::new(data.clone()))
+        Some(Bytes::copy_from_slice(&data))
     }
 
     /// Ensure a buffer exists (migrations allocate on demand).
@@ -561,8 +564,11 @@ impl DaemonState {
 
     /// Read `len` bytes at `offset` (clamped to the bytes present).
     /// `None` when the buffer is unknown or `offset` is past the end — the
-    /// caller fails the event instead of panicking on a bad slice.
-    pub fn read_buffer(&self, buf: u64, offset: u64, len: u64) -> Option<Vec<u8>> {
+    /// caller fails the event instead of panicking on a bad slice. The
+    /// copy out of the store is the *only* copy: the returned [`Bytes`]
+    /// rides the completion packet to the client writer and onto the
+    /// socket unduplicated.
+    pub fn read_buffer(&self, buf: u64, offset: u64, len: u64) -> Option<Bytes> {
         let handle = self.buffers.data(buf)?;
         let data = handle.read().unwrap();
         if offset > data.len() as u64 {
@@ -570,7 +576,7 @@ impl DaemonState {
         }
         let start = offset as usize;
         let end = (offset.saturating_add(len).min(data.len() as u64)) as usize;
-        Some(data[start..end].to_vec())
+        Some(Bytes::copy_from_slice(&data[start..end]))
     }
 
     /// Commit one kernel output buffer: replace the contents, refresh the

@@ -5,7 +5,8 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues` — print a DES scenario table.
+//! * `poclr sim fig12|fig13|fig16|queues|latency` — print a DES scenario
+//!   table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
 use poclr::client::{ClientConfig, Platform};
@@ -86,6 +87,22 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                 }
+                Some("latency") => {
+                    println!(
+                        "per-command overhead (loopback model): \
+                         legacy 3-write/3-copy vs vectored zero-copy"
+                    );
+                    for bytes in [0usize, 4096, 65536, 1 << 20] {
+                        let legacy = scenarios::command_latency_us(bytes, false);
+                        let zero = scenarios::command_latency_us(bytes, true);
+                        println!(
+                            "payload {:>8}: legacy {legacy:>8.1} µs   \
+                             zero-copy {zero:>8.1} µs   ({:.2}x)",
+                            poclr::util::fmt_bytes(bytes as u64),
+                            legacy / zero
+                        );
+                    }
+                }
                 Some("queues") => {
                     for qn in [1usize, 2, 4, 8] {
                         let single = scenarios::queue_scaling_cmds_per_sec(qn, 1000, false);
@@ -119,7 +136,9 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                 }
-                other => anyhow::bail!("unknown sim scenario {other:?} (fig12|fig13|fig16|queues)"),
+                other => anyhow::bail!(
+                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|latency)"
+                ),
             }
             Ok(())
         }
@@ -140,7 +159,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
-            eprintln!("  sim    fig12|fig13|fig16|queues  DES scenario tables");
+            eprintln!("  sim    fig12|fig13|fig16|queues|latency  DES scenario tables");
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);
         }

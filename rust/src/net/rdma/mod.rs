@@ -26,6 +26,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::shaper::{spin_sleep, LinkProfile};
+use crate::util::Bytes;
 
 /// Modeled per-work-request HCA processing cost.
 pub const WR_COST: Duration = Duration::from_nanos(400);
@@ -51,7 +52,9 @@ pub enum Wr {
         dst_node: u32,
         rkey: u64,
         offset: usize,
-        data: Arc<Vec<u8>>,
+        /// Shared view of the staged bytes (the registered send staging
+        /// area) — posting a chain never copies the payload again.
+        data: Bytes,
         /// Byte range of `data` to place (supports content-size truncation).
         len: usize,
     },
@@ -286,7 +289,7 @@ mod tests {
         let region = Arc::new(RwLock::new(vec![0u8; 64]));
         let mr = b.register_mr(Arc::clone(&region));
 
-        let data = Arc::new(vec![7u8; 32]);
+        let data = Bytes::from(vec![7u8; 32]);
         a.post_chain(&[
             Wr::Write {
                 dst_node: 1,
@@ -320,7 +323,7 @@ mod tests {
             dst_node: 1,
             rkey: 999,
             offset: 0,
-            data: Arc::new(vec![1]),
+            data: Bytes::from(vec![1]),
             len: 1,
         }]);
         assert!(err.is_err());
@@ -336,7 +339,7 @@ mod tests {
             dst_node: 1,
             rkey: mr.rkey,
             offset: 0,
-            data: Arc::new(vec![1u8; 8]),
+            data: Bytes::from(vec![1u8; 8]),
             len: 8,
         }]);
         assert!(err.is_err());
@@ -356,7 +359,7 @@ mod tests {
             dst_node: 1,
             rkey: 999, // never registered
             offset: 0,
-            data: Arc::new(vec![1u8; 4]),
+            data: Bytes::from(vec![1u8; 4]),
             len: 4,
         }]);
         assert!(err.is_err());
@@ -369,7 +372,7 @@ mod tests {
             dst_node: 1,
             rkey: mr.rkey,
             offset: 0,
-            data: Arc::new(vec![7u8; 4]),
+            data: Bytes::from(vec![7u8; 4]),
             len: 4,
         }])
         .unwrap();
@@ -392,7 +395,7 @@ mod tests {
         let (b, _bcq) = fabric.attach(1).unwrap();
         let region = Arc::new(RwLock::new(vec![0xFFu8; 16]));
         let mr = b.register_mr(Arc::clone(&region));
-        let data = Arc::new(vec![1u8; 16]);
+        let data = Bytes::from(vec![1u8; 16]);
         a.post_chain(&[Wr::Write {
             dst_node: 1,
             rkey: mr.rkey,

@@ -4,9 +4,9 @@
 //! (100 Mb switched Ethernet with 0.122 ms ping, a 40 Gb direct machine-to-
 //! machine cable, 56/100 Gb datacenter LANs, Wi-Fi 6). The reproduction
 //! runs over loopback; connection writer threads call
-//! [`LinkProfile::pace`] once per packet to inject one-way propagation
-//! delay and serialization time, so round-trip-dominated figures (8-11)
-//! keep the paper's structure.
+//! [`LinkProfile::pace`] once per coalesced write burst to inject one-way
+//! propagation delay and serialization time, so round-trip-dominated
+//! figures (8-11) keep the paper's structure.
 
 use std::time::Duration;
 
@@ -84,8 +84,10 @@ impl LinkProfile {
         prop + ser
     }
 
-    /// Sleep for the link traversal of a packet. Called by connection writer
-    /// threads once per packet (not per syscall).
+    /// Sleep for the link traversal of a packet burst. Called by
+    /// connection writer threads once per coalesced vectored write (one
+    /// propagation delay per burst — in-flight packets pipeline on a real
+    /// link — plus serialization of the burst's total bytes).
     pub fn pace(&self, bytes: usize) {
         let d = self.delay_for(bytes);
         if !d.is_zero() {

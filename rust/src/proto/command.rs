@@ -7,6 +7,7 @@
 //! in the body and the bytes follow the struct on the wire (paper Fig 6).
 
 use super::wire::{R, W, WireError};
+use crate::util::Bytes;
 
 /// 16-byte session id used for reconnection (paper §4.3). A fresh client
 /// sends all-zeroes; the server assigns a random id in its `Welcome`.
@@ -456,18 +457,21 @@ impl Msg {
     }
 }
 
-/// A message together with its bulk payload.
+/// A message together with its bulk payload. The payload is a shared
+/// [`Bytes`] view: cloning a packet (backup-ring retention, peer
+/// broadcast, completion re-routing) bumps a refcount instead of copying
+/// the bulk data.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packet {
     pub msg: Msg,
-    pub payload: Vec<u8>,
+    pub payload: Bytes,
 }
 
 impl Packet {
     pub fn bare(msg: Msg) -> Self {
         Packet {
             msg,
-            payload: Vec::new(),
+            payload: Bytes::new(),
         }
     }
 }

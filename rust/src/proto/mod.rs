@@ -1,20 +1,26 @@
 //! Wire protocol of the PoCL-R reproduction.
 //!
 //! Mirrors the paper's design (§5.4, Figs 6-7): commands are fixed-layout
-//! structs; the TCP scheme sends a standalone `u32` size field, then the
-//! command bytes, then any bulk payload — each as its *own* write so the
-//! syscall pattern the paper describes (≥2 writes per command, ≥3 with a
-//! payload) is faithfully reproduced and measurable. The RDMA scheme
-//! ([`crate::net::rdma`]) instead chains `RDMA_WRITE(payload)` +
-//! `RDMA_SEND(command)` with a single doorbell.
+//! structs; the TCP scheme's byte stream is a standalone `u32` size
+//! field, then the command bytes, then any bulk payload. The sections
+//! are submitted as **one vectored write per packet** (batches of queued
+//! packets coalesce into a single submit — see [`frame`]), so the
+//! small-command hot path costs one syscall where the naive scheme paid
+//! two-or-three; the on-wire bytes are identical either way. The RDMA
+//! scheme ([`crate::net::rdma`]) goes further and chains
+//! `RDMA_WRITE(payload)` + `RDMA_SEND(command)` with a single doorbell.
 //!
 //! The wire representation is produced by a hand-rolled flat codec
 //! ([`wire`]) — the moral equivalent of the paper's packed C structs: no
-//! translation step, no self-describing metadata.
+//! translation step, no self-describing metadata. Bulk payloads travel
+//! as shared [`crate::util::Bytes`] views end to end.
 
 pub mod command;
 pub mod frame;
 pub mod wire;
 
 pub use command::{Body, EventStatus, Msg, Packet, SessionId, Timestamps, ROLE_CLIENT, ROLE_PEER};
-pub use frame::{read_packet, write_packet};
+pub use frame::{
+    read_packet, read_packet_with, write_packet, write_packet_with, write_packets,
+    write_packets_paced,
+};

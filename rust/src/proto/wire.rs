@@ -44,6 +44,14 @@ impl W {
         }
     }
 
+    /// Drop the contents but keep the capacity — writer threads reuse one
+    /// `W` as encode scratch across packets instead of allocating per
+    /// `Msg::encode`.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
     #[inline]
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
@@ -135,7 +143,11 @@ impl<'a> R<'a> {
     pub fn str16(&mut self) -> Result<String, WireError> {
         let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
         let s = self.take(n)?;
-        String::from_utf8(s.to_vec()).map_err(|_| WireError::BadUtf8)
+        // Validate in place, then allocate exactly once for the owned
+        // String (`to_vec` + `String::from_utf8` allocated twice).
+        std::str::from_utf8(s)
+            .map(str::to_owned)
+            .map_err(|_| WireError::BadUtf8)
     }
 
     pub fn ids(&mut self) -> Result<Vec<u64>, WireError> {

@@ -14,7 +14,7 @@ use anyhow::Result;
 use super::artifact::Manifest;
 use super::builtin::CustomDevice;
 use super::pjrt::Engine;
-use crate::util::now_ns;
+use crate::util::{now_ns, Bytes};
 
 /// What kind of device an executor simulates (subset of cl_device_type).
 pub enum DeviceKind {
@@ -31,7 +31,9 @@ pub enum DeviceKind {
 pub struct ExecRequest {
     pub tag: u64,
     pub artifact: String,
-    pub inputs: Vec<Arc<Vec<u8>>>,
+    /// Shared buffer snapshots — views of the daemon's copy-on-read
+    /// snapshot allocations, not per-request copies.
+    pub inputs: Vec<Bytes>,
     pub reply: Sender<ExecOutcome>,
 }
 
@@ -194,7 +196,7 @@ mod tests {
         exec.submit(ExecRequest {
             tag: 0,
             artifact: "increment_s32_1".into(),
-            inputs: vec![Arc::new(7i32.to_le_bytes().to_vec())],
+            inputs: vec![Bytes::from(7i32.to_le_bytes().to_vec())],
             reply: tx,
         });
         let out = rx.recv().unwrap();

@@ -10,7 +10,7 @@
 //!
 //! Each simulated device runs a dedicated executor thread that owns its own
 //! engine ([`executor`]). Commands reach it through channels; buffer bytes
-//! cross as `Arc<Vec<u8>>`.
+//! cross as shared [`crate::util::Bytes`] snapshots.
 
 pub mod artifact;
 pub mod builtin;

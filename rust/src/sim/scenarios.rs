@@ -187,6 +187,38 @@ pub fn queue_scaling_multi_device_cmds_per_sec(
     (n_queues * cmds_per_queue) as f64 / done
 }
 
+/// Per-command round-trip overhead (µs, loopback — no link terms) of the
+/// framing/copy discipline, the model behind `BENCH_command_latency.json`:
+///
+/// * **request**: client writer syscalls (legacy: size + struct + payload
+///   writes; vectored: one `writev`), daemon reader syscalls (size +
+///   struct + payload reads — reads are unchanged by the rewrite),
+/// * **host copies**: the payload's journey through the enqueue path.
+///   Legacy deep-copied it at each handoff (`Vec` into the packet, clone
+///   into the backup ring, clone per delivery probe); shared `Bytes` pays
+///   exactly one entering copy,
+/// * **dispatch**: the admission + inline-execution slice,
+/// * **reply**: completion writer syscalls + client reader syscalls.
+///
+/// `zero_copy` selects the shared-`Bytes` + vectored-framing data plane;
+/// `false` replays the seed's three-write / clone-per-handoff behavior.
+pub fn command_latency_us(payload_bytes: usize, zero_copy: bool) -> f64 {
+    let has_payload = payload_bytes > 0;
+    let sections = if has_payload { 3.0 } else { 2.0 };
+    // Writers: one vectored submit vs one syscall per section.
+    let req_writes = if zero_copy { 1.0 } else { sections };
+    let rep_writes = if zero_copy { 1.0 } else { 2.0 };
+    // Readers assemble section by section in both designs.
+    let req_reads = sections;
+    let rep_reads = 2.0;
+    // Enqueue-path host copies of the payload (beyond the kernel-side
+    // socket copies, which SYSCALL_S already amortizes).
+    let copies = if zero_copy { 1.0 } else { 3.0 };
+    let copy_s = copies * payload_bytes as f64 / HOST_MEMCPY_BPS;
+    let dispatch = 1.0e-6;
+    ((req_writes + req_reads + rep_writes + rep_reads) * SYSCALL_S + copy_s + dispatch) * 1e6
+}
+
 /// LBM run configuration for Figs 16-17.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FluidMode {
@@ -331,6 +363,28 @@ mod tests {
         // pre-redesign model at the same queue count.
         let old_8q = queue_scaling_cmds_per_sec(8, 1000, true);
         assert!(fanned_8q > old_8q * 2.0, "{old_8q} vs {fanned_8q}");
+    }
+
+    #[test]
+    fn zero_copy_path_cuts_command_overhead() {
+        // Empty command: the win is pure syscall count (6 vs 9).
+        let legacy = command_latency_us(0, false);
+        let vectored = command_latency_us(0, true);
+        assert!(vectored < legacy, "{vectored} vs {legacy}");
+        // Both stay within the paper's Fig 8 ballpark (~60 µs total
+        // command overhead; this model covers the framing/copy slice).
+        assert!(vectored > 2.0 && legacy < 60.0, "{vectored} / {legacy}");
+        // Bulk command: the copy elision dominates — three deep copies
+        // of a 1 MiB payload vs one.
+        let legacy_1m = command_latency_us(1 << 20, false);
+        let zero_1m = command_latency_us(1 << 20, true);
+        assert!(
+            legacy_1m - zero_1m > 2.0 * (1u64 << 20) as f64 / HOST_MEMCPY_BPS * 1e6 * 0.9,
+            "{legacy_1m} vs {zero_1m}"
+        );
+        // Savings grow with payload size.
+        let ratio_4k = command_latency_us(4096, false) / command_latency_us(4096, true);
+        assert!(legacy_1m / zero_1m > ratio_4k);
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! `Bytes` — the crate's shared, immutable payload currency.
+//!
+//! Every bulk payload in the data plane (client uploads, read-back
+//! completions, peer migration pushes, kernel input snapshots) used to be
+//! a `Vec<u8>` that was deep-copied at each handoff: into the client
+//! backup ring, into each peer writer's channel, into the RDMA staging
+//! `Arc`. `Bytes` is a reference-counted view — an `Arc`'d buffer plus an
+//! offset/length window — so `clone()` and `slice()` are refcount bumps
+//! and the backup ring, every writer channel and the socket write all
+//! share one allocation.
+//!
+//! The offline environment has no `bytes` crate, so this is a minimal
+//! hand-rolled equivalent. The backing store is `Arc<Vec<u8>>` rather
+//! than `Arc<[u8]>`: converting an existing `Vec<u8>` (a socket read, a
+//! store copy-out) into `Arc<[u8]>` performs a full memcpy on stable
+//! Rust, while `Arc::new(vec)` is free — and the receive path ("read the
+//! payload into a buffer, then share it") is exactly the hot path this
+//! type exists for. The extra pointer hop on access is noise next to the
+//! copies it removes.
+
+use std::sync::{Arc, OnceLock};
+
+/// A cheaply clonable, sliceable, immutable byte buffer.
+///
+/// Dereferences to `&[u8]`, so indexing, iteration and slice methods all
+/// work directly; equality compares *contents* (use [`Bytes::ptr_eq`] to
+/// test allocation identity).
+#[derive(Clone)]
+pub struct Bytes {
+    data: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+/// The shared empty allocation: `Bytes::new()` / `Default` are refcount
+/// bumps, not allocations (bare packets are the common case).
+fn empty_arc() -> &'static Arc<Vec<u8>> {
+    static EMPTY: OnceLock<Arc<Vec<u8>>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Vec::new()))
+}
+
+impl Bytes {
+    /// An empty buffer (no allocation; all empties share one `Arc`).
+    pub fn new() -> Bytes {
+        Bytes {
+            data: Arc::clone(empty_arc()),
+            off: 0,
+            len: 0,
+        }
+    }
+
+    /// Copy `src` into a fresh shared allocation — the single "entering
+    /// `Bytes`" copy; every later handoff is a refcount bump.
+    pub fn copy_from_slice(src: &[u8]) -> Bytes {
+        Bytes::from(src.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// A sub-view sharing this buffer's allocation. Panics if the range
+    /// is out of bounds or inverted (mirrors slice indexing).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Bytes {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {}..{} out of bounds of {}",
+            range.start,
+            range.end,
+            self.len
+        );
+        Bytes {
+            data: Arc::clone(&self.data),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// Do two views share the same backing allocation? This is what the
+    /// zero-copy tests assert: a payload retained in the backup ring and
+    /// the one handed to the socket writer must be the *same* memory.
+    pub fn ptr_eq(a: &Bytes, b: &Bytes) -> bool {
+        Arc::ptr_eq(&a.data, &b.data)
+    }
+
+    /// Copy the viewed bytes out into an owned `Vec`.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Self {
+        Bytes::new()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    /// Zero-copy: the vector becomes the shared backing store.
+    fn from(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes {
+            data: Arc::new(v),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(s)
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} B", self.len)?;
+        if self.len <= 16 {
+            write!(f, " {:02x?}", self.as_slice())?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Bytes {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_and_slice_share_the_allocation() {
+        let b = Bytes::from(vec![1u8, 2, 3, 4, 5]);
+        let c = b.clone();
+        let s = b.slice(1..4);
+        assert!(Bytes::ptr_eq(&b, &c));
+        assert!(Bytes::ptr_eq(&b, &s));
+        assert_eq!(s, [2u8, 3, 4]);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn from_vec_is_zero_copy() {
+        let v = vec![7u8; 64];
+        let ptr = v.as_ptr();
+        let b = Bytes::from(v);
+        assert_eq!(b.as_slice().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn empties_share_one_arc() {
+        let a = Bytes::new();
+        let b = Bytes::default();
+        assert!(Bytes::ptr_eq(&a, &b));
+        assert!(a.is_empty());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn copy_from_slice_detaches() {
+        let src = vec![9u8; 8];
+        let a = Bytes::copy_from_slice(&src);
+        let b = Bytes::copy_from_slice(&src);
+        assert_eq!(a, b);
+        assert!(!Bytes::ptr_eq(&a, &b));
+        assert_eq!(a.to_vec(), src);
+    }
+
+    #[test]
+    fn equality_is_by_content_across_impls() {
+        let b = Bytes::from(vec![1u8, 2, 3]);
+        assert_eq!(b, vec![1u8, 2, 3]);
+        assert_eq!(b, [1u8, 2, 3]);
+        assert_eq!(b, &[1u8, 2, 3]);
+        assert_eq!(b, *&[1u8, 2, 3][..]);
+        assert_eq!(b[0], 1);
+        assert_eq!(&b[1..], &[2, 3]);
+    }
+
+    #[test]
+    fn nested_slices_stay_windowed() {
+        let b = Bytes::from((0u8..32).collect::<Vec<_>>());
+        let s = b.slice(8..24).slice(4..8);
+        assert_eq!(s, [12u8, 13, 14, 15]);
+        assert!(Bytes::ptr_eq(&b, &s));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_slice_panics() {
+        Bytes::from(vec![1u8, 2]).slice(0..3);
+    }
+}

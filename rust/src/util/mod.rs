@@ -1,9 +1,13 @@
-//! Small self-contained substrates: deterministic PRNG, streaming statistics
-//! and a minimal JSON parser (the environment is offline — no serde/rand).
+//! Small self-contained substrates: shared byte buffers, deterministic
+//! PRNG, streaming statistics and a minimal JSON parser (the environment
+//! is offline — no serde/rand/bytes).
 
+pub mod bytes;
 pub mod json;
 pub mod rng;
 pub mod stats;
+
+pub use bytes::Bytes;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,0 +1,115 @@
+//! Zero-copy payload-path contracts: the daemon's peer broadcast and
+//! completion routing must *share* a payload's allocation (refcount
+//! bumps, no memcpys), and the vectored/coalescing framing must carry
+//! bulk data intact over real sockets under enqueue pressure. The
+//! client-side half of the contract (backup ring + socket write share
+//! the caller's allocation) is pinned by the unit test in
+//! `client/server_conn.rs`.
+
+use std::sync::mpsc::channel;
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::state::DaemonState;
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::proto::{Body, Msg, Packet, Timestamps};
+use poclr::runtime::Manifest;
+use poclr::util::Bytes;
+
+fn bare_state() -> std::sync::Arc<DaemonState> {
+    DaemonState::new(&mut DaemonConfig::local(0, 0, Manifest::default())).unwrap()
+}
+
+#[test]
+fn peer_broadcast_shares_one_payload_allocation() {
+    // A migration push fanned out to N peers used to clone the payload N
+    // times; now every peer writer's packet is a view of one allocation.
+    let state = bare_state();
+    let (tx1, rx1) = channel();
+    let (tx2, rx2) = channel();
+    state.peer_txs.lock().unwrap().insert(1, tx1);
+    state.peer_txs.lock().unwrap().insert(2, tx2);
+
+    let payload = Bytes::copy_from_slice(&[0x5A; 1 << 16]);
+    let pkt = Packet {
+        msg: Msg::control(Body::MigrateData {
+            buf: 1,
+            content_size: 1 << 16,
+            total_size: 1 << 16,
+            len: 1 << 16,
+        }),
+        payload: payload.clone(),
+    };
+    state.broadcast_to_peers(&pkt);
+
+    for rx in [rx1, rx2] {
+        let got = rx.try_recv().expect("peer writer received the push");
+        assert_eq!(got.payload, payload);
+        assert!(
+            Bytes::ptr_eq(&got.payload, &payload),
+            "peer broadcast must share the allocation, not copy it"
+        );
+    }
+}
+
+#[test]
+fn completion_routing_shares_the_store_copy() {
+    // ReadBuffer's reply payload is copied out of the buffer store once;
+    // routing it onto a client stream (including the control-stream
+    // fallback probe) must not duplicate it.
+    let state = bare_state();
+    state.ensure_buffer(7, 64, 0);
+    assert!(state.write_buffer(7, 0, &[9u8; 64]));
+    let payload = state.read_buffer(7, 0, 64).unwrap();
+    assert_eq!(payload, vec![9u8; 64]);
+
+    let (tx, rx) = channel();
+    state.client_txs.lock().unwrap().insert(3, (1, tx));
+    state.send_to_client_on(
+        3,
+        Packet {
+            msg: Msg::control(Body::Completion {
+                event: 5,
+                status: 0,
+                ts: Timestamps::default(),
+                payload_len: 64,
+            }),
+            payload: payload.clone(),
+        },
+    );
+    let got = rx.try_recv().expect("stream writer received the completion");
+    assert!(
+        Bytes::ptr_eq(&got.payload, &payload),
+        "completion routing must share the store copy-out"
+    );
+}
+
+#[test]
+fn flooded_queue_coalesces_and_completes_every_command() {
+    // Enqueue a burst far larger than one coalesced batch as fast as the
+    // channel accepts, so the writer thread drains multi-packet bursts;
+    // every command must still arrive, in order, and complete.
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.out_of_order_queue(0, 0);
+    let events: Vec<_> = (0..500).map(|_| q.barrier().unwrap()).collect();
+    for ev in events {
+        ev.wait().unwrap();
+    }
+}
+
+#[test]
+fn bulk_payloads_survive_the_vectored_path_end_to_end() {
+    // A >socket-buffer-sized payload forces partial vectored writes on a
+    // real TCP socket; the byte stream must reassemble exactly.
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(1 << 20);
+    let data: Vec<u8> = (0..1usize << 20).map(|i| (i.wrapping_mul(31) % 251) as u8).collect();
+    q.write(buf, &data).unwrap();
+    let out = q.read(buf).unwrap();
+    assert_eq!(out.len(), data.len());
+    assert_eq!(out, data);
+}

@@ -86,6 +86,75 @@ fn prop_msg_encode_decode_identity() {
 }
 
 #[test]
+fn prop_vectored_framing_matches_legacy_three_write_framing() {
+    // The vectored rewrite must be byte-for-byte identical to the
+    // original three-`write_all` scheme — for single packets AND for
+    // coalesced bursts, across random messages and payload sizes.
+    use poclr::proto::wire::W;
+    use poclr::proto::{write_packet, write_packets, Packet};
+    use poclr::util::Bytes;
+
+    /// The seed's framing, verbatim: size field, struct, payload as
+    /// three separate appends.
+    fn legacy_write(wire: &mut Vec<u8>, msg: &Msg, payload: &[u8]) {
+        let bytes = msg.encode();
+        wire.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&bytes);
+        wire.extend_from_slice(payload);
+    }
+
+    let mut rng = Rng::new(0x5EED_F00D);
+    for case in 0..60 {
+        let n_pkts = rng.gen_range(1, 80) as usize;
+        let pkts: Vec<Packet> = (0..n_pkts)
+            .map(|_| {
+                // arb_body's payload-bearing bodies declare lengths the
+                // framing reads back, so generate exactly that many bytes.
+                let msg = arb_msg(&mut rng);
+                let payload: Vec<u8> = (0..msg.payload_len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect();
+                Packet {
+                    msg,
+                    payload: Bytes::from(payload),
+                }
+            })
+            .collect();
+
+        let mut legacy = Vec::new();
+        for p in &pkts {
+            legacy_write(&mut legacy, &p.msg, &p.payload);
+        }
+
+        // Per-packet vectored writes.
+        let mut single = Vec::new();
+        for p in &pkts {
+            write_packet(&mut single, &p.msg, &p.payload).unwrap();
+        }
+        assert_eq!(single, legacy, "case {case}: per-packet framing diverged");
+
+        // Coalesced bursts.
+        let mut coalesced = Vec::new();
+        let mut scratch = W::new();
+        let mut done = 0;
+        while done < pkts.len() {
+            done += write_packets(&mut coalesced, &mut scratch, &pkts[done..]).unwrap();
+        }
+        assert_eq!(coalesced, legacy, "case {case}: coalesced framing diverged");
+
+        // And everything reads back intact.
+        let mut cur = coalesced.as_slice();
+        let mut read_scratch = Vec::new();
+        for want in &pkts {
+            let got = poclr::proto::read_packet_with(&mut cur, &mut read_scratch)
+                .unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(&got, want, "case {case}");
+        }
+        assert!(cur.is_empty(), "case {case}: trailing bytes");
+    }
+}
+
+#[test]
 fn prop_decode_never_panics_on_mutation() {
     // Flip random bytes in valid encodings; decode must error or succeed,
     // never panic, and never read out of bounds.

@@ -127,6 +127,6 @@ fn packet_equality_roundtrip_heavyweight() {
     let got = read_packet(&mut wire.as_slice()).unwrap();
     assert_eq!(got, Packet {
         msg,
-        payload: b"xyz".to_vec()
+        payload: b"xyz".to_vec().into()
     });
 }
