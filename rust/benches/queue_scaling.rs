@@ -1,7 +1,7 @@
 //! Multi-queue client scaling: aggregate small-command throughput for
 //! 1/2/4/8 command queues against one loopback daemon.
 //!
-//! Two sweeps:
+//! Three sweeps:
 //!
 //! * **transport** — single shared connection (pre-redesign client,
 //!   `per_queue_streams: false`) vs one writer/reader socket pair per
@@ -11,7 +11,12 @@
 //!   each queue on its own device, isolating the per-device dispatch
 //!   workers: with distinct devices only the dispatcher's thin routing
 //!   slice is shared, so per-queue throughput should stay near-linear
-//!   where the single-device arrangement flattens.
+//!   where the single-device arrangement flattens;
+//! * **sessions** — N independent client `Platform`s (one session each,
+//!   the paper's many-UEs-per-server MEC setting) x 2 queues per
+//!   session against ONE daemon, isolating the multi-session registry:
+//!   per-session state shares nothing, so N sessions x M queues should
+//!   track the same stream count inside one session.
 //!
 //! Writes `BENCH_queue_scaling.json` at the repo root so the perf
 //! trajectory is tracked in-tree. `--tiny` (or QUEUE_SCALING_TINY=1) runs
@@ -31,48 +36,59 @@ use poclr::sim::scenarios;
 /// parallelize) dominate dispatcher bookkeeping.
 const PAYLOAD: usize = 4096;
 
-/// Aggregate commands/second for `n_queues` queues, each enqueueing
-/// `cmds_per_queue` in-order writes from its own thread. The daemon
-/// exposes `n_devices` devices; queue `i` targets device `i % n_devices`.
-fn measure(
+/// Aggregate commands/second for `n_sessions` independent client
+/// sessions (one `Platform` each) x `queues_per_session` queues against
+/// one daemon with `n_devices` devices. Stream `s*Q + q` targets device
+/// `(s*Q + q) % n_devices`; each queue enqueues `cmds_per_queue`
+/// in-order writes from its own thread. ONE worker body serves every
+/// sweep, so the "N sessions vs same streams in one session" comparison
+/// can never drift apart.
+fn measure_streams(
     manifest: &Manifest,
-    n_queues: usize,
+    n_sessions: usize,
+    queues_per_session: usize,
     cmds_per_queue: usize,
     per_queue_streams: bool,
     n_devices: usize,
 ) -> f64 {
     let daemon = Daemon::spawn(DaemonConfig::local(0, n_devices, manifest.clone())).unwrap();
-    let platform = Platform::connect(
-        &[daemon.addr()],
-        ClientConfig {
-            per_queue_streams,
-            ..Default::default()
-        },
-    )
-    .unwrap();
-    let ctx = platform.context();
+    let platforms: Vec<Platform> = (0..n_sessions)
+        .map(|_| {
+            Platform::connect(
+                &[daemon.addr()],
+                ClientConfig {
+                    per_queue_streams,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
 
-    let start_gate = Arc::new(Barrier::new(n_queues + 1));
-    let handles: Vec<_> = (0..n_queues)
-        .map(|i| {
+    let n_streams = n_sessions * queues_per_session;
+    let start_gate = Arc::new(Barrier::new(n_streams + 1));
+    let mut handles = Vec::with_capacity(n_streams);
+    for (s, p) in platforms.iter().enumerate() {
+        let ctx = p.context();
+        for q in 0..queues_per_session {
             let ctx = ctx.clone();
             let gate = Arc::clone(&start_gate);
-            let device = (i % n_devices) as u32;
-            std::thread::spawn(move || {
-                let q = ctx.queue(0, device);
+            let device = ((s * queues_per_session + q) % n_devices) as u32;
+            handles.push(std::thread::spawn(move || {
+                let queue = ctx.queue(0, device);
                 let buf = ctx.create_buffer(PAYLOAD as u64);
                 let data = vec![0xA5u8; PAYLOAD];
                 // Warm: attach the stream, allocate server-side.
-                q.write(buf, &data).unwrap();
-                q.finish().unwrap();
-                gate.wait(); // line up all queues
+                queue.write(buf, &data).unwrap();
+                queue.finish().unwrap();
+                gate.wait(); // line up all streams
                 for _ in 0..cmds_per_queue {
-                    q.write(buf, &data).unwrap();
+                    queue.write(buf, &data).unwrap();
                 }
-                q.finish().unwrap();
-            })
-        })
-        .collect();
+                queue.finish().unwrap();
+            }));
+        }
+    }
 
     start_gate.wait();
     let t0 = Instant::now();
@@ -80,7 +96,37 @@ fn measure(
         h.join().unwrap();
     }
     let elapsed = t0.elapsed().as_secs_f64();
-    (n_queues * cmds_per_queue) as f64 / elapsed
+    (n_streams * cmds_per_queue) as f64 / elapsed
+}
+
+/// One session, `n_queues` queues (the historical transport/dispatch
+/// sweeps).
+fn measure(
+    manifest: &Manifest,
+    n_queues: usize,
+    cmds_per_queue: usize,
+    per_queue_streams: bool,
+    n_devices: usize,
+) -> f64 {
+    measure_streams(manifest, 1, n_queues, cmds_per_queue, per_queue_streams, n_devices)
+}
+
+/// N sessions x M queues, every stream on its own device (capped at 8).
+fn measure_sessions(
+    manifest: &Manifest,
+    n_sessions: usize,
+    queues_per_session: usize,
+    cmds_per_queue: usize,
+) -> f64 {
+    let n_devices = (n_sessions * queues_per_session).min(8);
+    measure_streams(
+        manifest,
+        n_sessions,
+        queues_per_session,
+        cmds_per_queue,
+        true,
+        n_devices,
+    )
 }
 
 fn main() {
@@ -124,6 +170,29 @@ fn main() {
     multi.print();
     fanned.print();
 
+    // Multi-session sweep: N sessions x 2 queues each vs the same stream
+    // count inside one session (the registry must cost ~nothing).
+    let mut sess_series = report::Series::new("N sessions x 2 queues", "cmd/s");
+    let mut sess_rows = Vec::new();
+    for n_sessions in [1usize, 2, 4] {
+        let m = measure_sessions(&manifest, n_sessions, 2, cmds_per_queue);
+        // One session x 2 queues IS the merged configuration; a second
+        // run would differ from `m` only by noise.
+        let merged = if n_sessions == 1 {
+            m
+        } else {
+            measure_sessions(&manifest, 1, 2 * n_sessions, cmds_per_queue)
+        };
+        sess_series.push(format!("{n_sessions} session(s)"), m);
+        println!(
+            "  {n_sessions} session(s) x 2 queues: {m:>10.0}  \
+             same streams, one session {merged:>10.0} ({:.2}x)",
+            m / merged
+        );
+        sess_rows.push((n_sessions, m, merged));
+    }
+    sess_series.print();
+
     // The DES model of the same sweeps, for calibration drift tracking.
     let modeled: Vec<(usize, f64, f64, f64)> = [1usize, 2, 4, 8]
         .iter()
@@ -133,6 +202,17 @@ fn main() {
                 scenarios::queue_scaling_cmds_per_sec(qn, 1000, false),
                 scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, 1),
                 scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, qn),
+            )
+        })
+        .collect();
+    let sess_modeled: Vec<(usize, f64, f64)> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| {
+            let devs = (n * 2).min(8);
+            (
+                n,
+                scenarios::session_scaling_cmds_per_sec(n, 2, 1000, devs),
+                scenarios::session_scaling_cmds_per_sec(1, 2 * n, 1000, devs),
             )
         })
         .collect();
@@ -159,6 +239,18 @@ fn main() {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str("  \"sessions\": [\n");
+    for (i, (n, m, merged)) in sess_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sessions\": {n}, \"queues_per_session\": 2, \
+             \"cmds_per_sec\": {m:.0}, \
+             \"same_streams_one_session_cmds_per_sec\": {merged:.0}, \
+             \"session_overhead\": {:.3}}}{}\n",
+            merged / m,
+            if i + 1 < sess_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"modeled\": [\n");
     for (i, (qn, s, m, f)) in modeled.iter().enumerate() {
         json.push_str(&format!(
@@ -166,6 +258,16 @@ fn main() {
              \"per_queue_cmds_per_sec\": {m:.0}, \
              \"per_queue_per_device_cmds_per_sec\": {f:.0}}}{}\n",
             if i + 1 < modeled.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"sessions_modeled\": [\n");
+    for (i, (n, m, merged)) in sess_modeled.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sessions\": {n}, \"queues_per_session\": 2, \
+             \"cmds_per_sec\": {m:.0}, \
+             \"same_streams_one_session_cmds_per_sec\": {merged:.0}}}{}\n",
+            if i + 1 < sess_modeled.len() { "," } else { "" }
         ));
     }
     json.push_str("  ]\n}\n");

@@ -155,6 +155,15 @@ impl Platform {
         self.inner.servers[s as usize].available()
     }
 
+    /// The session id this platform holds with server `s`. Each
+    /// `Platform` is one independent client session per server — opening
+    /// N platforms against one daemon exercises its multi-session
+    /// registry — and this is the handle tests pass to
+    /// `Daemon::kick_session` or `Sessions::get` to address it.
+    pub fn session_id(&self, s: u32) -> crate::proto::SessionId {
+        self.inner.servers[s as usize].session_id()
+    }
+
     /// Events currently tracked by the driver's event table (tests /
     /// metrics). Bounded by [`CLIENT_EVENT_KEEP`] plus the in-flight set:
     /// stream readers reclaim old Complete entries as completions stream

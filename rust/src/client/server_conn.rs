@@ -346,7 +346,7 @@ impl ServerConn {
         addr: String,
         cfg: ClientConfig,
         events: Arc<EventTable>,
-        read_results: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+        read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
     ) -> Result<Arc<ServerConn>> {
         let core = Arc::new(SessionCore {
             server_id,
@@ -412,6 +412,14 @@ impl ServerConn {
 
     pub fn available(&self) -> bool {
         self.core.available.load(Ordering::SeqCst)
+    }
+
+    /// The session id this connection holds with its server (issued by
+    /// the control stream's Welcome, presented by every stream on
+    /// reconnect). Multi-session tests use it to address one client's
+    /// daemon-side [`crate::daemon::state::Session`] among many.
+    pub fn session_id(&self) -> SessionId {
+        *self.core.session.lock().unwrap()
     }
 
     pub fn n_devices(&self) -> u32 {

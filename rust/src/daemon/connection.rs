@@ -1,15 +1,19 @@
 //! Daemon socket handling: the accept loop plus one reader thread and one
 //! writer thread per connection (paper §4.2).
 //!
-//! * Client connections begin with `Hello{role=CLIENT}`; the daemon replies
-//!   `Welcome{session, last_seen_cmd}` (fresh session for all-zero ids,
-//!   resumed session otherwise — paper §4.3). This socket is the session's
-//!   *control stream* (stream 0).
+//! * Client connections begin with `Hello{role=CLIENT}`; the daemon
+//!   resolves the presented id in its session *registry*
+//!   ([`crate::daemon::state::Sessions`] — many UEs share one daemon) and
+//!   replies `Welcome{session, last_seen_cmd}` (all-zero id mints a fresh
+//!   session, a known id resumes it, an unknown id is adopted with fresh
+//!   replay state — paper §4.3). This socket is the session's *control
+//!   stream* (stream 0).
 //! * `AttachQueue{session, queue}` attaches one more socket pair to the
-//!   session, carrying exactly the commands of command queue `queue` — the
-//!   paper's "each command queue has its own writer/reader thread pair".
-//!   All queue streams funnel into the one dispatcher; each has its own
-//!   replay cursor and its own completion writer.
+//!   presented session, carrying exactly the commands of command queue
+//!   `queue` — the paper's "each command queue has its own writer/reader
+//!   thread pair". All of a session's queue streams funnel into the one
+//!   dispatcher; each has its own replay cursor and its own completion
+//!   writer, registered *in its session*.
 //! * Peer connections begin with `Hello{role=PEER, peer_id}`; both ends
 //!   register reader/writer threads for the mesh.
 //!
@@ -35,7 +39,7 @@ use crate::proto::{
 };
 
 use super::dispatch::Work;
-use super::state::DaemonState;
+use super::state::{DaemonState, Session};
 
 /// Accept connections until shutdown.
 pub fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, work_tx: Sender<Work>) {
@@ -95,32 +99,26 @@ fn handle_new_connection(
     }
 }
 
-/// Session control stream (stream 0): issues/resumes the session, then
-/// runs the shared client-stream loop.
+/// Session control stream (stream 0): resolves the presented id in the
+/// session registry (fresh / resumed / adopted), then runs the shared
+/// client-stream loop.
 fn handle_client_conn(
     stream: TcpStream,
     presented: [u8; 16],
     state: Arc<DaemonState>,
     work_tx: Sender<Work>,
 ) -> Result<()> {
-    // Session attach: all-zero = fresh client; otherwise must match the
-    // session we handed out (paper: ids map connections to contexts).
-    let (sid, last_seen) = {
-        let mut sess = state.session.lock().unwrap();
-        if presented != sess.id {
-            // Fresh or unknown session: the old replay state is void for
-            // *every* stream of the session.
-            sess.reset_cursors();
-        }
-        (sess.id, sess.last_seen(0))
+    let Some((sess, _resumed)) = state.sessions.attach(presented) else {
+        bail!("session registry full ({} live sessions)", state.sessions.len());
     };
-    run_client_stream(stream, 0, sid, last_seen, state, work_tx)
+    run_client_stream(stream, 0, sess, state, work_tx)
 }
 
-/// Queue-scoped stream: attaches to the existing session. An unknown
-/// session id is accepted (the daemon may have restarted and lost the
-/// session; the client replays its backup from scratch), but only that
-/// queue's cursor is reset.
+/// Queue-scoped stream: attaches to the presented session. An unknown
+/// session id is accepted (the daemon may have restarted or reaped the
+/// session; the client replays its backup from scratch) and *adopted*,
+/// so every stream of that client still converges on one registry entry
+/// with fresh replay state.
 fn handle_queue_conn(
     stream: TcpStream,
     presented: [u8; 16],
@@ -131,32 +129,34 @@ fn handle_queue_conn(
     if queue == 0 {
         bail!("AttachQueue for stream 0 (the control stream attaches via Hello)");
     }
-    let (sid, last_seen) = {
-        let mut sess = state.session.lock().unwrap();
-        if presented != sess.id {
-            sess.reset_cursor(queue);
-        }
-        (sess.id, sess.last_seen(queue))
+    if presented == [0u8; 16] {
+        // A zero id is only meaningful on Hello (mint-a-fresh-session);
+        // accepting it here would mint a phantom session with no control
+        // stream that lingers until TTL reap.
+        bail!("AttachQueue with a zero session id (sessions are issued by Hello)");
+    }
+    let Some((sess, _resumed)) = state.sessions.attach(presented) else {
+        bail!("session registry full ({} live sessions)", state.sessions.len());
     };
-    run_client_stream(stream, queue, sid, last_seen, state, work_tx)
+    run_client_stream(stream, queue, sess, state, work_tx)
 }
 
-/// Shared client-stream machinery: Welcome reply, writer registration,
-/// reader loop with per-stream replay dedup. The calling thread becomes
-/// the reader.
+/// Shared client-stream machinery: Welcome reply, writer registration in
+/// the stream's session, reader loop with per-stream replay dedup. The
+/// calling thread becomes the reader.
 fn run_client_stream(
     stream: TcpStream,
     queue: u32,
-    sid: [u8; 16],
-    last_seen: u64,
+    sess: Arc<Session>,
     state: Arc<DaemonState>,
     work_tx: Sender<Work>,
 ) -> Result<()> {
+    sess.touch();
     let welcome = Msg::control(Body::Welcome {
-        session: sid,
+        session: sess.id,
         server_id: state.server_id,
         n_devices: state.devices.len() as u32,
-        last_seen_cmd: last_seen,
+        last_seen_cmd: sess.last_seen(queue),
     });
     let mut ws = stream.try_clone()?;
     write_packet(&mut ws, &welcome, &[])?;
@@ -164,8 +164,7 @@ fn run_client_stream(
     // channel) to this physical connection, so a stale stream's cleanup
     // can never evict a reattached one.
     let instance = crate::util::fresh_id();
-    state
-        .client_streams
+    sess.client_streams
         .lock()
         .unwrap()
         .insert(queue, (instance, stream.try_clone()?));
@@ -173,10 +172,11 @@ fn run_client_stream(
     // Writer thread for completions (and read-back payloads).
     let (tx, rx) = channel::<Packet>();
     {
-        let mut txs = state.client_txs.lock().unwrap();
-        // Flush completions that raced a disconnection window — any live
-        // stream will do, the client routes by event id.
-        for pkt in state.undelivered.lock().unwrap().drain(..) {
+        let mut txs = sess.client_txs.lock().unwrap();
+        // Flush this session's completions that raced a disconnection
+        // window — any of its live streams will do, the client routes by
+        // event id (another session's backlog is never touched).
+        for pkt in sess.undelivered.lock().unwrap().drain() {
             tx.send(pkt).ok();
         }
         txs.insert(queue, (instance, tx));
@@ -197,21 +197,15 @@ fn run_client_stream(
         match read_packet_with(&mut rd, &mut scratch) {
             Ok(pkt) => {
                 // Replay dedup after reconnect ("the server simply ignores
-                // commands it has already processed"), per-stream cursor.
-                // Idempotent reads are exempt — re-executing them
-                // regenerates the lost payload.
+                // commands it has already processed"), per-stream cursor
+                // owned by this stream's session — check-and-advance is
+                // one atomic step, so a superseded reader racing its
+                // reconnected replacement can never both admit one
+                // command. Idempotent reads are exempt — re-executing
+                // them regenerates the lost payload.
+                sess.touch();
                 let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
-                let dup = {
-                    let mut sess = state.session.lock().unwrap();
-                    if pkt.msg.cmd_id != 0 && pkt.msg.cmd_id <= sess.last_seen(queue) {
-                        !idempotent
-                    } else {
-                        if pkt.msg.cmd_id != 0 {
-                            sess.note_seen(queue, pkt.msg.cmd_id);
-                        }
-                        false
-                    }
-                };
+                let dup = sess.check_and_note(queue, pkt.msg.cmd_id) && !idempotent;
                 if dup {
                     // If the duplicate already completed, the client lost
                     // the completion in the disconnect — resend it on this
@@ -223,7 +217,7 @@ fn run_client_stream(
                                     .events
                                     .timestamps(pkt.msg.event)
                                     .unwrap_or_default();
-                                state.send_to_client_on(
+                                sess.send_on(
                                     queue,
                                     Packet::bare(Msg::control(Body::Completion {
                                         event: pkt.msg.event,
@@ -250,7 +244,7 @@ fn run_client_stream(
                 // slot-free on the device workers.
                 if pkt.msg.queue != 0 {
                     if let Some(dev) = state.device_route(&pkt.msg) {
-                        if !admit_device_slot(&state, dev, &pkt.msg, queue, instance) {
+                        if !admit_device_slot(&state, dev, &pkt.msg, &sess, queue, instance) {
                             break; // daemon shutting down
                         }
                     }
@@ -258,6 +252,7 @@ fn run_client_stream(
                 if work_tx
                     .send(Work::Packet {
                         from_peer: None,
+                        session: Some(Arc::clone(&sess)),
                         pkt,
                         via_rdma: false,
                     })
@@ -269,17 +264,25 @@ fn run_client_stream(
             Err(_) => break, // connection lost; client will reconnect
         }
     }
+    // A stream deregistering counts as activity: the idle TTL must
+    // measure time since the session went *streamless*, not since its
+    // last packet — a quiet-but-connected UE whose link then drops gets
+    // the full reconnect grace. Touch BEFORE evicting the registrations
+    // (like `Session::kick`): touching after would leave a window where
+    // the janitor sees a streamless session with a stale idle clock and
+    // reaps it on the spot.
+    sess.touch();
     // Drop the writer channel: a half-dead connection must not swallow
     // completions silently — they requeue when the client reconnects. Only
     // evict our own registrations (a fresh stream may have replaced them).
     {
-        let mut txs = state.client_txs.lock().unwrap();
+        let mut txs = sess.client_txs.lock().unwrap();
         if txs.get(&queue).is_some_and(|(i, _)| *i == instance) {
             txs.remove(&queue);
         }
     }
     {
-        let mut streams = state.client_streams.lock().unwrap();
+        let mut streams = sess.client_streams.lock().unwrap();
         if streams.get(&queue).is_some_and(|(i, _)| *i == instance) {
             streams.remove(&queue);
         }
@@ -292,38 +295,43 @@ fn run_client_stream(
 /// at its fairness share. Besides a grant there are two ways out:
 ///
 /// * daemon shutdown — returns false, the reader exits;
-/// * stream supersession — the client reconnected this queue while we
-///   were parked, so a fresh reader owns the stream registration. The
-///   superseded reader *force-takes* a slot (bounded oversubscription,
-///   one command per superseded reader) so the command it already
-///   advanced the replay cursor past is forwarded rather than lost,
-///   then dies on its next read of the dead socket — a reconnect storm
-///   against a wedged device cannot accumulate parked reader threads.
+/// * stream supersession — the client reconnected this queue of *this
+///   session* while we were parked, so a fresh reader owns the stream
+///   registration in the session. The superseded reader *force-takes* a
+///   slot (bounded oversubscription, one command per superseded reader)
+///   so the command it already advanced the replay cursor past is
+///   forwarded rather than lost, then dies on its next read of the dead
+///   socket — a reconnect storm against a wedged device cannot
+///   accumulate parked reader threads. Supersession is session-scoped:
+///   another session reconnecting the same queue number never retires
+///   this reader.
 fn admit_device_slot(
     state: &Arc<DaemonState>,
     dev: usize,
     msg: &Msg,
+    sess: &Arc<Session>,
     queue: u32,
     instance: u64,
 ) -> bool {
     let gate = &state.device_gates[dev];
+    let key = (sess.id, msg.queue);
     loop {
         // Grant-or-park in one atomic step (no lost-wakeup window); the
         // timeout keeps the exit conditions below live.
-        if gate.enter_or_wait(msg.queue, Duration::from_millis(50)) {
+        if gate.enter_or_wait(key, Duration::from_millis(50)) {
             return true;
         }
         if state.shutdown.load(Ordering::SeqCst) {
             return false;
         }
-        let current = state
+        let current = sess
             .client_streams
             .lock()
             .unwrap()
             .get(&queue)
             .is_some_and(|(i, _)| *i == instance);
         if !current {
-            gate.force_enter(msg.queue);
+            gate.force_enter(key);
             return true;
         }
     }
@@ -354,6 +362,7 @@ pub fn start_peer_io(
                     if work_tx
                         .send(Work::Packet {
                             from_peer: Some(peer_id),
+                            session: None,
                             pkt,
                             via_rdma: false,
                         })

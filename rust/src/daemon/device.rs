@@ -28,15 +28,16 @@ use crate::runtime::executor::{ExecOutcome, ExecRequest};
 use crate::util::{now_ns, Bytes};
 
 use super::dispatch::Work;
-use super::state::{DaemonState, MAX_ALLOC};
+use super::state::{DaemonState, StreamKey, MAX_ALLOC};
 
 /// A dependency-resolved command bound for one device's worker.
 pub struct DeviceCmd {
     pub pkt: Packet,
     /// Dispatcher admission time (event profiling CL_QUEUED).
     pub queued_ns: u64,
-    /// Client stream the command arrived on (gate fairness key).
-    pub stream: u32,
+    /// (session, stream) the command arrived on — the gate fairness key,
+    /// so one session's flood never spends another session's share.
+    pub skey: StreamKey,
     /// Whether this item holds a slot of its device's gate, released
     /// when the command leaves the pipeline (see
     /// [`crate::daemon::state::DeviceGate`]). Control-stream and peer
@@ -72,7 +73,7 @@ pub struct KernelSubmitted {
     /// Gate bookkeeping: the slot (if held) is released when the
     /// dispatcher processes the executor outcome.
     pub device: usize,
-    pub stream: u32,
+    pub skey: StreamKey,
     pub holds_slot: bool,
 }
 
@@ -143,7 +144,7 @@ fn run_item(
     let DeviceCmd {
         pkt,
         queued_ns,
-        stream,
+        skey,
         holds_slot,
     } = item;
     if let Body::RunKernel {
@@ -160,7 +161,7 @@ fn run_item(
                 Some(b) => inputs.push(b),
                 None => {
                     if holds_slot {
-                        state.device_gates[dev].release(stream);
+                        state.device_gates[dev].release(skey);
                     }
                     work_tx
                         .send(Work::Finished(CmdDone {
@@ -187,7 +188,7 @@ fn run_item(
                 queued_ns,
                 submit_ns,
                 device: dev,
-                stream,
+                skey,
                 holds_slot,
             }))
             .ok();
@@ -203,7 +204,7 @@ fn run_item(
     // Inline buffer op: execute, release the slot, report the outcome.
     let outcome = exec_routed_body(state, &pkt);
     if holds_slot {
-        state.device_gates[dev].release(stream);
+        state.device_gates[dev].release(skey);
     }
     let failed = outcome.is_none();
     work_tx

@@ -27,7 +27,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 
 use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
 use crate::runtime::executor::ExecOutcome;
@@ -36,7 +36,7 @@ use crate::util::{now_ns, Bytes};
 
 use super::device::{self, CmdDone, DeviceCmd, KernelSubmitted};
 use super::migrate::{self, MigrationJob};
-use super::state::{DaemonState, DEVICE_QUEUE_DEPTH, MAX_ALLOC};
+use super::state::{DaemonState, Session, StreamKey, DEVICE_QUEUE_DEPTH, MAX_ALLOC};
 
 /// The dispatcher reclaims old Complete events every this many packets
 /// (ROADMAP "Event-table GC wiring"): completions for commands at or below
@@ -56,6 +56,10 @@ pub const EVENT_TABLE_KEEP: usize = 16384;
 pub enum Work {
     Packet {
         from_peer: Option<u32>,
+        /// The client session the packet arrived on (None for peer /
+        /// RDMA traffic). Completion routing, gate accounting and
+        /// replay state are all scoped to it.
+        session: Option<Arc<Session>>,
         pkt: Packet,
         via_rdma: bool,
     },
@@ -73,18 +77,25 @@ pub enum Work {
 
 /// A parked command whose wait list is not yet satisfied. Parked commands
 /// hold no device-gate slot (released at park, re-acquired at wakeup).
+/// The session reference is weak: a command parked on an event that
+/// never resolves must not pin its (possibly reaped) session's memory —
+/// on wakeup a dead session's command simply executes session-less
+/// (slot-free, completion unroutable, exactly like peer traffic).
 struct Pending {
     from_peer: Option<u32>,
+    session: Option<Weak<Session>>,
     pkt: Packet,
     via_rdma: bool,
     queued_ns: u64,
 }
 
 impl Dispatcher {
-    /// Which client stream should carry this event's completion (the
-    /// stream its command arrived on; 0 = control stream fallback).
-    fn take_origin(&mut self, event: u64) -> u32 {
-        self.event_origin.remove(&event).unwrap_or(0)
+    /// Which session + stream should carry this event's completion (the
+    /// ones its command arrived on; None for peer-origin events — no
+    /// client to notify here — and for sessions reaped since admission).
+    fn take_origin(&mut self, event: u64) -> Option<(Arc<Session>, u32)> {
+        let (weak, queue) = self.event_origin.remove(&event)?;
+        weak.upgrade().map(|sess| (sess, queue))
     }
 }
 
@@ -117,11 +128,12 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
             Work::Shutdown => break,
             Work::Packet {
                 from_peer,
+                session,
                 pkt,
                 via_rdma,
             } => {
                 let seen = d.state.commands_seen.fetch_add(1, Ordering::Relaxed) + 1;
-                d.admit(from_peer, pkt, via_rdma, now_ns());
+                d.admit(from_peer, session, pkt, via_rdma, now_ns());
                 d.pump();
                 if seen % GC_EVERY_CMDS == 0 {
                     d.gc();
@@ -173,10 +185,16 @@ struct Dispatcher {
     /// drained FIFO as releases free slots, so occupancy never exceeds
     /// the gate bound and other streams' readers keep their headroom.
     ready_backlog: Vec<VecDeque<DeviceCmd>>,
-    /// event id -> client queue stream the command arrived on, so the
-    /// completion returns on the same stream. Entries for events that
-    /// complete elsewhere (migrations) are pruned by [`Dispatcher::gc`].
-    event_origin: HashMap<u64, u32>,
+    /// event id -> (session, queue stream) the command arrived on, so
+    /// the completion returns to the right client on the same stream —
+    /// with many sessions per daemon the session half is what keeps
+    /// completions from ever crossing UEs. Entries for events that
+    /// complete elsewhere (migrations) route the forwarded completion in
+    /// the `NotifyEvent` branch; stale terminal entries are pruned by
+    /// [`Dispatcher::gc`]. Weak on purpose: entries for events that
+    /// never reach terminal state are retained indefinitely, and must
+    /// not pin a reaped session's backlog with them.
+    event_origin: HashMap<u64, (Weak<Session>, u32)>,
 }
 
 impl Dispatcher {
@@ -189,27 +207,41 @@ impl Dispatcher {
     /// acquired it — control-stream and peer packets run slot-free, see
     /// `execute`); the slot follows the command into the worker, or is
     /// released here if the command parks or is poisoned at admission.
-    fn admit(&mut self, from_peer: Option<u32>, pkt: Packet, via_rdma: bool, queued_ns: u64) {
-        // Remember which client stream carried the command so its
-        // completion goes back out on that stream (queue 0 needs no entry:
-        // it is the routing default).
-        if from_peer.is_none() && pkt.msg.event != 0 && pkt.msg.queue != 0 {
-            self.event_origin.insert(pkt.msg.event, pkt.msg.queue);
+    fn admit(
+        &mut self,
+        from_peer: Option<u32>,
+        session: Option<Arc<Session>>,
+        pkt: Packet,
+        via_rdma: bool,
+        queued_ns: u64,
+    ) {
+        // Remember which session + stream carried the command so its
+        // completion goes back to that client on that stream. Every
+        // client command needs the entry now — with many sessions there
+        // is no "the client" default to fall back to.
+        if pkt.msg.event != 0 {
+            if let Some(sess) = &session {
+                self.event_origin
+                    .insert(pkt.msg.event, (Arc::downgrade(sess), pkt.msg.queue));
+            }
         }
-        let holds_slot = from_peer.is_none()
+        let holds_slot = session.is_some()
             && pkt.msg.queue != 0
             && self.state.device_route(&pkt.msg).is_some();
         let token = crate::util::fresh_id();
         match self.state.events.park(token, &pkt.msg.wait) {
-            DepsState::Ready => self.execute(from_peer, pkt, via_rdma, queued_ns, holds_slot),
+            DepsState::Ready => {
+                self.execute(from_peer, session, pkt, via_rdma, queued_ns, holds_slot)
+            }
             DepsState::Blocked => {
                 if holds_slot {
-                    self.release_route_slot(&pkt.msg);
+                    self.release_route_slot(&session, &pkt.msg);
                 }
                 self.parked.insert(
                     token,
                     Pending {
                         from_peer,
+                        session: session.as_ref().map(Arc::downgrade),
                         pkt,
                         via_rdma,
                         queued_ns,
@@ -218,7 +250,7 @@ impl Dispatcher {
             }
             DepsState::Poisoned => {
                 if holds_slot {
-                    self.release_route_slot(&pkt.msg);
+                    self.release_route_slot(&session, &pkt.msg);
                 }
                 self.fail_command(&pkt.msg);
             }
@@ -226,9 +258,9 @@ impl Dispatcher {
     }
 
     /// Give back the gate slot a routed command holds (park/poison paths).
-    fn release_route_slot(&self, msg: &Msg) {
+    fn release_route_slot(&self, session: &Option<Arc<Session>>, msg: &Msg) {
         if let Some(dev) = self.state.device_route(msg) {
-            self.state.device_gates[dev].release(msg.queue);
+            self.state.device_gates[dev].release(stream_key(session, msg.queue));
         }
     }
 
@@ -249,15 +281,15 @@ impl Dispatcher {
             }
             let taken = std::mem::take(&mut self.ready_backlog[dev]);
             let mut kept = VecDeque::new();
-            let mut capped: Vec<u32> = Vec::new();
+            let mut capped: Vec<StreamKey> = Vec::new();
             for mut cmd in taken {
-                if capped.contains(&cmd.stream) {
+                if capped.contains(&cmd.skey) {
                     kept.push_back(cmd);
-                } else if gate.try_enter(cmd.stream) {
+                } else if gate.try_enter(cmd.skey) {
                     cmd.holds_slot = true;
                     self.dev_txs[dev].send(cmd).ok();
                 } else {
-                    capped.push(cmd.stream);
+                    capped.push(cmd.skey);
                     kept.push_back(cmd);
                 }
             }
@@ -288,8 +320,11 @@ impl Dispatcher {
             if w.poisoned {
                 self.fail_command(&p.pkt.msg);
             } else {
-                // Woken commands released their slot at park time.
-                self.execute(p.from_peer, p.pkt, p.via_rdma, p.queued_ns, false);
+                // Woken commands released their slot at park time. A
+                // session reaped while the command was parked upgrades
+                // to None — the work still runs, session-less.
+                let session = p.session.as_ref().and_then(Weak::upgrade);
+                self.execute(p.from_peer, session, p.pkt, p.via_rdma, p.queued_ns, false);
             }
         }
     }
@@ -299,6 +334,7 @@ impl Dispatcher {
     fn execute(
         &mut self,
         from_peer: Option<u32>,
+        session: Option<Arc<Session>>,
         pkt: Packet,
         via_rdma: bool,
         queued_ns: u64,
@@ -312,19 +348,21 @@ impl Dispatcher {
         // cross-server reads for its siblings. Woken queue-stream
         // commands re-acquire a slot non-blockingly; when their device's
         // pipeline is full they wait in the per-device ready backlog —
-        // the dispatcher never blocks, and the gate bound holds.
+        // the dispatcher never blocks, and the gate bound holds. The
+        // gate key is `(session, stream)` throughout, so a flooding
+        // session's backlog entries never consume a neighbor's share.
         if let Some(dev) = self.state.device_route(&pkt.msg) {
-            let stream = pkt.msg.queue;
-            let gated = from_peer.is_none() && stream != 0;
+            let skey = stream_key(&session, pkt.msg.queue);
+            let gated = session.is_some() && pkt.msg.queue != 0;
             let mut cmd = DeviceCmd {
                 pkt,
                 queued_ns,
-                stream,
+                skey,
                 holds_slot,
             };
             if !gated {
                 self.dev_txs[dev].send(cmd).ok();
-            } else if holds_slot || self.state.device_gates[dev].try_enter(stream) {
+            } else if holds_slot || self.state.device_gates[dev].try_enter(skey) {
                 cmd.holds_slot = true;
                 self.dev_txs[dev].send(cmd).ok();
             } else {
@@ -357,10 +395,17 @@ impl Dispatcher {
                 rdma,
             } => {
                 // Heavy lifting happens on the migration worker. On
-                // success the *destination* completes the event, so this
-                // daemon never sends the completion — hand the origin
-                // stream to the worker for its local-failure path.
-                let origin = self.take_origin(event);
+                // success the *destination* completes the event and its
+                // NotifyEvent comes back here — the `NotifyEvent` branch
+                // below forwards the completion to the origin session
+                // (the destination daemon cannot know which of *its*
+                // sessions, if any, belongs to this client). Keep the
+                // origin entry for that; hand the worker a clone for its
+                // local-failure path.
+                let origin = self
+                    .event_origin
+                    .get(&event)
+                    .and_then(|(w, q)| w.upgrade().map(|sess| (sess, *q)));
                 self.migrate_tx
                     .send(MigrationJob {
                         buf,
@@ -368,7 +413,7 @@ impl Dispatcher {
                         alloc_size: size,
                         event,
                         use_rdma: rdma != 0,
-                        origin_queue: origin,
+                        origin,
                     })
                     .ok();
             }
@@ -433,10 +478,26 @@ impl Dispatcher {
                 event: ev,
                 status,
             } => {
-                // The event reached terminal state on another server; any
-                // local origin entry (e.g. a MigrateOut race) is stale.
-                self.event_origin.remove(&ev);
+                // The event reached terminal state on another server. If
+                // we hold its origin, the command entered the cluster
+                // *here* but completed elsewhere (a MigrateOut whose
+                // destination finished it) — forward the completion to
+                // the origin session, which is the only daemon-side
+                // state that knows which UE is waiting. Remote profiling
+                // timestamps do not travel on NotifyEvent, so the
+                // forwarded completion carries defaults.
                 let st = EventStatus::from_i8(status);
+                if let Some((sess, queue)) = self.take_origin(ev) {
+                    sess.send_on(
+                        queue,
+                        Packet::bare(Msg::control(Body::Completion {
+                            event: ev,
+                            status: st.to_i8(),
+                            ts: Timestamps::default(),
+                            payload_len: 0,
+                        })),
+                    );
+                }
                 let wakeups = if st == EventStatus::Failed {
                     self.state.events.fail(ev)
                 } else {
@@ -474,7 +535,7 @@ impl Dispatcher {
         // The launch's gate slot (if held) spans execution; give it back
         // before the (possibly slow) output commit and completion fanout.
         if inf.holds_slot {
-            self.state.device_gates[inf.device].release(inf.stream);
+            self.state.device_gates[inf.device].release(inf.skey);
         }
         match outcome.outputs {
             Ok(outputs) => {
@@ -519,10 +580,12 @@ impl Dispatcher {
     }
 
     /// Mark complete locally (queueing any released waiters), send
-    /// Completion to the client — on the stream the command arrived on —
-    /// and NotifyEvent to every peer (paper Fig 3). `payload` is a
-    /// shared view; routing it onto a stream clones a refcount, never
-    /// the bytes.
+    /// Completion to the origin session's client — on the stream the
+    /// command arrived on — and NotifyEvent to every peer (paper Fig 3).
+    /// Peer-origin events (migration commits) have no origin entry: their
+    /// client-ward completion is forwarded by the *source* daemon when
+    /// this NotifyEvent reaches it. `payload` is a shared view; routing
+    /// it onto a stream clones a refcount, never the bytes.
     fn broadcast_completion(&mut self, event: u64, ts: Timestamps, payload: Bytes) {
         if event == 0 {
             return;
@@ -530,19 +593,21 @@ impl Dispatcher {
         let origin = self.take_origin(event);
         let wakeups = self.state.events.complete(event, ts);
         self.wake_queue.extend(wakeups);
-        let completion = Msg::control(Body::Completion {
-            event,
-            status: EventStatus::Complete.to_i8(),
-            ts,
-            payload_len: payload.len() as u64,
-        });
-        self.state.send_to_client_on(
-            origin,
-            Packet {
-                msg: completion,
-                payload,
-            },
-        );
+        if let Some((sess, queue)) = origin {
+            let completion = Msg::control(Body::Completion {
+                event,
+                status: EventStatus::Complete.to_i8(),
+                ts,
+                payload_len: payload.len() as u64,
+            });
+            sess.send_on(
+                queue,
+                Packet {
+                    msg: completion,
+                    payload,
+                },
+            );
+        }
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Complete.to_i8(),
@@ -557,13 +622,15 @@ impl Dispatcher {
         let origin = self.take_origin(event);
         let wakeups = self.state.events.fail(event);
         self.wake_queue.extend(wakeups);
-        let completion = Msg::control(Body::Completion {
-            event,
-            status: EventStatus::Failed.to_i8(),
-            ts: Timestamps::default(),
-            payload_len: 0,
-        });
-        self.state.send_to_client_on(origin, Packet::bare(completion));
+        if let Some((sess, queue)) = origin {
+            let completion = Msg::control(Body::Completion {
+                event,
+                status: EventStatus::Failed.to_i8(),
+                ts: Timestamps::default(),
+                payload_len: 0,
+            });
+            sess.send_on(queue, Packet::bare(completion));
+        }
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Failed.to_i8(),
@@ -577,14 +644,30 @@ impl Dispatcher {
 
     /// Periodic housekeeping: reclaim old Complete events (keeping recent
     /// history for replay resends) and drop origin entries whose events
-    /// already reached terminal state elsewhere.
+    /// already reached terminal state elsewhere. Session TTL reaping is
+    /// NOT here — it belongs to the daemon's janitor thread
+    /// (`daemon/mod.rs`), which polls wall-clock time regardless of
+    /// whether packets still flow.
     fn gc(&mut self) {
         self.state.events.gc_terminal(EVENT_TABLE_KEEP);
         let events = &self.state.events;
         // Keep entries for events not yet terminal locally (parked or
         // in-flight commands have no terminal status); drop only entries
-        // whose completion was already observed some other way.
+        // whose completion was already observed some other way. (Origin
+        // and parked entries hold only `Weak` session refs, so even the
+        // retained ones never pin a reaped session's memory.)
         self.event_origin
             .retain(|ev, _| !events.status(*ev).is_some_and(|s| s.is_terminal()));
+    }
+}
+
+/// The device-gate fairness key of a command: its session id plus the
+/// stream it arrived on. Sessionless traffic (peer links, the RDMA
+/// poller) is never gated; the zero key only labels those slot-free
+/// [`DeviceCmd`]s.
+fn stream_key(session: &Option<Arc<Session>>, queue: u32) -> StreamKey {
+    match session {
+        Some(sess) => (sess.id, queue),
+        None => ([0u8; 16], queue),
     }
 }

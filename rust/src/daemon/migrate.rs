@@ -19,7 +19,7 @@ use crate::proto::{Body, Msg, Packet};
 use crate::util::Bytes;
 
 use super::dispatch::Work;
-use super::state::DaemonState;
+use super::state::{DaemonState, Session};
 
 /// One migration to perform.
 pub struct MigrationJob {
@@ -30,8 +30,10 @@ pub struct MigrationJob {
     /// The migration event, completed by the destination.
     pub event: u64,
     pub use_rdma: bool,
-    /// Client stream the MigrateOut arrived on (failure-completion routing).
-    pub origin_queue: u32,
+    /// Session + stream the MigrateOut arrived on (failure-completion
+    /// routing — the success completion is forwarded by the dispatcher
+    /// when the destination's NotifyEvent lands).
+    pub origin: Option<(Arc<Session>, u32)>,
 }
 
 /// Spawn the migration worker thread; returns its job channel. `work_tx`
@@ -60,15 +62,17 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
                         status: crate::proto::EventStatus::Failed.to_i8(),
                     }));
                     state.broadcast_to_peers(&note);
-                    state.send_to_client_on(
-                        job.origin_queue,
-                        Packet::bare(Msg::control(Body::Completion {
-                            event: job.event,
-                            status: crate::proto::EventStatus::Failed.to_i8(),
-                            ts: Default::default(),
-                            payload_len: 0,
-                        })),
-                    );
+                    if let Some((sess, queue)) = &job.origin {
+                        sess.send_on(
+                            *queue,
+                            Packet::bare(Msg::control(Body::Completion {
+                                event: job.event,
+                                status: crate::proto::EventStatus::Failed.to_i8(),
+                                ts: Default::default(),
+                                payload_len: 0,
+                            })),
+                        );
+                    }
                 }
             }
         })

@@ -1,10 +1,13 @@
 //! `pocld` — the PoCL-R server daemon (paper §4.2).
 //!
-//! One daemon runs per MEC server. It accepts a client connection plus one
-//! peer connection per other server, and is structured exactly as the paper
-//! describes: *"Each socket has a reader thread and a writer thread. The
-//! readers do blocking reads on the socket until they manage to read a new
-//! command, which they then dispatch"*. Dispatch resolves event
+//! One daemon runs per MEC server. It serves **any number of client
+//! sessions** (the paper's MEC setting: many UEs share one edge server —
+//! each gets its own session in [`state::Sessions`], with its own replay
+//! cursors, completion writers and device-gate fairness shares) plus one
+//! peer connection per other server, and is structured exactly as the
+//! paper describes: *"Each socket has a reader thread and a writer thread.
+//! The readers do blocking reads on the socket until they manage to read a
+//! new command, which they then dispatch"*. Dispatch resolves event
 //! dependencies against the daemon's [`crate::sched::EventTable`] (native +
 //! user events), fans dependency-satisfied commands out to per-device
 //! dispatch workers ([`device`]) behind bounded per-device gates, runs
@@ -37,7 +40,7 @@ use crate::runtime::executor::DeviceKind;
 use crate::runtime::Manifest;
 
 use dispatch::Work;
-use state::DaemonState;
+use state::{DaemonState, SESSION_IDLE_TTL};
 
 /// Configuration of one daemon instance.
 pub struct DaemonConfig {
@@ -131,6 +134,7 @@ impl Daemon {
                                 if tx
                                     .send(Work::Packet {
                                         from_peer: Some(c.from_node),
+                                        session: None,
                                         pkt: Packet::bare(msg),
                                         via_rdma: true,
                                     })
@@ -144,6 +148,27 @@ impl Daemon {
                     }
                 })
                 .context("spawn rdma poller")?;
+        }
+
+        // Session janitor: the dispatcher's GC pass only runs while
+        // packets flow, but SESSION_IDLE_TTL is wall-clock — a daemon
+        // whose UEs all roamed away must still shed their dead sessions.
+        // Stale-link kicks first (a silently-vanished UE's readers sit in
+        // blocked socket reads, so its session never goes streamless on
+        // its own), then the streamless reap. The thread outlives `Drop`
+        // by at most one poll interval.
+        {
+            let state = Arc::clone(&state);
+            std::thread::Builder::new()
+                .name(format!("pocld{server_id}-janitor"))
+                .spawn(move || {
+                    while !state.shutdown.load(Ordering::SeqCst) {
+                        std::thread::sleep(std::time::Duration::from_secs(5));
+                        state.sessions.kick_stale(SESSION_IDLE_TTL);
+                        state.sessions.reap_idle(SESSION_IDLE_TTL);
+                    }
+                })
+                .context("spawn session janitor")?;
         }
 
         // Accept loop.
@@ -200,15 +225,21 @@ impl Daemon {
         Ok(())
     }
 
-    /// Sever the live client connection — every attached stream, control
-    /// and queue-scoped alike — without touching daemon state; simulates
-    /// an access-network drop or the UE roaming to a new IP (paper §4.3).
-    /// The client driver is expected to reconnect each stream with its
+    /// Sever every live client connection of every session — every
+    /// attached stream, control and queue-scoped alike — without touching
+    /// daemon state; simulates a daemon-wide access-network cut. Each
+    /// client driver is expected to reconnect its streams with its
     /// session id and replay unacknowledged commands.
     pub fn kick_client(&self) {
-        for (_, (_, s)) in self.state.client_streams.lock().unwrap().drain() {
-            s.shutdown(std::net::Shutdown::Both).ok();
-        }
+        self.state.sessions.kick_all();
+    }
+
+    /// Sever only the named session's streams (one UE roams / drops —
+    /// paper §4.3) while every other session keeps flowing; true if the
+    /// session exists. The session's state (cursors, undelivered backlog)
+    /// is untouched, so the same id resumes with replay intact.
+    pub fn kick_session(&self, session: &crate::proto::SessionId) -> bool {
+        self.state.sessions.kick(session)
     }
 
     /// Total device-busy nanoseconds (Fig 17 utilization).

@@ -1,8 +1,9 @@
 //! Shared daemon state: sharded buffer store, event table, device
-//! executors, per-device dispatch gates, connection registries, session
-//! bookkeeping, RDMA shadow region.
+//! executors, per-device dispatch gates, the client-session registry
+//! ([`Sessions`] — one [`Session`] per connected UE), RDMA shadow region.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -12,9 +13,10 @@ use anyhow::Result;
 
 use crate::net::rdma::{Endpoint, Mr};
 use crate::net::LinkProfile;
-use crate::proto::{Msg, Packet, SessionId};
+use crate::proto::{Body, Msg, Packet, SessionId};
 use crate::runtime::executor::{DeviceExecutor, DeviceKind};
 use crate::sched::EventTable;
+use crate::util::now_ns;
 use crate::util::rng::Rng;
 use crate::util::Bytes;
 
@@ -146,12 +148,23 @@ pub const DEVICE_QUEUE_DEPTH: usize = 64;
 /// targeting the same device (the fairness policy across streams).
 pub const STREAM_SHARE: usize = 16;
 
+/// The device-gate fairness key: one client stream of one session.
+///
+/// Queue ids are client-assigned *per session* (every UE numbers its
+/// queues from 1), so the bare stream id cannot tell two sessions'
+/// streams apart — under the old `u32` key, session A's queue-1 flood
+/// would have consumed the share that session B's queue 1 needed on the
+/// same device. Widening the key to `(session, stream)` gives every
+/// session its own [`STREAM_SHARE`] per stream: a flooding UE chokes at
+/// its own share while its neighbors keep full admission.
+pub type StreamKey = (SessionId, u32);
+
 #[derive(Default)]
 struct GateInner {
     /// Slots currently held (pipeline occupancy).
     held: usize,
-    /// stream id -> slots held by commands that arrived on it.
-    per_stream: HashMap<u32, usize>,
+    /// (session, stream) -> slots held by commands that arrived on it.
+    per_stream: HashMap<StreamKey, usize>,
 }
 
 /// Bounded admission gate for one device's dispatch pipeline.
@@ -198,7 +211,7 @@ impl DeviceGate {
 
     /// Grant one slot to `stream` if the device bound and the stream's
     /// fair share both allow it.
-    fn grant(g: &mut GateInner, stream: u32) -> bool {
+    fn grant(g: &mut GateInner, stream: StreamKey) -> bool {
         let stream_held = g.per_stream.get(&stream).copied().unwrap_or(0);
         if g.held < DEVICE_QUEUE_DEPTH && stream_held < STREAM_SHARE {
             g.held += 1;
@@ -213,7 +226,7 @@ impl DeviceGate {
     /// stream's fairness share both allow it. This is the dispatcher's
     /// entry point — it overflows refused commands into its ready
     /// backlog and must never block.
-    pub fn try_enter(&self, stream: u32) -> bool {
+    pub fn try_enter(&self, stream: StreamKey) -> bool {
         Self::grant(&mut self.inner.lock().unwrap(), stream)
     }
 
@@ -224,7 +237,7 @@ impl DeviceGate {
     /// closes the lost-wakeup window between a failed probe and the
     /// wait; the timeout keeps the caller's exit conditions (shutdown,
     /// stream supersession) live.
-    pub fn enter_or_wait(&self, stream: u32, timeout: Duration) -> bool {
+    pub fn enter_or_wait(&self, stream: StreamKey, timeout: Duration) -> bool {
         let mut g = self.inner.lock().unwrap();
         if Self::grant(&mut g, stream) {
             return true;
@@ -240,7 +253,7 @@ impl DeviceGate {
     /// cursor moved past it, so no replayed copy will ever be admitted).
     /// Transient, bounded oversubscription: at most one slot per
     /// superseded reader.
-    pub fn force_enter(&self, stream: u32) {
+    pub fn force_enter(&self, stream: StreamKey) {
         let mut g = self.inner.lock().unwrap();
         g.held += 1;
         *g.per_stream.entry(stream).or_insert(0) += 1;
@@ -255,7 +268,7 @@ impl DeviceGate {
     /// win the race — the priority is strong, not absolute — but a
     /// flooding stream's reader can no longer systematically starve its
     /// own woken backlog.)
-    pub fn release(&self, stream: u32) {
+    pub fn release(&self, stream: StreamKey) {
         let mut g = self.inner.lock().unwrap();
         g.held = g.held.saturating_sub(1);
         if let Some(n) = g.per_stream.get_mut(&stream) {
@@ -284,6 +297,124 @@ impl DeviceGate {
     }
 }
 
+/// Sessions with no live stream for longer than this are reaped from the
+/// registry by the daemon's janitor thread (wall-clock polling — reaping
+/// must fire even when no packets flow): the daemon serves many UEs, and
+/// a phone that roamed away for good must not pin its replay cursors and
+/// undelivered backlog forever. Stream deregistration counts as activity,
+/// so the TTL measures time since the session went *streamless*, not
+/// since its last command. A client returning *after* the TTL presents
+/// an id the daemon no longer knows and gets a fresh replay state (it
+/// replays its whole backup ring; duplicates of commands whose
+/// completions it already consumed re-execute — the price of bounded
+/// state, mirroring the event table's GC-floor trade).
+pub const SESSION_IDLE_TTL: Duration = Duration::from_secs(300);
+
+/// Hard cap on live sessions per daemon. Unknown ids are *adopted* into
+/// the registry (see [`Sessions::attach`]), so without a bound any
+/// unauthenticated connection loop could mint entries faster than the
+/// idle TTL reaps them. At the cap, a handshake that would create a new
+/// session is refused (the connection is dropped; resuming an existing
+/// session always still works) — a full daemon sheds new UEs rather
+/// than growing without bound.
+pub const MAX_SESSIONS: usize = 4096;
+
+/// Per-session cap on bytes of completion payloads parked in the
+/// undelivered backlog while the session has no usable stream. A
+/// disconnected session pinning arbitrary ReadBuffer payloads for up to
+/// [`SESSION_IDLE_TTL`] would be a memory-exhaustion vector multiplied
+/// by [`MAX_SESSIONS`]; overflowing entries are dropped oldest-first,
+/// which is recoverable — the client's reconnect replay resends every
+/// unacknowledged command, the reader re-sends terminal completions for
+/// replayed duplicates, and reads are replay-exempt and re-execute.
+pub const UNDELIVERED_MAX_BYTES: usize = 16 << 20;
+
+/// Companion entry-count cap on the undelivered backlog: zero-payload
+/// completions (barriers, writes, kernel finishes) never trip the byte
+/// cap, so the count bounds their `Msg` allocations too.
+pub const UNDELIVERED_MAX_ENTRIES: usize = 32768;
+
+/// A session's undelivered-completion backlog: parked packets plus a
+/// running payload-byte total, kept incrementally — recomputing the sum
+/// on every park would make a deep disconnect window O(n²).
+#[derive(Default)]
+pub struct Undelivered {
+    q: VecDeque<Packet>,
+    payload_bytes: usize,
+    /// Index of the first entry whose payload has NOT been stripped —
+    /// stripping proceeds strictly oldest-first, so repeated overflows
+    /// resume here instead of rescanning the stripped prefix.
+    first_unstripped: usize,
+}
+
+impl Undelivered {
+    /// Park one packet, bounding the backlog.
+    ///
+    /// The byte cap *strips payloads* oldest-first instead of dropping
+    /// whole completions: a parked completion's command already sits at
+    /// or below the stream's replay cursor (the cursor advances at
+    /// admission), so the client would never replay it — a dropped
+    /// completion would strand its event unresolved until the client's
+    /// wait times out. A stripped read completion still resolves the
+    /// event; collecting the payload then surfaces an explicit
+    /// "payload missing" error, and re-reading re-executes (reads are
+    /// idempotent). The count cap bounds the residual bare packets
+    /// (~100 B each) and does drop oldest past 32k — the documented
+    /// degrade-to-wait-timeout floor for a pathologically deep
+    /// disconnect window.
+    fn push_bounded(&mut self, pkt: Packet) {
+        self.payload_bytes += pkt.payload.len();
+        self.q.push_back(pkt);
+        let mut i = self.first_unstripped;
+        while self.payload_bytes > UNDELIVERED_MAX_BYTES && i < self.q.len() {
+            let p = &mut self.q[i];
+            if !p.payload.is_empty() {
+                if let Body::Completion { payload_len, .. } = &mut p.msg.body {
+                    *payload_len = 0;
+                    self.payload_bytes -= p.payload.len();
+                    p.payload = Bytes::new();
+                }
+            }
+            i += 1;
+        }
+        self.first_unstripped = i;
+        while self.q.len() > UNDELIVERED_MAX_ENTRIES {
+            if let Some(dropped) = self.q.pop_front() {
+                self.payload_bytes -= dropped.payload.len();
+                self.first_unstripped = self.first_unstripped.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Take everything parked, in order (the attach-time flush).
+    pub fn drain(&mut self) -> std::collections::vec_deque::Drain<'_, Packet> {
+        self.payload_bytes = 0;
+        self.first_unstripped = 0;
+        self.q.drain(..)
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Payload bytes currently parked (tests / metrics).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_bytes
+    }
+
+    pub fn front(&self) -> Option<&Packet> {
+        self.q.front()
+    }
+
+    pub fn back(&self) -> Option<&Packet> {
+        self.q.back()
+    }
+}
+
 pub struct DaemonState {
     pub server_id: u32,
     pub client_link: LinkProfile,
@@ -293,27 +424,15 @@ pub struct DaemonState {
     pub devices: Vec<DeviceExecutor>,
     /// One bounded admission gate per device, indexed like `devices` —
     /// the backpressure edge between stream readers and the per-device
-    /// dispatch workers.
+    /// dispatch workers. Fairness is per [`StreamKey`]: one session's
+    /// flood never consumes another session's share.
     pub device_gates: Vec<DeviceGate>,
-    /// Writer channels to the connected client, one per attached stream
-    /// (0 = the session control stream, N = the stream of command queue N).
-    /// Values are `(instance, sender)`: the instance id ties a channel to
-    /// one physical connection so a stale reader's cleanup can never evict
-    /// a reattached stream's fresh channel.
-    pub client_txs: Mutex<HashMap<u32, (u64, Sender<Packet>)>>,
-    /// Handles on the live client sockets (keyed and instance-guarded
-    /// like `client_txs`) so tests can sever every stream of the
-    /// connection (simulating a network drop / UE roaming) without
-    /// killing the daemon. Entries are removed when their reader exits.
-    pub client_streams: Mutex<HashMap<u32, (u64, std::net::TcpStream)>>,
-    /// Completions produced while no usable client stream exists; flushed
-    /// in order when any stream (re)connects so the client driver can
-    /// resolve its events.
-    pub undelivered: Mutex<Vec<Packet>>,
+    /// Every client session this daemon is serving (paper's MEC setting:
+    /// many UEs share one edge server). Each [`Session`] owns its stream
+    /// registries, replay cursors and undelivered backlog.
+    pub sessions: Sessions,
     /// Writer channels to peers.
     pub peer_txs: Mutex<HashMap<u32, Sender<Packet>>>,
-    /// Current client session and the replay-dedup cursor.
-    pub session: Mutex<SessionState>,
     pub rdma: Option<RdmaState>,
     pub shutdown: AtomicBool,
     /// Commands processed (metrics).
@@ -324,38 +443,362 @@ pub struct DaemonState {
     pub wake_examined: AtomicU64,
 }
 
-#[derive(Debug, Clone, PartialEq, Default)]
-pub struct SessionState {
+/// One client session: the daemon-side state of one UE's OpenCL context
+/// (paper §4.3 — session ids map connections to contexts and survive
+/// connection loss and IP changes).
+///
+/// Everything that used to be daemon-global singleton state when the
+/// daemon served exactly one client lives here, per session: the stream
+/// registries (completion writers + socket handles, instance-guarded),
+/// the per-stream replay cursors, and the undelivered-completion buffer.
+/// Readers hold an `Arc<Session>` for the life of their socket, so the
+/// per-packet hot path (cursor check, activity touch) never goes through
+/// the registry lock.
+pub struct Session {
     pub id: SessionId,
     /// Per-stream replay-dedup cursors: queue id -> highest cmd_id fully
     /// processed on that stream. Commands at or below the cursor are
     /// dropped on replay after reconnect (paper §4.3: "the server simply
     /// ignores commands it has already processed"). cmd_ids are allocated
     /// per stream, so each stream needs its own cursor.
-    cursors: HashMap<u32, u64>,
+    cursors: Mutex<HashMap<u32, u64>>,
+    /// Writer channels to this session's client, one per attached stream
+    /// (0 = the session control stream, N = the stream of command queue
+    /// N). Values are `(instance, sender)`: the instance id ties a
+    /// channel to one physical connection so a stale reader's cleanup can
+    /// never evict a reattached stream's fresh channel.
+    pub client_txs: Mutex<HashMap<u32, (u64, Sender<Packet>)>>,
+    /// Handles on this session's live sockets (keyed and instance-guarded
+    /// like `client_txs`) so `kick` can sever every stream of *this*
+    /// session (simulating a network drop / the UE roaming) without
+    /// touching its neighbors or the daemon. Entries are removed when
+    /// their reader exits.
+    pub client_streams: Mutex<HashMap<u32, (u64, TcpStream)>>,
+    /// Completions produced while this session has no usable stream;
+    /// flushed in order when any of its streams (re)connects so the
+    /// client driver can resolve its events. Per session on purpose:
+    /// session A's disconnect window must never leak its completions
+    /// into session B's streams. Bounded by [`UNDELIVERED_MAX_BYTES`]
+    /// (strips oldest payloads, completions still delivered) and
+    /// [`UNDELIVERED_MAX_ENTRIES`] (drops oldest bare packets — those
+    /// events degrade to the client's wait timeout); see
+    /// [`Undelivered::push_bounded`].
+    pub undelivered: Mutex<Undelivered>,
+    /// `now_ns` of the last handshake or admitted packet — the idle clock
+    /// behind [`SESSION_IDLE_TTL`].
+    last_active_ns: AtomicU64,
 }
 
-impl SessionState {
-    pub fn last_seen(&self, queue: u32) -> u64 {
-        self.cursors.get(&queue).copied().unwrap_or(0)
+impl Session {
+    fn new(id: SessionId) -> Arc<Session> {
+        Arc::new(Session {
+            id,
+            cursors: Mutex::new(HashMap::new()),
+            client_txs: Mutex::new(HashMap::new()),
+            client_streams: Mutex::new(HashMap::new()),
+            undelivered: Mutex::new(Undelivered::default()),
+            last_active_ns: AtomicU64::new(now_ns()),
+        })
     }
 
-    pub fn note_seen(&mut self, queue: u32, cmd_id: u64) {
-        let c = self.cursors.entry(queue).or_insert(0);
+    pub fn last_seen(&self, queue: u32) -> u64 {
+        self.cursors.lock().unwrap().get(&queue).copied().unwrap_or(0)
+    }
+
+    pub fn note_seen(&self, queue: u32, cmd_id: u64) {
+        let mut cursors = self.cursors.lock().unwrap();
+        let c = cursors.entry(queue).or_insert(0);
         if cmd_id > *c {
             *c = cmd_id;
         }
     }
 
-    /// Forget all replay cursors (fresh client, or unknown session id).
-    pub fn reset_cursors(&mut self) {
-        self.cursors.clear();
+    /// Atomically replay-check and advance one stream's cursor: returns
+    /// true when `cmd_id` was already seen (a replay duplicate), false
+    /// after recording it as seen. One lock hold across check and
+    /// update, so a superseded reader racing its reconnected
+    /// replacement can never both admit the same command (cmd_id 0 is
+    /// non-replayable control traffic: never a duplicate, never
+    /// recorded).
+    pub fn check_and_note(&self, queue: u32, cmd_id: u64) -> bool {
+        if cmd_id == 0 {
+            return false;
+        }
+        let mut cursors = self.cursors.lock().unwrap();
+        let c = cursors.entry(queue).or_insert(0);
+        if cmd_id <= *c {
+            true
+        } else {
+            *c = cmd_id;
+            false
+        }
     }
 
-    /// Reset one stream's cursor (a queue attaching under an unknown
-    /// session replays from scratch).
-    pub fn reset_cursor(&mut self, queue: u32) {
-        self.cursors.remove(&queue);
+    /// Mark the session active (handshake, admitted packet).
+    pub fn touch(&self) {
+        self.last_active_ns.store(now_ns(), Ordering::Relaxed);
+    }
+
+    /// How long since the session last saw traffic.
+    pub fn idle_for(&self) -> Duration {
+        let last = self.last_active_ns.load(Ordering::Relaxed);
+        Duration::from_nanos(now_ns().saturating_sub(last))
+    }
+
+    /// Live streams currently attached (tests / metrics).
+    pub fn n_streams(&self) -> usize {
+        self.client_streams.lock().unwrap().len()
+    }
+
+    /// Send to this session's client over the stream of queue `queue`,
+    /// falling back to the session control stream (queue 0), then to the
+    /// session's undelivered backlog. Completions for commands that
+    /// arrived on a queue stream go back out on the same stream, so
+    /// replies never serialize on one socket — the receiving side routes
+    /// by event id, so any of *this session's* streams is correct; which
+    /// session is not negotiable.
+    pub fn send_on(&self, queue: u32, mut pkt: Packet) {
+        let txs = self.client_txs.lock().unwrap();
+        for q in [queue, 0] {
+            if let Some((_, tx)) = txs.get(&q) {
+                match tx.send(pkt) {
+                    Ok(()) => {
+                        // Outbound delivery is activity too: a session
+                        // draining a deep pipeline of completions with
+                        // no new enqueues is healthy, not stale — the
+                        // janitor must not hang it up mid-drain.
+                        self.touch();
+                        return;
+                    }
+                    // A dead channel hands the packet back — no clone
+                    // needed per delivery probe.
+                    Err(std::sync::mpsc::SendError(p)) => pkt = p,
+                }
+            }
+            if queue == 0 {
+                break; // both probes are the same channel
+            }
+        }
+        // No usable stream: park for the session's next (re)connection.
+        // Still under the `client_txs` lock on purpose — the attach path
+        // registers its tx and drains `undelivered` under that same lock
+        // (same order: txs, then undelivered), so a completion parked
+        // here can never slip past a just-attached stream's flush and
+        // strand until the one after. Bounded: a disconnected session
+        // must not pin unbounded completions for its whole TTL — see
+        // `Undelivered::push_bounded` for the strip-vs-drop policy and
+        // what each overflow costs the client.
+        self.undelivered.lock().unwrap().push_bounded(pkt);
+    }
+
+    /// Sever every live stream of this session (access-network drop, UE
+    /// roaming to a new IP — paper §4.3) without touching session state.
+    /// The client driver is expected to reconnect each stream with the
+    /// session id and replay unacknowledged commands. Counts as activity:
+    /// the idle-TTL grace for the reconnect starts *now*, however long
+    /// the session had been quiet while connected.
+    pub fn kick(&self) {
+        self.touch();
+        for (_, (_, s)) in self.client_streams.lock().unwrap().drain() {
+            s.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+}
+
+/// The daemon's session registry: session id -> live [`Session`].
+///
+/// `Hello` / `AttachQueue` route into it ([`Sessions::attach`]): an
+/// all-zero id mints a fresh session, a known id resumes it (replay
+/// cursors intact), and an unknown non-zero id is *adopted* — the daemon
+/// restarted or reaped the session, so the presented id gets a fresh
+/// entry and the client replays from scratch; all of one client's
+/// streams still converge on one entry. Streamless sessions are reaped
+/// after [`SESSION_IDLE_TTL`] by the daemon's janitor thread.
+pub struct Sessions {
+    map: Mutex<HashMap<SessionId, Arc<Session>>>,
+    /// Fallback seed source for fresh session ids when the OS entropy
+    /// pool is unavailable (see [`fill_os_entropy`]).
+    rng: Mutex<Rng>,
+    /// `now_ns` of the last inline capacity reap — rate-limits the
+    /// O(sessions) shed scan so a churn flood hammering a full registry
+    /// cannot make every refused handshake pay it (and stall legitimate
+    /// resumes queued on the registry lock behind it).
+    last_cap_reap_ns: AtomicU64,
+}
+
+/// Best-effort OS entropy without external crates: `/dev/urandom` where
+/// it exists. Session ids are bearer tokens — presenting one resumes
+/// the session, streams, cursors and undelivered completions and all —
+/// so on a multi-tenant daemon they must not come from an invertible
+/// PRNG seeded with guessable material (time ^ pid): a tenant that
+/// recovered the seed from its own issued ids could derive and present
+/// a neighbor's. Returns false when no OS pool is readable; the caller
+/// falls back to the process PRNG (uniqueness still holds, prediction
+/// resistance degrades — acceptable only off-unix).
+fn fill_os_entropy(buf: &mut [u8]) -> bool {
+    use std::io::Read;
+    std::fs::File::open("/dev/urandom")
+        .and_then(|mut f| f.read_exact(buf))
+        .is_ok()
+}
+
+impl Default for Sessions {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sessions {
+    pub fn new() -> Sessions {
+        Sessions {
+            map: Mutex::new(HashMap::new()),
+            rng: Mutex::new(Rng::from_entropy()),
+            last_cap_reap_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Resolve a presented session id to a live session, creating one as
+    /// needed (the `Hello` / `AttachQueue` entry point). Returns the
+    /// session and whether it was resumed (replay state intact) as
+    /// opposed to freshly created, or `None` when creating would exceed
+    /// [`MAX_SESSIONS`] even after shedding reapable entries — resuming
+    /// a live session never fails on capacity.
+    pub fn attach(&self, presented: SessionId) -> Option<(Arc<Session>, bool)> {
+        // Mint the fresh-id candidate BEFORE taking the registry lock:
+        // the entropy read is file I/O and must not serialize every
+        // concurrent handshake behind it.
+        let fresh = presented == [0u8; 16];
+        let mut candidate = [0u8; 16];
+        if fresh {
+            while candidate == [0u8; 16] {
+                if !fill_os_entropy(&mut candidate) {
+                    self.rng.lock().unwrap().fill_bytes(&mut candidate);
+                }
+            }
+        }
+        let mut map = self.map.lock().unwrap();
+        if !fresh {
+            if let Some(sess) = map.get(&presented) {
+                sess.touch();
+                return Some((Arc::clone(sess), true));
+            }
+        }
+        // Creating a new entry (fresh mint or unknown-id adoption): hold
+        // the bound. Try an inline reap first so a burst of churn sheds
+        // genuinely dead sessions before refusing a live UE — at most
+        // once per second, so a flood hammering a full registry cannot
+        // make every refused handshake pay the O(sessions) scan.
+        if map.len() >= MAX_SESSIONS {
+            let now = now_ns();
+            let last = self.last_cap_reap_ns.load(Ordering::Relaxed);
+            if now.saturating_sub(last) >= 1_000_000_000 {
+                self.last_cap_reap_ns.store(now, Ordering::Relaxed);
+                map.retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < SESSION_IDLE_TTL);
+            }
+            if map.len() >= MAX_SESSIONS {
+                return None;
+            }
+        }
+        let id = if fresh {
+            // An astronomically rare collision with a live id re-mints
+            // under the lock via the PRNG fallback (no file I/O here).
+            while candidate == [0u8; 16] || map.contains_key(&candidate) {
+                self.rng.lock().unwrap().fill_bytes(&mut candidate);
+            }
+            candidate
+        } else {
+            // Unknown id: adopt it with fresh replay state (daemon
+            // restart / post-TTL return). Creation is atomic under the
+            // map lock, so a client's streams racing their re-attach all
+            // land in one entry.
+            presented
+        };
+        let sess = Session::new(id);
+        map.insert(id, Arc::clone(&sess));
+        Some((sess, false))
+    }
+
+    pub fn get(&self, id: &SessionId) -> Option<Arc<Session>> {
+        self.map.lock().unwrap().get(id).map(Arc::clone)
+    }
+
+    /// Live session count (tests / metrics).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ids of every live session (tests / metrics).
+    pub fn ids(&self) -> Vec<SessionId> {
+        self.map.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Sever every stream of the named session; true if it exists.
+    pub fn kick(&self, id: &SessionId) -> bool {
+        match self.get(id) {
+            Some(sess) => {
+                sess.kick();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Sever every stream of every session (daemon-wide network cut).
+    /// The socket shutdowns happen outside the registry lock so
+    /// handshakes are not stalled behind a syscall per stream.
+    pub fn kick_all(&self) {
+        let sessions: Vec<Arc<Session>> =
+            self.map.lock().unwrap().values().map(Arc::clone).collect();
+        for sess in sessions {
+            sess.kick();
+        }
+    }
+
+    /// Drop sessions with no live stream that have been idle for at
+    /// least `ttl`; returns how many were reaped. A reaped session's
+    /// cursors and undelivered backlog are gone — its id becomes
+    /// "unknown" and a late reconnect gets a fresh replay state. Readers
+    /// still holding the `Arc` keep a harmless orphan alive until they
+    /// exit; the registry entry is what grants new attaches.
+    pub fn reap_idle(&self, ttl: Duration) -> usize {
+        let mut map = self.map.lock().unwrap();
+        let before = map.len();
+        map.retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < ttl);
+        before - map.len()
+    }
+
+    /// Hang up sessions whose streams are open but silent for at least
+    /// `stale_after`; returns how many were kicked. A UE that vanished
+    /// without FIN/RST (radio loss, the paper's roaming case) leaves its
+    /// daemon-side readers blocked in their socket reads forever —
+    /// std has no keepalive knob, so without this the session keeps
+    /// "live" streams, the idle TTL never fires, and enough silent
+    /// departures would pin [`MAX_SESSIONS`] permanently. The kick
+    /// drains the stream registrations and shuts the sockets (unblocking
+    /// the readers), and counts as activity, so the session entry keeps
+    /// a full reap TTL of reconnect grace. A *quiet but reachable*
+    /// client is indistinguishable from a vanished one and gets hung up
+    /// too; its driver redials on the next enqueue (which may fail fast
+    /// with `device unavailable` once — the standard Fig 4 signal — and
+    /// succeed on retry) and resumes with replay state intact. Socket
+    /// shutdowns happen outside the registry lock.
+    pub fn kick_stale(&self, stale_after: Duration) -> usize {
+        let stale: Vec<Arc<Session>> = self
+            .map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|sess| sess.n_streams() > 0 && sess.idle_for() >= stale_after)
+            .map(Arc::clone)
+            .collect();
+        for sess in &stale {
+            sess.kick();
+        }
+        stale.len()
     }
 }
 
@@ -393,9 +836,6 @@ impl DaemonState {
             }
             None => None,
         };
-        let mut session_seed = Rng::from_entropy();
-        let mut sid = [0u8; 16];
-        session_seed.fill_bytes(&mut sid);
         let device_gates = (0..devices.len()).map(|_| DeviceGate::new()).collect();
         Ok(Arc::new(DaemonState {
             server_id: cfg.server_id,
@@ -405,14 +845,8 @@ impl DaemonState {
             events: EventTable::new(),
             devices,
             device_gates,
-            client_txs: Mutex::new(HashMap::new()),
-            client_streams: Mutex::new(HashMap::new()),
-            undelivered: Mutex::new(Vec::new()),
+            sessions: Sessions::new(),
             peer_txs: Mutex::new(HashMap::new()),
-            session: Mutex::new(SessionState {
-                id: sid,
-                cursors: HashMap::new(),
-            }),
             rdma,
             shutdown: AtomicBool::new(false),
             commands_seen: AtomicU64::new(0),
@@ -435,33 +869,6 @@ impl DaemonState {
         }
         let dev = msg.device as usize;
         (dev < self.devices.len()).then_some(dev)
-    }
-
-    /// Send to the client over the stream of queue `queue`, falling back
-    /// to the session control stream (queue 0), then to the undelivered
-    /// backlog. Completions for commands that arrived on a queue stream go
-    /// back out on the same stream, so replies never serialize on one
-    /// socket — the receiving side routes by event id, so any stream is
-    /// *correct*, this is about throughput.
-    pub fn send_to_client_on(&self, queue: u32, pkt: Packet) {
-        let txs = self.client_txs.lock().unwrap();
-        for q in [queue, 0] {
-            if let Some((_, tx)) = txs.get(&q) {
-                if tx.send(pkt.clone()).is_ok() {
-                    return;
-                }
-            }
-            if queue == 0 {
-                break; // both probes are the same channel
-            }
-        }
-        drop(txs);
-        // No usable stream: park for the next (re)connection.
-        self.undelivered.lock().unwrap().push(pkt);
-    }
-
-    pub fn send_to_client(&self, pkt: Packet) {
-        self.send_to_client_on(0, pkt);
     }
 
     pub fn send_to_peer(&self, peer: u32, pkt: Packet) {
@@ -668,13 +1075,192 @@ mod tests {
     }
 
     #[test]
-    fn sessions_start_random_nonzero() {
-        let a = state();
-        let b = state();
-        let sa = a.session.lock().unwrap().id;
-        let sb = b.session.lock().unwrap().id;
-        assert_ne!(sa, [0u8; 16]);
-        assert_ne!(sa, sb);
+    fn fresh_sessions_get_random_distinct_ids() {
+        let s = state();
+        assert!(s.sessions.is_empty(), "registry starts empty");
+        let (a, resumed_a) = s.sessions.attach([0u8; 16]).unwrap();
+        let (b, resumed_b) = s.sessions.attach([0u8; 16]).unwrap();
+        assert!(!resumed_a && !resumed_b);
+        assert_ne!(a.id, [0u8; 16]);
+        assert_ne!(a.id, b.id);
+        assert_eq!(s.sessions.len(), 2);
+    }
+
+    #[test]
+    fn attach_resumes_known_and_adopts_unknown_ids() {
+        let s = state();
+        let (a, _) = s.sessions.attach([0u8; 16]).unwrap();
+        a.note_seen(1, 42);
+        // Known id: resumed, cursors intact.
+        let (a2, resumed) = s.sessions.attach(a.id).unwrap();
+        assert!(resumed);
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(a2.last_seen(1), 42);
+        // Unknown non-zero id: adopted with fresh replay state, and a
+        // second stream presenting it joins the same entry.
+        let foreign = [7u8; 16];
+        let (f1, resumed) = s.sessions.attach(foreign).unwrap();
+        assert!(!resumed);
+        assert_eq!(f1.id, foreign);
+        assert_eq!(f1.last_seen(1), 0);
+        let (f2, resumed) = s.sessions.attach(foreign).unwrap();
+        assert!(resumed);
+        assert!(Arc::ptr_eq(&f1, &f2));
+        assert_eq!(s.sessions.len(), 2);
+    }
+
+    #[test]
+    fn idle_streamless_sessions_are_reaped() {
+        let s = state();
+        let (a, _) = s.sessions.attach([0u8; 16]).unwrap();
+        let (_b, _) = s.sessions.attach([0u8; 16]).unwrap();
+        // Give session A a live stream: it must survive any TTL.
+        let (listener, port) = crate::net::tcp::listen_loopback().unwrap();
+        let sock = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let _accepted = listener.accept().unwrap();
+        a.client_streams.lock().unwrap().insert(0, (1, sock));
+        assert_eq!(s.sessions.reap_idle(Duration::ZERO), 1, "only B reaped");
+        assert!(s.sessions.get(&a.id).is_some());
+        // A generous TTL reaps nothing.
+        a.client_streams.lock().unwrap().clear();
+        assert_eq!(s.sessions.reap_idle(Duration::from_secs(3600)), 0);
+        // Streamless and idle: gone; its id now attaches fresh.
+        assert_eq!(s.sessions.reap_idle(Duration::ZERO), 1);
+        let (a2, resumed) = s.sessions.attach(a.id).unwrap();
+        assert!(!resumed, "reaped id must come back with fresh replay state");
+        assert!(!Arc::ptr_eq(&a, &a2));
+    }
+
+    #[test]
+    fn registry_is_capped_but_resume_always_works() {
+        let s = state();
+        let (keep, _) = s.sessions.attach([0u8; 16]).unwrap();
+        // Fill the registry with adopted ids (the unauthenticated-churn
+        // vector the cap exists for).
+        for i in 1..MAX_SESSIONS as u64 {
+            let mut id = [0u8; 16];
+            id[..8].copy_from_slice(&i.to_le_bytes());
+            id[8] = 1;
+            assert!(s.sessions.attach(id).is_some(), "below the cap");
+        }
+        assert_eq!(s.sessions.len(), MAX_SESSIONS);
+        // At the cap: no new entries, fresh or adopted...
+        assert!(s.sessions.attach([0u8; 16]).is_none());
+        assert!(s.sessions.attach([0xAB; 16]).is_none());
+        // ...but resuming a live session still succeeds.
+        let (again, resumed) = s.sessions.attach(keep.id).unwrap();
+        assert!(resumed);
+        assert!(Arc::ptr_eq(&keep, &again));
+        assert_eq!(s.sessions.len(), MAX_SESSIONS);
+    }
+
+    #[test]
+    fn stale_streams_are_kicked_with_a_fresh_reap_grace() {
+        let s = state();
+        let (sess, _) = s.sessions.attach([0u8; 16]).unwrap();
+        let (listener, port) = crate::net::tcp::listen_loopback().unwrap();
+        let sock = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let _accepted = listener.accept().unwrap();
+        sess.client_streams.lock().unwrap().insert(0, (1, sock));
+        // A generous staleness threshold kicks nothing.
+        assert_eq!(s.sessions.kick_stale(Duration::from_secs(3600)), 0);
+        assert_eq!(sess.n_streams(), 1);
+        // Past the threshold the silent link is hung up: streams drain
+        // (unblocking any reader), but the session entry survives with a
+        // fresh idle clock — the reconnect grace.
+        assert_eq!(s.sessions.kick_stale(Duration::ZERO), 1);
+        assert_eq!(sess.n_streams(), 0);
+        assert_eq!(s.sessions.reap_idle(Duration::from_secs(3600)), 0);
+        assert!(s.sessions.get(&sess.id).is_some());
+    }
+
+    #[test]
+    fn undelivered_backlog_is_byte_bounded_dropping_oldest() {
+        let s = state();
+        let (sess, _) = s.sessions.attach([0u8; 16]).unwrap();
+        let chunk = UNDELIVERED_MAX_BYTES / 3;
+        let pkt_with = |tag: u8| Packet {
+            msg: Msg::control(crate::proto::Body::Completion {
+                event: tag as u64,
+                status: 0,
+                ts: Default::default(),
+                payload_len: chunk as u64,
+            }),
+            payload: Bytes::from(vec![tag; chunk]),
+        };
+        for tag in 0..5u8 {
+            sess.send_on(1, pkt_with(tag));
+        }
+        let und = sess.undelivered.lock().unwrap();
+        assert!(
+            und.payload_bytes() <= UNDELIVERED_MAX_BYTES,
+            "backlog exceeded its byte cap"
+        );
+        // No completion is ever dropped by the byte cap (the client
+        // could never recover it — its command is below the replay
+        // cursor); the oldest PAYLOADS are stripped instead, declared
+        // length zeroed so the framing stays coherent.
+        assert_eq!(und.len(), 5, "completions must survive payload shedding");
+        let front = und.front().unwrap();
+        assert!(front.payload.is_empty(), "oldest payload should be stripped");
+        match front.msg.body {
+            crate::proto::Body::Completion { payload_len, .. } => assert_eq!(payload_len, 0),
+            ref other => panic!("unexpected body {other:?}"),
+        }
+        // The newest payload survives intact.
+        assert_eq!(und.back().unwrap().payload[0], 4);
+        drop(und);
+        // Zero-payload completions are bounded by the entry-count cap.
+        let bare = Packet::bare(Msg::control(crate::proto::Body::Barrier));
+        for _ in 0..(UNDELIVERED_MAX_ENTRIES + 10) {
+            sess.send_on(1, bare.clone());
+        }
+        assert!(sess.undelivered.lock().unwrap().len() <= UNDELIVERED_MAX_ENTRIES);
+    }
+
+    #[test]
+    fn check_and_note_admits_each_cmd_id_exactly_once() {
+        let s = state();
+        let (sess, _) = s.sessions.attach([0u8; 16]).unwrap();
+        assert!(!sess.check_and_note(1, 5), "first sight admits");
+        assert!(sess.check_and_note(1, 5), "replay is a duplicate");
+        assert!(sess.check_and_note(1, 3), "older ids stay duplicates");
+        assert!(!sess.check_and_note(2, 5), "cursors are per stream");
+        assert!(!sess.check_and_note(1, 0), "cmd_id 0 is non-replayable");
+        assert!(!sess.check_and_note(1, 0), "...and never recorded");
+        assert_eq!(sess.last_seen(1), 5);
+        // Racing readers of one stream admit a given id exactly once —
+        // the single-lock check-and-advance contract.
+        let sess2 = std::sync::Arc::clone(&sess);
+        let admitted: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let sess = std::sync::Arc::clone(&sess2);
+                    scope.spawn(move || {
+                        (100..200u64)
+                            .filter(|&id| !sess.check_and_note(7, id))
+                            .count()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(admitted, 100, "each id admitted exactly once across readers");
+    }
+
+    #[test]
+    fn undelivered_parks_until_a_stream_attaches() {
+        let s = state();
+        let (sess, _) = s.sessions.attach([0u8; 16]).unwrap();
+        let pkt = Packet::bare(Msg::control(crate::proto::Body::Barrier));
+        sess.send_on(3, pkt.clone());
+        assert_eq!(sess.undelivered.lock().unwrap().len(), 1);
+        // With a live queue-3 writer the send goes through directly.
+        let (tx, rx) = std::sync::mpsc::channel();
+        sess.client_txs.lock().unwrap().insert(3, (1, tx));
+        sess.send_on(3, pkt);
+        assert!(rx.try_recv().is_ok());
+        assert_eq!(sess.undelivered.lock().unwrap().len(), 1);
     }
 
     #[test]
@@ -728,51 +1314,77 @@ mod tests {
         assert!(s.read_buffer(404, 0, 1).is_none());
     }
 
+    /// Gate key for session `s`, stream `q` (tests).
+    fn key(s: u8, q: u32) -> StreamKey {
+        ([s; 16], q)
+    }
+
     #[test]
     fn gate_bounds_total_and_per_stream_occupancy() {
         let gate = DeviceGate::new();
         // One stream saturates at its fair share...
         for _ in 0..STREAM_SHARE {
-            assert!(gate.try_enter(7));
+            assert!(gate.try_enter(key(1, 7)));
         }
-        assert!(!gate.try_enter(7), "stream 7 is at its share");
+        assert!(!gate.try_enter(key(1, 7)), "stream 7 is at its share");
         assert_eq!(gate.held(), STREAM_SHARE);
         // ...while other streams still get in, up to the device bound.
         for s in 0..(DEVICE_QUEUE_DEPTH / STREAM_SHARE - 1) as u32 {
             for _ in 0..STREAM_SHARE {
-                assert!(gate.try_enter(s));
+                assert!(gate.try_enter(key(1, s)));
             }
         }
         assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
         // A full device refuses even a fresh stream, never oversubscribing.
-        assert!(!gate.try_enter(99));
+        assert!(!gate.try_enter(key(1, 99)));
         assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
         // Releasing a slot re-admits, but only within the share.
-        gate.release(7);
-        assert!(!gate.try_enter(0), "stream 0 is at its share");
-        assert!(gate.try_enter(7));
+        gate.release(key(1, 7));
+        assert!(!gate.try_enter(key(1, 0)), "stream 0 is at its share");
+        assert!(gate.try_enter(key(1, 7)));
         assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH);
         // The superseded-reader recovery path ignores the bounds.
-        gate.force_enter(7);
+        gate.force_enter(key(1, 7));
         assert_eq!(gate.held(), DEVICE_QUEUE_DEPTH + 1);
+    }
+
+    #[test]
+    fn gate_share_is_per_session_not_per_queue_id() {
+        // Two sessions use the same client-assigned queue id (every UE
+        // numbers its queues from 1). Under the old bare-stream-id key
+        // they would have shared ONE fairness share; the widened key
+        // gives each session its own.
+        let gate = DeviceGate::new();
+        for _ in 0..STREAM_SHARE {
+            assert!(gate.try_enter(key(1, 1)));
+        }
+        assert!(!gate.try_enter(key(1, 1)), "session A is at its share");
+        assert!(
+            gate.try_enter(key(2, 1)),
+            "session B's queue 1 must have its own share"
+        );
+        assert_eq!(gate.held(), STREAM_SHARE + 1);
+        // Releasing B's slot leaves A still choked.
+        gate.release(key(2, 1));
+        assert!(!gate.try_enter(key(1, 1)));
     }
 
     #[test]
     fn gate_reader_loop_blocks_until_capacity() {
         let gate = Arc::new(DeviceGate::new());
         for _ in 0..STREAM_SHARE {
-            assert!(gate.try_enter(1));
+            assert!(gate.try_enter(key(3, 1)));
         }
         let g2 = Arc::clone(&gate);
         let h = std::thread::spawn(move || {
             // The reader admission loop: grant-or-park, re-probe.
-            while !g2.enter_or_wait(1, Duration::from_millis(10)) {}
+            while !g2.enter_or_wait(key(3, 1), Duration::from_millis(10)) {}
         });
         std::thread::sleep(Duration::from_millis(30));
         assert!(!h.is_finished(), "admission must block at the share cap");
         // Releases do not notify (the dispatcher's backlog gets first
         // claim); the parked reader picks the slot up on its next probe.
-        gate.release(1);
+        gate.release(key(3, 1));
         gate.publish();
         h.join().unwrap();
     }

@@ -5,7 +5,7 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues|latency` — print a DES scenario
+//! * `poclr sim fig12|fig13|fig16|queues|sessions|latency` — print a DES scenario
 //!   table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
@@ -103,6 +103,33 @@ fn main() -> anyhow::Result<()> {
                         );
                     }
                 }
+                Some("sessions") => {
+                    // Multi-session daemons: N UEs x 2 queues each against
+                    // one daemon, vs the same streams inside ONE session —
+                    // sessions must cost nothing beyond their streams.
+                    let cmds = if args.iter().any(|a| a == "--tiny") {
+                        200
+                    } else {
+                        1000
+                    };
+                    println!(
+                        "multi-session daemon model ({cmds} cmds/queue, \
+                         2 queues/session, one device per stream):"
+                    );
+                    for n in [1usize, 2, 4, 8] {
+                        let devs = n * 2;
+                        let multi = scenarios::session_scaling_cmds_per_sec(n, 2, cmds, devs);
+                        let merged =
+                            scenarios::session_scaling_cmds_per_sec(1, 2 * n, cmds, devs);
+                        let crowded = scenarios::session_scaling_cmds_per_sec(n, 2, cmds, 1);
+                        println!(
+                            "{n} session(s): {multi:>9.0} cmd/s   \
+                             as one session {merged:>9.0} cmd/s ({:.3}x)   \
+                             one shared device {crowded:>9.0} cmd/s",
+                            multi / merged
+                        );
+                    }
+                }
                 Some("queues") => {
                     for qn in [1usize, 2, 4, 8] {
                         let single = scenarios::queue_scaling_cmds_per_sec(qn, 1000, false);
@@ -137,7 +164,7 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
                 other => anyhow::bail!(
-                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|latency)"
+                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|sessions|latency)"
                 ),
             }
             Ok(())
@@ -159,7 +186,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
-            eprintln!("  sim    fig12|fig13|fig16|queues|latency  DES scenario tables");
+            eprintln!("  sim    fig12|fig13|fig16|queues|sessions|latency  DES scenario tables");
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);
         }

@@ -147,44 +147,73 @@ pub fn queue_scaling_cmds_per_sec(
 ///
 /// Per-queue streams are assumed (the redesigned transport); queue `q`
 /// targets device `q % n_devices`. Returns aggregate commands/second.
+/// One cost model lives in [`session_scaling_cmds_per_sec`]; this is
+/// that model with the session axis collapsed to one — kept as the
+/// historical entry point for the bench and CLI.
 pub fn queue_scaling_multi_device_cmds_per_sec(
     n_queues: usize,
     cmds_per_queue: usize,
     n_devices: usize,
 ) -> f64 {
-    // Client-side encode + size/struct write syscalls per command.
+    session_scaling_cmds_per_sec(1, n_queues, cmds_per_queue, n_devices)
+}
+
+/// Multi-session daemons (the paper's many-UEs-per-server MEC setting):
+/// `n_sessions` independent client sessions, each with
+/// `queues_per_session` command queues, against one daemon. Each
+/// (session, queue) stream has its own writer/reader socket pair; the
+/// dispatcher's routing slice is shared; queue `q` of session `s`
+/// targets device `(s*M + q) % n_devices`.
+///
+/// The architectural claim this models: sessions add **no serialization
+/// of their own**. Everything that was singleton when the daemon served
+/// one client (replay cursors, completion writers, undelivered buffers)
+/// is per-session state touched only by that session's streams, so
+/// N sessions × M queues costs exactly what N·M queues of one session
+/// cost — the shared routing slice (and, when oversubscribed, the
+/// device workers) is the only coupling. Returns aggregate
+/// commands/second.
+pub fn session_scaling_cmds_per_sec(
+    n_sessions: usize,
+    queues_per_session: usize,
+    cmds_per_queue: usize,
+    n_devices: usize,
+) -> f64 {
+    // Client-side encode + write syscalls per command, per stream.
     let writer_cost = 2.0 * SYSCALL_S;
-    // Daemon-side size/struct read syscalls per command.
+    // Daemon-side read syscalls per command, per stream reader.
     let reader_cost = 2.0 * SYSCALL_S;
     // Shared dispatcher: waiter-index admission + worker routing only.
     let route_cost = 0.15e-6;
-    // Per-device worker: the execution slice the dispatcher used to run
-    // inline (the remainder of the old 1 µs dispatch cost).
+    // Per-device worker execution slice.
     let exec_cost = 0.85e-6;
 
     let n_devices = n_devices.max(1);
+    let total_q = n_sessions * queues_per_session;
     let mut des = Des::new();
     let mut done = 0.0f64;
-    // Round-robin across queues (command i of every queue before command
-    // i+1 of any): the queues run concurrently, so the shared routing
-    // resource must see their arrivals interleaved — scheduling one
-    // queue's full batch at a time would fake a serialization the real
-    // dispatcher does not have.
-    let mut enqueue_t = vec![0.0f64; n_queues];
+    // Round-robin across every stream of every session (command i of all
+    // streams before command i+1 of any): concurrent UEs interleave at
+    // the shared dispatcher, and the model must see those arrivals
+    // interleaved.
+    let mut enqueue_t = vec![0.0f64; total_q];
     for _ in 0..cmds_per_queue {
-        for q in 0..n_queues {
-            let w = format!("writer{q}");
-            let r = format!("reader{q}");
-            let dev = format!("dev{}", q % n_devices);
-            let sent = des.schedule(&w, enqueue_t[q], writer_cost);
-            let rcvd = des.schedule(&r, sent, reader_cost);
-            let routed = des.schedule("dispatch", rcvd, route_cost);
-            let disp = des.schedule(&dev, routed, exec_cost);
-            enqueue_t[q] = sent;
-            done = done.max(disp);
+        for s in 0..n_sessions {
+            for q in 0..queues_per_session {
+                let idx = s * queues_per_session + q;
+                let w = format!("s{s}w{q}");
+                let r = format!("s{s}r{q}");
+                let dev = format!("dev{}", idx % n_devices);
+                let sent = des.schedule(&w, enqueue_t[idx], writer_cost);
+                let rcvd = des.schedule(&r, sent, reader_cost);
+                let routed = des.schedule("dispatch", rcvd, route_cost);
+                let disp = des.schedule(&dev, routed, exec_cost);
+                enqueue_t[idx] = sent;
+                done = done.max(disp);
+            }
         }
     }
-    (n_queues * cmds_per_queue) as f64 / done
+    (total_q * cmds_per_queue) as f64 / done
 }
 
 /// Per-command round-trip overhead (µs, loopback — no link terms) of the
@@ -363,6 +392,39 @@ mod tests {
         // pre-redesign model at the same queue count.
         let old_8q = queue_scaling_cmds_per_sec(8, 1000, true);
         assert!(fanned_8q > old_8q * 2.0, "{old_8q} vs {fanned_8q}");
+    }
+
+    #[test]
+    fn sessions_add_no_serialization_of_their_own() {
+        // N sessions x M queues must model exactly like N*M queues of
+        // one session: per-session state shares nothing, so only the
+        // stream count matters.
+        let four_by_two = session_scaling_cmds_per_sec(4, 2, 500, 8);
+        let one_by_eight = session_scaling_cmds_per_sec(1, 8, 500, 8);
+        let legacy_eight = queue_scaling_multi_device_cmds_per_sec(8, 500, 8);
+        assert!(
+            (four_by_two / one_by_eight - 1.0).abs() < 1e-9,
+            "{four_by_two} vs {one_by_eight}"
+        );
+        assert!(
+            (four_by_two / legacy_eight - 1.0).abs() < 1e-9,
+            "{four_by_two} vs {legacy_eight}"
+        );
+    }
+
+    #[test]
+    fn session_scaling_is_near_linear_until_the_dispatcher_caps() {
+        let one = session_scaling_cmds_per_sec(1, 2, 500, 2);
+        let four = session_scaling_cmds_per_sec(4, 2, 500, 8);
+        // Four UEs with their own devices: better than 80% of ideal.
+        assert!(four > one * 4.0 * 0.8, "{one} vs {four}");
+        // The shared routing slice (0.15 us/cmd) is the hard ceiling.
+        let many = session_scaling_cmds_per_sec(16, 2, 500, 32);
+        assert!(many < 1.0 / 0.15e-6, "{many} exceeds the dispatch ceiling");
+        assert!(many > four, "{four} vs {many}");
+        // Sessions crowded onto one device flatten against the worker.
+        let crowded = session_scaling_cmds_per_sec(4, 2, 500, 1);
+        assert!(crowded < four, "{crowded} vs {four}");
     }
 
     #[test]

@@ -183,3 +183,50 @@ fn saturated_device_stalls_only_its_own_streams_reader() {
     c_ev.wait().unwrap();
     eventually("gate drained", || gate.held() == 0);
 }
+
+#[test]
+fn flooding_session_chokes_at_its_own_share_while_other_session_is_admitted() {
+    // The multi-session fairness regression: the gate key is
+    // (session, stream), not the bare stream id. Session A's first queue
+    // stream and session B's first queue stream share the SAME
+    // client-assigned queue number (every UE numbers its queues from 1) —
+    // under the old keying A's flood would have consumed the share that
+    // B's stream needed on the same device.
+    let (d, p_a, latch) = blocker_daemon();
+    // A second, fully independent client session against the same daemon.
+    let p_b = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    assert_ne!(p_a.session_id(0), p_b.session_id(0));
+
+    // Session A floods the latch-blocked device 0 past its share.
+    let flood = STREAM_SHARE + 8;
+    let ctx_a = p_a.context();
+    let q_a = ctx_a.out_of_order_queue(0, 0);
+    let flood_evs: Vec<_> = (0..flood)
+        .map(|_| q_a.run("test.block", &[], &[]).unwrap())
+        .collect();
+    let gate = &d.state.device_gates[0];
+    eventually("session A choked at its share", || gate.held() == STREAM_SHARE);
+
+    // Session B's stream on the *same* device (and the same queue
+    // number) is still admitted: its share is its own.
+    let ctx_b = p_b.context();
+    let q_b = ctx_b.out_of_order_queue(0, 0);
+    let b_ev = q_b.run("test.block", &[], &[]).unwrap();
+    eventually("session B admitted past A's share", || {
+        gate.held() > STREAM_SHARE
+    });
+    assert!(gate.held() <= DEVICE_QUEUE_DEPTH);
+    // A is still choked at exactly its own share (B's slot is B's own),
+    // and B's fast device-1 traffic flows throughout.
+    assert!(!flood_evs[flood - 1].status().unwrap().is_terminal());
+    let q_b1 = ctx_b.out_of_order_queue(0, 1);
+    q_b1.run("test.noop", &[], &[]).unwrap().wait().unwrap();
+
+    // Release the device: both sessions' launches complete.
+    latch.open();
+    for ev in &flood_evs {
+        ev.wait().unwrap();
+    }
+    b_ev.wait().unwrap();
+    eventually("gate drained", || gate.held() == 0);
+}

@@ -21,8 +21,15 @@ fn session_ids_are_issued_and_random() {
     let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
     let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
     assert!(p.available(0));
-    let sess = d.state.session.lock().unwrap().clone();
-    assert_ne!(sess.id, [0u8; 16]);
+    let sid = p.session_id(0);
+    assert_ne!(sid, [0u8; 16]);
+    // The daemon's registry holds exactly this session.
+    assert_eq!(d.state.sessions.len(), 1);
+    assert!(d.state.sessions.get(&sid).is_some());
+    // A second client gets its own, distinct session.
+    let p2 = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    assert_ne!(p2.session_id(0), sid);
+    assert_eq!(d.state.sessions.len(), 2);
 }
 
 #[test]
@@ -71,7 +78,7 @@ fn reconnect_resumes_session_and_replays() {
         .unwrap()
         .wait()
         .unwrap();
-    let session_before = d.state.session.lock().unwrap().id;
+    let session_before = p.session_id(0);
 
     // Sever the connection mid-session (roaming / interference).
     d.kick_client();
@@ -94,8 +101,11 @@ fn reconnect_resumes_session_and_replays() {
 
     let out = q.read(buf).unwrap();
     assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 2);
-    // Same session resumed, not a fresh one.
-    assert_eq!(d.state.session.lock().unwrap().id, session_before);
+    // Same session resumed, not a fresh one — and the registry grew no
+    // phantom second entry out of the reconnect.
+    assert_eq!(p.session_id(0), session_before);
+    assert_eq!(d.state.sessions.len(), 1);
+    assert!(d.state.sessions.get(&session_before).is_some());
 }
 
 #[test]
@@ -171,6 +181,90 @@ fn reconnect_storm_leaves_link_stably_available() {
     expected += 1;
     let out = q.read(buf).unwrap();
     assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), expected);
+}
+
+#[test]
+fn two_session_storm_replays_once_and_leaves_neighbor_untouched() {
+    // Two UEs share the daemon. Session A is kicked repeatedly mid-flood
+    // (each reconnect dials from a fresh ephemeral port — the paper's
+    // roaming/new-IP case — presenting the same session id); session B
+    // hammers the same daemon throughout. A must replay from its backup
+    // ring exactly once per command (dedup cursor: the increment chain's
+    // final value equals the number of successfully enqueued commands —
+    // a lost replay would hang a wait, a double replay would overshoot);
+    // B must see no duplicate, lost, or failed completions, and must
+    // never even observe a disconnect.
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let pa = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let pb = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+    let sid_a = pa.session_id(0);
+    let sid_b = pb.session_id(0);
+    assert_ne!(sid_a, sid_b);
+
+    // Session B: a steady increment chain on its own thread. Every
+    // enqueue must succeed first try (B is never kicked) and every wait
+    // must complete.
+    const B_CHAIN: usize = 120;
+    let b_thread = std::thread::spawn(move || {
+        let ctx = pb.context();
+        let q = ctx.queue(0, 0);
+        let buf = ctx.create_buffer(4);
+        q.write(buf, &0i32.to_le_bytes()).unwrap();
+        for i in 0..B_CHAIN {
+            let ev = q
+                .run("increment_s32_1", &[buf], &[buf])
+                .unwrap_or_else(|e| panic!("B's enqueue {i} failed during A's storm: {e}"));
+            ev.wait().unwrap();
+        }
+        let out = q.read(buf).unwrap();
+        i32::from_le_bytes(out[..4].try_into().unwrap())
+    });
+
+    // Session A: flood, get kicked mid-flood, recover, repeat.
+    let ctx = pa.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &0i32.to_le_bytes()).unwrap();
+    let mut sent = 0i32;
+    let mut events = Vec::new();
+    for _ in 0..4 {
+        // Pipeline a burst without waiting, then sever A mid-flight.
+        for _ in 0..10 {
+            if let Ok(ev) = q.run("increment_s32_1", &[buf], &[buf]) {
+                events.push(ev);
+                sent += 1;
+            }
+        }
+        assert!(d.kick_session(&sid_a), "A's session must be live");
+        // Keep issuing until the driver has resumed the session.
+        let mut recovered = false;
+        for _ in 0..500 {
+            match q.run("increment_s32_1", &[buf], &[buf]) {
+                Ok(ev) => {
+                    events.push(ev);
+                    sent += 1;
+                    recovered = true;
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert!(recovered, "A never recovered from its kick");
+    }
+    // Every successfully enqueued command completes exactly once: the
+    // chain's final value is the enqueue count, no more (double replay),
+    // no less (lost replay), and no wait hangs.
+    for ev in &events {
+        ev.wait().unwrap();
+    }
+    let out = q.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), sent);
+    // A resumed the same session; the registry never grew extra entries.
+    assert_eq!(pa.session_id(0), sid_a);
+    assert_eq!(d.state.sessions.len(), 2);
+
+    // B's chain was untouched by A's storm.
+    assert_eq!(b_thread.join().unwrap(), B_CHAIN as i32);
 }
 
 #[test]

@@ -34,8 +34,11 @@ fn queues_attach_dedicated_streams() {
     q2.write(b, &2i32.to_le_bytes()).unwrap();
     q1.finish().unwrap();
     q2.finish().unwrap();
-    // Daemon side: the control stream plus one stream per used queue.
-    let n_streams = d.state.client_txs.lock().unwrap().len();
+    // Daemon side: one session holding the control stream plus one
+    // stream per used queue.
+    let sess = d.state.sessions.get(&p.session_id(0)).expect("session registered");
+    assert_eq!(d.state.sessions.len(), 1);
+    let n_streams = sess.client_txs.lock().unwrap().len();
     assert_eq!(n_streams, 3, "expected control + 2 queue streams");
 }
 
@@ -57,8 +60,9 @@ fn single_conn_mode_shares_the_control_stream() {
     q1.write(a, &1i32.to_le_bytes()).unwrap();
     let out = q2.read(a).unwrap();
     assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 1);
+    let sess = d.state.sessions.get(&p.session_id(0)).expect("session registered");
     assert_eq!(
-        d.state.client_txs.lock().unwrap().len(),
+        sess.client_txs.lock().unwrap().len(),
         1,
         "baseline mode must keep every queue on the control stream"
     );

@@ -1,0 +1,216 @@
+//! Multi-session daemon semantics over real loopback TCP: one daemon
+//! serving N independent client `Platform`s (the paper's MEC setting —
+//! many UEs share one edge server), each with its own daemon-side
+//! [`poclr::daemon::state::Session`].
+//!
+//! The isolation contract under test:
+//!
+//! * per-session command ordering holds while sessions interleave freely
+//!   in the shared dispatcher;
+//! * completions (and their payloads) never cross sessions — asserted by
+//!   session-unique payload tags;
+//! * `kick_session(A)` severs every stream of A while B's in-flight
+//!   commands complete untouched;
+//! * idle sessions are reaped after their TTL, active ones never.
+
+use std::time::Duration;
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+/// One daemon plus `n` independent client sessions against it.
+fn daemon_with_sessions(n: usize, warm: &[&str]) -> (Daemon, Vec<Platform>) {
+    let mut cfg = DaemonConfig::local(0, 1, manifest());
+    cfg.warm = warm.iter().map(|s| s.to_string()).collect();
+    let d = Daemon::spawn(cfg).unwrap();
+    let platforms = (0..n)
+        .map(|_| Platform::connect(&[d.addr()], ClientConfig::default()).unwrap())
+        .collect();
+    (d, platforms)
+}
+
+#[test]
+fn each_platform_gets_its_own_session() {
+    let (d, platforms) = daemon_with_sessions(4, &[]);
+    let ids: Vec<_> = platforms.iter().map(|p| p.session_id(0)).collect();
+    for (i, a) in ids.iter().enumerate() {
+        assert_ne!(*a, [0u8; 16]);
+        for b in &ids[i + 1..] {
+            assert_ne!(a, b, "two sessions share an id");
+        }
+    }
+    assert_eq!(d.state.sessions.len(), 4);
+    for id in &ids {
+        let sess = d.state.sessions.get(id).expect("registered");
+        assert!(sess.n_streams() >= 1, "control stream registered");
+    }
+}
+
+#[test]
+fn per_session_ordering_holds_under_interleaving() {
+    // Four sessions each drive an in-order increment chain concurrently.
+    // The chains interleave arbitrarily in the one dispatcher; each
+    // session's own ordering (and nothing else) must decide its result.
+    const N: usize = 4;
+    const CHAIN: usize = 30;
+    let (d, platforms) = daemon_with_sessions(N, &["increment_s32_1"]);
+    let handles: Vec<_> = platforms
+        .into_iter()
+        .map(|p| {
+            std::thread::spawn(move || {
+                let ctx = p.context();
+                let q = ctx.queue(0, 0);
+                let buf = ctx.create_buffer(4);
+                q.write(buf, &0i32.to_le_bytes()).unwrap();
+                for _ in 0..CHAIN {
+                    q.run("increment_s32_1", &[buf], &[buf]).unwrap();
+                }
+                let out = q.read(buf).unwrap();
+                i32::from_le_bytes(out[..4].try_into().unwrap())
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), CHAIN as i32);
+    }
+    assert_eq!(d.state.sessions.len(), N);
+}
+
+#[test]
+fn completions_carry_session_unique_payloads_and_never_cross() {
+    // Every session writes buffers tagged with its own index and reads
+    // them back concurrently. A completion (or its payload) delivered to
+    // the wrong session would surface as a foreign tag.
+    const N: usize = 4;
+    const ROUNDS: usize = 40;
+    let (_d, platforms) = daemon_with_sessions(N, &[]);
+    let handles: Vec<_> = platforms
+        .into_iter()
+        .enumerate()
+        .map(|(tag, p)| {
+            std::thread::spawn(move || {
+                let ctx = p.context();
+                let q = ctx.queue(0, 0);
+                for round in 0..ROUNDS {
+                    let buf = ctx.create_buffer(256);
+                    let pattern = vec![(tag as u8) ^ (round as u8).wrapping_mul(13); 256];
+                    q.write(buf, &pattern).unwrap();
+                    let got = q.read(buf).unwrap();
+                    assert_eq!(
+                        got, pattern,
+                        "session {tag} round {round} read a foreign payload"
+                    );
+                    ctx.release_buffer(buf).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn kick_severs_only_the_named_session() {
+    let (d, mut platforms) = daemon_with_sessions(2, &["increment_s32_1"]);
+    let pb = platforms.pop().unwrap();
+    let pa = platforms.pop().unwrap();
+    let sid_a = pa.session_id(0);
+    let sid_b = pb.session_id(0);
+
+    // B pipelines a burst of in-flight increments...
+    let ctx_b = pb.context();
+    let qb = ctx_b.queue(0, 0);
+    let buf_b = ctx_b.create_buffer(4);
+    qb.write(buf_b, &0i32.to_le_bytes()).unwrap();
+    let b_events: Vec<_> = (0..20)
+        .map(|_| qb.run("increment_s32_1", &[buf_b], &[buf_b]).unwrap())
+        .collect();
+
+    // ...and A is kicked while B's burst is in flight. Every stream of A
+    // dies; B's in-flight commands complete untouched.
+    let ctx_a = pa.context();
+    let qa = ctx_a.queue(0, 0);
+    let buf_a = ctx_a.create_buffer(4);
+    qa.write(buf_a, &7i32.to_le_bytes()).unwrap();
+    qa.finish().unwrap();
+    assert!(d.kick_session(&sid_a));
+
+    for ev in &b_events {
+        ev.wait().unwrap();
+    }
+    let out = qb.read(buf_b).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 20);
+    // B never even noticed: its link stayed available throughout.
+    assert!(pb.available(0));
+
+    // A's session state (buffers, cursors) survived the kick; the driver
+    // resumes the same session and its data is intact.
+    let mut recovered = false;
+    for _ in 0..500 {
+        match qa.run("increment_s32_1", &[buf_a], &[buf_a]) {
+            Ok(ev) => {
+                ev.wait().unwrap();
+                recovered = true;
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    assert!(recovered, "A never recovered from its kick");
+    let out = qa.read(buf_a).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 8);
+    assert_eq!(pa.session_id(0), sid_a);
+
+    // Kicking an unknown session is a clean no-op.
+    assert!(!d.kick_session(&[0xEEu8; 16]));
+    assert_eq!(d.state.sessions.len(), 2);
+    assert!(d.state.sessions.get(&sid_b).is_some());
+}
+
+#[test]
+fn idle_sessions_are_reaped_active_ones_kept() {
+    let (d, platforms) = daemon_with_sessions(3, &[]);
+    let keep = &platforms[0];
+    let keep_id = keep.session_id(0);
+    let drop_ids: Vec<_> = platforms[1..].iter().map(|p| p.session_id(0)).collect();
+    // Exercise the kept session so it has live streams.
+    let ctx = keep.context();
+    let q = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q.write(buf, &1i32.to_le_bytes()).unwrap();
+    q.finish().unwrap();
+
+    // Drop the other two platforms: their sockets close, their readers
+    // exit, their sessions go streamless.
+    let (_keep, rest) = {
+        let mut it = platforms.into_iter();
+        let first = it.next().unwrap();
+        (first, it.collect::<Vec<_>>())
+    };
+    drop(rest);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let streamless = drop_ids
+            .iter()
+            .all(|id| d.state.sessions.get(id).is_none_or(|s| s.n_streams() == 0));
+        if streamless {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "readers never exited");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // A zero TTL reaps exactly the streamless sessions; the active one
+    // stays and keeps working.
+    d.state.sessions.reap_idle(Duration::ZERO);
+    assert_eq!(d.state.sessions.len(), 1);
+    assert!(d.state.sessions.get(&keep_id).is_some());
+    let out = q.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 1);
+}

@@ -54,17 +54,18 @@ fn peer_broadcast_shares_one_payload_allocation() {
 #[test]
 fn completion_routing_shares_the_store_copy() {
     // ReadBuffer's reply payload is copied out of the buffer store once;
-    // routing it onto a client stream (including the control-stream
-    // fallback probe) must not duplicate it.
+    // routing it onto a session's client stream (including the
+    // control-stream fallback probe) must not duplicate it.
     let state = bare_state();
     state.ensure_buffer(7, 64, 0);
     assert!(state.write_buffer(7, 0, &[9u8; 64]));
     let payload = state.read_buffer(7, 0, 64).unwrap();
     assert_eq!(payload, vec![9u8; 64]);
 
+    let (sess, _) = state.sessions.attach([0u8; 16]).unwrap();
     let (tx, rx) = channel();
-    state.client_txs.lock().unwrap().insert(3, (1, tx));
-    state.send_to_client_on(
+    sess.client_txs.lock().unwrap().insert(3, (1, tx));
+    sess.send_on(
         3,
         Packet {
             msg: Msg::control(Body::Completion {

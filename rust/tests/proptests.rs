@@ -574,6 +574,254 @@ fn prop_dispatch_survives_malformed_command_streams() {
 }
 
 #[test]
+fn prop_session_registry_consistent_under_attach_interleavings() {
+    // Random interleavings of `Hello` (fresh, resumed, unknown id) and
+    // `AttachQueue` (known, unknown, all-zero id) with stream drops and
+    // replayable commands, against a live daemon over raw sockets. The
+    // acceptor must never die, every handshake must yield a coherent
+    // `Welcome` (fresh/adopted ids echo the rules, resumed queues echo
+    // their replay cursor, unknown-id attaches get a fresh replay
+    // state), and the registry must stay consistent: every live stream
+    // is registered in exactly one live session.
+    use std::collections::HashMap;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    use poclr::daemon::{Daemon, DaemonConfig};
+    use poclr::proto::{read_packet, write_packet, Body, Msg, SessionId, ROLE_CLIENT};
+    use poclr::runtime::Manifest;
+
+    fn handshake(addr: &str, body: Body) -> (TcpStream, SessionId, u64) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write_packet(&mut s, &Msg::control(body), &[]).unwrap();
+        let pkt = read_packet(&mut s).expect("acceptor died mid-handshake");
+        let Body::Welcome {
+            session,
+            last_seen_cmd,
+            ..
+        } = pkt.msg.body
+        else {
+            panic!("expected Welcome, got {:?}", pkt.msg.body);
+        };
+        (s, session, last_seen_cmd)
+    }
+
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let addr = d.addr();
+    let mut rng = Rng::new(0x5E55_1045);
+    // Live sockets by (session, queue); queue ids are unique per attach
+    // (and control sockets replaced on resume), so live registrations
+    // and live sockets must agree one-to-one once readers settle.
+    let mut live: HashMap<(SessionId, u32), TcpStream> = HashMap::new();
+    let mut known: Vec<SessionId> = Vec::new();
+    // Highest cmd_id sent per (session, queue) — the cursor Welcome must
+    // echo on re-attach.
+    let mut sent: HashMap<(SessionId, u32), u64> = HashMap::new();
+    let mut next_queue = 1u32;
+    // Event ids are client-assigned and must be unique across sessions
+    // (the cluster-wide event-table contract); one counter serves all.
+    let mut next_event = 1_000_000u64;
+    for _ in 0..80 {
+        match rng.gen_range(0, 6) {
+            // Fresh Hello: mints a new nonzero id.
+            0 => {
+                let (s, sid, last) = handshake(
+                    &addr,
+                    Body::Hello {
+                        session: [0u8; 16],
+                        role: ROLE_CLIENT,
+                        peer_id: 0,
+                    },
+                );
+                assert_ne!(sid, [0u8; 16]);
+                assert_eq!(last, 0);
+                assert!(!known.contains(&sid), "fresh id collided");
+                known.push(sid);
+                live.insert((sid, 0), s);
+            }
+            // Resumed Hello: echoes the id and queue 0's cursor.
+            1 if !known.is_empty() => {
+                let sid = known[rng.gen_range(0, known.len() as u64) as usize];
+                live.remove(&(sid, 0)); // retire any old control socket
+                let (s, got, last) = handshake(
+                    &addr,
+                    Body::Hello {
+                        session: sid,
+                        role: ROLE_CLIENT,
+                        peer_id: 0,
+                    },
+                );
+                assert_eq!(got, sid);
+                assert_eq!(last, sent.get(&(sid, 0)).copied().unwrap_or(0));
+                live.insert((sid, 0), s);
+            }
+            // Unknown-id Hello: adopted with fresh replay state.
+            2 => {
+                let mut sid = [0u8; 16];
+                rng.fill_bytes(&mut sid);
+                sid[0] |= 1; // never all-zero
+                let (s, got, last) = handshake(
+                    &addr,
+                    Body::Hello {
+                        session: sid,
+                        role: ROLE_CLIENT,
+                        peer_id: 0,
+                    },
+                );
+                assert_eq!(got, sid, "unknown id must be adopted");
+                assert_eq!(last, 0, "adopted session must start fresh");
+                known.push(sid);
+                live.insert((sid, 0), s);
+            }
+            // AttachQueue under a known (or unknown) session id.
+            3 => {
+                let (sid, expect_known) = if !known.is_empty() && rng.next_u32() % 2 == 0 {
+                    (known[rng.gen_range(0, known.len() as u64) as usize], true)
+                } else {
+                    let mut sid = [0u8; 16];
+                    rng.fill_bytes(&mut sid);
+                    sid[0] |= 1;
+                    (sid, false)
+                };
+                let queue = next_queue;
+                next_queue += 1;
+                let (s, got, last) = handshake(&addr, Body::AttachQueue { session: sid, queue });
+                assert_eq!(got, sid);
+                assert_eq!(last, 0, "fresh queue stream must start at cursor 0");
+                if !expect_known {
+                    known.push(sid);
+                }
+                live.insert((sid, queue), s);
+            }
+            // Send replayable commands on a live stream, then verify the
+            // cursor survives a drop + re-attach of the same queue.
+            4 if !live.is_empty() => {
+                let key = *live
+                    .keys()
+                    .nth(rng.gen_range(0, live.len() as u64) as usize)
+                    .unwrap();
+                let (sid, queue) = key;
+                if queue == 0 {
+                    continue; // control streams re-attach via Hello (case 1)
+                }
+                let base = sent.get(&key).copied().unwrap_or(0);
+                let n = rng.gen_range(1, 4);
+                {
+                    let s = live.get_mut(&key).unwrap();
+                    for i in 1..=n {
+                        next_event += 1;
+                        let msg = Msg {
+                            cmd_id: base + i,
+                            queue,
+                            device: 0,
+                            // Event ids let us wait for the completions
+                            // below, proving the cursor advanced before
+                            // the socket drops.
+                            event: next_event,
+                            wait: Vec::new(),
+                            body: Body::Barrier,
+                        };
+                        write_packet(s, &msg, &[]).unwrap();
+                    }
+                    // Consume the n completions: the daemon has fully
+                    // processed (and cursor-noted) every command.
+                    let mut done = 0;
+                    while done < n {
+                        let pkt = read_packet(s).expect("stream died mid-chain");
+                        if matches!(pkt.msg.body, Body::Completion { .. }) {
+                            done += 1;
+                        }
+                    }
+                }
+                sent.insert(key, base + n);
+                // Drop and re-attach: Welcome must echo the cursor.
+                live.remove(&key);
+                let (s, got, last) =
+                    handshake(&addr, Body::AttachQueue { session: sid, queue });
+                assert_eq!(got, sid);
+                assert_eq!(last, base + n, "replay cursor lost across re-attach");
+                live.insert(key, s);
+            }
+            // Drop a random live stream cold.
+            _ if !live.is_empty() => {
+                let key = *live
+                    .keys()
+                    .nth(rng.gen_range(0, live.len() as u64) as usize)
+                    .unwrap();
+                live.remove(&key);
+            }
+            _ => {}
+        }
+    }
+
+    // Registry consistency once the dust settles: every live socket is
+    // registered in exactly its own session (ids self-consistent, stream
+    // counts match one-to-one), and dead streams are fully evicted.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let total: usize = d
+            .state
+            .sessions
+            .ids()
+            .iter()
+            .filter_map(|id| d.state.sessions.get(id))
+            .map(|s| {
+                assert_eq!(
+                    d.state.sessions.get(&s.id).unwrap().id,
+                    s.id,
+                    "registry key and session id diverged"
+                );
+                s.n_streams()
+            })
+            .sum();
+        if total == live.len() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "registered streams ({total}) never converged to live sockets ({})",
+            live.len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for (sid, queue) in live.keys() {
+        let sess = d.state.sessions.get(sid).expect("live stream's session reaped");
+        assert!(
+            sess.client_streams.lock().unwrap().contains_key(queue),
+            "live stream not registered in its session"
+        );
+    }
+
+    // And the daemon still serves: a fresh session's barrier completes.
+    let (mut s, _, _) = handshake(
+        &addr,
+        Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        },
+    );
+    let probe = Msg {
+        cmd_id: 1,
+        queue: 0,
+        device: 0,
+        event: 424242,
+        wait: Vec::new(),
+        body: Body::Barrier,
+    };
+    write_packet(&mut s, &probe, &[]).unwrap();
+    loop {
+        let pkt = read_packet(&mut s).expect("daemon died after the storm");
+        if let Body::Completion { event, status, .. } = pkt.msg.body {
+            assert_eq!(event, 424242);
+            assert_eq!(status, poclr::proto::EventStatus::Complete.to_i8());
+            break;
+        }
+    }
+}
+
+#[test]
 fn prop_des_schedule_never_overlaps_on_one_resource() {
     use poclr::sim::des::Des;
     let mut rng = Rng::new(777);
