@@ -16,7 +16,13 @@
 //!   the paper's many-UEs-per-server MEC setting) x 2 queues per
 //!   session against ONE daemon, isolating the multi-session registry:
 //!   per-session state shares nothing, so N sessions x M queues should
-//!   track the same stream count inside one session.
+//!   track the same stream count inside one session;
+//! * **big sessions** — 64/256/1000 concurrent sessions (raw sockets,
+//!   driven from a small worker pool so the *client* doesn't go
+//!   thread-per-stream either) against one daemon, exercising the
+//!   readiness core: aggregate throughput must hold and the daemon's
+//!   thread count must stay O(shards + devices) — the number is
+//!   captured alongside each row.
 //!
 //! Writes `BENCH_queue_scaling.json` at the repo root so the perf
 //! trajectory is tracked in-tree. `--tiny` (or QUEUE_SCALING_TINY=1) runs
@@ -129,6 +135,101 @@ fn measure_sessions(
     )
 }
 
+/// `n_sessions` concurrent sessions (one control stream each) against
+/// one daemon, each pumping `cmds_per_session` Barrier commands. Raw
+/// sockets spread over a fixed pool of driver threads: with 1000
+/// sessions a `Platform` per session would drown the *client* machine
+/// in threads and measure that instead of the daemon. Returns
+/// (aggregate cmds/sec, daemon thread count while serving).
+fn measure_ue_sessions(
+    manifest: &Manifest,
+    n_sessions: usize,
+    cmds_per_session: usize,
+) -> (f64, usize) {
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    use poclr::proto::{read_packet, write_packet, Body, Msg, ROLE_CLIENT};
+
+    let mut cfg = DaemonConfig::local(0, 1, manifest.clone());
+    cfg.max_sessions = n_sessions + 8;
+    let daemon = Daemon::spawn(cfg).unwrap();
+    let addr = daemon.addr();
+
+    let n_workers = n_sessions.min(16);
+    let gate = Arc::new(Barrier::new(n_workers + 1));
+    let mut handles = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let addr = addr.clone();
+        let gate = Arc::clone(&gate);
+        handles.push(std::thread::spawn(move || {
+            // Sessions idx with idx % n_workers == w belong to this driver.
+            let my: Vec<usize> = (0..n_sessions).filter(|i| i % n_workers == w).collect();
+            let mut socks: Vec<TcpStream> = my
+                .iter()
+                .map(|_| {
+                    let mut s = TcpStream::connect(&addr).unwrap();
+                    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                    write_packet(
+                        &mut s,
+                        &Msg::control(Body::Hello {
+                            session: [0u8; 16],
+                            role: ROLE_CLIENT,
+                            peer_id: 0,
+                        }),
+                        &[],
+                    )
+                    .unwrap();
+                    let pkt = read_packet(&mut s).expect("Welcome");
+                    assert!(matches!(pkt.msg.body, Body::Welcome { .. }));
+                    s
+                })
+                .collect();
+            gate.wait();
+            // Pump all commands (the daemon never blocks on replies —
+            // completions park in its outboxes and our recv buffers),
+            // then drain every stream's completions.
+            for c in 0..cmds_per_session {
+                for (k, s) in socks.iter_mut().enumerate() {
+                    let msg = Msg {
+                        cmd_id: 0,
+                        queue: 0,
+                        device: 0,
+                        // Unique across all sessions (cluster-wide table).
+                        event: 1 + (my[k] as u64) * 1_000_000 + c as u64,
+                        wait: Vec::new(),
+                        body: Body::Barrier,
+                    };
+                    write_packet(s, &msg, &[]).unwrap();
+                }
+            }
+            for s in socks.iter_mut() {
+                let mut done = 0;
+                while done < cmds_per_session {
+                    let pkt = read_packet(s).expect("stream died awaiting completion");
+                    if matches!(pkt.msg.body, Body::Completion { .. }) {
+                        done += 1;
+                    }
+                }
+            }
+        }));
+    }
+
+    gate.wait();
+    let t0 = Instant::now();
+    // Sample the inventory mid-flight: it must already be final (the
+    // readiness core spawns nothing per connection).
+    let threads = daemon.state.n_threads();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    (
+        (n_sessions * cmds_per_session) as f64 / elapsed,
+        threads,
+    )
+}
+
 fn main() {
     let tiny = std::env::args().any(|a| a == "--tiny")
         || std::env::var("QUEUE_SCALING_TINY").is_ok();
@@ -193,6 +294,29 @@ fn main() {
     }
     sess_series.print();
 
+    // Big-sessions sweep: the readiness core serving 64..1000 concurrent
+    // sessions from its fixed shard pool. Throughput must hold and the
+    // daemon thread count must not move with the session count.
+    let big_cmds = if tiny { 20 } else { 200 };
+    let mut big_series = report::Series::new("N sessions x 1 stream", "cmd/s");
+    let mut big_rows = Vec::new();
+    for n_sessions in [64usize, 256, 1000] {
+        let (cps, threads) = measure_ue_sessions(&manifest, n_sessions, big_cmds);
+        big_series.push(format!("{n_sessions} sessions"), cps);
+        println!(
+            "  {n_sessions} sessions x {big_cmds} cmds: {cps:>10.0} cmd/s, \
+             {threads} daemon threads"
+        );
+        big_rows.push((n_sessions, cps, threads));
+    }
+    big_series.print();
+    let flat = big_rows.iter().map(|r| r.2).collect::<std::collections::HashSet<_>>();
+    assert_eq!(
+        flat.len(),
+        1,
+        "daemon thread count moved with session count: {big_rows:?}"
+    );
+
     // The DES model of the same sweeps, for calibration drift tracking.
     let modeled: Vec<(usize, f64, f64, f64)> = [1usize, 2, 4, 8]
         .iter()
@@ -202,6 +326,33 @@ fn main() {
                 scenarios::queue_scaling_cmds_per_sec(qn, 1000, false),
                 scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, 1),
                 scenarios::queue_scaling_multi_device_cmds_per_sec(qn, 1000, qn),
+            )
+        })
+        .collect();
+    // Modeled counterparts of the big-sessions sweep plus MEC-scale UE
+    // counts no loopback bench can attach (10k/100k UEs): the readiness
+    // core's DES with 4 shards and 4 devices, and the thread inventory
+    // both transports would run.
+    let big_modeled: Vec<(usize, f64, usize, usize)> = [64usize, 256, 1000]
+        .iter()
+        .map(|&n| {
+            (
+                n,
+                scenarios::ue_scaling_cmds_per_sec(n, 200, 4, 4),
+                scenarios::daemon_thread_count(n, 4, 4, false),
+                scenarios::daemon_thread_count(n, 4, 4, true),
+            )
+        })
+        .collect();
+    let ues_modeled: Vec<(usize, usize, f64, usize, usize)> = [(10_000usize, 5usize), (100_000, 2)]
+        .iter()
+        .map(|&(n, c)| {
+            (
+                n,
+                c,
+                scenarios::ue_scaling_cmds_per_sec(n, c, 4, 4),
+                scenarios::daemon_thread_count(n, 4, 4, false),
+                scenarios::daemon_thread_count(n, 4, 4, true),
             )
         })
         .collect();
@@ -251,6 +402,15 @@ fn main() {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str("  \"big_sessions\": [\n");
+    for (i, (n, cps, threads)) in big_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sessions\": {n}, \"cmds_per_session\": {big_cmds}, \
+             \"cmds_per_sec\": {cps:.0}, \"daemon_threads\": {threads}}}{}\n",
+            if i + 1 < big_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"modeled\": [\n");
     for (i, (qn, s, m, f)) in modeled.iter().enumerate() {
         json.push_str(&format!(
@@ -268,6 +428,26 @@ fn main() {
              \"cmds_per_sec\": {m:.0}, \
              \"same_streams_one_session_cmds_per_sec\": {merged:.0}}}{}\n",
             if i + 1 < sess_modeled.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"big_sessions_modeled\": [\n");
+    for (i, (n, cps, threads, tps)) in big_modeled.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"sessions\": {n}, \"cmds_per_session\": 200, \
+             \"cmds_per_sec\": {cps:.0}, \"daemon_threads\": {threads}, \
+             \"thread_per_stream_threads\": {tps}}}{}\n",
+            if i + 1 < big_modeled.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"ues_modeled\": [\n");
+    for (i, (n, c, cps, threads, tps)) in ues_modeled.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ues\": {n}, \"cmds_per_ue\": {c}, \
+             \"cmds_per_sec\": {cps:.0}, \"daemon_threads\": {threads}, \
+             \"thread_per_stream_threads\": {tps}}}{}\n",
+            if i + 1 < ues_modeled.len() { "," } else { "" }
         ));
     }
     json.push_str("  ]\n}\n");

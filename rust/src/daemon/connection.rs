@@ -1,408 +1,897 @@
-//! Daemon socket handling: the accept loop plus one reader thread and one
-//! writer thread per connection (paper §4.2).
+//! Daemon socket handling: per-connection state machines driven by the
+//! sharded event loops ([`super::shard`]) — the readiness-based
+//! replacement for the thread-per-stream reader/writer pairs.
 //!
-//! * Client connections begin with `Hello{role=CLIENT}`; the daemon
-//!   resolves the presented id in its session *registry*
-//!   ([`crate::daemon::state::Sessions`] — many UEs share one daemon) and
-//!   replies `Welcome{session, last_seen_cmd}` (all-zero id mints a fresh
-//!   session, a known id resumes it, an unknown id is adopted with fresh
-//!   replay state — paper §4.3). This socket is the session's *control
-//!   stream* (stream 0).
-//! * `AttachQueue{session, queue}` attaches one more socket pair to the
-//!   presented session, carrying exactly the commands of command queue
-//!   `queue` — the paper's "each command queue has its own writer/reader
-//!   thread pair". All of a session's queue streams funnel into the one
-//!   dispatcher; each has its own replay cursor and its own completion
-//!   writer, registered *in its session*.
-//! * Peer connections begin with `Hello{role=PEER, peer_id}`; both ends
-//!   register reader/writer threads for the mesh.
+//! The accept loop (one thread, spawned by [`super::Daemon`]) only
+//! accepts and assigns: each socket goes round-robin to an I/O shard,
+//! which owns its [`Conn`] for life. Roles resolve exactly as before:
 //!
-//! Writer threads drain an mpsc channel into a batch, pace the emulated
-//! link once per coalesced burst, and submit the whole burst as one
-//! vectored write ([`crate::proto::frame::write_packets_paced`]) —
-//! headers encode into a reused scratch, payloads are referenced in
-//! place. Reader threads reuse a per-connection scratch for command
-//! structs; payloads arrive as shared [`crate::util::Bytes`].
+//! * `Hello{role=CLIENT}` — the session control stream (stream 0): the
+//!   presented id resolves in the session registry (fresh / resumed /
+//!   adopted — paper §4.3) and the daemon replies
+//!   `Welcome{session, last_seen_cmd}`.
+//! * `AttachQueue{session, queue}` — one more socket of the presented
+//!   session, carrying exactly command queue `queue`'s commands, with
+//!   its own replay cursor and completion outbox.
+//! * `Hello{role=PEER}` — a server-mesh connection.
+//!
+//! A connection that never completes its handshake is closed when the
+//! daemon's handshake deadline passes — a silent socket can no longer
+//! pin resources forever (previously it parked an accept-spawned thread
+//! in a blocking read indefinitely).
+//!
+//! Inbound bytes scatter-read ([`crate::net::poll::readv`]) into a
+//! per-connection [`RecvRing`] and decode through the incremental
+//! [`FrameDecoder`]; bulk payloads past [`DIRECT_READ_MIN`] read
+//! straight into the packet's own allocation. Outbound packets queue in
+//! the connection's [`Outbox`] (owned by the routing state, exactly
+//! where the old mpsc senders lived) and drain on the shard as coalesced
+//! vectored writes with the same link pacing the writer threads applied
+//! — on-wire bytes are byte-for-byte identical to the threaded model.
+//!
+//! Backpressure changed *mechanism*, not policy: where a reader thread
+//! used to block in its device-gate admission loop, a [`Conn`] now
+//! *pauses* — it stashes the inadmissible command, drops read interest
+//! (TCP flow control pushes back to the client exactly as before), and
+//! resumes via the gate's waiter callback or the retry timer. Shutdown
+//! and stream-supersession exits of the old loop map to the same checks
+//! in [`Conn::retry_gate`].
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
+use crate::net::poll::{self, PollEvent};
 use crate::net::LinkProfile;
+use crate::proto::frame::{FrameDecoder, RecvRing, MAX_COALESCE, RECV_RING_BYTES};
 use crate::proto::wire::W;
-use crate::proto::{
-    frame, read_packet, read_packet_with, write_packet, Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER,
-};
+use crate::proto::{Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
 
 use super::dispatch::Work;
-use super::state::{DaemonState, Session};
+use super::shard::{IoCtx, Seed, ShardMsg, ShardPool, TimerKind};
+use super::state::{Outbox, Session, StreamKey};
 
-/// Accept connections until shutdown.
-pub fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, work_tx: Sender<Work>) {
+/// Payload remainder beyond which the reader bypasses the ring and
+/// reads straight into the packet's allocation (no double copy).
+pub const DIRECT_READ_MIN: usize = 4096;
+
+/// Socket refills one readiness dispatch performs before yielding to
+/// the shard's other connections. Gates *refills only*: every frame
+/// already buffered in the ring is always fully decoded (buffered bytes
+/// produce no further readiness events), and level-triggered polling
+/// re-reports the socket if data remains.
+const REFILL_BUDGET: usize = 16;
+
+/// Gate re-probe cadence while paused — the safety net under the
+/// waiter-callback fast path, and the poll keeping the shutdown /
+/// supersession exits live (the old admission loop's 50 ms wait).
+const GATE_RETRY: Duration = Duration::from_millis(50);
+
+/// Pacing delays at least this long park on a [`TimerKind::Pace`] timer;
+/// shorter ones spin inline ([`crate::net::shaper::spin_sleep`]) because
+/// the poller's millisecond granularity would swamp them.
+const PACE_TIMER_MIN: Duration = Duration::from_millis(2);
+
+/// Accept connections until shutdown, assigning each to an I/O shard.
+/// No per-connection spawns: the pool's threads do everything else.
+pub fn accept_loop(
+    listener: TcpListener,
+    state: Arc<super::state::DaemonState>,
+    pool: Arc<ShardPool>,
+) {
     for stream in listener.incoming() {
         if state.shutdown.load(Ordering::SeqCst) {
             break;
         }
         let Ok(stream) = stream else { continue };
-        let state = Arc::clone(&state);
-        let work_tx = work_tx.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle_new_connection(stream, state, work_tx) {
-                eprintln!("[pocld] connection setup failed: {e:#}");
+        crate::net::tcp::tune(&stream).ok();
+        pool.assign(stream);
+    }
+}
+
+/// What a connection is, resolved by its handshake packet.
+enum Role {
+    /// Awaiting `Hello`/`AttachQueue` under the handshake deadline.
+    Handshake,
+    /// One client stream (queue 0 = the session control stream).
+    Client {
+        sess: Arc<Session>,
+        queue: u32,
+        instance: u64,
+    },
+    /// A server-mesh peer connection.
+    Peer { peer_id: u32 },
+}
+
+/// A decoded command that could not take a device-gate slot: reading is
+/// suspended until capacity frees (the readiness-core analogue of a
+/// reader thread parked in `enter_or_wait`).
+struct PausedCmd {
+    pkt: Packet,
+    dev: usize,
+    key: StreamKey,
+    /// Whether a gate waiter callback is currently registered for this
+    /// pause. Consumed by [`ShardMsg::Unpause`]; re-registered on a
+    /// failed re-probe so a wedged gate holds at most one waiter per
+    /// paused connection.
+    waiter_armed: bool,
+}
+
+enum WriteOutcome {
+    Done,
+    Blocked,
+    Dead,
+}
+
+/// One connection's full state, owned exclusively by its shard. Every
+/// public entry point returns whether the connection is still alive;
+/// `false` means it closed itself (deregistered, outbox closed,
+/// registrations evicted) and must be dropped from the shard's map.
+pub struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    token: u64,
+    link: LinkProfile,
+    ring: RecvRing,
+    dec: FrameDecoder,
+    /// Outbound queue, shared with the routing state
+    /// (`Session::client_txs` / `DaemonState::peer_txs`). `None` until
+    /// the handshake resolves a role.
+    outbox: Option<Arc<Outbox>>,
+    /// The burst currently being written (headers pre-encoded in
+    /// `wire`/`bounds`, `burst_written` bytes already on the wire).
+    burst: Vec<Packet>,
+    bounds: Vec<(usize, usize)>,
+    wire: W,
+    burst_written: usize,
+    /// Link-pacing deadline: the encoded burst must not reach the wire
+    /// before this instant.
+    pace_until: Option<Instant>,
+    want_read: bool,
+    want_write: bool,
+    /// The peer hung up while we were paused; the socket is already out
+    /// of the poller (a level-triggered hangup would spin) and the
+    /// connection closes right after its paused command is forwarded.
+    hangup: bool,
+    paused: Option<PausedCmd>,
+    role: Role,
+    closed: bool,
+}
+
+impl Conn {
+    /// Adopt a socket onto its shard: nonblocking, registered for read
+    /// readiness, handshake deadline armed for incoming sockets. `None`
+    /// drops the socket (setup failed).
+    pub fn adopt(stream: TcpStream, token: u64, seed: Seed, ctx: &mut IoCtx) -> Option<Conn> {
+        if stream.set_nonblocking(true).is_err() {
+            return None;
+        }
+        let fd = poll::raw_fd(&stream);
+        let (role, outbox, link) = match seed {
+            Seed::Incoming => (Role::Handshake, None, ctx.state.client_link),
+            Seed::Peer { peer_id, outbox } => {
+                (Role::Peer { peer_id }, Some(outbox), ctx.state.peer_link)
             }
-        });
-    }
-}
-
-fn handle_new_connection(
-    stream: TcpStream,
-    state: Arc<DaemonState>,
-    work_tx: Sender<Work>,
-) -> Result<()> {
-    crate::net::tcp::tune(&stream).ok();
-    let mut rd = stream.try_clone().context("clone stream")?;
-    let first = read_packet(&mut rd).context("reading handshake")?;
-    match first.msg.body {
-        Body::Hello {
-            session,
-            role: ROLE_CLIENT,
-            ..
-        } => handle_client_conn(stream, session, state, work_tx),
-        Body::Hello {
-            role: ROLE_PEER,
-            peer_id,
-            ..
-        } => {
-            start_peer_io(stream, peer_id, Arc::clone(&state), work_tx)?;
-            // Advertise our RDMA shadow region to the dialing peer (the
-            // dialer does the same from `Daemon::connect_peer`).
-            if let Some(rdma) = &state.rdma {
-                let (rkey, size) = rdma.local_advert();
-                state.send_to_peer(
-                    peer_id,
-                    Packet::bare(Msg::control(Body::RdmaAdvertise {
-                        rkey,
-                        shadow_size: size,
-                    })),
-                );
+        };
+        if ctx.poller.add(fd, token, true, false).is_err() {
+            // Registration failed: undo the peer pre-registration so
+            // `send_to_peer` does not feed a connection that never was.
+            if let (Role::Peer { peer_id }, Some(ob)) = (&role, &outbox) {
+                ob.close();
+                let mut txs = ctx.state.peer_txs.lock().unwrap();
+                if txs.get(peer_id).is_some_and(|t| Arc::ptr_eq(t, ob)) {
+                    txs.remove(peer_id);
+                }
             }
-            Ok(())
+            return None;
         }
-        Body::AttachQueue { session, queue } => {
-            handle_queue_conn(stream, session, queue, state, work_tx)
+        if matches!(role, Role::Handshake) {
+            ctx.arm_timer(
+                token,
+                TimerKind::Handshake,
+                Instant::now() + ctx.state.handshake_timeout,
+            );
         }
-        other => bail!("expected Hello/AttachQueue, got {other:?}"),
+        Some(Conn {
+            stream,
+            fd,
+            token,
+            link,
+            ring: RecvRing::new(RECV_RING_BYTES),
+            dec: FrameDecoder::new(),
+            outbox,
+            burst: Vec::new(),
+            bounds: Vec::new(),
+            wire: W::with_capacity(256),
+            burst_written: 0,
+            pace_until: None,
+            want_read: true,
+            want_write: false,
+            hangup: false,
+            paused: None,
+            role,
+            closed: false,
+        })
     }
-}
 
-/// Session control stream (stream 0): resolves the presented id in the
-/// session registry (fresh / resumed / adopted), then runs the shared
-/// client-stream loop.
-fn handle_client_conn(
-    stream: TcpStream,
-    presented: [u8; 16],
-    state: Arc<DaemonState>,
-    work_tx: Sender<Work>,
-) -> Result<()> {
-    let Some((sess, _resumed)) = state.sessions.attach(presented) else {
-        bail!("session registry full ({} live sessions)", state.sessions.len());
-    };
-    run_client_stream(stream, 0, sess, state, work_tx)
-}
-
-/// Queue-scoped stream: attaches to the presented session. An unknown
-/// session id is accepted (the daemon may have restarted or reaped the
-/// session; the client replays its backup from scratch) and *adopted*,
-/// so every stream of that client still converges on one registry entry
-/// with fresh replay state.
-fn handle_queue_conn(
-    stream: TcpStream,
-    presented: [u8; 16],
-    queue: u32,
-    state: Arc<DaemonState>,
-    work_tx: Sender<Work>,
-) -> Result<()> {
-    if queue == 0 {
-        bail!("AttachQueue for stream 0 (the control stream attaches via Hello)");
-    }
-    if presented == [0u8; 16] {
-        // A zero id is only meaningful on Hello (mint-a-fresh-session);
-        // accepting it here would mint a phantom session with no control
-        // stream that lingers until TTL reap.
-        bail!("AttachQueue with a zero session id (sessions are issued by Hello)");
-    }
-    let Some((sess, _resumed)) = state.sessions.attach(presented) else {
-        bail!("session registry full ({} live sessions)", state.sessions.len());
-    };
-    run_client_stream(stream, queue, sess, state, work_tx)
-}
-
-/// Shared client-stream machinery: Welcome reply, writer registration in
-/// the stream's session, reader loop with per-stream replay dedup. The
-/// calling thread becomes the reader.
-fn run_client_stream(
-    stream: TcpStream,
-    queue: u32,
-    sess: Arc<Session>,
-    state: Arc<DaemonState>,
-    work_tx: Sender<Work>,
-) -> Result<()> {
-    sess.touch();
-    let welcome = Msg::control(Body::Welcome {
-        session: sess.id,
-        server_id: state.server_id,
-        n_devices: state.devices.len() as u32,
-        last_seen_cmd: sess.last_seen(queue),
-    });
-    let mut ws = stream.try_clone()?;
-    write_packet(&mut ws, &welcome, &[])?;
-    // The instance id ties both registrations (socket handle + writer
-    // channel) to this physical connection, so a stale stream's cleanup
-    // can never evict a reattached one.
-    let instance = crate::util::fresh_id();
-    sess.client_streams
-        .lock()
-        .unwrap()
-        .insert(queue, (instance, stream.try_clone()?));
-
-    // Writer thread for completions (and read-back payloads).
-    let (tx, rx) = channel::<Packet>();
-    {
-        let mut txs = sess.client_txs.lock().unwrap();
-        // Flush this session's completions that raced a disconnection
-        // window — any of its live streams will do, the client routes by
-        // event id (another session's backlog is never touched).
-        for pkt in sess.undelivered.lock().unwrap().drain() {
-            tx.send(pkt).ok();
+    /// Dispatch one readiness event.
+    pub fn handle_event(&mut self, ctx: &mut IoCtx, ev: PollEvent) -> bool {
+        if ev.readable || (ev.hangup && self.paused.is_none()) {
+            // A hangup with no pause still goes through the read path:
+            // buffered data drains normally and the read's EOF closes.
+            if !self.on_readable(ctx) {
+                return false;
+            }
         }
-        txs.insert(queue, (instance, tx));
+        if ev.hangup && self.paused.is_some() {
+            // Cannot consume the socket while paused; remember the death
+            // and silence the poller. The paused command is still
+            // forwarded on unpause (its replay cursor already advanced,
+            // so no replayed copy will ever be admitted), then the
+            // connection closes.
+            self.hangup = true;
+            ctx.poller.remove(self.fd).ok();
+            return true;
+        }
+        if ev.writable && !self.flush(ctx) {
+            return false;
+        }
+        true
     }
-    spawn_writer(
-        stream.try_clone()?,
-        rx,
-        state.client_link,
-        format!("pocld{}-cw{}", state.server_id, queue),
-    );
 
-    // Reader loop (this thread becomes the reader). Command structs
-    // decode from a reused scratch; payloads arrive as fresh shared
-    // `Bytes` that flow to the dispatcher and store uncopied.
-    let mut rd = stream;
-    let mut scratch = Vec::new();
-    loop {
-        match read_packet_with(&mut rd, &mut scratch) {
-            Ok(pkt) => {
-                // Replay dedup after reconnect ("the server simply ignores
-                // commands it has already processed"), per-stream cursor
-                // owned by this stream's session — check-and-advance is
-                // one atomic step, so a superseded reader racing its
-                // reconnected replacement can never both admit one
-                // command. Idempotent reads are exempt — re-executing
-                // them regenerates the lost payload.
-                sess.touch();
-                let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
-                let dup = sess.check_and_note(queue, pkt.msg.cmd_id) && !idempotent;
-                if dup {
-                    // If the duplicate already completed, the client lost
-                    // the completion in the disconnect — resend it on this
-                    // stream.
-                    if pkt.msg.event != 0 {
-                        if let Some(st) = state.events.status(pkt.msg.event) {
-                            if st.is_terminal() {
-                                let ts = state
-                                    .events
-                                    .timestamps(pkt.msg.event)
-                                    .unwrap_or_default();
-                                sess.send_on(
-                                    queue,
-                                    Packet::bare(Msg::control(Body::Completion {
-                                        event: pkt.msg.event,
-                                        status: st.to_i8(),
-                                        ts,
-                                        payload_len: 0,
-                                    })),
-                                );
-                            }
+    /// Drain decodable frames, then refill from the socket, repeating
+    /// under [`REFILL_BUDGET`].
+    fn on_readable(&mut self, ctx: &mut IoCtx) -> bool {
+        let mut budget = REFILL_BUDGET;
+        loop {
+            // Decode everything buffered. A pause stops consumption (the
+            // remaining ring bytes keep until the gate frees capacity).
+            loop {
+                if self.paused.is_some() {
+                    return true;
+                }
+                match self.dec.next_packet(&mut self.ring) {
+                    Ok(Some(pkt)) => {
+                        if !self.on_packet(ctx, pkt) {
+                            return false;
                         }
                     }
-                    continue;
-                }
-                // Backpressure edge (ROADMAP "bounded dispatch queue"):
-                // device-bound queue-stream commands take a slot of
-                // their device's bounded gate *on the reader thread*, so
-                // a saturated device stalls exactly the streams feeding
-                // it — TCP flow control pushes back to the client —
-                // while the dispatcher and every other stream keep
-                // flowing. The control stream (queue 0) is exempt: it
-                // carries context-level commands for *every* device (and
-                // the whole legacy single-connection client), so it must
-                // never wedge behind one device — its commands run
-                // slot-free on the device workers.
-                if pkt.msg.queue != 0 {
-                    if let Some(dev) = state.device_route(&pkt.msg) {
-                        if !admit_device_slot(&state, dev, &pkt.msg, &sess, queue, instance) {
-                            break; // daemon shutting down
-                        }
+                    Ok(None) => break,
+                    Err(_) => {
+                        // Malformed frame: connection-fatal, as for the
+                        // blocking reader.
+                        self.close(ctx);
+                        return false;
                     }
                 }
-                if work_tx
+            }
+            if self.paused.is_some() {
+                return true;
+            }
+            if budget == 0 {
+                return true; // level-triggered poll re-reports the rest
+            }
+            budget -= 1;
+            // Refill. Bulk payloads bypass the ring into the packet's
+            // own allocation; everything else scatter-reads into the
+            // ring's free spans.
+            let direct = self.ring.is_empty() && self.dec.payload_remaining() >= DIRECT_READ_MIN;
+            let got = if direct {
+                use std::io::Read;
+                let tail = self.dec.payload_tail().expect("payload pending");
+                match (&self.stream).read(tail) {
+                    Ok(n) => {
+                        self.dec.note_filled(n);
+                        n
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.close(ctx);
+                        return false;
+                    }
+                }
+            } else {
+                let (a, b) = self.ring.free_segments();
+                match poll::readv(self.fd, a, b) {
+                    Ok(n) => {
+                        self.ring.commit(n);
+                        n
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.close(ctx);
+                        return false;
+                    }
+                }
+            };
+            if got == 0 {
+                // EOF: connection lost; the client will reconnect.
+                self.close(ctx);
+                return false;
+            }
+        }
+    }
+
+    fn on_packet(&mut self, ctx: &mut IoCtx, pkt: Packet) -> bool {
+        match &self.role {
+            Role::Handshake => self.on_handshake(ctx, pkt),
+            Role::Client { .. } => self.on_client_packet(ctx, pkt),
+            Role::Peer { peer_id } => {
+                let from_peer = Some(*peer_id);
+                if ctx
+                    .work_tx
                     .send(Work::Packet {
-                        from_peer: None,
-                        session: Some(Arc::clone(&sess)),
+                        from_peer,
+                        session: None,
                         pkt,
                         via_rdma: false,
                     })
                     .is_err()
                 {
-                    break;
+                    self.close(ctx);
+                    return false;
                 }
+                true
             }
-            Err(_) => break, // connection lost; client will reconnect
         }
     }
-    // A stream deregistering counts as activity: the idle TTL must
-    // measure time since the session went *streamless*, not since its
-    // last packet — a quiet-but-connected UE whose link then drops gets
-    // the full reconnect grace. Touch BEFORE evicting the registrations
-    // (like `Session::kick`): touching after would leave a window where
-    // the janitor sees a streamless session with a stale idle clock and
-    // reaps it on the spot.
-    sess.touch();
-    // Drop the writer channel: a half-dead connection must not swallow
-    // completions silently — they requeue when the client reconnects. Only
-    // evict our own registrations (a fresh stream may have replaced them).
-    {
-        let mut txs = sess.client_txs.lock().unwrap();
-        if txs.get(&queue).is_some_and(|(i, _)| *i == instance) {
-            txs.remove(&queue);
-        }
-    }
-    {
-        let mut streams = sess.client_streams.lock().unwrap();
-        if streams.get(&queue).is_some_and(|(i, _)| *i == instance) {
-            streams.remove(&queue);
-        }
-    }
-    Ok(())
-}
 
-/// Take a slot of device `dev`'s gate for a client reader's next
-/// command, waiting while the device pipeline is full or the stream is
-/// at its fairness share. Besides a grant there are two ways out:
-///
-/// * daemon shutdown — returns false, the reader exits;
-/// * stream supersession — the client reconnected this queue of *this
-///   session* while we were parked, so a fresh reader owns the stream
-///   registration in the session. The superseded reader *force-takes* a
-///   slot (bounded oversubscription, one command per superseded reader)
-///   so the command it already advanced the replay cursor past is
-///   forwarded rather than lost, then dies on its next read of the dead
-///   socket — a reconnect storm against a wedged device cannot
-///   accumulate parked reader threads. Supersession is session-scoped:
-///   another session reconnecting the same queue number never retires
-///   this reader.
-fn admit_device_slot(
-    state: &Arc<DaemonState>,
-    dev: usize,
-    msg: &Msg,
-    sess: &Arc<Session>,
-    queue: u32,
-    instance: u64,
-) -> bool {
-    let gate = &state.device_gates[dev];
-    let key = (sess.id, msg.queue);
-    loop {
-        // Grant-or-park in one atomic step (no lost-wakeup window); the
-        // timeout keeps the exit conditions below live.
-        if gate.enter_or_wait(key, Duration::from_millis(50)) {
-            return true;
+    /// Resolve the connection's role from its first packet.
+    fn on_handshake(&mut self, ctx: &mut IoCtx, pkt: Packet) -> bool {
+        match pkt.msg.body {
+            Body::Hello {
+                session,
+                role: ROLE_CLIENT,
+                ..
+            } => {
+                let Some((sess, _resumed)) = ctx.state.sessions.attach(session) else {
+                    eprintln!(
+                        "[pocld{}] connection setup failed: session registry full ({} live sessions)",
+                        ctx.state.server_id,
+                        ctx.state.sessions.len()
+                    );
+                    self.close(ctx);
+                    return false;
+                };
+                self.become_client(ctx, sess, 0)
+            }
+            Body::Hello {
+                role: ROLE_PEER,
+                peer_id,
+                ..
+            } => self.become_peer(ctx, peer_id),
+            Body::AttachQueue { session, queue } => {
+                if queue == 0 {
+                    eprintln!(
+                        "[pocld{}] connection setup failed: AttachQueue for stream 0 (the control stream attaches via Hello)",
+                        ctx.state.server_id
+                    );
+                    self.close(ctx);
+                    return false;
+                }
+                if session == [0u8; 16] {
+                    // A zero id is only meaningful on Hello (mint a fresh
+                    // session); accepting it here would mint a phantom
+                    // session with no control stream.
+                    eprintln!(
+                        "[pocld{}] connection setup failed: AttachQueue with a zero session id (sessions are issued by Hello)",
+                        ctx.state.server_id
+                    );
+                    self.close(ctx);
+                    return false;
+                }
+                let Some((sess, _resumed)) = ctx.state.sessions.attach(session) else {
+                    eprintln!(
+                        "[pocld{}] connection setup failed: session registry full ({} live sessions)",
+                        ctx.state.server_id,
+                        ctx.state.sessions.len()
+                    );
+                    self.close(ctx);
+                    return false;
+                };
+                self.become_client(ctx, sess, queue)
+            }
+            other => {
+                eprintln!(
+                    "[pocld{}] connection setup failed: expected Hello/AttachQueue, got {other:?}",
+                    ctx.state.server_id
+                );
+                self.close(ctx);
+                false
+            }
         }
-        if state.shutdown.load(Ordering::SeqCst) {
+    }
+
+    /// Attach as a client stream: Welcome first, then the session's
+    /// undelivered backlog, then live completions — registered
+    /// instance-guarded in the session exactly as the threaded model
+    /// did, so a stale connection's cleanup can never evict a
+    /// reattached stream's registrations.
+    fn become_client(&mut self, ctx: &mut IoCtx, sess: Arc<Session>, queue: u32) -> bool {
+        sess.touch();
+        let welcome = Msg::control(Body::Welcome {
+            session: sess.id,
+            server_id: ctx.state.server_id,
+            n_devices: ctx.state.devices.len() as u32,
+            last_seen_cmd: sess.last_seen(queue),
+        });
+        let Ok(handle) = self.stream.try_clone() else {
+            self.close(ctx);
             return false;
-        }
-        let current = sess
-            .client_streams
+        };
+        let outbox = self.make_outbox(ctx);
+        // Welcome precedes everything else on this stream.
+        outbox.send(Packet::bare(welcome)).ok();
+        // The instance id ties both registrations (socket handle +
+        // outbox) to this physical connection.
+        let instance = crate::util::fresh_id();
+        sess.client_streams
             .lock()
             .unwrap()
-            .get(&queue)
-            .is_some_and(|(i, _)| *i == instance);
-        if !current {
-            gate.force_enter(key);
+            .insert(queue, (instance, handle));
+        {
+            let mut txs = sess.client_txs.lock().unwrap();
+            // Flush this session's completions that raced a
+            // disconnection window — any of its live streams will do,
+            // the client routes by event id. Same lock, same order
+            // (txs, then undelivered) as `send_on`'s park path.
+            for pkt in sess.undelivered.lock().unwrap().drain() {
+                outbox.send(pkt).ok();
+            }
+            txs.insert(queue, (instance, Arc::clone(&outbox)));
+        }
+        self.outbox = Some(outbox);
+        self.role = Role::Client {
+            sess,
+            queue,
+            instance,
+        };
+        // Put the Welcome (and any backlog) on the wire now instead of
+        // waiting for the doorbell's inbox round-trip.
+        self.flush(ctx)
+    }
+
+    /// Register as a peer-mesh connection (the listening side; dialed
+    /// peers arrive pre-registered via [`ShardPool::adopt_peer`]).
+    fn become_peer(&mut self, ctx: &mut IoCtx, peer_id: u32) -> bool {
+        let outbox = self.make_outbox(ctx);
+        ctx.state
+            .peer_txs
+            .lock()
+            .unwrap()
+            .insert(peer_id, Arc::clone(&outbox));
+        self.outbox = Some(outbox);
+        self.link = ctx.state.peer_link;
+        self.role = Role::Peer { peer_id };
+        // Advertise our RDMA shadow region to the dialing peer (the
+        // dialer does the same from `Daemon::connect_peer`).
+        if let Some(rdma) = &ctx.state.rdma {
+            let (rkey, size) = rdma.local_advert();
+            ctx.state.send_to_peer(
+                peer_id,
+                Packet::bare(Msg::control(Body::RdmaAdvertise {
+                    rkey,
+                    shadow_size: size,
+                })),
+            );
+        }
+        self.flush(ctx)
+    }
+
+    /// An outbox whose doorbell injects a flush for this connection and
+    /// wakes its shard.
+    fn make_outbox(&self, ctx: &IoCtx) -> Arc<Outbox> {
+        let token = self.token;
+        let shard = Arc::clone(ctx.shard);
+        Outbox::new(move || shard.inject(ShardMsg::Flush(token)))
+    }
+
+    /// One admitted client packet: replay dedup, device-gate admission,
+    /// dispatch — the body of the old reader loop, verbatim in policy.
+    fn on_client_packet(&mut self, ctx: &mut IoCtx, pkt: Packet) -> bool {
+        let sess = match &self.role {
+            Role::Client { sess, queue, .. } => (Arc::clone(sess), *queue),
+            _ => unreachable!("on_client_packet outside Client role"),
+        };
+        let (sess, queue) = sess;
+        // Replay dedup after reconnect ("the server simply ignores
+        // commands it has already processed"), per-stream cursor —
+        // check-and-advance is one atomic step. Idempotent reads are
+        // exempt: re-executing them regenerates the lost payload.
+        sess.touch();
+        let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
+        if sess.check_and_note(queue, pkt.msg.cmd_id) && !idempotent {
+            // If the duplicate already completed, the client lost the
+            // completion in the disconnect — resend it on this stream.
+            if pkt.msg.event != 0 {
+                if let Some(st) = ctx.state.events.status(pkt.msg.event) {
+                    if st.is_terminal() {
+                        let ts = ctx.state.events.timestamps(pkt.msg.event).unwrap_or_default();
+                        sess.send_on(
+                            queue,
+                            Packet::bare(Msg::control(Body::Completion {
+                                event: pkt.msg.event,
+                                status: st.to_i8(),
+                                ts,
+                                payload_len: 0,
+                            })),
+                        );
+                    }
+                }
+            }
             return true;
         }
-    }
-}
-
-/// Register peer reader/writer threads over an established peer stream.
-pub fn start_peer_io(
-    stream: TcpStream,
-    peer_id: u32,
-    state: Arc<DaemonState>,
-    work_tx: Sender<Work>,
-) -> Result<()> {
-    let (tx, rx) = channel::<Packet>();
-    state.peer_txs.lock().unwrap().insert(peer_id, tx);
-    spawn_writer(
-        stream.try_clone()?,
-        rx,
-        state.peer_link,
-        format!("pocld{}-pw{}", state.server_id, peer_id),
-    );
-    let label = format!("pocld{}-pr{}", state.server_id, peer_id);
-    std::thread::Builder::new().name(label).spawn(move || {
-        let mut rd = stream;
-        let mut scratch = Vec::new();
-        loop {
-            match read_packet_with(&mut rd, &mut scratch) {
-                Ok(pkt) => {
-                    if work_tx
-                        .send(Work::Packet {
-                            from_peer: Some(peer_id),
-                            session: None,
-                            pkt,
-                            via_rdma: false,
-                        })
-                        .is_err()
-                    {
-                        break;
-                    }
+        // Backpressure edge: device-bound queue-stream commands take a
+        // slot of their device's bounded gate before dispatch, so a
+        // saturated device stalls exactly the streams feeding it — the
+        // paused connection stops reading and TCP flow control pushes
+        // back to the client. The control stream (queue 0) is exempt:
+        // it carries context-level commands for *every* device and must
+        // never wedge behind one.
+        if pkt.msg.queue != 0 {
+            if let Some(dev) = ctx.state.device_route(&pkt.msg) {
+                let key: StreamKey = (sess.id, pkt.msg.queue);
+                if !ctx.state.device_gates[dev].try_enter(key) {
+                    return self.pause_on_gate(ctx, pkt, dev, key);
                 }
-                Err(_) => break,
             }
         }
-        state.peer_txs.lock().unwrap().remove(&peer_id);
-    })?;
-    Ok(())
-}
+        self.forward_client(ctx, sess, pkt)
+    }
 
-/// Writer thread: drain everything queued into a batch, pace the link
-/// once for the burst's total bytes, submit the burst as one vectored
-/// write. Completion storms towards one client stream collapse into a
-/// syscall per burst instead of three per packet.
-fn spawn_writer(mut stream: TcpStream, rx: Receiver<Packet>, link: LinkProfile, name: String) {
-    std::thread::Builder::new()
-        .name(name)
-        .spawn(move || {
-            let mut scratch = W::with_capacity(256);
-            let mut batch: Vec<Packet> = Vec::new();
-            while frame::drain_batch(&rx, &mut batch) {
-                let mut done = 0;
-                while done < batch.len() {
-                    match frame::write_packets_paced(
-                        &mut stream,
-                        &mut scratch,
-                        &batch[done..],
-                        |bytes| link.pace(bytes),
-                    ) {
-                        Ok(n) => done += n,
-                        Err(_) => return,
+    fn forward_client(&mut self, ctx: &mut IoCtx, sess: Arc<Session>, pkt: Packet) -> bool {
+        if ctx
+            .work_tx
+            .send(Work::Packet {
+                from_peer: None,
+                session: Some(sess),
+                pkt,
+                via_rdma: false,
+            })
+            .is_err()
+        {
+            self.close(ctx);
+            return false;
+        }
+        true
+    }
+
+    /// Suspend reading on a full device gate: stash the command, drop
+    /// read interest, register a capacity waiter, arm the retry timer.
+    /// The re-probe *after* registering closes the lost-wakeup window
+    /// (a release between the failed probe and the registration fired a
+    /// publish that could not see our waiter).
+    fn pause_on_gate(&mut self, ctx: &mut IoCtx, pkt: Packet, dev: usize, key: StreamKey) -> bool {
+        self.paused = Some(PausedCmd {
+            pkt,
+            dev,
+            key,
+            waiter_armed: true,
+        });
+        self.set_read_interest(ctx, false);
+        let token = self.token;
+        let shard = Arc::clone(ctx.shard);
+        ctx.state.device_gates[dev].add_waiter(move || shard.inject(ShardMsg::Unpause(token)));
+        if ctx.state.device_gates[dev].try_enter(key) {
+            // Inline unpause; the decode loop continues naturally.
+            return self.unpause(ctx, false);
+        }
+        ctx.arm_timer(token, TimerKind::GateRetry, Instant::now() + GATE_RETRY);
+        true
+    }
+
+    /// Forward the paused command (force-taking a slot when `force`) and
+    /// restore read interest. Does NOT continue decoding — top-level
+    /// callers follow with [`Conn::on_readable`]; the in-decode-loop
+    /// caller resumes its own loop.
+    fn unpause(&mut self, ctx: &mut IoCtx, force: bool) -> bool {
+        let PausedCmd { pkt, dev, key, .. } = self.paused.take().expect("unpause while not paused");
+        if force {
+            ctx.state.device_gates[dev].force_enter(key);
+        }
+        let sess = match &self.role {
+            Role::Client { sess, .. } => Arc::clone(sess),
+            _ => unreachable!("paused outside Client role"),
+        };
+        if !self.forward_client(ctx, sess, pkt) {
+            return false;
+        }
+        if self.hangup {
+            // The socket died while we were paused; the command above
+            // was the connection's last duty.
+            self.close(ctx);
+            return false;
+        }
+        self.set_read_interest(ctx, true);
+        true
+    }
+
+    /// Re-probe a paused connection's gate. `from_waiter` marks the
+    /// [`ShardMsg::Unpause`] fast path (consumes the registered waiter);
+    /// timer fires use `false` and re-arm themselves while the pause
+    /// lasts. Mirrors the old admission loop's exits: shutdown closes,
+    /// supersession force-forwards (bounded oversubscription, one
+    /// command per superseded connection — its replay cursor already
+    /// moved past the command, so no replayed copy will ever be
+    /// admitted), a grant resumes.
+    pub fn retry_gate(&mut self, ctx: &mut IoCtx, from_waiter: bool) -> bool {
+        if from_waiter {
+            if let Some(p) = &mut self.paused {
+                p.waiter_armed = false;
+            }
+        }
+        let Some(p) = &self.paused else {
+            return true; // stale wakeup: already resumed (or never paused)
+        };
+        let (dev, key) = (p.dev, p.key);
+        if ctx.state.shutdown.load(Ordering::SeqCst) {
+            self.close(ctx);
+            return false;
+        }
+        let superseded = match &self.role {
+            Role::Client {
+                sess,
+                queue,
+                instance,
+            } => !sess
+                .client_streams
+                .lock()
+                .unwrap()
+                .get(queue)
+                .is_some_and(|(i, _)| i == instance),
+            _ => false,
+        };
+        if superseded {
+            if !self.unpause(ctx, true) {
+                return false;
+            }
+            // The dead socket's EOF (or remaining buffered frames)
+            // resolves the connection from here.
+            return self.on_readable(ctx);
+        }
+        if ctx.state.device_gates[dev].try_enter(key) {
+            if !self.unpause(ctx, false) {
+                return false;
+            }
+            // Ring bytes buffered behind the pause produce no readiness
+            // events — continue decoding them now.
+            return self.on_readable(ctx);
+        }
+        // Still full. Re-register a consumed waiter (and re-probe to
+        // close the lost-wakeup window); keep exactly one retry timer
+        // live by only re-arming from the timer path.
+        if !self.paused.as_ref().is_some_and(|p| p.waiter_armed) {
+            let token = self.token;
+            let shard = Arc::clone(ctx.shard);
+            ctx.state.device_gates[dev].add_waiter(move || shard.inject(ShardMsg::Unpause(token)));
+            if let Some(p) = &mut self.paused {
+                p.waiter_armed = true;
+            }
+            if ctx.state.device_gates[dev].try_enter(key) {
+                if !self.unpause(ctx, false) {
+                    return false;
+                }
+                return self.on_readable(ctx);
+            }
+        }
+        if !from_waiter {
+            ctx.arm_timer(self.token, TimerKind::GateRetry, Instant::now() + GATE_RETRY);
+        }
+        true
+    }
+
+    /// The handshake deadline passed: close if the role is still
+    /// unresolved (a connected-but-silent socket), no-op otherwise.
+    pub fn handshake_expired(&mut self, ctx: &mut IoCtx) -> bool {
+        if matches!(self.role, Role::Handshake) {
+            self.close(ctx);
+            return false;
+        }
+        true
+    }
+
+    /// A pacing deadline elapsed: release the held burst to the wire.
+    pub fn pace_due(&mut self, ctx: &mut IoCtx) -> bool {
+        match self.pace_until {
+            Some(until) if Instant::now() >= until => {
+                self.pace_until = None;
+                self.flush(ctx)
+            }
+            _ => true,
+        }
+    }
+
+    /// Drain the outbox to the socket: coalesce up to [`MAX_COALESCE`]
+    /// packets per burst, encode `[size | struct]` headers back-to-back
+    /// (payloads referenced in place — the same vectored framing as
+    /// `write_packets_paced`), pace the emulated link once per burst,
+    /// write until clean, `WouldBlock` (arms write interest) or empty.
+    pub fn flush(&mut self, ctx: &mut IoCtx) -> bool {
+        if let Some(until) = self.pace_until {
+            if Instant::now() < until {
+                return true; // the Pace timer resumes this burst
+            }
+            self.pace_until = None;
+        }
+        loop {
+            if self.burst.is_empty() {
+                let took = match &self.outbox {
+                    Some(ob) => ob.take_batch(MAX_COALESCE, &mut self.burst),
+                    None => 0, // handshake stage: nothing routable yet
+                };
+                if took == 0 {
+                    if self.want_write {
+                        self.want_write = false;
+                        self.apply_interest(ctx);
+                    }
+                    return true;
+                }
+                self.encode_burst();
+                // Link pacing: the burst must not be observable at the
+                // receiver before its modeled serialization time.
+                let total = self.wire.buf.len()
+                    + self.burst.iter().map(|p| p.payload.len()).sum::<usize>();
+                let d = self.link.delay_for(total);
+                if !d.is_zero() {
+                    if d < PACE_TIMER_MIN {
+                        crate::net::shaper::spin_sleep(d);
+                    } else {
+                        let until = Instant::now() + d;
+                        self.pace_until = Some(until);
+                        ctx.arm_timer(self.token, TimerKind::Pace, until);
+                        if self.want_write {
+                            // No spurious writable reports while pacing.
+                            self.want_write = false;
+                            self.apply_interest(ctx);
+                        }
+                        return true;
                     }
                 }
             }
-        })
-        .expect("spawn writer");
+            match self.write_some() {
+                WriteOutcome::Done => {
+                    self.burst.clear();
+                    self.bounds.clear();
+                    self.burst_written = 0;
+                }
+                WriteOutcome::Blocked => {
+                    if !self.want_write {
+                        self.want_write = true;
+                        self.apply_interest(ctx);
+                    }
+                    return true;
+                }
+                WriteOutcome::Dead => {
+                    self.close(ctx);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Encode the burst's `[size | struct]` headers into the reused wire
+    /// scratch, remembering per-packet chunk bounds.
+    fn encode_burst(&mut self) {
+        self.wire.clear();
+        self.bounds.clear();
+        for pkt in &self.burst {
+            debug_assert_eq!(pkt.msg.payload_len() as usize, pkt.payload.len());
+            let start = self.wire.buf.len();
+            self.wire.u32(0); // size placeholder, patched below
+            pkt.msg.encode_into(&mut self.wire);
+            let end = self.wire.buf.len();
+            let size = (end - start - 4) as u32;
+            self.wire.buf[start..start + 4].copy_from_slice(&size.to_le_bytes());
+            self.bounds.push((start, end));
+        }
+        self.burst_written = 0;
+    }
+
+    /// Push encoded burst bytes at the nonblocking socket, resuming past
+    /// `burst_written` (the slice list is rebuilt per attempt — partial
+    /// vectored writes are off the common path).
+    fn write_some(&mut self) -> WriteOutcome {
+        use std::io::Write;
+        let total =
+            self.wire.buf.len() + self.burst.iter().map(|p| p.payload.len()).sum::<usize>();
+        while self.burst_written < total {
+            let mut bufs: Vec<std::io::IoSlice<'_>> = Vec::with_capacity(2 * self.burst.len());
+            let mut skip = self.burst_written;
+            for (pkt, (start, end)) in self.burst.iter().zip(&self.bounds) {
+                for part in [&self.wire.buf[*start..*end], &pkt.payload[..]] {
+                    if part.is_empty() {
+                        continue;
+                    }
+                    if skip >= part.len() {
+                        skip -= part.len();
+                        continue;
+                    }
+                    bufs.push(std::io::IoSlice::new(&part[skip..]));
+                    skip = 0;
+                }
+            }
+            match (&self.stream).write_vectored(&bufs) {
+                Ok(0) => return WriteOutcome::Dead,
+                Ok(n) => self.burst_written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return WriteOutcome::Blocked,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return WriteOutcome::Dead,
+            }
+        }
+        WriteOutcome::Done
+    }
+
+    fn set_read_interest(&mut self, ctx: &mut IoCtx, on: bool) {
+        if self.want_read != on {
+            self.want_read = on;
+            self.apply_interest(ctx);
+        }
+    }
+
+    fn apply_interest(&mut self, ctx: &mut IoCtx) {
+        if self.hangup || self.closed {
+            return; // already out of the poller
+        }
+        ctx.poller
+            .modify(self.fd, self.token, self.want_read, self.want_write)
+            .ok();
+    }
+
+    /// Tear the connection down: deregister, close the outbox (packets
+    /// queued after a socket died could never reach the wire under the
+    /// writer threads either; reconnect replay covers them), evict the
+    /// instance-guarded registrations. Idempotent. Teardown is tied to
+    /// the *connection* now, not a reader thread's exit — a dead peer
+    /// can no longer leave its writer half parked forever.
+    pub fn close(&mut self, ctx: &mut IoCtx) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        ctx.poller.remove(self.fd).ok();
+        self.stream.shutdown(std::net::Shutdown::Both).ok();
+        if let Some(ob) = &self.outbox {
+            ob.close();
+        }
+        match &self.role {
+            Role::Client {
+                sess,
+                queue,
+                instance,
+            } => {
+                // A stream deregistering counts as activity: the idle
+                // TTL measures time since the session went *streamless*.
+                // Touch BEFORE evicting (like `Session::kick`) so the
+                // janitor can never see a streamless session with a
+                // stale idle clock.
+                sess.touch();
+                {
+                    let mut txs = sess.client_txs.lock().unwrap();
+                    if txs.get(queue).is_some_and(|(i, _)| i == instance) {
+                        txs.remove(queue);
+                    }
+                }
+                {
+                    let mut streams = sess.client_streams.lock().unwrap();
+                    if streams.get(queue).is_some_and(|(i, _)| i == instance) {
+                        streams.remove(queue);
+                    }
+                }
+            }
+            Role::Peer { peer_id } => {
+                // Guarded by identity: a reconnected peer's fresh outbox
+                // must survive the stale connection's teardown.
+                if let Some(ours) = &self.outbox {
+                    let mut txs = ctx.state.peer_txs.lock().unwrap();
+                    if txs.get(peer_id).is_some_and(|t| Arc::ptr_eq(t, ours)) {
+                        txs.remove(peer_id);
+                    }
+                }
+            }
+            Role::Handshake => {}
+        }
+    }
 }

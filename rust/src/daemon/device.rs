@@ -114,6 +114,10 @@ pub fn spawn_workers(state: &Arc<DaemonState>, work_tx: &Sender<Work>) -> Vec<Se
                 }
             })
             .expect("spawn forwarder");
+        // Two daemon threads per device: this forwarder plus the dispatch
+        // worker below.
+        state.note_thread();
+        state.note_thread();
 
         // The dispatch worker itself.
         let (tx, rx) = channel::<DeviceCmd>();

@@ -41,6 +41,7 @@ pub struct MigrationJob {
 /// failed migration event are released (and poisoned) without a rescan.
 pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<MigrationJob> {
     let (tx, rx) = channel::<MigrationJob>();
+    state.note_thread();
     std::thread::Builder::new()
         .name(format!("pocld{}-migrate", state.server_id))
         .spawn(move || {

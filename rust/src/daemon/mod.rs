@@ -4,16 +4,21 @@
 //! sessions** (the paper's MEC setting: many UEs share one edge server —
 //! each gets its own session in [`state::Sessions`], with its own replay
 //! cursors, completion writers and device-gate fairness shares) plus one
-//! peer connection per other server, and is structured exactly as the
-//! paper describes: *"Each socket has a reader thread and a writer thread.
-//! The readers do blocking reads on the socket until they manage to read a
-//! new command, which they then dispatch"*. Dispatch resolves event
-//! dependencies against the daemon's [`crate::sched::EventTable`] (native +
-//! user events), fans dependency-satisfied commands out to per-device
-//! dispatch workers ([`device`]) behind bounded per-device gates, runs
-//! kernels on per-device executor threads, performs P2P buffer migrations
-//! (TCP or RDMA), and broadcasts completion notifications to the client
-//! and all peers. See `docs/architecture.md` for the full threading model.
+//! peer connection per other server. Socket I/O runs on a small fixed
+//! pool of sharded event-loop threads ([`shard`]): every client and peer
+//! socket is owned by one shard as a nonblocking state machine
+//! ([`connection::Conn`]), so the daemon's thread count is
+//! O(shards + devices) — constant in connection and session count —
+//! where the paper's literal *"each socket has a reader thread and a
+//! writer thread"* structure grew by two threads per stream. The wire
+//! protocol, dispatch semantics and backpressure policy are unchanged:
+//! dispatch resolves event dependencies against the daemon's
+//! [`crate::sched::EventTable`] (native + user events), fans
+//! dependency-satisfied commands out to per-device dispatch workers
+//! ([`device`]) behind bounded per-device gates, runs kernels on
+//! per-device executor threads, performs P2P buffer migrations (TCP or
+//! RDMA), and broadcasts completion notifications to the client and all
+//! peers. See `docs/architecture.md` for the full threading model.
 //!
 //! Daemons are plain structs — tests, benches and examples spawn several in
 //! one process connected over real loopback TCP (shaped per DESIGN.md §3),
@@ -23,6 +28,7 @@ pub mod connection;
 pub mod device;
 pub mod dispatch;
 pub mod migrate;
+pub mod shard;
 pub mod state;
 
 use std::net::TcpListener;
@@ -58,6 +64,17 @@ pub struct DaemonConfig {
     pub manifest: Manifest,
     /// Artifacts to pre-compile at startup.
     pub warm: Vec<String>,
+    /// I/O shard threads driving all client/peer sockets (0 = auto:
+    /// scaled to the host's parallelism, capped at 4 — socket I/O is
+    /// readiness-multiplexed, so a handful of shards serves thousands
+    /// of connections).
+    pub io_shards: usize,
+    /// Live-session registry bound (see [`state::MAX_SESSIONS`] — a
+    /// deployment knob now, not an architectural constant).
+    pub max_sessions: usize,
+    /// Deadline for a connection to complete its `Hello`/`AttachQueue`
+    /// handshake; silent sockets are closed when it passes.
+    pub handshake_timeout: std::time::Duration,
 }
 
 impl DaemonConfig {
@@ -71,7 +88,22 @@ impl DaemonConfig {
             fabric: None,
             manifest,
             warm: Vec::new(),
+            io_shards: 0,
+            max_sessions: state::MAX_SESSIONS,
+            handshake_timeout: std::time::Duration::from_secs(10),
         }
+    }
+
+    /// Resolve `io_shards == 0` to the auto policy.
+    pub fn effective_io_shards(&self) -> usize {
+        if self.io_shards != 0 {
+            return self.io_shards;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .div_ceil(2)
+            .clamp(1, 4)
     }
 }
 
@@ -81,6 +113,7 @@ pub struct Daemon {
     pub port: u16,
     pub state: Arc<DaemonState>,
     work_tx: Sender<Work>,
+    shards: Arc<shard::ShardPool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -111,13 +144,18 @@ impl Daemon {
 
         let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
 
+        // The I/O shard pool: a fixed set of event-loop threads owning
+        // every client and peer socket.
+        let shards = shard::ShardPool::spawn(cfg.effective_io_shards(), &state, &work_tx)?;
+
         // Dispatcher thread.
         {
-            let state = Arc::clone(&state);
+            let state_for_thread = Arc::clone(&state);
             let tx = work_tx.clone();
+            state.note_thread();
             std::thread::Builder::new()
                 .name(format!("pocld{server_id}-dispatch"))
-                .spawn(move || dispatch::run(state, work_rx, tx))
+                .spawn(move || dispatch::run(state_for_thread, work_rx, tx))
                 .context("spawn dispatcher")?;
         }
 
@@ -125,6 +163,7 @@ impl Daemon {
         if let Some(rdma) = &state.rdma {
             let cq = rdma.cq.lock().unwrap().take().expect("cq taken once");
             let tx = work_tx.clone();
+            state.note_thread();
             std::thread::Builder::new()
                 .name(format!("pocld{server_id}-rdma-cq"))
                 .spawn(move || {
@@ -159,6 +198,7 @@ impl Daemon {
         // by at most one poll interval.
         {
             let state = Arc::clone(&state);
+            state.note_thread();
             std::thread::Builder::new()
                 .name(format!("pocld{server_id}-janitor"))
                 .spawn(move || {
@@ -171,13 +211,15 @@ impl Daemon {
                 .context("spawn session janitor")?;
         }
 
-        // Accept loop.
+        // Accept loop: accepts and assigns to shards, nothing else (no
+        // per-connection spawns).
         let accept_handle = {
             let state = Arc::clone(&state);
-            let tx = work_tx.clone();
+            let pool = Arc::clone(&shards);
+            state.note_thread();
             std::thread::Builder::new()
                 .name(format!("pocld{server_id}-accept"))
-                .spawn(move || connection::accept_loop(listener, state, tx))
+                .spawn(move || connection::accept_loop(listener, state, pool))
                 .context("spawn accept loop")?
         };
 
@@ -186,6 +228,7 @@ impl Daemon {
             port,
             state,
             work_tx,
+            shards,
             accept_handle: Some(accept_handle),
         })
     }
@@ -205,12 +248,11 @@ impl Daemon {
         });
         let mut s = stream.try_clone()?;
         crate::proto::write_packet(&mut s, &hello, &[])?;
-        connection::start_peer_io(
-            stream,
-            peer_id,
-            Arc::clone(&self.state),
-            self.work_tx.clone(),
-        )?;
+        // The shard adopts the socket; the peer outbox is registered in
+        // `peer_txs` before this returns, so the advertise below (and any
+        // immediate migration traffic) lands in it rather than racing the
+        // registration.
+        self.shards.adopt_peer(stream, peer_id, &self.state);
         // Advertise our RDMA shadow region to the new peer.
         if let Some(rdma) = &self.state.rdma {
             let (rkey, size) = rdma.local_advert();
@@ -261,6 +303,10 @@ impl Drop for Daemon {
         if let Some(h) = self.accept_handle.take() {
             h.join().ok();
         }
+        // Ring every shard doorbell and join the pool: shard teardown
+        // closes each owned connection (outboxes, registrations).
+        self.shards.wake_all();
+        self.shards.join();
     }
 }
 
@@ -300,6 +346,9 @@ impl Cluster {
                 fabric: fabric.clone(),
                 manifest: manifest.clone(),
                 warm: warm.iter().map(|s| s.to_string()).collect(),
+                io_shards: 0,
+                max_sessions: state::MAX_SESSIONS,
+                handshake_timeout: std::time::Duration::from_secs(10),
             };
             daemons.push(Daemon::spawn(cfg)?);
         }

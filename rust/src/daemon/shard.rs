@@ -1,0 +1,356 @@
+//! The daemon's sharded I/O core: a small fixed pool of event-loop
+//! threads drives every client and peer socket through readiness
+//! notification ([`crate::net::poll`]), replacing the thread-per-stream
+//! reader/writer pairs. Connection count no longer moves the thread
+//! count — the scaling invariant is O(shards + devices) threads total.
+//!
+//! Each accepted socket is assigned round-robin to one shard and stays
+//! there for life; the shard owns its [`Conn`](super::connection::Conn)
+//! state machine exclusively, so per-connection state needs no locks.
+//! Cross-thread signals enter through the shard's inbox + waker
+//! doorbell:
+//!
+//! * [`ShardMsg::Adopt`] — a new socket (from the accept loop or
+//!   `connect_peer`) joins the shard.
+//! * [`ShardMsg::Flush`] — a producer queued packets on a connection's
+//!   [`Outbox`](super::state::Outbox); the shard drains it to the wire.
+//! * [`ShardMsg::Unpause`] — a device gate freed capacity for a
+//!   *paused* connection (one that read a command it could not admit);
+//!   the shard re-probes the gate and resumes reading on success.
+//!
+//! Timers (handshake deadlines, gate re-probes, link pacing) live in a
+//! per-shard binary heap; the poll wait is capped at the nearest
+//! deadline. Wire behavior is identical to the thread-per-stream model:
+//! the same bytes in the same order, the same replay/undelivered/gate
+//! contracts — only the threading changed.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::net::poll::{PollEvent, Poller, Waker};
+
+use super::connection::Conn;
+use super::dispatch::Work;
+use super::state::{DaemonState, Outbox};
+
+/// Poller token reserved for the shard's own waker.
+pub const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Longest a shard parks with nothing to do — the shutdown flag is
+/// re-checked at least this often even if no wakeup arrives.
+const MAX_PARK: Duration = Duration::from_millis(500);
+
+/// What a due timer means for its connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TimerKind {
+    /// The connection has not completed its handshake; close it.
+    Handshake,
+    /// Re-probe a paused connection's device gate (the safety net under
+    /// the [`ShardMsg::Unpause`] fast path).
+    GateRetry,
+    /// A link-pacing delay elapsed; resume draining the outbox.
+    Pace,
+}
+
+/// How an adopted socket starts life on its shard.
+pub enum Seed {
+    /// A fresh accepted socket: role unknown until its handshake packet
+    /// (`Hello` / `AttachQueue`) decodes.
+    Incoming,
+    /// An outbound peer dial: `Hello` already sent by the dialer, the
+    /// outbox already registered in `peer_txs` (it may hold packets by
+    /// the time the shard adopts — the adopt path flushes immediately).
+    Peer { peer_id: u32, outbox: Arc<Outbox> },
+}
+
+/// Cross-thread message into a shard's event loop.
+pub enum ShardMsg {
+    Adopt { token: u64, stream: TcpStream, seed: Seed },
+    Flush(u64),
+    Unpause(u64),
+}
+
+/// One event-loop thread's shared handle: the inbox other threads push
+/// into and the doorbell that interrupts its poll wait.
+pub struct Shard {
+    pub id: usize,
+    inbox: Mutex<Vec<ShardMsg>>,
+    waker: Waker,
+}
+
+impl Shard {
+    /// Queue a message and ring the doorbell. Callable from any thread.
+    pub fn inject(&self, msg: ShardMsg) {
+        self.inbox.lock().unwrap().push(msg);
+        self.waker.wake();
+    }
+
+    /// Interrupt the shard's poll wait without a message (shutdown).
+    pub fn wake(&self) {
+        self.waker.wake();
+    }
+}
+
+/// The daemon's pool of I/O shards. Sockets are assigned round-robin;
+/// a connection's shard never changes.
+pub struct ShardPool {
+    shards: Vec<Arc<Shard>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next: AtomicUsize,
+}
+
+impl ShardPool {
+    /// Spawn `n` shard threads (at least one).
+    pub fn spawn(
+        n: usize,
+        state: &Arc<DaemonState>,
+        work_tx: &Sender<Work>,
+    ) -> Result<Arc<ShardPool>> {
+        let n = n.max(1);
+        let mut shards = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for id in 0..n {
+            let shard = Arc::new(Shard {
+                id,
+                inbox: Mutex::new(Vec::new()),
+                waker: Waker::new().context("shard waker")?,
+            });
+            let st = Arc::clone(state);
+            let tx = work_tx.clone();
+            let sh = Arc::clone(&shard);
+            state.note_thread();
+            let handle = std::thread::Builder::new()
+                .name(format!("pocld{}-shard{id}", state.server_id))
+                .spawn(move || run_shard(sh, st, tx))
+                .context("spawn I/O shard")?;
+            shards.push(shard);
+            handles.push(handle);
+        }
+        Ok(Arc::new(ShardPool {
+            shards,
+            handles: Mutex::new(handles),
+            next: AtomicUsize::new(0),
+        }))
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn pick(&self) -> &Arc<Shard> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        &self.shards[i]
+    }
+
+    /// Hand a fresh accepted socket to a shard (role resolved by its
+    /// handshake packet, under the handshake deadline).
+    pub fn assign(&self, stream: TcpStream) {
+        let token = crate::util::fresh_id();
+        self.pick().inject(ShardMsg::Adopt {
+            token,
+            stream,
+            seed: Seed::Incoming,
+        });
+    }
+
+    /// Adopt an outbound peer connection (`Hello` already written by the
+    /// dialer). The peer outbox is created *and registered in
+    /// `peer_txs`* before the shard learns of the socket, so packets
+    /// sent to the peer immediately after this returns — the dialer's
+    /// `RdmaAdvertise`, early migrations — land in the outbox rather
+    /// than a registration race; the shard's adopt path flushes whatever
+    /// accumulated.
+    pub fn adopt_peer(&self, stream: TcpStream, peer_id: u32, state: &Arc<DaemonState>) {
+        let token = crate::util::fresh_id();
+        let shard = Arc::clone(self.pick());
+        let doorbell = {
+            let shard = Arc::clone(&shard);
+            move || shard.inject(ShardMsg::Flush(token))
+        };
+        let outbox = Outbox::new(doorbell);
+        state
+            .peer_txs
+            .lock()
+            .unwrap()
+            .insert(peer_id, Arc::clone(&outbox));
+        shard.inject(ShardMsg::Adopt {
+            token,
+            stream,
+            seed: Seed::Peer { peer_id, outbox },
+        });
+    }
+
+    /// Ring every shard's doorbell (shutdown observation).
+    pub fn wake_all(&self) {
+        for s in &self.shards {
+            s.wake();
+        }
+    }
+
+    /// Join every shard thread (call after setting the shutdown flag and
+    /// [`ShardPool::wake_all`]).
+    pub fn join(&self) {
+        for h in self.handles.lock().unwrap().drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+/// Borrowed event-loop context handed into [`Conn`] entry points: the
+/// poller for interest changes, the timer heap for deadlines, and the
+/// shared daemon plumbing.
+pub struct IoCtx<'a> {
+    pub poller: &'a Poller,
+    pub timers: &'a mut BinaryHeap<Reverse<(Instant, u64, TimerKind)>>,
+    pub state: &'a Arc<DaemonState>,
+    pub work_tx: &'a Sender<Work>,
+    pub shard: &'a Arc<Shard>,
+}
+
+impl IoCtx<'_> {
+    /// Arm a timer for connection `token`.
+    pub fn arm_timer(&mut self, token: u64, kind: TimerKind, at: Instant) {
+        self.timers.push(Reverse((at, token, kind)));
+    }
+}
+
+/// One shard's event loop: fire due timers, park on the poller (capped
+/// by the nearest deadline), dispatch readiness events to the owned
+/// connections, drain the inbox. Connections are dispatched by
+/// remove/call/reinsert so a `Conn` method holding `&mut self` never
+/// aliases the map; every entry point returns whether the connection is
+/// still alive.
+fn run_shard(shard: Arc<Shard>, state: Arc<DaemonState>, work_tx: Sender<Work>) {
+    let poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("[pocld{}] shard{}: no poller: {e}", state.server_id, shard.id);
+            return;
+        }
+    };
+    if let Err(e) = poller.add(shard.waker.fd(), WAKE_TOKEN, true, false) {
+        eprintln!("[pocld{}] shard{}: waker register: {e}", state.server_id, shard.id);
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut timers: BinaryHeap<Reverse<(Instant, u64, TimerKind)>> = BinaryHeap::new();
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut due: Vec<(u64, TimerKind)> = Vec::new();
+
+    // Dispatch one connection entry point under a fresh borrow context.
+    macro_rules! with_conn {
+        ($token:expr, |$conn:ident, $ctx:ident| $body:expr) => {
+            if let Some(mut $conn) = conns.remove(&$token) {
+                let mut $ctx = IoCtx {
+                    poller: &poller,
+                    timers: &mut timers,
+                    state: &state,
+                    work_tx: &work_tx,
+                    shard: &shard,
+                };
+                let alive: bool = $body;
+                if alive {
+                    conns.insert($token, $conn);
+                }
+            }
+        };
+    }
+
+    loop {
+        // Fire due timers (collected first: firing mutates the heap).
+        let now = Instant::now();
+        due.clear();
+        while let Some(Reverse((at, _, _))) = timers.peek() {
+            if *at > now {
+                break;
+            }
+            let Reverse((_, token, kind)) = timers.pop().unwrap();
+            due.push((token, kind));
+        }
+        for &(token, kind) in &due {
+            match kind {
+                TimerKind::Handshake => {
+                    with_conn!(token, |conn, ctx| conn.handshake_expired(&mut ctx))
+                }
+                TimerKind::GateRetry => {
+                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, false))
+                }
+                TimerKind::Pace => with_conn!(token, |conn, ctx| conn.pace_due(&mut ctx)),
+            }
+        }
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        // Park until readiness, the nearest timer, or the park cap.
+        let timeout = match timers.peek() {
+            Some(Reverse((at, _, _))) => at.saturating_duration_since(now).min(MAX_PARK),
+            None => MAX_PARK,
+        };
+        if let Err(e) = poller.wait(&mut events, Some(timeout)) {
+            eprintln!("[pocld{}] shard{}: poll: {e}", state.server_id, shard.id);
+            break;
+        }
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        // Readiness events. The waker's bytes are drained and its
+        // signal re-checked via the inbox below.
+        for &ev in &events {
+            if ev.token == WAKE_TOKEN {
+                shard.waker.drain();
+                continue;
+            }
+            with_conn!(ev.token, |conn, ctx| conn.handle_event(&mut ctx, ev));
+        }
+
+        // Inbox: adoptions and cross-thread doorbells.
+        let msgs = std::mem::take(&mut *shard.inbox.lock().unwrap());
+        for msg in msgs {
+            match msg {
+                ShardMsg::Adopt { token, stream, seed } => {
+                    let adopted = {
+                        let mut ctx = IoCtx {
+                            poller: &poller,
+                            timers: &mut timers,
+                            state: &state,
+                            work_tx: &work_tx,
+                            shard: &shard,
+                        };
+                        Conn::adopt(stream, token, seed, &mut ctx)
+                    };
+                    if let Some(conn) = adopted {
+                        conns.insert(token, conn);
+                        // A peer outbox may have accumulated packets
+                        // between registration and adoption.
+                        with_conn!(token, |conn, ctx| conn.flush(&mut ctx));
+                    }
+                }
+                ShardMsg::Flush(token) => {
+                    with_conn!(token, |conn, ctx| conn.flush(&mut ctx))
+                }
+                ShardMsg::Unpause(token) => {
+                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, true))
+                }
+            }
+        }
+    }
+
+    // Teardown: close every owned connection (deregisters, closes
+    // outboxes, evicts instance-guarded registrations).
+    let tokens: Vec<u64> = conns.keys().copied().collect();
+    for token in tokens {
+        with_conn!(token, |conn, ctx| {
+            conn.close(&mut ctx);
+            false
+        });
+    }
+}

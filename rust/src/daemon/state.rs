@@ -4,8 +4,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
@@ -192,6 +191,14 @@ pub struct DeviceGate {
     /// dispatcher's per-work-item publish pass skip gates (and their
     /// parked readers) where nothing changed.
     dirty: AtomicBool,
+    /// One-shot capacity callbacks, fired (and cleared) by the next
+    /// [`DeviceGate::publish`]. Paused connections register here: a shard
+    /// cannot park on the condvar (that would stall every connection it
+    /// owns), so its waiter injects an unpause message and rings the
+    /// shard's doorbell instead. Stale entries — connection died, or it
+    /// re-probed successfully before the publish — fire into a token the
+    /// shard no longer knows and are ignored there.
+    waiters: Mutex<Vec<Box<dyn FnOnce() + Send>>>,
 }
 
 impl Default for DeviceGate {
@@ -206,6 +213,7 @@ impl DeviceGate {
             inner: Mutex::new(GateInner::default()),
             cv: Condvar::new(),
             dirty: AtomicBool::new(false),
+            waiters: Mutex::new(Vec::new()),
         }
     }
 
@@ -281,6 +289,15 @@ impl DeviceGate {
         self.dirty.store(true, Ordering::Release);
     }
 
+    /// Register a one-shot callback for the next [`DeviceGate::publish`].
+    /// The registering path must re-probe [`DeviceGate::try_enter`] *after*
+    /// registering — a release between its failed probe and the
+    /// registration would otherwise be a lost wakeup (the publish for it
+    /// may already have run).
+    pub fn add_waiter(&self, f: impl FnOnce() + Send + 'static) {
+        self.waiters.lock().unwrap().push(Box::new(f));
+    }
+
     /// Wake parked readers to re-probe — called by the dispatcher after
     /// its ready backlog had first claim on freed capacity. A no-op (one
     /// atomic load) for gates with no release since the last publish, so
@@ -288,6 +305,10 @@ impl DeviceGate {
     pub fn publish(&self) {
         if self.dirty.load(Ordering::Acquire) && self.dirty.swap(false, Ordering::AcqRel) {
             self.cv.notify_all();
+            let waiters = std::mem::take(&mut *self.waiters.lock().unwrap());
+            for w in waiters {
+                w();
+            }
         }
     }
 
@@ -310,7 +331,8 @@ impl DeviceGate {
 /// state, mirroring the event table's GC-floor trade).
 pub const SESSION_IDLE_TTL: Duration = Duration::from_secs(300);
 
-/// Hard cap on live sessions per daemon. Unknown ids are *adopted* into
+/// Default cap on live sessions per daemon (`DaemonConfig::max_sessions`
+/// overrides it). Unknown ids are *adopted* into
 /// the registry (see [`Sessions::attach`]), so without a bound any
 /// unauthenticated connection loop could mint entries faster than the
 /// idle TTL reaps them. At the cap, a handshake that would create a new
@@ -415,6 +437,103 @@ impl Undelivered {
     }
 }
 
+struct OutboxQ {
+    q: VecDeque<Packet>,
+    closed: bool,
+}
+
+/// Outbound packet buffer for one connection, owned by routing state
+/// (`Session::client_txs` / `DaemonState::peer_txs`) and drained by the
+/// I/O shard that owns the connection — the readiness-core replacement
+/// for the per-stream mpsc writer channels (there is no writer thread to
+/// park on a `Receiver` anymore).
+///
+/// Producers ([`Session::send_on`], peer broadcast, the dispatcher) push
+/// under a short lock and ring the owning shard's doorbell; consecutive
+/// sends coalesce to one wakeup via the `notified` flag, which the shard
+/// clears *before* draining so a racing send can never be missed (a
+/// spurious extra wakeup is the harmless direction). A closed outbox
+/// hands packets back exactly like `SendError` did, so the
+/// undelivered-backlog fallback in `send_on` is unchanged.
+pub struct Outbox {
+    inner: Mutex<OutboxQ>,
+    notified: AtomicBool,
+    wake: Box<dyn Fn() + Send + Sync>,
+}
+
+impl Outbox {
+    /// An outbox whose doorbell runs `wake` (typically: inject a flush
+    /// message for the owning connection and wake its shard's poller).
+    pub fn new(wake: impl Fn() + Send + Sync + 'static) -> Arc<Outbox> {
+        Arc::new(Outbox {
+            inner: Mutex::new(OutboxQ {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            notified: AtomicBool::new(false),
+            wake: Box::new(wake),
+        })
+    }
+
+    /// An outbox with no doorbell — tests and detached consumers that
+    /// poll via [`Outbox::take_batch`] themselves.
+    pub fn detached() -> Arc<Outbox> {
+        Self::new(|| {})
+    }
+
+    /// Queue a packet for the owning connection. `Err` hands the packet
+    /// back when the outbox is closed (its connection is gone) — the
+    /// exact contract `mpsc::SendError` gave `send_on`'s fallback chain.
+    pub fn send(&self, pkt: Packet) -> Result<(), Packet> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.closed {
+                return Err(pkt);
+            }
+            g.q.push_back(pkt);
+        }
+        if !self.notified.swap(true, Ordering::AcqRel) {
+            (self.wake)();
+        }
+        Ok(())
+    }
+
+    /// Close and discard anything still queued. Packets queued after the
+    /// socket died could not have reached the wire under the old writer
+    /// threads either; the client's reconnect replay covers them.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        g.q.clear();
+    }
+
+    /// Move up to `max` queued packets into `out` (appended), returning
+    /// how many moved. Clears the doorbell *first*: a send racing the
+    /// drain either lands in this batch or rings again — never neither.
+    /// Callers loop until 0 (or until the socket pushes back, which arms
+    /// its own resume signal), so leftovers past `max` are not stranded.
+    pub fn take_batch(&self, max: usize, out: &mut Vec<Packet>) -> usize {
+        self.notified.store(false, Ordering::Release);
+        let mut g = self.inner.lock().unwrap();
+        let n = g.q.len().min(max);
+        out.extend(g.q.drain(..n));
+        n
+    }
+
+    /// Packets currently queued (tests / metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
 pub struct DaemonState {
     pub server_id: u32,
     pub client_link: LinkProfile,
@@ -431,16 +550,28 @@ pub struct DaemonState {
     /// many UEs share one edge server). Each [`Session`] owns its stream
     /// registries, replay cursors and undelivered backlog.
     pub sessions: Sessions,
-    /// Writer channels to peers.
-    pub peer_txs: Mutex<HashMap<u32, Sender<Packet>>>,
+    /// Outbound buffers to peers, drained by the shard owning each peer
+    /// connection.
+    pub peer_txs: Mutex<HashMap<u32, Arc<Outbox>>>,
     pub rdma: Option<RdmaState>,
     pub shutdown: AtomicBool,
+    /// Deadline for a connection to complete its `Hello`/`AttachQueue`
+    /// handshake; sockets that connect and go silent are closed when it
+    /// passes instead of pinning daemon resources forever.
+    pub handshake_timeout: Duration,
     /// Commands processed (metrics).
     pub commands_seen: AtomicU64,
     /// Parked commands examined by completion wakeups (metrics). Under the
     /// indexed dispatcher this counts only commands whose last dependency
     /// just resolved — an unrelated completion contributes zero.
     pub wake_examined: AtomicU64,
+    /// Threads this daemon has spawned (I/O shards, dispatcher, janitor,
+    /// accept loop, per-device workers/forwarders/executors, migration
+    /// worker). The readiness core's scaling invariant is that this stays
+    /// O(shards + devices) — *constant in connection and session count* —
+    /// where the thread-per-stream model grew by two per client stream.
+    /// Asserted by the thread-count scaling test.
+    threads: AtomicUsize,
 }
 
 /// One client session: the daemon-side state of one UE's OpenCL context
@@ -462,12 +593,12 @@ pub struct Session {
     /// ignores commands it has already processed"). cmd_ids are allocated
     /// per stream, so each stream needs its own cursor.
     cursors: Mutex<HashMap<u32, u64>>,
-    /// Writer channels to this session's client, one per attached stream
+    /// Outbound buffers to this session's client, one per attached stream
     /// (0 = the session control stream, N = the stream of command queue
-    /// N). Values are `(instance, sender)`: the instance id ties a
-    /// channel to one physical connection so a stale reader's cleanup can
-    /// never evict a reattached stream's fresh channel.
-    pub client_txs: Mutex<HashMap<u32, (u64, Sender<Packet>)>>,
+    /// N). Values are `(instance, outbox)`: the instance id ties an
+    /// outbox to one physical connection so a stale connection's cleanup
+    /// can never evict a reattached stream's fresh outbox.
+    pub client_txs: Mutex<HashMap<u32, (u64, Arc<Outbox>)>>,
     /// Handles on this session's live sockets (keyed and instance-guarded
     /// like `client_txs`) so `kick` can sever every stream of *this*
     /// session (simulating a network drop / the UE roaming) without
@@ -570,9 +701,9 @@ impl Session {
                         self.touch();
                         return;
                     }
-                    // A dead channel hands the packet back — no clone
+                    // A closed outbox hands the packet back — no clone
                     // needed per delivery probe.
-                    Err(std::sync::mpsc::SendError(p)) => pkt = p,
+                    Err(p) => pkt = p,
                 }
             }
             if queue == 0 {
@@ -624,6 +755,11 @@ pub struct Sessions {
     /// cannot make every refused handshake pay it (and stall legitimate
     /// resumes queued on the registry lock behind it).
     last_cap_reap_ns: AtomicU64,
+    /// Registry bound ([`MAX_SESSIONS`] unless overridden via
+    /// `DaemonConfig::max_sessions` — the readiness core serves session
+    /// counts the thread-per-stream model never could, so the cap is a
+    /// deployment knob now, not an architectural constant).
+    cap: usize,
 }
 
 /// Best-effort OS entropy without external crates: `/dev/urandom` where
@@ -650,11 +786,22 @@ impl Default for Sessions {
 
 impl Sessions {
     pub fn new() -> Sessions {
+        Self::with_capacity(MAX_SESSIONS)
+    }
+
+    /// A registry bounded at `cap` live sessions.
+    pub fn with_capacity(cap: usize) -> Sessions {
         Sessions {
             map: Mutex::new(HashMap::new()),
             rng: Mutex::new(Rng::from_entropy()),
             last_cap_reap_ns: AtomicU64::new(0),
+            cap: cap.max(1),
         }
+    }
+
+    /// The registry bound (tests / metrics).
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     /// Resolve a presented session id to a live session, creating one as
@@ -688,14 +835,14 @@ impl Sessions {
         // genuinely dead sessions before refusing a live UE — at most
         // once per second, so a flood hammering a full registry cannot
         // make every refused handshake pay the O(sessions) scan.
-        if map.len() >= MAX_SESSIONS {
+        if map.len() >= self.cap {
             let now = now_ns();
             let last = self.last_cap_reap_ns.load(Ordering::Relaxed);
             if now.saturating_sub(last) >= 1_000_000_000 {
                 self.last_cap_reap_ns.store(now, Ordering::Relaxed);
                 map.retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < SESSION_IDLE_TTL);
             }
-            if map.len() >= MAX_SESSIONS {
+            if map.len() >= self.cap {
                 return None;
             }
         }
@@ -837,6 +984,10 @@ impl DaemonState {
             None => None,
         };
         let device_gates = (0..devices.len()).map(|_| DeviceGate::new()).collect();
+        // Each DeviceExecutor::spawn above started one runtime-layer
+        // executor thread; seed the counter with those so `n_threads`
+        // covers every thread the daemon owns.
+        let threads = AtomicUsize::new(devices.len());
         Ok(Arc::new(DaemonState {
             server_id: cfg.server_id,
             client_link: cfg.client_link,
@@ -845,13 +996,26 @@ impl DaemonState {
             events: EventTable::new(),
             devices,
             device_gates,
-            sessions: Sessions::new(),
+            sessions: Sessions::with_capacity(cfg.max_sessions),
             peer_txs: Mutex::new(HashMap::new()),
             rdma,
             shutdown: AtomicBool::new(false),
+            handshake_timeout: cfg.handshake_timeout,
             commands_seen: AtomicU64::new(0),
             wake_examined: AtomicU64::new(0),
+            threads,
         }))
+    }
+
+    /// Record one spawned daemon thread (called at every spawn site).
+    pub fn note_thread(&self) {
+        self.threads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Threads this daemon runs, independent of connection/session count
+    /// — the O(shards + devices) scaling invariant's accessor.
+    pub fn n_threads(&self) -> usize {
+        self.threads.load(Ordering::Relaxed)
     }
 
     /// Which device's dispatch worker executes this command, or `None`
@@ -879,6 +1043,7 @@ impl DaemonState {
 
     pub fn broadcast_to_peers(&self, pkt: &Packet) {
         for tx in self.peer_txs.lock().unwrap().values() {
+            // Refcount bump per peer, not a payload copy.
             tx.send(pkt.clone()).ok();
         }
     }
@@ -1255,12 +1420,78 @@ mod tests {
         let pkt = Packet::bare(Msg::control(crate::proto::Body::Barrier));
         sess.send_on(3, pkt.clone());
         assert_eq!(sess.undelivered.lock().unwrap().len(), 1);
-        // With a live queue-3 writer the send goes through directly.
-        let (tx, rx) = std::sync::mpsc::channel();
-        sess.client_txs.lock().unwrap().insert(3, (1, tx));
-        sess.send_on(3, pkt);
-        assert!(rx.try_recv().is_ok());
+        // With a live queue-3 outbox the send goes through directly.
+        let ob = Outbox::detached();
+        sess.client_txs.lock().unwrap().insert(3, (1, Arc::clone(&ob)));
+        sess.send_on(3, pkt.clone());
+        assert_eq!(ob.len(), 1);
         assert_eq!(sess.undelivered.lock().unwrap().len(), 1);
+        // A closed outbox behaves like a dead channel: back to parking.
+        ob.close();
+        sess.send_on(3, pkt);
+        assert_eq!(sess.undelivered.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn outbox_coalesces_doorbells_and_hands_packets_back_when_closed() {
+        let rings = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&rings);
+        let ob = Outbox::new(move || {
+            r2.fetch_add(1, Ordering::SeqCst);
+        });
+        let pkt = Packet::bare(Msg::control(crate::proto::Body::Barrier));
+        // First send rings; further sends before a drain coalesce.
+        assert!(ob.send(pkt.clone()).is_ok());
+        assert!(ob.send(pkt.clone()).is_ok());
+        assert!(ob.send(pkt.clone()).is_ok());
+        assert_eq!(rings.load(Ordering::SeqCst), 1);
+        let mut batch = Vec::new();
+        assert_eq!(ob.take_batch(2, &mut batch), 2);
+        assert_eq!(ob.take_batch(64, &mut batch), 1);
+        assert_eq!(batch.len(), 3);
+        assert!(ob.is_empty());
+        // Doorbell re-arms after a drain.
+        assert!(ob.send(pkt.clone()).is_ok());
+        assert_eq!(rings.load(Ordering::SeqCst), 2);
+        // Close discards the queue and refuses new sends, handing the
+        // packet back for the undelivered fallback.
+        ob.close();
+        assert!(ob.is_closed());
+        assert!(ob.is_empty());
+        assert!(ob.send(pkt).is_err());
+    }
+
+    #[test]
+    fn gate_publish_fires_registered_waiters_once() {
+        let gate = DeviceGate::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        gate.add_waiter(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        // No release since the last publish: nothing fires.
+        gate.publish();
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        assert!(gate.try_enter(key(9, 1)));
+        gate.release(key(9, 1));
+        gate.publish();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // Waiters are one-shot: the next publish does not re-fire.
+        assert!(gate.try_enter(key(9, 1)));
+        gate.release(key(9, 1));
+        gate.publish();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn sessions_capacity_is_configurable() {
+        let s = Sessions::with_capacity(2);
+        assert_eq!(s.capacity(), 2);
+        let (a, _) = s.attach([0u8; 16]).unwrap();
+        assert!(s.attach([0u8; 16]).is_some());
+        assert!(s.attach([0u8; 16]).is_none(), "third session is refused");
+        // Resume still works at the cap.
+        assert!(s.attach(a.id).is_some());
     }
 
     #[test]

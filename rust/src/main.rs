@@ -5,7 +5,7 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues|sessions|latency` — print a DES scenario
+//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency` — print a DES scenario
 //!   table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
@@ -130,6 +130,30 @@ fn main() -> anyhow::Result<()> {
                         );
                     }
                 }
+                Some("ues") => {
+                    // MEC-scale UE counts on the readiness core: a fixed
+                    // shard pool serves every socket, so the daemon's
+                    // thread inventory is flat where thread-per-stream
+                    // grew 2 threads per UE.
+                    let tiny = args.iter().any(|a| a == "--tiny");
+                    let sweep: &[(usize, usize)] = if tiny {
+                        &[(100, 20), (1_000, 5), (10_000, 2)]
+                    } else {
+                        &[(1_000, 20), (10_000, 5), (100_000, 2)]
+                    };
+                    println!(
+                        "UE scaling model (readiness core, 4 I/O shards, 4 devices):"
+                    );
+                    for &(n, cmds) in sweep {
+                        let cps = scenarios::ue_scaling_cmds_per_sec(n, cmds, 4, 4);
+                        let threads = scenarios::daemon_thread_count(n, 4, 4, false);
+                        let tps = scenarios::daemon_thread_count(n, 4, 4, true);
+                        println!(
+                            "{n:>7} UEs: {cps:>9.0} cmd/s   {threads} daemon threads \
+                             (thread-per-stream would run {tps})"
+                        );
+                    }
+                }
                 Some("queues") => {
                     for qn in [1usize, 2, 4, 8] {
                         let single = scenarios::queue_scaling_cmds_per_sec(qn, 1000, false);
@@ -164,7 +188,7 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
                 other => anyhow::bail!(
-                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|sessions|latency)"
+                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|sessions|ues|latency)"
                 ),
             }
             Ok(())
@@ -186,7 +210,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
-            eprintln!("  sim    fig12|fig13|fig16|queues|sessions|latency  DES scenario tables");
+            eprintln!("  sim    fig12|fig13|fig16|queues|sessions|ues|latency  DES scenario tables");
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);
         }

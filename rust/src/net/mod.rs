@@ -12,6 +12,7 @@
 //!   memory regions, chained work requests, single doorbell, zero-syscall
 //!   data placement) over in-process shared memory.
 
+pub mod poll;
 pub mod rdma;
 pub mod shaper;
 pub mod tcp;

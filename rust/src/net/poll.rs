@@ -1,0 +1,498 @@
+//! Readiness notification + scatter reads for the daemon's sharded I/O
+//! core — a minimal epoll shim in the same no-libc raw-FFI style as
+//! [`super::tcp`]'s `setsockopt` shim (the offline build environment has
+//! no `libc`/`mio` crates, and std exposes no readiness API).
+//!
+//! * Linux: `epoll_create1` / `epoll_ctl` / `epoll_wait`, level-triggered.
+//! * Other unix: a `poll(2)` fallback over the registered fd set — O(fds)
+//!   per wait but semantically identical (the constants `POLLIN`/`POLLOUT`
+//!   are the same across the unix family, unlike kqueue's API surface).
+//! * Non-unix: [`Poller::new`] fails with `Unsupported`; the daemon's
+//!   readiness core needs a unix host (mirroring the repo's entropy
+//!   fallback precedent: full fidelity on unix, degraded elsewhere).
+//!
+//! [`Waker`] is the cross-thread wakeup primitive each shard registers
+//! alongside its sockets: a nonblocking loopback socket pair (all-std, no
+//! `pipe`/`eventfd` FFI) whose read half lives in the shard's interest set.
+//! [`readv`] drains a socket into the two free spans of a receive ring in
+//! one syscall.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// One readiness event. `token` is the caller's registration key (the
+/// shard's connection token), not the fd.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the socket errored. Reported regardless of the
+    /// registered interest, so a paused connection (read interest off)
+    /// still learns its socket died.
+    pub hangup: bool,
+}
+
+/// Raw readiness-API FFI, per-OS (no libc crate — see module docs).
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// `struct epoll_event`: packed on x86 ABIs only (the kernel layout).
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(C, packed))]
+    #[cfg_attr(not(any(target_arch = "x86", target_arch = "x86_64")), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    // Identical across the unix family (POSIX poll.h).
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+}
+
+/// Clamp an optional wait to the millisecond argument the syscalls take:
+/// `None` = block forever (-1); sub-millisecond waits round *up* so a
+/// 100 µs timer does not spin at 0 ms.
+#[cfg(unix)]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            d.as_millis().min(i32::MAX as u128) as i32
+                + i32::from(d.subsec_nanos() % 1_000_000 != 0)
+        }
+    }
+}
+
+/// Level-triggered readiness monitor over raw fds.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        // Safety: plain syscall; fd ownership is ours until Drop.
+        let epfd = unsafe { sys::epoll_create1(0) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        let mut events = sys::EPOLLRDHUP;
+        if readable {
+            events |= sys::EPOLLIN;
+        }
+        if writable {
+            events |= sys::EPOLLOUT;
+        }
+        let mut ev = sys::EpollEvent { events, data: token };
+        // Safety: valid epoll fd, valid event struct for ADD/MOD (DEL
+        // ignores it but older kernels require non-null).
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest.
+    pub fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, readable, writable)
+    }
+
+    /// Change an existing registration's interest set.
+    pub fn modify(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, readable, writable)
+    }
+
+    /// Drop a registration (closing the fd also drops it kernel-side).
+    pub fn remove(&self, fd: i32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false)
+    }
+
+    /// Wait for readiness, appending into `out` (cleared first). An
+    /// interrupted wait reports zero events rather than an error.
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let mut raw = [sys::EpollEvent { events: 0, data: 0 }; 64];
+        // Safety: `raw` outlives the call; maxevents matches its length.
+        let n = unsafe {
+            sys::epoll_wait(self.epfd, raw.as_mut_ptr(), raw.len() as i32, timeout_ms(timeout))
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for ev in &raw[..n as usize] {
+            let bits = ev.events;
+            out.push(PollEvent {
+                token: ev.data,
+                readable: bits & sys::EPOLLIN != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                hangup: bits & (sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // Safety: fd owned by this struct, closed exactly once.
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+/// `poll(2)` fallback for non-Linux unix: tracks registrations in a map
+/// and rebuilds the pollfd list per wait — O(fds), fine at fallback scale.
+#[cfg(all(unix, not(target_os = "linux")))]
+pub struct Poller {
+    fds: std::sync::Mutex<std::collections::HashMap<i32, (u64, bool, bool)>>,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            fds: std::sync::Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    pub fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.fds.lock().unwrap().insert(fd, (token, readable, writable));
+        Ok(())
+    }
+
+    pub fn modify(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.fds.lock().unwrap().insert(fd, (token, readable, writable));
+        Ok(())
+    }
+
+    pub fn remove(&self, fd: i32) -> io::Result<()> {
+        self.fds.lock().unwrap().remove(&fd);
+        Ok(())
+    }
+
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let (mut pfds, tokens): (Vec<sys::PollFd>, Vec<u64>) = {
+            let fds = self.fds.lock().unwrap();
+            fds.iter()
+                .map(|(&fd, &(token, r, w))| {
+                    let mut events = 0i16;
+                    if r {
+                        events |= sys::POLLIN;
+                    }
+                    if w {
+                        events |= sys::POLLOUT;
+                    }
+                    (sys::PollFd { fd, events, revents: 0 }, token)
+                })
+                .unzip()
+        };
+        // Safety: `pfds` outlives the call; nfds matches its length.
+        let n = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len() as u64, timeout_ms(timeout)) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (pfd, token) in pfds.iter().zip(tokens) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            out.push(PollEvent {
+                token,
+                readable: pfd.revents & sys::POLLIN != 0,
+                writable: pfd.revents & sys::POLLOUT != 0,
+                hangup: pfd.revents & (sys::POLLHUP | sys::POLLERR) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Non-unix stub: compiles, fails at daemon spawn (see module docs).
+#[cfg(not(unix))]
+pub struct Poller {}
+
+#[cfg(not(unix))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "readiness I/O requires a unix host",
+        ))
+    }
+
+    pub fn add(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds off-unix")
+    }
+
+    pub fn modify(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds off-unix")
+    }
+
+    pub fn remove(&self, _fd: i32) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds off-unix")
+    }
+
+    pub fn wait(&self, _out: &mut Vec<PollEvent>, _timeout: Option<Duration>) -> io::Result<()> {
+        unreachable!("Poller::new never succeeds off-unix")
+    }
+}
+
+/// Cross-thread shard wakeup: a nonblocking loopback socket pair. The
+/// read half sits in the shard's poller; any thread calls [`Waker::wake`]
+/// to make a parked `wait` return. All-std (no `pipe`/`fcntl` FFI): the
+/// pair is created once per shard, so the loopback handshake cost is
+/// irrelevant, and `WouldBlock` on a full wake buffer is exactly the
+/// coalescing we want (a wakeup is already pending).
+pub struct Waker {
+    r: TcpStream,
+    w: TcpStream,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let w = TcpStream::connect(addr)?;
+        let local = w.local_addr()?;
+        // Accept until we see our own connect — a foreign process racing
+        // a connect onto the transient listener must not become the wake
+        // channel.
+        let r = loop {
+            let (s, peer) = listener.accept()?;
+            if peer == local {
+                break s;
+            }
+        };
+        r.set_nonblocking(true)?;
+        w.set_nonblocking(true)?;
+        w.set_nodelay(true)?;
+        Ok(Waker { r, w })
+    }
+
+    /// The fd to register (read interest) in the owning shard's poller.
+    #[cfg(unix)]
+    pub fn fd(&self) -> i32 {
+        use std::os::fd::AsRawFd;
+        self.r.as_raw_fd()
+    }
+
+    #[cfg(not(unix))]
+    pub fn fd(&self) -> i32 {
+        -1
+    }
+
+    /// Wake the owning shard. Callable from any thread; never blocks
+    /// (`WouldBlock` means wakeups are already pending — coalesced).
+    pub fn wake(&self) {
+        use std::io::Write;
+        let _ = (&self.w).write(&[1u8]);
+    }
+
+    /// Drain pending wake bytes (the shard, after its `wait` returns).
+    pub fn drain(&self) {
+        use std::io::Read;
+        let mut buf = [0u8; 256];
+        loop {
+            match (&self.r).read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+    }
+}
+
+/// The raw fd of a std TCP stream — the registration handle for
+/// [`Poller::add`] / [`readv`]. Off-unix returns -1 (the poller stub
+/// never accepts registrations there anyway).
+#[cfg(unix)]
+pub fn raw_fd(stream: &TcpStream) -> i32 {
+    use std::os::fd::AsRawFd;
+    stream.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd(_stream: &TcpStream) -> i32 {
+    -1
+}
+
+/// Scatter-read from `fd` into up to two spans (a receive ring's free
+/// space) in one syscall. Returns the byte count; 0 means EOF. Spans of
+/// length zero are skipped.
+#[cfg(unix)]
+pub fn readv(fd: i32, a: &mut [u8], b: &mut [u8]) -> io::Result<usize> {
+    #[repr(C)]
+    struct IoVec {
+        base: *mut std::ffi::c_void,
+        len: usize,
+    }
+    extern "C" {
+        fn readv(fd: i32, iov: *const IoVec, iovcnt: i32) -> isize;
+    }
+    let mut iov = [
+        IoVec { base: a.as_mut_ptr() as *mut _, len: a.len() },
+        IoVec { base: b.as_mut_ptr() as *mut _, len: b.len() },
+    ];
+    let mut cnt = 0usize;
+    for i in [0, 1] {
+        if iov[i].len > 0 {
+            iov.swap(cnt, i);
+            cnt += 1;
+        }
+    }
+    if cnt == 0 {
+        return Ok(0);
+    }
+    // Safety: both spans are valid writable memory for the call's duration.
+    let n = unsafe { readv(fd, iov.as_ptr(), cnt as i32) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+#[cfg(not(unix))]
+pub fn readv(_fd: i32, _a: &mut [u8], _b: &mut [u8]) -> io::Result<usize> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "readv requires a unix host"))
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let (l, port) = crate::net::tcp::listen_loopback().unwrap();
+        let a = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[cfg(unix)]
+    fn fd_of(s: &TcpStream) -> i32 {
+        use std::os::fd::AsRawFd;
+        s.as_raw_fd()
+    }
+
+    #[test]
+    fn readable_when_bytes_arrive_and_hangup_on_close() {
+        let (mut a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(fd_of(&b), 7, true, false).unwrap();
+        let mut evs = Vec::new();
+
+        // Nothing pending: a short wait times out empty.
+        poller.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.is_empty());
+
+        a.write_all(b"hi").unwrap();
+        poller.wait(&mut evs, Some(Duration::from_secs(2))).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.readable), "{evs:?}");
+
+        let mut buf = [0u8; 8];
+        assert_eq!((&b).read(&mut buf).unwrap(), 2);
+        drop(a);
+        poller.wait(&mut evs, Some(Duration::from_secs(2))).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.hangup), "{evs:?}");
+    }
+
+    #[test]
+    fn write_interest_reports_writable() {
+        let (a, _b) = pair();
+        a.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(fd_of(&a), 3, false, true).unwrap();
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, Some(Duration::from_secs(2))).unwrap();
+        assert!(evs.iter().any(|e| e.token == 3 && e.writable), "{evs:?}");
+        // Dropping write interest silences the (always-ready) socket.
+        poller.modify(fd_of(&a), 3, false, false).unwrap();
+        poller.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.iter().all(|e| !e.writable), "{evs:?}");
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let waker = Waker::new().unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(waker.fd(), u64::MAX, true, false).unwrap();
+        let mut evs = Vec::new();
+        waker.wake();
+        waker.wake(); // coalesces, never blocks
+        poller.wait(&mut evs, Some(Duration::from_secs(2))).unwrap();
+        assert!(evs.iter().any(|e| e.token == u64::MAX && e.readable));
+        waker.drain();
+        poller.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+        assert!(evs.is_empty(), "drained waker must go quiet: {evs:?}");
+    }
+
+    #[test]
+    fn readv_scatters_across_two_spans() {
+        let (mut a, b) = pair();
+        a.write_all(b"abcdefgh").unwrap();
+        // Give loopback a moment to deliver.
+        std::thread::sleep(Duration::from_millis(20));
+        let mut x = [0u8; 3];
+        let mut y = [0u8; 16];
+        let n = readv(fd_of(&b), &mut x, &mut y).unwrap();
+        assert_eq!(n, 8);
+        assert_eq!(&x, b"abc");
+        assert_eq!(&y[..5], b"defgh");
+        // Empty first span is skipped, not an error.
+        a.write_all(b"xy").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let mut none: [u8; 0] = [];
+        let n = readv(fd_of(&b), &mut none, &mut y).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(&y[..2], b"xy");
+    }
+}

@@ -233,6 +233,259 @@ pub fn read_packet_with<S: Read>(
     Ok(Packet { msg, payload })
 }
 
+/// Default capacity for a per-connection [`RecvRing`]: big enough that
+/// one `readv` drains dozens of small commands, small enough that 10k
+/// idle connections cost well under a GiB.
+pub const RECV_RING_BYTES: usize = 64 << 10;
+
+/// Fixed-capacity byte ring between the socket and the incremental
+/// decoder. The socket side asks for the (up to two) free spans via
+/// [`RecvRing::free_segments`] — shaped exactly for a two-iovec
+/// `readv` — and [`RecvRing::commit`]s whatever the syscall delivered;
+/// the decoder side [`RecvRing::pop_into`]s buffered bytes out. A frame
+/// section larger than the ring is fine: the decoder accumulates across
+/// refills.
+pub struct RecvRing {
+    buf: Box<[u8]>,
+    head: usize,
+    len: usize,
+}
+
+impl RecvRing {
+    pub fn new(capacity: usize) -> RecvRing {
+        assert!(capacity > 0);
+        RecvRing {
+            buf: vec![0u8; capacity].into_boxed_slice(),
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The free space as up to two mutable spans (second may be empty),
+    /// in fill order. Fill front-to-back, then [`RecvRing::commit`] the
+    /// byte count.
+    pub fn free_segments(&mut self) -> (&mut [u8], &mut [u8]) {
+        if self.len == 0 {
+            // Empty ring: restart at offset 0 so the common case is one
+            // contiguous span (and one iovec).
+            self.head = 0;
+            return (&mut self.buf[..], &mut [][..]);
+        }
+        let cap = self.buf.len();
+        let tail = (self.head + self.len) % cap;
+        if tail < self.head {
+            // Data wraps; free space is the single gap between them.
+            (&mut self.buf[tail..self.head], &mut [][..])
+        } else {
+            // Data is contiguous; free space wraps: [tail..cap) + [0..head).
+            let head = self.head;
+            let (left, right) = self.buf.split_at_mut(tail);
+            (right, &mut left[..head])
+        }
+    }
+
+    /// Record that the filler wrote `n` bytes into the spans returned by
+    /// the matching [`RecvRing::free_segments`] call.
+    pub fn commit(&mut self, n: usize) {
+        debug_assert!(self.len + n <= self.buf.len());
+        self.len += n;
+    }
+
+    /// Copy `src` in through the span API (tests and non-`readv` fills).
+    /// Panics if `src` exceeds the free space.
+    pub fn push_slice(&mut self, src: &[u8]) {
+        let (a, b) = self.free_segments();
+        assert!(src.len() <= a.len() + b.len(), "ring overflow");
+        let n1 = src.len().min(a.len());
+        a[..n1].copy_from_slice(&src[..n1]);
+        b[..src.len() - n1].copy_from_slice(&src[n1..]);
+        self.commit(src.len());
+    }
+
+    /// Move up to `dst.len()` buffered bytes out, oldest first. Returns
+    /// the count moved (0 when the ring is empty).
+    pub fn pop_into(&mut self, dst: &mut [u8]) -> usize {
+        let n = dst.len().min(self.len);
+        if n == 0 {
+            return 0;
+        }
+        let cap = self.buf.len();
+        let first = n.min(cap - self.head);
+        dst[..first].copy_from_slice(&self.buf[self.head..self.head + first]);
+        dst[first..n].copy_from_slice(&self.buf[..n - first]);
+        self.head = (self.head + n) % cap;
+        self.len -= n;
+        if self.len == 0 {
+            self.head = 0;
+        }
+        n
+    }
+}
+
+enum DecodeStage {
+    /// Accumulating the 4-byte size field.
+    Size,
+    /// Accumulating the command struct (`scratch[..want]`).
+    Struct { want: usize },
+    /// Accumulating the payload into the pending packet's allocation.
+    Payload { msg: Msg },
+}
+
+/// Incremental, resumable counterpart of [`read_packet_with`]: consumes
+/// whatever bytes a [`RecvRing`] holds and yields a [`Packet`] whenever
+/// one completes, preserving the blocking reader's exact validation
+/// rules (and error text). State persists across calls, so frames split
+/// at any byte boundary — across `readv` chunks, TCP segments, ring
+/// wraps — reassemble identically.
+///
+/// Large payloads can bypass the ring: while a payload is pending,
+/// [`FrameDecoder::payload_tail`] exposes the unfilled remainder of the
+/// packet's own allocation for direct socket reads (no double copy),
+/// reported back via [`FrameDecoder::note_filled`].
+pub struct FrameDecoder {
+    stage: DecodeStage,
+    have: usize,
+    szb: [u8; 4],
+    /// Struct-bytes scratch, reused across packets (mirrors the
+    /// caller-owned scratch of [`read_packet_with`]).
+    scratch: Vec<u8>,
+    /// Pending payload allocation — becomes the packet's [`Bytes`].
+    payload: Vec<u8>,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder {
+            stage: DecodeStage::Size,
+            have: 0,
+            szb: [0u8; 4],
+            scratch: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    /// Drive the decoder forward with bytes from `ring`. Returns
+    /// `Ok(Some(_))` when a packet completed, `Ok(None)` when more bytes
+    /// are needed, `Err` on a malformed frame (connection-fatal, exactly
+    /// as for the blocking reader).
+    pub fn next_packet(&mut self, ring: &mut RecvRing) -> std::io::Result<Option<Packet>> {
+        loop {
+            match &mut self.stage {
+                DecodeStage::Size => {
+                    self.have += ring.pop_into(&mut self.szb[self.have..]);
+                    if self.have < 4 {
+                        return Ok(None);
+                    }
+                    let sz = u32::from_le_bytes(self.szb);
+                    if sz == 0 || sz > MAX_CMD_BYTES {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("command size {sz} out of range"),
+                        ));
+                    }
+                    self.scratch.clear();
+                    self.scratch.resize(sz as usize, 0);
+                    self.have = 0;
+                    self.stage = DecodeStage::Struct { want: sz as usize };
+                }
+                DecodeStage::Struct { want } => {
+                    let want = *want;
+                    self.have += ring.pop_into(&mut self.scratch[self.have..want]);
+                    if self.have < want {
+                        return Ok(None);
+                    }
+                    let msg = Msg::decode(&self.scratch).map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    })?;
+                    let plen = msg.payload_len();
+                    if plen > MAX_PAYLOAD {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("payload {plen} exceeds cap"),
+                        ));
+                    }
+                    self.have = 0;
+                    if plen == 0 {
+                        self.stage = DecodeStage::Size;
+                        return Ok(Some(Packet::bare(msg)));
+                    }
+                    self.payload = vec![0u8; plen as usize];
+                    self.stage = DecodeStage::Payload { msg };
+                }
+                DecodeStage::Payload { .. } => {
+                    // Completion is checked before draining the ring: a
+                    // direct read via `payload_tail` may already have
+                    // finished the payload while the ring sits empty.
+                    if self.have < self.payload.len() {
+                        let have = self.have;
+                        self.have += ring.pop_into(&mut self.payload[have..]);
+                    }
+                    if self.have < self.payload.len() {
+                        return Ok(None);
+                    }
+                    let msg = match std::mem::replace(&mut self.stage, DecodeStage::Size) {
+                        DecodeStage::Payload { msg } => msg,
+                        _ => unreachable!(),
+                    };
+                    self.have = 0;
+                    let payload = Bytes::from(std::mem::take(&mut self.payload));
+                    return Ok(Some(Packet { msg, payload }));
+                }
+            }
+        }
+    }
+
+    /// While a payload is pending: the unfilled tail of its allocation,
+    /// for reading socket bytes straight into place (skip the ring for
+    /// bulk data). `None` between payloads. Call
+    /// [`FrameDecoder::note_filled`] with the bytes delivered, then
+    /// [`FrameDecoder::next_packet`] to (maybe) complete the packet.
+    pub fn payload_tail(&mut self) -> Option<&mut [u8]> {
+        match self.stage {
+            DecodeStage::Payload { .. } if self.have < self.payload.len() => {
+                Some(&mut self.payload[self.have..])
+            }
+            _ => None,
+        }
+    }
+
+    /// Record `n` bytes written into [`FrameDecoder::payload_tail`].
+    pub fn note_filled(&mut self, n: usize) {
+        debug_assert!(matches!(self.stage, DecodeStage::Payload { .. }));
+        debug_assert!(self.have + n <= self.payload.len());
+        self.have += n;
+    }
+
+    /// Bytes still needed to finish the pending payload (0 when not in
+    /// the payload stage) — lets the reader decide ring vs direct read.
+    pub fn payload_remaining(&self) -> usize {
+        match self.stage {
+            DecodeStage::Payload { .. } => self.payload.len() - self.have,
+            _ => 0,
+        }
+    }
+
+    /// True when the decoder sits at a packet boundary (no partial frame
+    /// buffered) — e.g. to distinguish clean EOF from a truncated frame.
+    pub fn at_boundary(&self) -> bool {
+        matches!(self.stage, DecodeStage::Size) && self.have == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,5 +673,184 @@ mod tests {
         assert_eq!(p1.msg, big);
         assert_eq!(p2.msg.body, Body::Barrier);
         assert_eq!(scratch.capacity(), cap_after_big, "no shrink/realloc");
+    }
+
+    fn sample_packets() -> Vec<Packet> {
+        let mk = |i: u64, payload: &[u8]| Packet {
+            msg: Msg {
+                cmd_id: i,
+                queue: (i % 3) as u32,
+                device: 0,
+                event: 50 + i,
+                wait: (0..i % 4).collect(),
+                body: Body::WriteBuffer {
+                    buf: i,
+                    offset: 0,
+                    len: payload.len() as u64,
+                },
+            },
+            payload: Bytes::copy_from_slice(payload),
+        };
+        let big = vec![0xABu8; 5000];
+        vec![
+            Packet::bare(Msg::control(Body::Barrier)),
+            mk(1, b"x"),
+            mk(2, &[7u8; 300]),
+            Packet::bare(Msg::control(Body::ReadBuffer {
+                buf: 3,
+                offset: 4,
+                len: 8,
+            })),
+            mk(3, &big),
+        ]
+    }
+
+    fn wire_of(pkts: &[Packet]) -> Vec<u8> {
+        let mut wire = Vec::new();
+        for p in pkts {
+            write_packet(&mut wire, &p.msg, &p.payload).unwrap();
+        }
+        wire
+    }
+
+    /// Feed `wire` through the incremental decoder in chunks of the given
+    /// sizes (cycled), asserting the decoded sequence matches `pkts`.
+    fn decode_chunked(wire: &[u8], chunk_sizes: &[usize], ring_cap: usize, pkts: &[Packet]) {
+        let mut ring = RecvRing::new(ring_cap);
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        let mut ci = 0usize;
+        while off < wire.len() || !ring.is_empty() {
+            if off < wire.len() {
+                let want = chunk_sizes[ci % chunk_sizes.len()].max(1);
+                ci += 1;
+                let free = {
+                    let (a, b) = ring.free_segments();
+                    a.len() + b.len()
+                };
+                let n = want.min(free).min(wire.len() - off);
+                ring.push_slice(&wire[off..off + n]);
+                off += n;
+            }
+            while let Some(p) = dec.next_packet(&mut ring).unwrap() {
+                got.push(p);
+            }
+        }
+        assert_eq!(got.len(), pkts.len());
+        for (g, w) in got.iter().zip(pkts) {
+            assert_eq!(g, w);
+        }
+        assert!(dec.at_boundary(), "no partial frame may remain");
+    }
+
+    #[test]
+    fn incremental_decoder_handles_any_split() {
+        let pkts = sample_packets();
+        let wire = wire_of(&pkts);
+        // Byte-at-a-time: every possible split point in one run.
+        decode_chunked(&wire, &[1], 64, &pkts);
+        // Odd prime-ish strides force ring wraps at shifting offsets.
+        decode_chunked(&wire, &[7, 13, 1, 31, 3], 64, &pkts);
+        // Big gulps with a realistic ring.
+        decode_chunked(&wire, &[4096], RECV_RING_BYTES, &pkts);
+    }
+
+    #[test]
+    fn payload_larger_than_ring_accumulates_across_refills() {
+        let pkts = sample_packets(); // includes a 5000-byte payload
+        let wire = wire_of(&pkts);
+        decode_chunked(&wire, &[48], 48, &pkts);
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_what_blocking_reader_rejects() {
+        // Zero-size frame.
+        let mut ring = RecvRing::new(64);
+        ring.push_slice(&0u32.to_le_bytes());
+        assert!(FrameDecoder::new().next_packet(&mut ring).is_err());
+        // Oversized command struct.
+        let mut ring = RecvRing::new(64);
+        ring.push_slice(&(MAX_CMD_BYTES + 1).to_le_bytes());
+        assert!(FrameDecoder::new().next_packet(&mut ring).is_err());
+    }
+
+    #[test]
+    fn payload_tail_supports_direct_fills() {
+        let msg = Msg {
+            cmd_id: 4,
+            queue: 1,
+            device: 0,
+            event: 9,
+            wait: vec![],
+            body: Body::WriteBuffer {
+                buf: 1,
+                offset: 0,
+                len: 10,
+            },
+        };
+        let mut wire = Vec::new();
+        write_packet(&mut wire, &msg, b"0123456789").unwrap();
+        // Split: headers via the ring, payload via direct fills.
+        let header_len = wire.len() - 10;
+        let mut ring = RecvRing::new(64);
+        let mut dec = FrameDecoder::new();
+        ring.push_slice(&wire[..header_len]);
+        assert!(dec.next_packet(&mut ring).unwrap().is_none());
+        assert_eq!(dec.payload_remaining(), 10);
+        let tail = dec.payload_tail().unwrap();
+        tail[..4].copy_from_slice(&wire[header_len..header_len + 4]);
+        dec.note_filled(4);
+        assert!(dec.next_packet(&mut ring).unwrap().is_none());
+        let tail = dec.payload_tail().unwrap();
+        assert_eq!(tail.len(), 6);
+        tail.copy_from_slice(&wire[header_len + 4..]);
+        dec.note_filled(6);
+        let pkt = dec.next_packet(&mut ring).unwrap().unwrap();
+        assert_eq!(pkt.msg, msg);
+        assert_eq!(pkt.payload, b"0123456789");
+        assert!(dec.payload_tail().is_none());
+    }
+
+    #[test]
+    fn ring_pop_and_free_segments_stay_consistent_across_wraps() {
+        let mut ring = RecvRing::new(8);
+        let mut out = Vec::new();
+        let mut next = 0u8;
+        let mut expect = 0u8;
+        // Push/pop mismatched sizes for long enough to cross the wrap
+        // boundary many times; the byte sequence must come out in order.
+        for step in 0..200 {
+            let push = 1 + (step * 3) % 5;
+            let data: Vec<u8> = (0..push)
+                .map(|_| {
+                    let v = next;
+                    next = next.wrapping_add(1);
+                    v
+                })
+                .collect();
+            let free = {
+                let (a, b) = ring.free_segments();
+                a.len() + b.len()
+            };
+            let n = push.min(free);
+            ring.push_slice(&data[..n]);
+            next = next.wrapping_sub((push - n) as u8); // un-consume
+            let mut buf = [0u8; 3];
+            let got = ring.pop_into(&mut buf);
+            out.extend_from_slice(&buf[..got]);
+        }
+        let mut buf = [0u8; 8];
+        loop {
+            let got = ring.pop_into(&mut buf);
+            if got == 0 {
+                break;
+            }
+            out.extend_from_slice(&buf[..got]);
+        }
+        for b in out {
+            assert_eq!(b, expect);
+            expect = expect.wrapping_add(1);
+        }
     }
 }

@@ -22,5 +22,5 @@ pub mod wire;
 pub use command::{Body, EventStatus, Msg, Packet, SessionId, Timestamps, ROLE_CLIENT, ROLE_PEER};
 pub use frame::{
     read_packet, read_packet_with, write_packet, write_packet_with, write_packets,
-    write_packets_paced,
+    write_packets_paced, FrameDecoder, RecvRing,
 };

@@ -216,6 +216,83 @@ pub fn session_scaling_cmds_per_sec(
     (total_q * cmds_per_queue) as f64 / done
 }
 
+/// Readiness-core UE scaling (the paper's server-side-scalability claim
+/// taken to MEC scale): `n_ues` sessions, one control stream each,
+/// driving `cmds_per_ue` small commands through `n_shards` I/O shard
+/// threads, the shared routing slice, and `n_devices` device workers.
+///
+/// Where [`session_scaling_cmds_per_sec`] charged each stream its own
+/// dedicated reader (thread-per-stream — a private resource per stream,
+/// so the *server-side resource count grew with the UE count*), the
+/// readiness core multiplexes every socket onto a fixed shard pool: a
+/// command's receive cost — epoll dequeue, `readv` into the ring,
+/// incremental decode, amortized over a readiness batch — lands on the
+/// shard its connection is pinned to (round-robin assignment), so the
+/// server runs shards + dispatcher + device workers no matter how many
+/// UEs attach. The dispatch plane is untouched by the refactor: routing
+/// and execution slices are identical to the session model. Returns
+/// aggregate commands/second.
+pub fn ue_scaling_cmds_per_sec(
+    n_ues: usize,
+    cmds_per_ue: usize,
+    n_shards: usize,
+    n_devices: usize,
+) -> f64 {
+    // Client-side encode + write syscalls per command (each UE is its
+    // own machine — writers never contend across UEs).
+    let writer_cost = 2.0 * SYSCALL_S;
+    // Shard slice per command: readiness dequeue + readv + incremental
+    // decode, amortized across the batch one wakeup drains.
+    let shard_cost = 0.35e-6;
+    // Shared dispatcher routing + per-device worker execution, exactly
+    // as in `session_scaling_cmds_per_sec`.
+    let route_cost = 0.15e-6;
+    let exec_cost = 0.85e-6;
+
+    let n_shards = n_shards.max(1);
+    let n_devices = n_devices.max(1);
+    let mut des = Des::new();
+    let mut done = 0.0f64;
+    // Round-robin across UEs (command i of every UE before command i+1
+    // of any): concurrent UEs interleave at the shared resources.
+    let mut enqueue_t = vec![0.0f64; n_ues];
+    for _ in 0..cmds_per_ue {
+        for u in 0..n_ues {
+            let w = format!("ue{u}");
+            let shard = format!("shard{}", u % n_shards);
+            let dev = format!("dev{}", u % n_devices);
+            let sent = des.schedule(&w, enqueue_t[u], writer_cost);
+            let rcvd = des.schedule(&shard, sent, shard_cost);
+            let routed = des.schedule("dispatch", rcvd, route_cost);
+            let disp = des.schedule(&dev, routed, exec_cost);
+            enqueue_t[u] = sent;
+            done = done.max(disp);
+        }
+    }
+    (n_ues * cmds_per_ue) as f64 / done
+}
+
+/// Daemon thread inventory as a function of connected-UE count: the
+/// readiness core's O(shards + devices) invariant vs the
+/// thread-per-stream transport it replaced (one reader + one writer
+/// thread per connected stream). Fixed threads: dispatcher, acceptor,
+/// session janitor, migration planner. Per device: runtime executor,
+/// dispatch worker, completion forwarder.
+pub fn daemon_thread_count(
+    n_ues: usize,
+    n_shards: usize,
+    n_devices: usize,
+    thread_per_stream: bool,
+) -> usize {
+    let fixed = 4;
+    let devices = 3 * n_devices;
+    if thread_per_stream {
+        fixed + devices + 2 * n_ues
+    } else {
+        fixed + devices + n_shards
+    }
+}
+
 /// Per-command round-trip overhead (µs, loopback — no link terms) of the
 /// framing/copy discipline, the model behind `BENCH_command_latency.json`:
 ///
@@ -425,6 +502,43 @@ mod tests {
         // Sessions crowded onto one device flatten against the worker.
         let crowded = session_scaling_cmds_per_sec(4, 2, 500, 1);
         assert!(crowded < four, "{crowded} vs {four}");
+    }
+
+    #[test]
+    fn ue_scaling_saturates_without_collapsing() {
+        // Past saturation the bottleneck resource (4 devices at 0.85 µs,
+        // i.e. ~0.2125 µs/cmd effective) pins aggregate throughput; piling
+        // on 10x the UEs must neither help nor hurt it.
+        let k1 = ue_scaling_cmds_per_sec(1_000, 20, 4, 4);
+        let k10 = ue_scaling_cmds_per_sec(10_000, 4, 4, 4);
+        let ceiling = 4.0 / 0.85e-6;
+        assert!(k1 < ceiling, "{k1} exceeds the device ceiling");
+        assert!(k1 > ceiling * 0.8, "{k1} far below the device ceiling");
+        assert!(
+            (k10 / k1 - 1.0).abs() < 0.1,
+            "throughput collapsed under 10x UEs: {k1} vs {k10}"
+        );
+        // More shards only help until the next shared slice caps; fewer
+        // shards become the bottleneck themselves.
+        let starved = ue_scaling_cmds_per_sec(1_000, 20, 1, 4);
+        assert!(starved < 1.0 / 0.35e-6 * 1.01, "{starved}");
+        assert!(starved < k1, "{starved} vs {k1}");
+    }
+
+    #[test]
+    fn ue_thread_inventory_is_flat_for_the_readiness_core() {
+        // O(shards + devices): the count is independent of UE count...
+        assert_eq!(
+            daemon_thread_count(10, 4, 4, false),
+            daemon_thread_count(100_000, 4, 4, false)
+        );
+        // ...where thread-per-stream pays 2 threads per UE.
+        assert_eq!(
+            daemon_thread_count(100_000, 4, 4, true)
+                - daemon_thread_count(0, 4, 4, true),
+            200_000
+        );
+        assert!(daemon_thread_count(100_000, 4, 4, false) < 32);
     }
 
     #[test]

@@ -6,10 +6,8 @@
 //! the caller's allocation) is pinned by the unit test in
 //! `client/server_conn.rs`.
 
-use std::sync::mpsc::channel;
-
 use poclr::client::{ClientConfig, Platform};
-use poclr::daemon::state::DaemonState;
+use poclr::daemon::state::{DaemonState, Outbox};
 use poclr::daemon::{Daemon, DaemonConfig};
 use poclr::proto::{Body, Msg, Packet, Timestamps};
 use poclr::runtime::Manifest;
@@ -24,10 +22,10 @@ fn peer_broadcast_shares_one_payload_allocation() {
     // A migration push fanned out to N peers used to clone the payload N
     // times; now every peer writer's packet is a view of one allocation.
     let state = bare_state();
-    let (tx1, rx1) = channel();
-    let (tx2, rx2) = channel();
-    state.peer_txs.lock().unwrap().insert(1, tx1);
-    state.peer_txs.lock().unwrap().insert(2, tx2);
+    let ob1 = Outbox::detached();
+    let ob2 = Outbox::detached();
+    state.peer_txs.lock().unwrap().insert(1, ob1.clone());
+    state.peer_txs.lock().unwrap().insert(2, ob2.clone());
 
     let payload = Bytes::copy_from_slice(&[0x5A; 1 << 16]);
     let pkt = Packet {
@@ -41,11 +39,12 @@ fn peer_broadcast_shares_one_payload_allocation() {
     };
     state.broadcast_to_peers(&pkt);
 
-    for rx in [rx1, rx2] {
-        let got = rx.try_recv().expect("peer writer received the push");
-        assert_eq!(got.payload, payload);
+    for ob in [ob1, ob2] {
+        let mut got = Vec::new();
+        assert_eq!(ob.take_batch(8, &mut got), 1, "peer outbox received the push");
+        assert_eq!(got[0].payload, payload);
         assert!(
-            Bytes::ptr_eq(&got.payload, &payload),
+            Bytes::ptr_eq(&got[0].payload, &payload),
             "peer broadcast must share the allocation, not copy it"
         );
     }
@@ -63,8 +62,8 @@ fn completion_routing_shares_the_store_copy() {
     assert_eq!(payload, vec![9u8; 64]);
 
     let (sess, _) = state.sessions.attach([0u8; 16]).unwrap();
-    let (tx, rx) = channel();
-    sess.client_txs.lock().unwrap().insert(3, (1, tx));
+    let ob = Outbox::detached();
+    sess.client_txs.lock().unwrap().insert(3, (1, ob.clone()));
     sess.send_on(
         3,
         Packet {
@@ -77,9 +76,10 @@ fn completion_routing_shares_the_store_copy() {
             payload: payload.clone(),
         },
     );
-    let got = rx.try_recv().expect("stream writer received the completion");
+    let mut got = Vec::new();
+    assert_eq!(ob.take_batch(8, &mut got), 1, "stream outbox received the completion");
     assert!(
-        Bytes::ptr_eq(&got.payload, &payload),
+        Bytes::ptr_eq(&got[0].payload, &payload),
         "completion routing must share the store copy-out"
     );
 }

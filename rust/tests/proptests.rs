@@ -155,6 +155,103 @@ fn prop_vectored_framing_matches_legacy_three_write_framing() {
 }
 
 #[test]
+fn prop_incremental_decoder_matches_legacy_reader_at_any_split() {
+    // The readiness core's resumable decoder must be observationally
+    // identical to the blocking `read_packet_with` reader: random packet
+    // sequences, serialized once, then re-fed in chunks split at arbitrary
+    // byte boundaries — through a deliberately tiny ring so frames
+    // straddle refills and ring wraps — must decode to the same packets.
+    // The direct-into-payload fast path (ring bypass for bulk payloads)
+    // is exercised on random turns too.
+    use poclr::proto::{read_packet_with, write_packet, FrameDecoder, Packet, RecvRing};
+    use poclr::util::Bytes;
+
+    let mut rng = Rng::new(0x0DEC0DE5);
+    for case in 0..30 {
+        let n_pkts = rng.gen_range(1, 24) as usize;
+        let pkts: Vec<Packet> = (0..n_pkts)
+            .map(|_| {
+                let msg = arb_msg(&mut rng);
+                let payload: Vec<u8> = (0..msg.payload_len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect();
+                Packet {
+                    msg,
+                    payload: Bytes::from(payload),
+                }
+            })
+            .collect();
+
+        let mut wire = Vec::new();
+        for p in &pkts {
+            write_packet(&mut wire, &p.msg, &p.payload).unwrap();
+        }
+
+        // Reference decode with the legacy blocking reader.
+        let mut cur = wire.as_slice();
+        let mut scratch = Vec::new();
+        let legacy: Vec<Packet> = (0..pkts.len())
+            .map(|_| {
+                read_packet_with(&mut cur, &mut scratch)
+                    .unwrap_or_else(|e| panic!("case {case}: legacy reader: {e}"))
+            })
+            .collect();
+        assert!(cur.is_empty(), "case {case}: legacy reader left bytes");
+
+        // Incremental decode. A 257-byte ring is far smaller than most
+        // frames, so struct and payload sections routinely span many
+        // refills (and wrap the ring at a prime stride).
+        let mut ring = RecvRing::new(257);
+        let mut dec = FrameDecoder::new();
+        let mut got: Vec<Packet> = Vec::new();
+        let mut off = 0usize;
+        loop {
+            while let Some(p) = dec
+                .next_packet(&mut ring)
+                .unwrap_or_else(|e| panic!("case {case}: incremental decoder: {e}"))
+            {
+                got.push(p);
+            }
+            if off >= wire.len() {
+                break;
+            }
+            if ring.is_empty() && dec.payload_remaining() > 0 && rng.next_u32() % 2 == 0 {
+                // Daemon fast path: bulk payload bytes land straight in the
+                // packet allocation, bypassing the ring.
+                let n = {
+                    let tail = dec.payload_tail().expect("payload_remaining > 0");
+                    let n = tail
+                        .len()
+                        .min(wire.len() - off)
+                        .min(1 + (rng.next_u32() as usize % 4096));
+                    tail[..n].copy_from_slice(&wire[off..off + n]);
+                    n
+                };
+                dec.note_filled(n);
+                off += n;
+                continue;
+            }
+            let free = {
+                let (a, b) = ring.free_segments();
+                a.len() + b.len()
+            };
+            let n = free
+                .min(wire.len() - off)
+                .min(1 + (rng.next_u32() as usize % 173));
+            ring.push_slice(&wire[off..off + n]);
+            off += n;
+        }
+
+        assert_eq!(got.len(), legacy.len(), "case {case}: packet count diverged");
+        for (i, (g, l)) in got.iter().zip(&legacy).enumerate() {
+            assert_eq!(g, l, "case {case}: packet {i} diverged");
+        }
+        assert!(ring.is_empty(), "case {case}: trailing ring bytes");
+        assert!(dec.at_boundary(), "case {case}: decoder mid-frame at EOF");
+    }
+}
+
+#[test]
 fn prop_decode_never_panics_on_mutation() {
     // Flip random bytes in valid encodings; decode must error or succeed,
     // never panic, and never read out of bounds.

@@ -1,0 +1,159 @@
+//! Readiness-core contracts: the daemon's thread inventory is a function
+//! of shards + devices (never of connection or session count), silent
+//! sockets cannot pin resources past the handshake deadline, and a peer
+//! connection's death tears down its outbox (no writer parked forever).
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::proto::{read_packet, write_packet, Body, Msg, ROLE_CLIENT, ROLE_PEER};
+use poclr::runtime::Manifest;
+
+fn hello(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write_packet(
+        &mut s,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        }),
+        &[],
+    )
+    .unwrap();
+    let pkt = read_packet(&mut s).expect("handshake Welcome");
+    assert!(matches!(pkt.msg.body, Body::Welcome { .. }));
+    s
+}
+
+fn barrier(s: &mut TcpStream, event: u64) {
+    let msg = Msg {
+        cmd_id: 0,
+        queue: 0,
+        device: 0,
+        event,
+        wait: Vec::new(),
+        body: Body::Barrier,
+    };
+    write_packet(s, &msg, &[]).unwrap();
+    loop {
+        let pkt = read_packet(s).expect("stream died awaiting completion");
+        if let Body::Completion { event: ev, .. } = pkt.msg.body {
+            if ev == event {
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn sixty_four_sessions_spawn_zero_threads() {
+    // The scaling invariant behind the readiness core: attaching N
+    // sessions costs zero threads. Thread-per-stream would add 64 here.
+    let mut cfg = DaemonConfig::local(0, 1, Manifest::default());
+    cfg.io_shards = 2;
+    let d = Daemon::spawn(cfg).unwrap();
+    let addr = d.addr();
+
+    // Warm every lazily-started thread first (dispatch workers etc.) so
+    // the snapshot below isolates connection-driven spawns.
+    let mut warm = hello(&addr);
+    barrier(&mut warm, 1);
+
+    let before = d.state.n_threads();
+    let mut socks: Vec<TcpStream> = (0..64).map(|_| hello(&addr)).collect();
+    assert_eq!(
+        d.state.n_threads(),
+        before,
+        "attaching 64 sessions must not spawn threads"
+    );
+
+    // Every one of them is genuinely served by the fixed pool.
+    for (i, s) in socks.iter_mut().enumerate() {
+        barrier(s, 1000 + i as u64);
+    }
+    assert_eq!(
+        d.state.n_threads(),
+        before,
+        "serving 64 sessions must not spawn threads"
+    );
+    // 2 shards + dispatcher + janitor + accept + migration + O(devices)
+    // workers; nowhere near the 64+ a thread-per-stream daemon would run.
+    assert!(
+        before <= 16,
+        "thread inventory must stay O(shards + devices), got {before}"
+    );
+}
+
+#[test]
+fn silent_socket_is_closed_at_the_handshake_deadline() {
+    // A connection that never sends its Hello used to pin an accept-spawned
+    // thread forever; now the owning shard closes it when the deadline
+    // passes — and the acceptor keeps serving prompt clients.
+    let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+    cfg.handshake_timeout = Duration::from_millis(150);
+    let d = Daemon::spawn(cfg).unwrap();
+    let addr = d.addr();
+
+    let mut silent = TcpStream::connect(&addr).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(8))).unwrap();
+    let start = Instant::now();
+    let got = read_packet(&mut silent);
+    assert!(
+        got.is_err(),
+        "silent socket must be closed, not welcomed: {:?}",
+        got.map(|p| p.msg.body)
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(6),
+        "close came from the daemon's deadline, not our read timeout"
+    );
+
+    let mut prompt = hello(&addr);
+    barrier(&mut prompt, 7);
+}
+
+#[test]
+fn peer_death_closes_and_evicts_its_outbox() {
+    // Regression: a peer reader's exit used to leave the peer's writer
+    // thread parked on its channel forever. Teardown is now tied to the
+    // connection: the outbox closes and `peer_txs` drops its entry.
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let mut s = TcpStream::connect(d.addr()).unwrap();
+    write_packet(
+        &mut s,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_PEER,
+            peer_id: 42,
+        }),
+        &[],
+    )
+    .unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let ob = loop {
+        if let Some(ob) = d.state.peer_txs.lock().unwrap().get(&42).cloned() {
+            break ob;
+        }
+        assert!(Instant::now() < deadline, "peer never registered");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert!(!ob.is_closed());
+
+    drop(s);
+    loop {
+        let evicted = !d.state.peer_txs.lock().unwrap().contains_key(&42);
+        if evicted && ob.is_closed() {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "peer teardown incomplete: evicted={evicted}, closed={}",
+            ob.is_closed()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
