@@ -111,11 +111,16 @@ struct PausedCmd {
     pkt: Packet,
     dev: usize,
     key: StreamKey,
-    /// Whether a gate waiter callback is currently registered for this
-    /// pause. Consumed by [`ShardMsg::Unpause`]; re-registered on a
-    /// failed re-probe so a wedged gate holds at most one waiter per
-    /// paused connection.
-    waiter_armed: bool,
+    /// Generation of the gate waiter currently registered (armed) for
+    /// this pause, `None` when none is. Consumed by the matching-gen
+    /// [`ShardMsg::Unpause`]; re-registered on a failed re-probe. The
+    /// generation tag keeps the invariant "at most one *armed* waiter
+    /// per paused connection": a stale callback — from an earlier pause
+    /// of the same connection, resolved inline before its publish fired
+    /// — carries an old generation and cannot unarm the live
+    /// registration (which would make the next re-probe register a
+    /// duplicate, snowballing wakeups per publish).
+    waiter_gen: Option<u64>,
 }
 
 enum WriteOutcome {
@@ -155,6 +160,8 @@ pub struct Conn {
     /// connection closes right after its paused command is forwarded.
     hangup: bool,
     paused: Option<PausedCmd>,
+    /// Monotonic counter minting [`PausedCmd::waiter_gen`] tags.
+    waiter_gen: u64,
     role: Role,
     closed: bool,
 }
@@ -210,6 +217,7 @@ impl Conn {
             want_write: false,
             hangup: false,
             paused: None,
+            waiter_gen: 0,
             role,
             closed: false,
         })
@@ -569,18 +577,30 @@ impl Conn {
             pkt,
             dev,
             key,
-            waiter_armed: true,
+            waiter_gen: None,
         });
         self.set_read_interest(ctx, false);
-        let token = self.token;
-        let shard = Arc::clone(ctx.shard);
-        ctx.state.device_gates[dev].add_waiter(move || shard.inject(ShardMsg::Unpause(token)));
+        self.arm_gate_waiter(ctx, dev);
         if ctx.state.device_gates[dev].try_enter(key) {
             // Inline unpause; the decode loop continues naturally.
             return self.unpause(ctx, false);
         }
-        ctx.arm_timer(token, TimerKind::GateRetry, Instant::now() + GATE_RETRY);
+        ctx.arm_timer(self.token, TimerKind::GateRetry, Instant::now() + GATE_RETRY);
         true
+    }
+
+    /// Register a gate capacity waiter for the current pause, tagged
+    /// with a fresh generation (see [`PausedCmd::waiter_gen`]).
+    fn arm_gate_waiter(&mut self, ctx: &mut IoCtx, dev: usize) {
+        self.waiter_gen += 1;
+        let gen = self.waiter_gen;
+        if let Some(p) = &mut self.paused {
+            p.waiter_gen = Some(gen);
+        }
+        let token = self.token;
+        let shard = Arc::clone(ctx.shard);
+        ctx.state.device_gates[dev]
+            .add_waiter(move || shard.inject(ShardMsg::Unpause { token, gen }));
     }
 
     /// Forward the paused command (force-taking a slot when `force`) and
@@ -609,18 +629,21 @@ impl Conn {
         true
     }
 
-    /// Re-probe a paused connection's gate. `from_waiter` marks the
-    /// [`ShardMsg::Unpause`] fast path (consumes the registered waiter);
-    /// timer fires use `false` and re-arm themselves while the pause
-    /// lasts. Mirrors the old admission loop's exits: shutdown closes,
-    /// supersession force-forwards (bounded oversubscription, one
-    /// command per superseded connection — its replay cursor already
-    /// moved past the command, so no replayed copy will ever be
+    /// Re-probe a paused connection's gate. `from_waiter` carries the
+    /// [`ShardMsg::Unpause`] fast path's waiter generation (a matching
+    /// tag consumes the registered waiter; a stale one is just an extra
+    /// probe); timer fires pass `None` and re-arm themselves while the
+    /// pause lasts. Mirrors the old admission loop's exits: shutdown
+    /// closes, supersession force-forwards (bounded oversubscription,
+    /// one command per superseded connection — its replay cursor
+    /// already moved past the command, so no replayed copy will ever be
     /// admitted), a grant resumes.
-    pub fn retry_gate(&mut self, ctx: &mut IoCtx, from_waiter: bool) -> bool {
-        if from_waiter {
+    pub fn retry_gate(&mut self, ctx: &mut IoCtx, from_waiter: Option<u64>) -> bool {
+        if let Some(gen) = from_waiter {
             if let Some(p) = &mut self.paused {
-                p.waiter_armed = false;
+                if p.waiter_gen == Some(gen) {
+                    p.waiter_gen = None;
+                }
             }
         }
         let Some(p) = &self.paused else {
@@ -663,13 +686,8 @@ impl Conn {
         // Still full. Re-register a consumed waiter (and re-probe to
         // close the lost-wakeup window); keep exactly one retry timer
         // live by only re-arming from the timer path.
-        if !self.paused.as_ref().is_some_and(|p| p.waiter_armed) {
-            let token = self.token;
-            let shard = Arc::clone(ctx.shard);
-            ctx.state.device_gates[dev].add_waiter(move || shard.inject(ShardMsg::Unpause(token)));
-            if let Some(p) = &mut self.paused {
-                p.waiter_armed = true;
-            }
+        if self.paused.as_ref().is_some_and(|p| p.waiter_gen.is_none()) {
+            self.arm_gate_waiter(ctx, dev);
             if ctx.state.device_gates[dev].try_enter(key) {
                 if !self.unpause(ctx, false) {
                     return false;
@@ -677,7 +695,7 @@ impl Conn {
                 return self.on_readable(ctx);
             }
         }
-        if !from_waiter {
+        if from_waiter.is_none() {
             ctx.arm_timer(self.token, TimerKind::GateRetry, Instant::now() + GATE_RETRY);
         }
         true
@@ -851,6 +869,28 @@ impl Conn {
             return;
         }
         self.closed = true;
+        // A command paused at teardown time must still reach the
+        // dispatcher: its replay cursor already advanced (check_and_note
+        // ran before gate admission), so a dropped copy is gone forever
+        // — on reconnect the replayed command is ignored as a duplicate
+        // and anything waiting on its event deadlocks. Force-take the
+        // slot and forward, exactly as the supersession and
+        // hangup-while-paused paths do (reachable here via a dead write
+        // — flush hitting EPIPE while paused — and via shutdown, where
+        // the forward is harmless).
+        if let Some(PausedCmd { pkt, dev, key, .. }) = self.paused.take() {
+            if let Role::Client { sess, .. } = &self.role {
+                ctx.state.device_gates[dev].force_enter(key);
+                ctx.work_tx
+                    .send(Work::Packet {
+                        from_peer: None,
+                        session: Some(Arc::clone(sess)),
+                        pkt,
+                        via_rdma: false,
+                    })
+                    .ok();
+            }
+        }
         ctx.poller.remove(self.fd).ok();
         self.stream.shutdown(std::net::Shutdown::Both).ok();
         if let Some(ob) = &self.outbox {
@@ -893,5 +933,88 @@ impl Conn {
             }
             Role::Handshake => {}
         }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::daemon::shard::Shard;
+    use crate::daemon::state::DaemonState;
+    use crate::daemon::DaemonConfig;
+    use crate::runtime::Manifest;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    use std::sync::mpsc;
+
+    /// Drives a real socket pair through handshake and a gate pause with
+    /// no shard event loop (the test owns the [`Conn`] and calls its
+    /// entry points directly), then exercises the two pause-teardown
+    /// invariants: stale waiter generations never unarm the live
+    /// registration, and closing while paused forwards the stashed
+    /// command (its replay cursor already advanced, so a dropped copy
+    /// would be lost permanently).
+    #[test]
+    fn paused_connection_survives_stale_waiters_and_close() {
+        let state =
+            DaemonState::new(&mut DaemonConfig::local(0, 1, Manifest::default())).unwrap();
+        let poller = poll::Poller::new().unwrap();
+        let shard = Shard::for_tests(0);
+        let (work_tx, work_rx) = mpsc::channel();
+        let mut timers: BinaryHeap<Reverse<(Instant, u64, TimerKind)>> = BinaryHeap::new();
+        macro_rules! ctx {
+            () => {
+                IoCtx {
+                    poller: &poller,
+                    timers: &mut timers,
+                    state: &state,
+                    work_tx: &work_tx,
+                    shard: &shard,
+                }
+            };
+        }
+
+        let (l, port) = crate::net::tcp::listen_loopback().unwrap();
+        let _client = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let (server_side, _) = l.accept().unwrap();
+        let mut conn = Conn::adopt(server_side, 1, Seed::Incoming, &mut ctx!()).unwrap();
+        let (sess, _) = state.sessions.attach([0u8; 16]).unwrap();
+        assert!(conn.become_client(&mut ctx!(), Arc::clone(&sess), 1));
+
+        // Saturate this stream's share of device 0's gate, then feed a
+        // device-bound command: the connection must pause.
+        let key: StreamKey = (sess.id, 1);
+        while state.device_gates[0].try_enter(key) {}
+        let held = state.device_gates[0].held();
+        let mut msg = Msg::control(Body::WriteBuffer { buf: 1, offset: 0, len: 0 });
+        msg.cmd_id = 1;
+        msg.queue = 1;
+        msg.event = 7;
+        assert!(conn.on_client_packet(&mut ctx!(), Packet::bare(msg)));
+        assert!(conn.paused.is_some(), "full gate must pause the connection");
+
+        // A stale generation (an earlier pause's callback firing late)
+        // must not unarm the live waiter; the matching generation
+        // consumes it, and the still-full re-probe re-arms a fresh one.
+        let gen = conn.paused.as_ref().unwrap().waiter_gen.expect("pause arms a waiter");
+        assert!(conn.retry_gate(&mut ctx!(), Some(gen + 100)));
+        assert_eq!(conn.paused.as_ref().unwrap().waiter_gen, Some(gen));
+        assert!(conn.retry_gate(&mut ctx!(), Some(gen)));
+        let regen = conn.paused.as_ref().unwrap().waiter_gen.expect("re-probe re-arms");
+        assert_ne!(regen, gen);
+
+        // Teardown while paused (the dead-write close path): the stashed
+        // command force-takes its slot and reaches the dispatcher.
+        conn.close(&mut ctx!());
+        let Ok(Work::Packet { session: Some(s), pkt, .. }) = work_rx.try_recv() else {
+            panic!("paused command not forwarded on close");
+        };
+        assert!(Arc::ptr_eq(&s, &sess));
+        assert_eq!(pkt.msg.cmd_id, 1);
+        assert_eq!(
+            state.device_gates[0].held(),
+            held + 1,
+            "close force-takes the paused command's slot"
+        );
     }
 }

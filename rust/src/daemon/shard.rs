@@ -74,7 +74,9 @@ pub enum Seed {
 pub enum ShardMsg {
     Adopt { token: u64, stream: TcpStream, seed: Seed },
     Flush(u64),
-    Unpause(u64),
+    /// `gen` tags which waiter registration fired (stale generations
+    /// must not unarm a paused connection's live waiter).
+    Unpause { token: u64, gen: u64 },
 }
 
 /// One event-loop thread's shared handle: the inbox other threads push
@@ -95,6 +97,18 @@ impl Shard {
     /// Interrupt the shard's poll wait without a message (shutdown).
     pub fn wake(&self) {
         self.waker.wake();
+    }
+
+    /// A bare shard handle with no event loop behind it — for unit tests
+    /// that drive [`Conn`](super::connection::Conn) entry points
+    /// directly (injected messages accumulate in the inbox, unread).
+    #[cfg(test)]
+    pub(crate) fn for_tests(id: usize) -> Arc<Shard> {
+        Arc::new(Shard {
+            id,
+            inbox: Mutex::new(Vec::new()),
+            waker: Waker::new().unwrap(),
+        })
     }
 }
 
@@ -280,7 +294,7 @@ fn run_shard(shard: Arc<Shard>, state: Arc<DaemonState>, work_tx: Sender<Work>) 
                     with_conn!(token, |conn, ctx| conn.handshake_expired(&mut ctx))
                 }
                 TimerKind::GateRetry => {
-                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, false))
+                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, None))
                 }
                 TimerKind::Pace => with_conn!(token, |conn, ctx| conn.pace_due(&mut ctx)),
             }
@@ -337,8 +351,8 @@ fn run_shard(shard: Arc<Shard>, state: Arc<DaemonState>, work_tx: Sender<Work>) 
                 ShardMsg::Flush(token) => {
                     with_conn!(token, |conn, ctx| conn.flush(&mut ctx))
                 }
-                ShardMsg::Unpause(token) => {
-                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, true))
+                ShardMsg::Unpause { token, gen } => {
+                    with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, Some(gen)))
                 }
             }
         }

@@ -86,14 +86,17 @@ mod sys {
 
 /// Clamp an optional wait to the millisecond argument the syscalls take:
 /// `None` = block forever (-1); sub-millisecond waits round *up* so a
-/// 100 µs timer does not spin at 0 ms.
+/// 100 µs timer does not spin at 0 ms. Rounding happens before the
+/// saturation so a near-`i32::MAX`-ms wait with a sub-millisecond
+/// remainder cannot wrap negative (a negative value means "block
+/// forever" to the syscalls).
 #[cfg(unix)]
 fn timeout_ms(timeout: Option<Duration>) -> i32 {
     match timeout {
         None => -1,
         Some(d) => {
-            d.as_millis().min(i32::MAX as u128) as i32
-                + i32::from(d.subsec_nanos() % 1_000_000 != 0)
+            let ms = d.as_millis() + u128::from(d.subsec_nanos() % 1_000_000 != 0);
+            ms.min(i32::MAX as u128) as i32
         }
     }
 }
@@ -473,6 +476,24 @@ mod tests {
         waker.drain();
         poller.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
         assert!(evs.is_empty(), "drained waker must go quiet: {evs:?}");
+    }
+
+    #[test]
+    fn timeout_ms_rounds_up_and_saturates() {
+        assert_eq!(timeout_ms(None), -1);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(5))), 5);
+        // Sub-millisecond waits round up, never spin at 0.
+        assert_eq!(timeout_ms(Some(Duration::from_micros(100))), 1);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(2) + Duration::from_nanos(1))), 3);
+        // Huge waits saturate; a sub-ms remainder on a near-max wait
+        // must not wrap negative (negative means block forever).
+        assert_eq!(timeout_ms(Some(Duration::from_secs(u64::MAX))), i32::MAX);
+        assert_eq!(
+            timeout_ms(Some(
+                Duration::from_millis(i32::MAX as u64) + Duration::from_nanos(1)
+            )),
+            i32::MAX
+        );
     }
 
     #[test]

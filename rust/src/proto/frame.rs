@@ -280,6 +280,11 @@ impl RecvRing {
             return (&mut self.buf[..], &mut [][..]);
         }
         let cap = self.buf.len();
+        if self.len == cap {
+            // Full: tail == head would masquerade as the contiguous-data
+            // case below and hand out the occupied buffer as free space.
+            return (&mut [][..], &mut [][..]);
+        }
         let tail = (self.head + self.len) % cap;
         if tail < self.head {
             // Data wraps; free space is the single gap between them.
@@ -852,5 +857,28 @@ mod tests {
             assert_eq!(b, expect);
             expect = expect.wrapping_add(1);
         }
+    }
+
+    #[test]
+    fn ring_full_reports_no_free_space() {
+        // A completely full ring has tail == head, which must read as
+        // "no free space", never as "everything free" (that would let a
+        // fill overwrite unconsumed bytes).
+        let mut ring = RecvRing::new(8);
+        ring.push_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(ring.len(), 8);
+        let (a, b) = ring.free_segments();
+        assert!(a.is_empty() && b.is_empty(), "full ring offered free space");
+        // Same with the fill point wrapped past the origin.
+        let mut buf = [0u8; 3];
+        assert_eq!(ring.pop_into(&mut buf), 3);
+        ring.push_slice(&[9, 10, 11]);
+        assert_eq!(ring.len(), 8);
+        let (a, b) = ring.free_segments();
+        assert!(a.is_empty() && b.is_empty(), "full wrapped ring offered free space");
+        // Contents drain intact after the full stretch.
+        let mut out = [0u8; 8];
+        assert_eq!(ring.pop_into(&mut out), 8);
+        assert_eq!(out, [4, 5, 6, 7, 8, 9, 10, 11]);
     }
 }
