@@ -1,0 +1,129 @@
+//! Static vs latency-aware placement under skewed MEC load: the DES
+//! what-if behind the cluster scheduler (`sched::placement` +
+//! `daemon/cluster.rs`), swept across arrival skew and cluster size.
+//!
+//! The model is deterministic (no wall clock, no RNG): it replays the
+//! production `PlacementPolicy::place` scorer over load snapshots
+//! refreshed on the daemon's 2 ms `LoadReport` gossip cadence, so the
+//! numbers move only when the policy or the cost model does — which is
+//! exactly what makes them worth tracking in-tree.
+//!
+//! Writes `BENCH_placement.json` at the repo root. `--tiny` (or
+//! PLACEMENT_TINY=1) runs the CI-smoke-sized sweep (2k commands per
+//! point instead of 20k).
+
+use poclr::report;
+use poclr::sim::scenarios;
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny")
+        || std::env::var("PLACEMENT_TINY").is_ok();
+    let n_cmds = if tiny { 2_000 } else { 20_000 };
+
+    report::figure(
+        "Cluster placement",
+        "p99 command latency, static (arrival-server) vs latency-aware \
+         placement over gossiped load",
+    );
+
+    // Skew sweep: 4 servers, a growing share of arrivals aimed at one.
+    let mut stat = report::Series::new("static p99", "us");
+    let mut aware = report::Series::new("latency-aware p99", "us");
+    let mut skew_rows = Vec::new();
+    for skew in [25usize, 50, 80, 95] {
+        let p = scenarios::placement_tail_latency_us(4, n_cmds, skew);
+        stat.push(format!("skew {skew}%"), p.p99_static_us);
+        aware.push(format!("skew {skew}%"), p.p99_aware_us);
+        println!(
+            "  skew {skew:>3}%: static p99 {:>10.1} µs   aware p99 {:>7.1} µs \
+             ({:.0}x)   offloaded {:>4.1}%",
+            p.p99_static_us,
+            p.p99_aware_us,
+            p.p99_static_us / p.p99_aware_us.max(1.0),
+            p.offloaded_pct
+        );
+        skew_rows.push(p);
+    }
+    stat.print();
+    aware.print();
+
+    // Cluster-size sweep at 80% skew: two servers ride out the hot cell
+    // on their own; larger clusters need the scheduler to reach their
+    // idle capacity.
+    let mut size_rows = Vec::new();
+    for servers in [2usize, 4, 8] {
+        let p = scenarios::placement_tail_latency_us(servers, n_cmds, 80);
+        println!(
+            "  {servers} servers @ skew 80%: static p99 {:>10.1} µs   \
+             aware p99 {:>7.1} µs   offloaded {:>4.1}%",
+            p.p99_static_us, p.p99_aware_us, p.offloaded_pct
+        );
+        size_rows.push(p);
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"placement\",\n");
+    json.push_str(&format!(
+        "  \"mode\": \"{}\",\n",
+        if tiny { "modeled-tiny" } else { "modeled" }
+    ));
+    json.push_str(
+        "  \"note\": \"DES-modeled (sim::scenarios::placement_tail_latency_us): \
+         200 us kernels arriving at 60% aggregate utilization, skew_pct of \
+         them aimed at server 0; static runs every command on its arrival \
+         server, latency-aware runs the production PlacementPolicy::place \
+         scorer over load snapshots refreshed on the 2 ms LoadReport gossip \
+         cadence (stale between refreshes, with the scorer's staleness decay \
+         and the placer's own in-window accounting), offloaded commands \
+         paying a 200 us peer RTT. Deterministic: re-running `cargo bench \
+         --bench placement` reproduces this file exactly; --tiny (the CI \
+         smoke) uses 2k commands per point instead of 20k.\",\n",
+    );
+    json.push_str(&format!("  \"cmds_per_point\": {n_cmds},\n"));
+    json.push_str("  \"kernel_us\": 200,\n");
+    json.push_str("  \"gossip_ms\": 2,\n");
+    json.push_str("  \"utilization\": 0.6,\n");
+    json.push_str("  \"skew_sweep\": [\n");
+    for (i, p) in skew_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"servers\": {}, \"skew_pct\": {}, \
+             \"p50_static_us\": {:.1}, \"p99_static_us\": {:.1}, \
+             \"p50_aware_us\": {:.1}, \"p99_aware_us\": {:.1}, \
+             \"offloaded_pct\": {:.1}}}{}\n",
+            p.n_servers,
+            p.skew_pct,
+            p.p50_static_us,
+            p.p99_static_us,
+            p.p50_aware_us,
+            p.p99_aware_us,
+            p.offloaded_pct,
+            if i + 1 < skew_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"cluster_sweep\": [\n");
+    for (i, p) in size_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"servers\": {}, \"skew_pct\": {}, \
+             \"p50_static_us\": {:.1}, \"p99_static_us\": {:.1}, \
+             \"p50_aware_us\": {:.1}, \"p99_aware_us\": {:.1}, \
+             \"offloaded_pct\": {:.1}}}{}\n",
+            p.n_servers,
+            p.skew_pct,
+            p.p50_static_us,
+            p.p99_static_us,
+            p.p50_aware_us,
+            p.p99_aware_us,
+            p.offloaded_pct,
+            if i + 1 < size_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_placement.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

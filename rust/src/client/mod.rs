@@ -45,6 +45,7 @@ use anyhow::{bail, Context as _, Result};
 use crate::net::LinkProfile;
 use crate::ocl::Residency;
 use crate::proto::{Body, EventStatus, Timestamps};
+use crate::sched::placement::{decode_loads, ClusterSnapshot, PlacementPolicy, ServerLoad};
 use crate::sched::{EventTable, WaitOutcome};
 use crate::util::{fresh_id, Bytes};
 
@@ -83,6 +84,13 @@ pub struct ClientConfig {
     /// control stream — the pre-redesign single-connection baseline the
     /// queue-scaling benchmark compares against.
     pub per_queue_streams: bool,
+    /// Placement hint consulted by [`Platform::place`] /
+    /// [`Context::placed_queue`]: `Static` always picks the vantage
+    /// server (index 0), `LatencyAware` scores every server in the
+    /// cluster's load gossip by effective latency (link RTT + estimated
+    /// queue wait). The knob only steers *new* work — it never moves
+    /// commands already enqueued.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for ClientConfig {
@@ -94,6 +102,7 @@ impl Default for ClientConfig {
             rdma_migrations: false,
             content_size_enabled: true,
             per_queue_streams: true,
+            placement: PlacementPolicy::Static,
         }
     }
 }
@@ -170,6 +179,61 @@ impl Platform {
     /// in, so this does not grow with the total command count.
     pub fn n_tracked_events(&self) -> usize {
         self.inner.events.len()
+    }
+
+    /// Snapshot the cluster's load as seen from server 0 (the vantage
+    /// daemon): its own devices plus everything its peers gossiped via
+    /// the periodic `LoadReport` exchange (wire tag 16). One round trip
+    /// on the control stream — the daemon answers a client `LoadReport`
+    /// query with an inline completion whose payload encodes the
+    /// per-server [`ServerLoad`] vector. Entries are sorted by server
+    /// id, vantage first; remote entries carry the vantage's RTT sample
+    /// and gossip age.
+    pub fn cluster_loads(&self) -> Result<Vec<ServerLoad>> {
+        let ev = fresh_id();
+        self.inner.events.ensure(ev);
+        self.inner.servers[0].send_command(
+            0,
+            ev,
+            Vec::new(),
+            Body::LoadReport {
+                origin: 0,
+                sent_ns: 0,
+                echo_ns: 0,
+                echo_hold_ns: 0,
+                held: Vec::new(),
+                backlog: Vec::new(),
+                rate_mcps: Vec::new(),
+            },
+            Bytes::new(),
+        )?;
+        let event = Event {
+            id: ev,
+            events: Arc::clone(&self.inner.events),
+        };
+        event.wait()?;
+        let payload = self
+            .inner
+            .read_results
+            .lock()
+            .unwrap()
+            .remove(&ev)
+            .context("load query completed but payload missing")?;
+        Ok(decode_loads(&payload)?)
+    }
+
+    /// Pick a server for a kernel of the given estimated cost (µs) using
+    /// the configured [`ClientConfig::placement`] policy over a fresh
+    /// [`Platform::cluster_loads`] snapshot. Returns the daemon-reported
+    /// server id, which equals the dial index when servers were dialed
+    /// in id order (as [`crate::daemon::Cluster`] arranges).
+    pub fn place(&self, kernel_cost_us: f64) -> Result<u32> {
+        let servers = self.cluster_loads()?;
+        let snap = ClusterSnapshot {
+            local: servers.first().map(|s| s.server).unwrap_or(0),
+            servers,
+        };
+        Ok(self.inner.cfg.placement.place(kernel_cost_us, &snap))
     }
 
     /// Create the context spanning all servers.
@@ -459,6 +523,23 @@ impl Context {
         let mut q = self.queue(server, device);
         q.in_order = false;
         q
+    }
+
+    /// Queue on the server the configured placement policy picks for a
+    /// kernel of the given estimated cost (µs) — the placement-hint
+    /// entry point: `Static` pins to server 0, `LatencyAware` steers
+    /// towards the lowest effective-latency server in the current load
+    /// gossip. Falls back to server 0 when the policy names a server
+    /// this platform did not dial.
+    pub fn placed_queue(&self, kernel_cost_us: f64, device: u32) -> Result<Queue> {
+        let plat = Platform {
+            inner: Arc::clone(&self.plat),
+        };
+        let mut server = plat.place(kernel_cost_us)?;
+        if server as usize >= self.plat.servers.len() {
+            server = 0;
+        }
+        Ok(self.queue(server, device))
     }
 
     pub fn event(&self, id: u64) -> Event {
@@ -943,6 +1024,7 @@ mod tests {
         assert!(c.per_queue_streams);
         assert!(!c.rdma_migrations);
         assert_eq!(c.backup_depth, 128);
+        assert_eq!(c.placement, PlacementPolicy::Static);
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Daemon-side cluster load view: each daemon's picture of its peers,
+//! built from the periodic `LoadReport` gossip (wire tag 16).
+//!
+//! Reports ride the established peer connections on the shard timer heap
+//! (`TimerKind::LoadReport`), so the view needs no extra sockets or
+//! threads. RTT is sampled from the report traffic itself with a
+//! clock-echo scheme — sender clocks never need to agree:
+//!
+//! 1. A stamps its report with its own clock (`sent_ns`).
+//! 2. B remembers `(A's sent_ns, B's arrival clock)` and, in its next
+//!    report to A, echoes `echo_ns = sent_ns` plus how long it held the
+//!    stamp (`echo_hold_ns`).
+//! 3. A computes `rtt = now - echo_ns - echo_hold_ns` — both endpoints of
+//!    the subtraction are A's clock; B only contributes a duration.
+//!
+//! The view is *advisory and stale by design* (up to one report interval
+//! plus a link RTT): the placement policy (`sched::placement`) decays
+//! trust in old entries rather than assuming freshness, and every
+//! decision taken from a snapshot is reproducible from that snapshot
+//! alone. Departed peers drop out of snapshots because the caller
+//! filters by live peer outboxes ([`super::state::DaemonState::peer_txs`]).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::proto::Body;
+use crate::sched::placement::{ClusterSnapshot, DeviceLoad, ServerLoad};
+use crate::util::now_ns;
+
+/// Default cadence of the peer `LoadReport` exchange
+/// (`DaemonConfig::load_report_every` overrides it). Fast enough that a
+/// saturation spike is visible cluster-wide within ~2 intervals; slow
+/// enough that a 16-peer mesh costs well under a packet per millisecond.
+pub const LOAD_REPORT_EVERY: Duration = Duration::from_millis(50);
+
+/// What this daemon currently knows about one peer.
+struct PeerEntry {
+    devices: Vec<DeviceLoad>,
+    /// Latest RTT sample to this peer, ns (0 = not yet sampled).
+    rtt_ns: u64,
+    /// Our clock when the peer's latest report arrived.
+    received_ns: u64,
+    /// The peer's `sent_ns` stamp on that report — echoed back in our
+    /// next report so the peer can close its RTT loop.
+    peer_sent_ns: u64,
+}
+
+/// One daemon's view of cluster load, updated by incoming `LoadReport`s
+/// and read by the dispatcher (migration triggers), the shard timers
+/// (outgoing reports) and the client query path (`Platform::cluster_loads`).
+pub struct ClusterView {
+    server_id: u32,
+    interval: Duration,
+    peers: Mutex<HashMap<u32, PeerEntry>>,
+}
+
+impl ClusterView {
+    pub fn new(server_id: u32, interval: Duration) -> ClusterView {
+        ClusterView {
+            server_id,
+            interval,
+            peers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Report cadence (the shard timer re-arm period).
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+
+    /// Ingest one peer report (the dispatcher's tag-16 arm). Closes the
+    /// RTT loop when the report echoes one of our stamps.
+    pub fn apply(
+        &self,
+        from: u32,
+        sent_ns: u64,
+        echo_ns: u64,
+        echo_hold_ns: u64,
+        held: &[u64],
+        backlog: &[u64],
+        rate_mcps: &[u64],
+    ) {
+        let now = now_ns();
+        let devices = held
+            .iter()
+            .zip(backlog)
+            .zip(rate_mcps)
+            .map(|((&h, &b), &r)| DeviceLoad {
+                held: h as u32,
+                backlog: b as u32,
+                rate_cps: r as f64 / 1_000.0,
+            })
+            .collect();
+        let mut peers = self.peers.lock().unwrap();
+        let e = peers.entry(from).or_insert(PeerEntry {
+            devices: Vec::new(),
+            rtt_ns: 0,
+            received_ns: now,
+            peer_sent_ns: 0,
+        });
+        e.devices = devices;
+        e.received_ns = now;
+        e.peer_sent_ns = sent_ns;
+        if echo_ns != 0 {
+            // `echo_ns` is OUR clock (stamped by us, echoed by the peer);
+            // the peer's hold time is a plain duration. Saturate against
+            // clock jitter rather than wrapping to an absurd sample.
+            e.rtt_ns = now.saturating_sub(echo_ns).saturating_sub(echo_hold_ns);
+        }
+    }
+
+    /// Assemble the outgoing report to `peer` from the local per-device
+    /// loads, stamping our clock and echoing the peer's latest stamp.
+    pub fn report_for(&self, peer: u32, local: &[DeviceLoad]) -> Body {
+        let now = now_ns();
+        let (echo_ns, echo_hold_ns) = {
+            let peers = self.peers.lock().unwrap();
+            match peers.get(&peer) {
+                Some(e) if e.peer_sent_ns != 0 => {
+                    (e.peer_sent_ns, now.saturating_sub(e.received_ns))
+                }
+                _ => (0, 0),
+            }
+        };
+        Body::LoadReport {
+            origin: self.server_id,
+            sent_ns: now,
+            echo_ns,
+            echo_hold_ns,
+            held: local.iter().map(|d| d.held as u64).collect(),
+            backlog: local.iter().map(|d| d.backlog as u64).collect(),
+            rate_mcps: local
+                .iter()
+                .map(|d| (d.rate_cps * 1_000.0) as u64)
+                .collect(),
+        }
+    }
+
+    /// The cluster as seen from here: the local server (zero RTT, zero
+    /// age) plus every peer in `live` we have heard from, sorted by
+    /// server id so snapshots are deterministic inputs to the policy.
+    pub fn snapshot(&self, local: Vec<DeviceLoad>, live: &[u32]) -> ClusterSnapshot {
+        let now = now_ns();
+        let mut servers = vec![ServerLoad {
+            server: self.server_id,
+            rtt_ns: 0,
+            age_ns: 0,
+            devices: local,
+        }];
+        let peers = self.peers.lock().unwrap();
+        for (&id, e) in peers.iter() {
+            if !live.contains(&id) {
+                continue; // departed peer: connection gone, view entry stale
+            }
+            servers.push(ServerLoad {
+                server: id,
+                rtt_ns: e.rtt_ns,
+                age_ns: now.saturating_sub(e.received_ns),
+                devices: e.devices.clone(),
+            });
+        }
+        drop(peers);
+        servers.sort_by_key(|s| s.server);
+        ClusterSnapshot {
+            local: self.server_id,
+            servers,
+        }
+    }
+
+    /// Latest RTT sample to `peer`, ns (tests / metrics; 0 = unsampled).
+    pub fn rtt_ns(&self, peer: u32) -> u64 {
+        self.peers
+            .lock()
+            .unwrap()
+            .get(&peer)
+            .map(|e| e.rtt_ns)
+            .unwrap_or(0)
+    }
+
+    /// Peers heard from so far (tests / metrics).
+    pub fn n_peers(&self) -> usize {
+        self.peers.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(held: u32, backlog: u32, rate_cps: f64) -> DeviceLoad {
+        DeviceLoad {
+            held,
+            backlog,
+            rate_cps,
+        }
+    }
+
+    #[test]
+    fn report_roundtrip_updates_view_and_samples_rtt() {
+        // Two views talking to each other through their own Bodies — the
+        // full echo loop without sockets.
+        let a = ClusterView::new(0, LOAD_REPORT_EVERY);
+        let b = ClusterView::new(1, LOAD_REPORT_EVERY);
+
+        let apply = |view: &ClusterView, body: &Body| {
+            if let Body::LoadReport {
+                origin,
+                sent_ns,
+                echo_ns,
+                echo_hold_ns,
+                held,
+                backlog,
+                rate_mcps,
+            } = body
+            {
+                view.apply(*origin, *sent_ns, *echo_ns, *echo_hold_ns, held, backlog, rate_mcps);
+            }
+        };
+
+        // A -> B: first report carries no echo (A has never heard B).
+        let r1 = a.report_for(1, &[dev(3, 1, 5_000.0)]);
+        if let Body::LoadReport { echo_ns, .. } = r1 {
+            assert_eq!(echo_ns, 0);
+        }
+        apply(&b, &r1);
+        assert_eq!(b.n_peers(), 1);
+
+        // B -> A: echoes A's stamp; A can now sample RTT.
+        let r2 = b.report_for(0, &[dev(0, 0, 9_000.0)]);
+        if let Body::LoadReport { echo_ns, .. } = r2 {
+            assert_ne!(echo_ns, 0, "B must echo A's stamp");
+        }
+        apply(&a, &r2);
+        assert!(a.rtt_ns(1) < 1_000_000_000, "RTT sample is sane");
+
+        // A's snapshot: itself + B (sorted, with B's devices).
+        let snap = a.snapshot(vec![dev(64, 9, 1_000.0)], &[1]);
+        assert_eq!(snap.local, 0);
+        assert_eq!(snap.servers.len(), 2);
+        assert_eq!(snap.servers[0].server, 0);
+        assert_eq!(snap.servers[1].server, 1);
+        assert_eq!(snap.servers[1].devices[0].rate_cps, 9_000.0);
+        // Departed peers are filtered by the live list.
+        let snap = a.snapshot(vec![dev(0, 0, 0.0)], &[]);
+        assert_eq!(snap.servers.len(), 1);
+    }
+}

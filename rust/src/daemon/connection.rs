@@ -200,6 +200,17 @@ impl Conn {
                 Instant::now() + ctx.state.handshake_timeout,
             );
         }
+        if matches!(role, Role::Peer { .. }) {
+            // The dialing side of a peer link starts its load-report
+            // cadence at adoption (the listening side arms in
+            // `become_peer`) — both directions gossip, so both ends
+            // get RTT echoes and a full cluster view.
+            ctx.arm_timer(
+                token,
+                TimerKind::LoadReport,
+                Instant::now() + ctx.state.cluster.interval(),
+            );
+        }
         Some(Conn {
             stream,
             fd,
@@ -486,6 +497,37 @@ impl Conn {
                 })),
             );
         }
+        // Start the periodic load-report exchange towards this peer.
+        ctx.arm_timer(
+            self.token,
+            TimerKind::LoadReport,
+            Instant::now() + ctx.state.cluster.interval(),
+        );
+        self.flush(ctx)
+    }
+
+    /// The periodic `LoadReport` deadline fired: gossip this daemon's
+    /// per-device loads to the peer on this connection (wire tag 16),
+    /// stamped with our clock so the peer's echo closes our RTT sample,
+    /// then re-arm. Riding the timer heap means the exchange costs no
+    /// extra threads or sockets; a saturated outbox just coalesces the
+    /// report into the next burst.
+    pub fn load_report_due(&mut self, ctx: &mut IoCtx) -> bool {
+        let Role::Peer { peer_id } = &self.role else {
+            return true; // stale timer for a token reused by a non-peer
+        };
+        let body = ctx
+            .state
+            .cluster
+            .report_for(*peer_id, &ctx.state.load_snapshot());
+        if let Some(ob) = &self.outbox {
+            ob.send(Packet::bare(Msg::control(body))).ok();
+        }
+        ctx.arm_timer(
+            self.token,
+            TimerKind::LoadReport,
+            Instant::now() + ctx.state.cluster.interval(),
+        );
         self.flush(ctx)
     }
 

@@ -20,6 +20,7 @@
 //! handled on the dispatcher thread — the same discipline the migration
 //! worker already follows with [`Work::Wake`].
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
@@ -29,6 +30,61 @@ use crate::util::{now_ns, Bytes};
 
 use super::dispatch::Work;
 use super::state::{DaemonState, StreamKey, MAX_ALLOC};
+
+/// Measured per-device completion rate: an EWMA over inter-completion
+/// gaps, the throughput half of the scheduler's queue-wait estimate
+/// (`backlog / rate` ≈ seconds of queued work). Stored lock-free as
+/// fixed-point milli-commands/sec so the hot completion paths (device
+/// worker threads, executor forwarders) never take a lock; readers
+/// ([`DaemonState::load_snapshot`]) see it within one completion.
+pub struct RateEwma {
+    /// Clock of the previous completion (`crate::util::now_ns`; 0 = none yet).
+    last_ns: AtomicU64,
+    /// Smoothed rate, milli-commands/sec (0 = unmeasured — the placement
+    /// policy substitutes `sched::placement::FALLBACK_RATE_CPS`).
+    rate_mcps: AtomicU64,
+}
+
+impl RateEwma {
+    const ALPHA_INV: u64 = 5; // EWMA weight 1/5 per sample
+
+    pub fn new() -> RateEwma {
+        RateEwma {
+            last_ns: AtomicU64::new(0),
+            rate_mcps: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one completion into the average. Racing updates may drop a
+    /// sample — this is a metric, not an accounting ledger.
+    pub fn note_completion(&self) {
+        let now = now_ns();
+        let last = self.last_ns.swap(now, Ordering::Relaxed);
+        if last == 0 || now <= last {
+            return;
+        }
+        // 1e9 ns/s × 1000 milli ⇒ instantaneous rate in mcps.
+        let inst = 1_000_000_000_000u64 / (now - last);
+        let old = self.rate_mcps.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            inst
+        } else {
+            old - old / Self::ALPHA_INV + inst / Self::ALPHA_INV
+        };
+        self.rate_mcps.store(new, Ordering::Relaxed);
+    }
+
+    /// Smoothed rate in commands/sec (0.0 = unmeasured).
+    pub fn rate_cps(&self) -> f64 {
+        self.rate_mcps.load(Ordering::Relaxed) as f64 / 1_000.0
+    }
+}
+
+impl Default for RateEwma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// A dependency-resolved command bound for one device's worker.
 pub struct DeviceCmd {
@@ -101,13 +157,17 @@ pub fn spawn_workers(state: &Arc<DaemonState>, work_tx: &Sender<Work>) -> Vec<Se
     let mut dev_txs = Vec::with_capacity(state.devices.len());
     for (dev, device) in state.devices.iter().enumerate() {
         let label = device.label.clone();
-        // Forwarder: executor outcomes -> Work::ExecDone.
+        // Forwarder: executor outcomes -> Work::ExecDone. Also the kernel
+        // arm of the completion-rate EWMA — an outcome here IS a device
+        // retirement, and the forwarder sees it before the dispatcher.
         let (exec_tx, exec_rx) = channel::<ExecOutcome>();
         let fwd = work_tx.clone();
+        let rate = Arc::clone(&state.device_rates[dev]);
         std::thread::Builder::new()
             .name(format!("{label}-fwd"))
             .spawn(move || {
                 while let Ok(o) = exec_rx.recv() {
+                    rate.note_completion();
                     if fwd.send(Work::ExecDone(o)).is_err() {
                         break;
                     }
@@ -207,6 +267,7 @@ fn run_item(
     }
     // Inline buffer op: execute, release the slot, report the outcome.
     let outcome = exec_routed_body(state, &pkt);
+    state.device_rates[dev].note_completion();
     if holds_slot {
         state.device_gates[dev].release(skey);
     }

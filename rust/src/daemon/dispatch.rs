@@ -28,9 +28,11 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Weak};
+use std::time::{Duration, Instant};
 
 use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
 use crate::runtime::executor::ExecOutcome;
+use crate::sched::placement::{encode_loads, PlacementPolicy};
 use crate::sched::table::{DepsState, Wakeup};
 use crate::util::{now_ns, Bytes};
 
@@ -51,6 +53,17 @@ pub const GC_EVERY_CMDS: u64 = 1024;
 /// outlast any realistic kernel/migration duration measured in
 /// completions (see `sched::table` gc_floor docs).
 pub const EVENT_TABLE_KEEP: usize = 16384;
+
+/// Recently-touched kernel buffers remembered as migration candidates
+/// (LRU). Small on purpose: the scheduler sheds *hot* working-set
+/// buffers, not the whole store.
+pub const HOT_BUFS_MAX: usize = 32;
+
+/// Minimum spacing between scheduler-triggered migrations. A migration's
+/// effect (the peer's next report, our own gate draining) takes a few
+/// report intervals to show up in snapshots; retriggering before then
+/// would shed the whole hot set on one stale picture of the cluster.
+pub const REBALANCE_COOLDOWN: Duration = Duration::from_millis(250);
 
 /// Work items feeding the dispatcher.
 pub enum Work {
@@ -121,6 +134,8 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
         wake_queue: VecDeque::new(),
         ready_backlog,
         event_origin: HashMap::new(),
+        hot_bufs: VecDeque::new(),
+        last_rebalance: None,
     };
 
     while let Ok(work) = rx.recv() {
@@ -195,6 +210,12 @@ struct Dispatcher {
     /// never reach terminal state are retained indefinitely, and must
     /// not pin a reaped session's backlog with them.
     event_origin: HashMap<u64, (Weak<Session>, u32)>,
+    /// Buffers recently referenced by kernel launches, most recent at the
+    /// back — the candidate set for scheduler-triggered migration
+    /// ([`Dispatcher::maybe_rebalance`]). Bounded at [`HOT_BUFS_MAX`].
+    hot_bufs: VecDeque<u64>,
+    /// Last scheduler-triggered migration, for [`REBALANCE_COOLDOWN`].
+    last_rebalance: Option<Instant>,
 }
 
 impl Dispatcher {
@@ -294,6 +315,8 @@ impl Dispatcher {
                 }
             }
             self.ready_backlog[dev] = kept;
+            self.state.ready_backlog_depths[dev]
+                .store(self.ready_backlog[dev].len(), Ordering::Relaxed);
         }
         // Only now wake parked readers: releases deliberately do not
         // notify, so the backlog above gets first claim on freed
@@ -352,6 +375,12 @@ impl Dispatcher {
         // gate key is `(session, stream)` throughout, so a flooding
         // session's backlog entries never consume a neighbor's share.
         if let Some(dev) = self.state.device_route(&pkt.msg) {
+            // Kernel operands are the working set the cluster scheduler
+            // may shed to an idle peer when this daemon saturates.
+            if let Body::RunKernel { args, outs, .. } = &pkt.msg.body {
+                let (args, outs) = (args.clone(), outs.clone());
+                self.note_hot_buffers(args.into_iter().chain(outs));
+            }
             let skey = stream_key(&session, pkt.msg.queue);
             let gated = session.is_some() && pkt.msg.queue != 0;
             let mut cmd = DeviceCmd {
@@ -367,6 +396,8 @@ impl Dispatcher {
                 self.dev_txs[dev].send(cmd).ok();
             } else {
                 self.ready_backlog[dev].push_back(cmd);
+                self.state.ready_backlog_depths[dev]
+                    .store(self.ready_backlog[dev].len(), Ordering::Relaxed);
             }
             return;
         }
@@ -515,6 +546,42 @@ impl Dispatcher {
                         .insert(peer, (rkey, shadow_size));
                 }
             }
+            Body::LoadReport {
+                sent_ns,
+                echo_ns,
+                echo_hold_ns,
+                held,
+                backlog,
+                rate_mcps,
+                ..
+            } => match from_peer {
+                // Peer gossip: fold into the cluster view (keyed by the
+                // *connection's* peer id, not the spoofable `origin`
+                // field) and see whether the fresher picture warrants
+                // shedding a hot buffer.
+                Some(peer) => {
+                    self.state.cluster.apply(
+                        peer,
+                        *sent_ns,
+                        *echo_ns,
+                        *echo_hold_ns,
+                        held,
+                        backlog,
+                        rate_mcps,
+                    );
+                    self.maybe_rebalance();
+                }
+                // A client sent an (empty) LoadReport on its control
+                // stream: a cluster-view *query*. Reply with a normal
+                // Completion whose payload encodes our view — it rides
+                // the existing read-results path in the client driver
+                // (`Platform::cluster_loads`).
+                None => {
+                    let snap = self.state.cluster_snapshot();
+                    let payload = Bytes::from(encode_loads(&snap.servers));
+                    self.complete_inline(event, queued_ns, submit_ns, payload);
+                }
+            },
             Body::Barrier => {
                 self.complete_inline(event, queued_ns, submit_ns, Bytes::new());
             }
@@ -640,6 +707,67 @@ impl Dispatcher {
 
     fn fail_command(&mut self, msg: &Msg) {
         self.fail_event(msg.event);
+    }
+
+    /// Remember kernel operand buffers, most recent at the back (LRU,
+    /// bounded at [`HOT_BUFS_MAX`]).
+    fn note_hot_buffers(&mut self, ids: impl Iterator<Item = u64>) {
+        for id in ids {
+            if let Some(pos) = self.hot_bufs.iter().position(|&b| b == id) {
+                self.hot_bufs.remove(pos);
+            }
+            self.hot_bufs.push_back(id);
+            if self.hot_bufs.len() > HOT_BUFS_MAX {
+                self.hot_bufs.pop_front();
+            }
+        }
+    }
+
+    /// Scheduler-triggered migration (runs on every peer load report,
+    /// rate-limited by [`REBALANCE_COOLDOWN`]): when the pure policy says
+    /// this server is saturated and a peer scores clearly better, push
+    /// the hottest still-resident buffer to that peer. The migration
+    /// *replicates* — the destination gains a warm copy for kernels
+    /// placed there while the source keeps its bytes, so in-flight local
+    /// work and client reads stay correct; no client event waits on the
+    /// synthetic migration event.
+    fn maybe_rebalance(&mut self) {
+        if self
+            .last_rebalance
+            .is_some_and(|t| t.elapsed() < REBALANCE_COOLDOWN)
+        {
+            return;
+        }
+        let snap = self.state.cluster_snapshot();
+        let policy = PlacementPolicy::LatencyAware;
+        let Some(target) = policy.migrate_target(&snap, DEVICE_QUEUE_DEPTH as u32) else {
+            return;
+        };
+        // Hottest candidate that still exists locally.
+        let Some(buf) = self
+            .hot_bufs
+            .iter()
+            .rev()
+            .copied()
+            .find(|&b| self.state.buffers.contains(b))
+        else {
+            return;
+        };
+        let size = self.state.buffers.with(buf, |e| e.size).unwrap_or(0);
+        self.last_rebalance = Some(Instant::now());
+        // High-bit event ids keep the synthetic migration well clear of
+        // client-minted event ids.
+        let event = (1 << 63) | crate::util::fresh_id();
+        self.migrate_tx
+            .send(MigrationJob {
+                buf,
+                dst_server: target,
+                alloc_size: size,
+                event,
+                use_rdma: false,
+                origin: None,
+            })
+            .ok();
     }
 
     /// Periodic housekeeping: reclaim old Complete events (keeping recent

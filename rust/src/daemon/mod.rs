@@ -24,6 +24,7 @@
 //! one process connected over real loopback TCP (shaped per DESIGN.md §3),
 //! and `poclr daemon` runs one standalone.
 
+pub mod cluster;
 pub mod connection;
 pub mod device;
 pub mod dispatch;
@@ -75,6 +76,9 @@ pub struct DaemonConfig {
     /// Deadline for a connection to complete its `Hello`/`AttachQueue`
     /// handshake; silent sockets are closed when it passes.
     pub handshake_timeout: std::time::Duration,
+    /// Cadence of the peer `LoadReport` exchange (tag 16) feeding the
+    /// cluster scheduler's view; see [`cluster::LOAD_REPORT_EVERY`].
+    pub load_report_every: std::time::Duration,
 }
 
 impl DaemonConfig {
@@ -91,6 +95,7 @@ impl DaemonConfig {
             io_shards: 0,
             max_sessions: state::MAX_SESSIONS,
             handshake_timeout: std::time::Duration::from_secs(10),
+            load_report_every: cluster::LOAD_REPORT_EVERY,
         }
     }
 
@@ -349,6 +354,7 @@ impl Cluster {
                 io_shards: 0,
                 max_sessions: state::MAX_SESSIONS,
                 handshake_timeout: std::time::Duration::from_secs(10),
+                load_report_every: cluster::LOAD_REPORT_EVERY,
             };
             daemons.push(Daemon::spawn(cfg)?);
         }

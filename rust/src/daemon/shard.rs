@@ -57,6 +57,10 @@ pub enum TimerKind {
     GateRetry,
     /// A link-pacing delay elapsed; resume draining the outbox.
     Pace,
+    /// Gossip this daemon's per-device loads to the peer on this
+    /// connection (wire tag 16) and re-arm — the cluster scheduler's
+    /// periodic exchange, riding the established peer connections.
+    LoadReport,
 }
 
 /// How an adopted socket starts life on its shard.
@@ -297,6 +301,9 @@ fn run_shard(shard: Arc<Shard>, state: Arc<DaemonState>, work_tx: Sender<Work>) 
                     with_conn!(token, |conn, ctx| conn.retry_gate(&mut ctx, None))
                 }
                 TimerKind::Pace => with_conn!(token, |conn, ctx| conn.pace_due(&mut ctx)),
+                TimerKind::LoadReport => {
+                    with_conn!(token, |conn, ctx| conn.load_report_due(&mut ctx))
+                }
             }
         }
         if state.shutdown.load(Ordering::SeqCst) {

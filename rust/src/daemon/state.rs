@@ -14,11 +14,14 @@ use crate::net::rdma::{Endpoint, Mr};
 use crate::net::LinkProfile;
 use crate::proto::{Body, Msg, Packet, SessionId};
 use crate::runtime::executor::{DeviceExecutor, DeviceKind};
+use crate::sched::placement::{ClusterSnapshot, DeviceLoad};
 use crate::sched::EventTable;
 use crate::util::now_ns;
 use crate::util::rng::Rng;
 use crate::util::Bytes;
 
+use super::cluster::ClusterView;
+use super::device::RateEwma;
 use super::DaemonConfig;
 
 /// Sanity cap on a single buffer allocation / migration target (2 GiB).
@@ -312,9 +315,30 @@ impl DeviceGate {
         }
     }
 
-    /// Slots currently held (tests / metrics).
+    /// Slots currently held across all streams — the device's pipeline
+    /// occupancy, in `0..=DEVICE_QUEUE_DEPTH` (briefly above under
+    /// [`DeviceGate::force_enter`] oversubscription). This is the load
+    /// signal the cluster scheduler samples into its `LoadReport`s
+    /// (see [`DaemonState::load_snapshot`]): occupancy at the bound
+    /// means stream readers are blocking in admission, i.e. the device
+    /// is saturated.
     pub fn held(&self) -> usize {
         self.inner.lock().unwrap().held
+    }
+
+    /// Slots currently held by one stream, in `0..=STREAM_SHARE` — how
+    /// much of its fair share `(session, queue)` is consuming on this
+    /// device. Per-stream occupancy at the share cap identifies *which*
+    /// stream a saturated device is throttling (debugging, metrics,
+    /// scheduler diagnostics).
+    pub fn stream_held(&self, stream: StreamKey) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .per_stream
+            .get(&stream)
+            .copied()
+            .unwrap_or(0)
     }
 }
 
@@ -546,6 +570,21 @@ pub struct DaemonState {
     /// dispatch workers. Fairness is per [`StreamKey`]: one session's
     /// flood never consumes another session's share.
     pub device_gates: Vec<DeviceGate>,
+    /// Dispatcher ready-backlog depth per device (commands whose waits
+    /// resolved but whose gate was full), mirrored by the dispatcher so
+    /// [`DaemonState::load_snapshot`] can read it without touching
+    /// dispatcher-private state. Indexed like `devices`.
+    pub ready_backlog_depths: Vec<AtomicUsize>,
+    /// Measured per-device completion rate (EWMA, see
+    /// [`super::device::RateEwma`]) — the throughput half of the
+    /// scheduler's queue-wait estimate. `Arc` because each device's
+    /// executor forwarder folds kernel completions in from its own
+    /// thread. Indexed like `devices`.
+    pub device_rates: Vec<Arc<RateEwma>>,
+    /// This daemon's view of cluster load, fed by peer `LoadReport`
+    /// gossip (wire tag 16) and consulted for placement and
+    /// scheduler-triggered migration.
+    pub cluster: ClusterView,
     /// Every client session this daemon is serving (paper's MEC setting:
     /// many UEs share one edge server). Each [`Session`] owns its stream
     /// registries, replay cursors and undelivered backlog.
@@ -984,6 +1023,10 @@ impl DaemonState {
             None => None,
         };
         let device_gates = (0..devices.len()).map(|_| DeviceGate::new()).collect();
+        let ready_backlog_depths = (0..devices.len()).map(|_| AtomicUsize::new(0)).collect();
+        let device_rates = (0..devices.len())
+            .map(|_| Arc::new(RateEwma::new()))
+            .collect();
         // Each DeviceExecutor::spawn above started one runtime-layer
         // executor thread; seed the counter with those so `n_threads`
         // covers every thread the daemon owns.
@@ -996,6 +1039,9 @@ impl DaemonState {
             events: EventTable::new(),
             devices,
             device_gates,
+            ready_backlog_depths,
+            device_rates,
+            cluster: ClusterView::new(cfg.server_id, cfg.load_report_every),
             sessions: Sessions::with_capacity(cfg.max_sessions),
             peer_txs: Mutex::new(HashMap::new()),
             rdma,
@@ -1016,6 +1062,31 @@ impl DaemonState {
     /// — the O(shards + devices) scaling invariant's accessor.
     pub fn n_threads(&self) -> usize {
         self.threads.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot this daemon's own per-device load from signals it
+    /// already maintains: gate occupancy ([`DeviceGate::held`]),
+    /// dispatcher ready-backlog depth, and the measured completion-rate
+    /// EWMA. This is the local row of every outgoing `LoadReport` and of
+    /// [`DaemonState::cluster_snapshot`]; also handy on its own when
+    /// debugging a saturated daemon.
+    pub fn load_snapshot(&self) -> Vec<DeviceLoad> {
+        (0..self.devices.len())
+            .map(|d| DeviceLoad {
+                held: self.device_gates[d].held() as u32,
+                backlog: self.ready_backlog_depths[d].load(Ordering::Relaxed) as u32,
+                rate_cps: self.device_rates[d].rate_cps(),
+            })
+            .collect()
+    }
+
+    /// The whole cluster as this daemon sees it — local loads measured
+    /// now, peer loads as last gossiped (with their staleness recorded as
+    /// `age_ns`). Peers whose connection is gone are excluded, so the
+    /// placement policy can never pick a departed server.
+    pub fn cluster_snapshot(&self) -> ClusterSnapshot {
+        let live: Vec<u32> = self.peer_txs.lock().unwrap().keys().copied().collect();
+        self.cluster.snapshot(self.load_snapshot(), &live)
     }
 
     /// Which device's dispatch worker executes this command, or `None`
@@ -1638,6 +1709,61 @@ mod tests {
         // Zero-device daemons route nothing.
         let z = state();
         assert_eq!(z.device_route(&barrier), None);
+    }
+
+    #[test]
+    fn stream_held_tracks_per_stream_occupancy() {
+        let gate = DeviceGate::new();
+        assert_eq!(gate.stream_held(key(1, 7)), 0);
+        for n in 1..=3 {
+            assert!(gate.try_enter(key(1, 7)));
+            assert_eq!(gate.stream_held(key(1, 7)), n);
+        }
+        assert!(gate.try_enter(key(2, 7)));
+        assert_eq!(gate.stream_held(key(2, 7)), 1, "shares are per session");
+        assert_eq!(gate.stream_held(key(1, 7)), 3);
+        gate.release(key(1, 7));
+        assert_eq!(gate.stream_held(key(1, 7)), 2);
+    }
+
+    #[test]
+    fn load_snapshot_reads_gates_backlogs_and_rates() {
+        let s = DaemonState::new(&mut DaemonConfig::local(0, 2, Manifest::default())).unwrap();
+        let snap = s.load_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|d| d.held == 0 && d.backlog == 0));
+        assert_eq!(snap[0].rate_cps, 0.0, "no completions yet: unmeasured");
+        // Occupy device 0's gate and mirror a backlog on device 1.
+        for _ in 0..5 {
+            assert!(s.device_gates[0].try_enter(key(1, 1)));
+        }
+        s.ready_backlog_depths[1].store(9, Ordering::Relaxed);
+        let snap = s.load_snapshot();
+        assert_eq!(snap[0].held, 5);
+        assert_eq!(snap[0].backlog, 0);
+        assert_eq!(snap[1].held, 0);
+        assert_eq!(snap[1].backlog, 9);
+    }
+
+    #[test]
+    fn cluster_snapshot_tracks_only_live_peers() {
+        let s = DaemonState::new(&mut DaemonConfig::local(0, 1, Manifest::default())).unwrap();
+        // Gossip from peer 3 arrives...
+        s.cluster.apply(3, 1, 0, 0, &[2], &[1], &[5_000_000]);
+        // ...but with no live outbox it must not appear in the snapshot.
+        let snap = s.cluster_snapshot();
+        assert_eq!(snap.servers.len(), 1);
+        assert_eq!(snap.local, 0);
+        // Register the peer connection: now the gossiped loads show up.
+        s.peer_txs.lock().unwrap().insert(3, Outbox::detached());
+        let snap = s.cluster_snapshot();
+        assert_eq!(snap.servers.len(), 2);
+        assert_eq!(snap.servers[1].server, 3);
+        assert_eq!(snap.servers[1].devices[0].held, 2);
+        assert_eq!(snap.servers[1].devices[0].rate_cps, 5_000.0);
+        // Peer disconnects (outbox deregistered): snapshot shrinks again.
+        s.peer_txs.lock().unwrap().remove(&3);
+        assert_eq!(s.cluster_snapshot().servers.len(), 1);
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency` — print a DES scenario
-//!   table.
+//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency|placement` —
+//!   print a DES scenario table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
 use poclr::client::{ClientConfig, Platform};
@@ -170,6 +170,32 @@ fn main() -> anyhow::Result<()> {
                         );
                     }
                 }
+                Some("placement") => {
+                    // Cluster scheduler what-if: skewed arrivals at an
+                    // MEC cluster, static (arrival-server) placement vs
+                    // the latency-aware policy over gossiped load.
+                    let cmds = if args.iter().any(|a| a == "--tiny") {
+                        2_000
+                    } else {
+                        20_000
+                    };
+                    println!(
+                        "placement model (4 servers, {cmds} cmds, 200 µs kernels, \
+                         2 ms gossip):"
+                    );
+                    for skew in [25usize, 50, 80, 95] {
+                        let p = scenarios::placement_tail_latency_us(4, cmds, skew);
+                        println!(
+                            "skew {skew:>3}% -> srv0: static p50 {:>8.0} µs p99 {:>9.0} µs   \
+                             aware p50 {:>6.0} µs p99 {:>7.0} µs   offloaded {:>4.1}%",
+                            p.p50_static_us,
+                            p.p99_static_us,
+                            p.p50_aware_us,
+                            p.p99_aware_us,
+                            p.offloaded_pct
+                        );
+                    }
+                }
                 Some("fig16") => {
                     for mode in [
                         FluidMode::Native,
@@ -188,7 +214,8 @@ fn main() -> anyhow::Result<()> {
                     }
                 }
                 other => anyhow::bail!(
-                    "unknown sim scenario {other:?} (fig12|fig13|fig16|queues|sessions|ues|latency)"
+                    "unknown sim scenario {other:?} \
+                     (fig12|fig13|fig16|queues|sessions|ues|latency|placement)"
                 ),
             }
             Ok(())
@@ -210,7 +237,10 @@ fn main() -> anyhow::Result<()> {
             eprintln!("usage: poclr <daemon|quick|sim|artifacts> [flags]");
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
-            eprintln!("  sim    fig12|fig13|fig16|queues|sessions|ues|latency  DES scenario tables");
+            eprintln!(
+                "  sim    fig12|fig13|fig16|queues|sessions|ues|latency|placement  \
+                 DES scenario tables"
+            );
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);
         }

@@ -167,6 +167,28 @@ pub enum Body {
         rkey: u64,
         shadow_size: u64,
     },
+    /// Periodic load snapshot exchanged between peers over the established
+    /// peer connections (the cluster scheduler's gossip): per-device gate
+    /// occupancy, dispatcher ready-backlog depth and EWMA completion rate,
+    /// indexed by device. `sent_ns` is the sender's monotonic clock at
+    /// send time; `echo_ns`/`echo_hold_ns` echo the recipient's most
+    /// recent `sent_ns` and how long it was held before echoing, so the
+    /// recipient can sample peer RTT from the existing report traffic
+    /// without a dedicated ping. A client may also send an empty report
+    /// on its control stream as a *query*: the daemon replies with a
+    /// `Completion` whose payload is its encoded cluster view.
+    LoadReport {
+        origin: u32,
+        sent_ns: u64,
+        echo_ns: u64,
+        echo_hold_ns: u64,
+        /// Per-device gate slots currently held.
+        held: Vec<u64>,
+        /// Per-device dispatcher ready-backlog depth.
+        backlog: Vec<u64>,
+        /// Per-device EWMA completion rate, milli-commands/second.
+        rate_mcps: Vec<u64>,
+    },
 }
 
 const T_HELLO: u8 = 1;
@@ -184,6 +206,7 @@ const T_BARRIER: u8 = 12;
 const T_SET_CSIZE: u8 = 13;
 const T_RDMA_ADVERT: u8 = 14;
 const T_ATTACH_QUEUE: u8 = 15;
+const T_LOAD_REPORT: u8 = 16;
 
 /// A protocol message: routing header + body.
 #[derive(Debug, Clone, PartialEq)]
@@ -349,6 +372,24 @@ impl Msg {
                 w.bytes(session);
                 w.u32(*queue);
             }
+            Body::LoadReport {
+                origin,
+                sent_ns,
+                echo_ns,
+                echo_hold_ns,
+                held,
+                backlog,
+                rate_mcps,
+            } => {
+                w.u8(T_LOAD_REPORT);
+                w.u32(*origin);
+                w.u64(*sent_ns);
+                w.u64(*echo_ns);
+                w.u64(*echo_hold_ns);
+                w.ids(held);
+                w.ids(backlog);
+                w.ids(rate_mcps);
+            }
         }
     }
 
@@ -438,6 +479,15 @@ impl Msg {
             T_ATTACH_QUEUE => Body::AttachQueue {
                 session: r.bytes(16)?.try_into().unwrap(),
                 queue: r.u32()?,
+            },
+            T_LOAD_REPORT => Body::LoadReport {
+                origin: r.u32()?,
+                sent_ns: r.u64()?,
+                echo_ns: r.u64()?,
+                echo_hold_ns: r.u64()?,
+                held: r.ids()?,
+                backlog: r.ids()?,
+                rate_mcps: r.ids()?,
             },
             t => {
                 return Err(WireError::BadTag {
@@ -553,6 +603,15 @@ mod tests {
             Body::AttachQueue {
                 session: [3u8; 16],
                 queue: 7,
+            },
+            Body::LoadReport {
+                origin: 2,
+                sent_ns: 123_456,
+                echo_ns: 111,
+                echo_hold_ns: 22,
+                held: vec![3, 0],
+                backlog: vec![1, 4],
+                rate_mcps: vec![12_000_000, 9_500_000],
             },
         ];
         for (i, body) in bodies.into_iter().enumerate() {

@@ -8,6 +8,8 @@
 //! becomes runnable the instant its whole wait list is terminal — no client
 //! round-trip involved.
 
+pub mod placement;
 pub mod table;
 
+pub use placement::{ClusterSnapshot, DeviceLoad, PlacementPolicy, ServerLoad};
 pub use table::{EventTable, WaitOutcome, Wakeup};

@@ -1,0 +1,368 @@
+//! Latency-aware cluster placement (the HetMEC framing of PAPERS.md):
+//! a **pure, deterministic** policy over load snapshots.
+//!
+//! Every daemon assembles a [`ServerLoad`] from signals it already has —
+//! device-gate occupancy, dispatcher ready-backlog depth, EWMA completion
+//! rate — and gossips it to its peers as a `LoadReport` (wire tag 16).
+//! The resulting [`ClusterSnapshot`] is plain data, so the same
+//! [`PlacementPolicy`] runs in three places with identical decisions:
+//! the daemon's dispatcher (new-command placement + migration triggers),
+//! the client driver (`Platform::place` / the placement-hint knob), and
+//! the DES (`sim::scenarios::placement_tail_latency_us`), which sweeps
+//! policies at cluster scale before any socket is involved.
+//!
+//! Purity is a correctness requirement, not a style choice: snapshots are
+//! gossiped and therefore *stale* by up to a report interval, so every
+//! decision must be reproducible from its snapshot alone (replay/resume
+//! safety — see the determinism property test in `tests/proptests.rs`).
+
+use crate::proto::wire::{R, W, WireError};
+
+/// One device's load as carried in a `LoadReport`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceLoad {
+    /// Gate slots currently held (in-flight commands admitted to the
+    /// device worker).
+    pub held: u32,
+    /// Ready commands parked behind a full gate (dispatcher backlog).
+    pub backlog: u32,
+    /// EWMA completion rate, commands/second. 0 = not yet measured.
+    pub rate_cps: f64,
+}
+
+impl DeviceLoad {
+    /// Commands queued ahead of a new arrival on this device.
+    pub fn depth(&self) -> u32 {
+        self.held + self.backlog
+    }
+}
+
+/// One server's load as seen from some vantage point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerLoad {
+    pub server: u32,
+    /// Measured round-trip time to this server, ns (0 = local / unknown).
+    pub rtt_ns: u64,
+    /// Age of this entry when the snapshot was taken, ns (staleness).
+    pub age_ns: u64,
+    pub devices: Vec<DeviceLoad>,
+}
+
+/// A point-in-time view of the whole cluster, from one server's (or the
+/// client's) perspective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSnapshot {
+    /// The vantage server (scored with zero RTT).
+    pub local: u32,
+    pub servers: Vec<ServerLoad>,
+}
+
+/// Completion rate assumed for a device that has not completed anything
+/// yet (cold daemon): roughly the inline small-command rate, so an idle
+/// unmeasured device neither repels work (rate 0 would read as an
+/// infinite queue wait) nor absorbs everything.
+pub const FALLBACK_RATE_CPS: f64 = 10_000.0;
+
+/// A migration trigger requires the best remote score to undercut the
+/// local score by this factor — hysteresis against gossip jitter
+/// bouncing buffers between near-equal servers.
+pub const MIGRATE_HYSTERESIS: f64 = 0.5;
+
+/// Remote load reports younger than this are trusted at face value; only
+/// the age *beyond* it decays a server's score. Sized to a couple of
+/// gossip intervals ([`crate::daemon::cluster::LOAD_REPORT_EVERY`] is
+/// 50 ms): a peer heard from on schedule never pays a staleness penalty
+/// — the decay exists to repel *silent* peers (died, partitioned, or
+/// hopelessly behind), not to discount every mid-interval snapshot.
+pub const STALENESS_GRACE_NS: u64 = 100_000_000;
+
+/// Placement policies the dispatcher, client and DES can run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Client-chosen placement: always the vantage server (the
+    /// pre-scheduler behavior, and the DES baseline).
+    Static,
+    /// Effective-latency placement: link RTT + queue-wait estimate.
+    LatencyAware,
+}
+
+impl PlacementPolicy {
+    /// Effective-latency score (µs) of running one more command on this
+    /// server: link RTT plus the queue wait implied by its least-loaded
+    /// device (depth / completion-rate), plus the kernel's own cost.
+    /// Lower is better. Total over all inputs; never NaN.
+    pub fn score(server: &ServerLoad, kernel_cost_us: f64) -> f64 {
+        let rtt_us = server.rtt_ns as f64 / 1_000.0;
+        let wait_us = server
+            .devices
+            .iter()
+            .map(|d| {
+                let rate = if d.rate_cps > 0.0 {
+                    d.rate_cps
+                } else {
+                    FALLBACK_RATE_CPS
+                };
+                d.depth() as f64 / rate * 1e6
+            })
+            .fold(f64::INFINITY, f64::min);
+        // A server advertising zero devices can execute nothing: score it
+        // effectively unplaceable but still finite (totality).
+        let wait_us = if wait_us.is_finite() { wait_us } else { 1e12 };
+        rtt_us + wait_us + kernel_cost_us.max(0.0)
+    }
+
+    /// Choose the server for a new command of cost `kernel_cost_us`.
+    ///
+    /// Deterministic and total: identical snapshots give identical
+    /// placements, and the result is always a server present in
+    /// `snap.servers` (ties break on the lower server id; an empty
+    /// snapshot falls back to `snap.local`).
+    pub fn place(&self, kernel_cost_us: f64, snap: &ClusterSnapshot) -> u32 {
+        match self {
+            PlacementPolicy::Static => snap
+                .servers
+                .iter()
+                .find(|s| s.server == snap.local)
+                .or(snap.servers.first())
+                .map(|s| s.server)
+                .unwrap_or(snap.local),
+            PlacementPolicy::LatencyAware => {
+                let mut best: Option<(f64, u32)> = None;
+                for s in &snap.servers {
+                    let mut score = Self::score(s, kernel_cost_us);
+                    if s.server != snap.local {
+                        // Stale remote entries decay toward "don't trust
+                        // this": a report older than the grace window
+                        // adds its excess age to the score, so a silent
+                        // peer stops attracting work without ever
+                        // leaving the candidate set (totality).
+                        score +=
+                            (s.age_ns.saturating_sub(STALENESS_GRACE_NS) / 1_000) as f64;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((b, id)) => {
+                            score < b || (score == b && s.server < id)
+                        }
+                    };
+                    if better {
+                        best = Some((score, s.server));
+                    }
+                }
+                best.map(|(_, id)| id).unwrap_or(snap.local)
+            }
+        }
+    }
+
+    /// Should the vantage server shed load? Returns the migration
+    /// destination when the local server is *saturated* (some device gate
+    /// holds `gate_cap` slots or more) and a remote server scores better
+    /// by at least [`MIGRATE_HYSTERESIS`]. Pure and deterministic like
+    /// [`PlacementPolicy::place`]; `Static` never migrates.
+    pub fn migrate_target(&self, snap: &ClusterSnapshot, gate_cap: u32) -> Option<u32> {
+        if *self == PlacementPolicy::Static {
+            return None;
+        }
+        let local = snap.servers.iter().find(|s| s.server == snap.local)?;
+        let saturated = local.devices.iter().any(|d| d.held >= gate_cap);
+        if !saturated {
+            return None;
+        }
+        let local_score = Self::score(local, 0.0);
+        let best = self.place(0.0, snap);
+        if best == snap.local {
+            return None;
+        }
+        let remote = snap.servers.iter().find(|s| s.server == best)?;
+        (Self::score(remote, 0.0) < local_score * MIGRATE_HYSTERESIS).then_some(best)
+    }
+}
+
+/// Encode a cluster view for the client-facing `LoadReport` query reply
+/// (the `Completion` payload behind `Platform::cluster_loads`).
+pub fn encode_loads(loads: &[ServerLoad]) -> Vec<u8> {
+    let mut w = W::with_capacity(32 + loads.len() * 64);
+    w.u32(loads.len() as u32);
+    for s in loads {
+        w.u32(s.server);
+        w.u64(s.rtt_ns);
+        w.u64(s.age_ns);
+        w.u32(s.devices.len() as u32);
+        for d in &s.devices {
+            w.u32(d.held);
+            w.u32(d.backlog);
+            // Fixed-point milli-commands/second, same unit as the wire
+            // message's `rate_mcps`.
+            w.u64((d.rate_cps * 1_000.0) as u64);
+        }
+    }
+    w.buf
+}
+
+/// Decode a [`encode_loads`] payload (client side).
+pub fn decode_loads(bytes: &[u8]) -> Result<Vec<ServerLoad>, WireError> {
+    let mut r = R::new(bytes);
+    let n = r.u32()? as usize;
+    if n > 1 << 16 {
+        return Err(WireError::TooLong {
+            len: n as u64,
+            limit: 1 << 16,
+        });
+    }
+    let mut loads = Vec::with_capacity(n);
+    for _ in 0..n {
+        let server = r.u32()?;
+        let rtt_ns = r.u64()?;
+        let age_ns = r.u64()?;
+        let nd = r.u32()? as usize;
+        if nd > 1 << 16 {
+            return Err(WireError::TooLong {
+                len: nd as u64,
+                limit: 1 << 16,
+            });
+        }
+        let mut devices = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            devices.push(DeviceLoad {
+                held: r.u32()?,
+                backlog: r.u32()?,
+                rate_cps: r.u64()? as f64 / 1_000.0,
+            });
+        }
+        loads.push(ServerLoad {
+            server,
+            rtt_ns,
+            age_ns,
+            devices,
+        });
+    }
+    Ok(loads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(server: u32, rtt_ns: u64) -> ServerLoad {
+        ServerLoad {
+            server,
+            rtt_ns,
+            age_ns: 0,
+            devices: vec![DeviceLoad {
+                held: 0,
+                backlog: 0,
+                rate_cps: 10_000.0,
+            }],
+        }
+    }
+
+    fn loaded(server: u32, rtt_ns: u64, held: u32, backlog: u32) -> ServerLoad {
+        ServerLoad {
+            server,
+            rtt_ns,
+            age_ns: 0,
+            devices: vec![DeviceLoad {
+                held,
+                backlog,
+                rate_cps: 10_000.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn latency_aware_prefers_idle_peer_over_saturated_local() {
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 64, 30), idle(1, 200_000)],
+        };
+        assert_eq!(PlacementPolicy::LatencyAware.place(50.0, &snap), 1);
+        // Static stays put regardless.
+        assert_eq!(PlacementPolicy::Static.place(50.0, &snap), 0);
+    }
+
+    #[test]
+    fn rtt_keeps_work_local_when_loads_match() {
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![idle(0, 0), idle(1, 500_000)],
+        };
+        assert_eq!(PlacementPolicy::LatencyAware.place(10.0, &snap), 0);
+    }
+
+    #[test]
+    fn migrate_fires_only_past_saturation_with_clear_win() {
+        let cap = 64;
+        // Saturated local, idle peer: migrate.
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 64, 10), idle(1, 100_000)],
+        };
+        assert_eq!(
+            PlacementPolicy::LatencyAware.migrate_target(&snap, cap),
+            Some(1)
+        );
+        // Busy but not saturated: hold.
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 40, 0), idle(1, 100_000)],
+        };
+        assert_eq!(PlacementPolicy::LatencyAware.migrate_target(&snap, cap), None);
+        // Saturated but the peer is just as bad: hold (hysteresis).
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 64, 0), loaded(1, 0, 64, 0)],
+        };
+        assert_eq!(PlacementPolicy::LatencyAware.migrate_target(&snap, cap), None);
+        // Static never sheds.
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 64, 10), idle(1, 100_000)],
+        };
+        assert_eq!(PlacementPolicy::Static.migrate_target(&snap, cap), None);
+    }
+
+    #[test]
+    fn stale_entries_stop_attracting_work() {
+        let mut far = idle(1, 0);
+        far.age_ns = 10_000_000_000; // 10 s of silence
+        let snap = ClusterSnapshot {
+            local: 0,
+            servers: vec![loaded(0, 0, 8, 0), far],
+        };
+        // 8 queued commands (~800 µs wait) still beats a 10-second-stale
+        // report's decayed score.
+        assert_eq!(PlacementPolicy::LatencyAware.place(0.0, &snap), 0);
+    }
+
+    #[test]
+    fn loads_payload_roundtrips() {
+        let loads = vec![
+            loaded(0, 0, 3, 1),
+            ServerLoad {
+                server: 7,
+                rtt_ns: 250_000,
+                age_ns: 40_000_000,
+                devices: vec![
+                    DeviceLoad {
+                        held: 64,
+                        backlog: 12,
+                        rate_cps: 123.456,
+                    },
+                    DeviceLoad {
+                        held: 0,
+                        backlog: 0,
+                        rate_cps: 0.0,
+                    },
+                ],
+            },
+        ];
+        let dec = decode_loads(&encode_loads(&loads)).unwrap();
+        assert_eq!(dec.len(), 2);
+        assert_eq!(dec[0], loads[0]);
+        assert_eq!(dec[1].server, 7);
+        assert_eq!(dec[1].devices[0].held, 64);
+        // Fixed-point rate survives to milli-cps precision.
+        assert!((dec[1].devices[0].rate_cps - 123.456).abs() < 1e-3);
+        assert!(decode_loads(&[1, 2]).is_err());
+    }
+}

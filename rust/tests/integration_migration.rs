@@ -207,6 +207,87 @@ fn first_use_of_unwritten_buffer_is_zero_filled_and_daemon_survives() {
 }
 
 #[test]
+fn scheduler_migrates_hot_buffer_off_saturated_daemon() {
+    use poclr::daemon::state::DEVICE_QUEUE_DEPTH;
+    use poclr::sched::placement::PlacementPolicy;
+    use std::time::{Duration, Instant};
+
+    let c = Cluster::start(
+        2,
+        1,
+        LinkProfile::LOOPBACK,
+        LinkProfile::LOOPBACK,
+        false,
+        &manifest(),
+        &["increment_s32_1"],
+    )
+    .unwrap();
+    let p = Platform::connect(
+        &c.addrs(),
+        ClientConfig {
+            placement: PlacementPolicy::LatencyAware,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let buf = ctx.create_buffer(4);
+    q0.write(buf, &7i32.to_le_bytes()).unwrap();
+    // Running a kernel over `buf` registers it in daemon 0's hot-buffer set.
+    q0.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
+
+    // Saturate daemon 0's only device gate from outside the stream path:
+    // every slot held by a ghost stream, none of them draining.
+    let ghost = ([0xEEu8; 16], 0u32);
+    for _ in 0..DEVICE_QUEUE_DEPTH {
+        c.daemons[0].state.device_gates[0].force_enter(ghost);
+    }
+
+    // The next LoadReport from the idle peer makes daemon 0's scheduler
+    // see a gate at capacity next to a free neighbor and push the hot
+    // buffer over (gossip every 50 ms, rebalance cooldown 250 ms).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !c.daemons[1].state.buffers.contains(buf.0) {
+        assert!(
+            Instant::now() < deadline,
+            "scheduler never migrated the hot buffer to the idle peer"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The client-visible load snapshot agrees: both servers reported,
+    // server 0 saturated.
+    let loads = p.cluster_loads().unwrap();
+    assert_eq!(loads.len(), 2);
+    let srv0 = loads.iter().find(|s| s.server == 0).unwrap();
+    assert!(srv0.devices[0].held >= DEVICE_QUEUE_DEPTH as u32);
+    // ...and placement steers new work to the idle peer. Retried because
+    // the vantage's gossip entry for the peer refreshes every 50 ms.
+    loop {
+        if p.place(200.0).unwrap() == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "placement never chose the idle peer while local was saturated"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Drain the ghost slots; the stack stays healthy, no completion was
+    // lost, and the migrated buffer still reads back identically.
+    for _ in 0..DEVICE_QUEUE_DEPTH {
+        c.daemons[0].state.device_gates[0].release(ghost);
+    }
+    let out = q0.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 8);
+    q0.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
+    let out = q0.read(buf).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 9);
+}
+
+#[test]
 fn many_small_migrations_in_flight() {
     // Stress: 16 buffers ping-ponging concurrently between two servers
     // exercises dispatcher pending-rescan and peer-writer interleaving.

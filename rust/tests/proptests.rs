@@ -11,7 +11,7 @@ use poclr::util::rng::Rng;
 const CASES: u64 = 300;
 
 fn arb_body(rng: &mut Rng) -> Body {
-    match rng.gen_range(0, 10) {
+    match rng.gen_range(0, 11) {
         0 => Body::CreateBuffer {
             buf: rng.next_u64(),
             size: rng.next_u64() >> 20,
@@ -58,6 +58,18 @@ fn arb_body(rng: &mut Rng) -> Body {
             buf: rng.next_u64(),
             size: rng.next_u64(),
         },
+        9 => {
+            let n_dev = rng.gen_range(0, 4) as usize;
+            Body::LoadReport {
+                origin: rng.next_u32(),
+                sent_ns: rng.next_u64(),
+                echo_ns: rng.next_u64(),
+                echo_hold_ns: rng.next_u64(),
+                held: (0..n_dev).map(|_| rng.next_u64() >> 40).collect(),
+                backlog: (0..n_dev).map(|_| rng.next_u64() >> 40).collect(),
+                rate_mcps: (0..n_dev).map(|_| rng.next_u64() >> 20).collect(),
+            }
+        }
         _ => Body::Barrier,
     }
 }
@@ -914,6 +926,95 @@ fn prop_session_registry_consistent_under_attach_interleavings() {
             assert_eq!(event, 424242);
             assert_eq!(status, poclr::proto::EventStatus::Complete.to_i8());
             break;
+        }
+    }
+}
+
+#[test]
+fn prop_placement_is_deterministic_and_total() {
+    // The cluster scheduler's core contract (see `sched::placement`):
+    // identical snapshots give identical placements, the chosen server is
+    // always present in the snapshot (never a departed peer), an empty
+    // snapshot falls back to the vantage, and a migration target is a
+    // snapshot member distinct from the vantage. LatencyAware must also
+    // be order-invariant: gossip arrival order cannot change a decision.
+    use poclr::sched::placement::{
+        ClusterSnapshot, DeviceLoad, PlacementPolicy, ServerLoad,
+    };
+
+    fn arb_snapshot(rng: &mut Rng) -> ClusterSnapshot {
+        let n = rng.gen_range(0, 8) as usize;
+        let mut id = 0u32;
+        let servers: Vec<ServerLoad> = (0..n)
+            .map(|_| {
+                id += 1 + rng.next_u32() % 3; // distinct, possibly gappy ids
+                let n_dev = rng.gen_range(0, 4) as usize;
+                ServerLoad {
+                    server: id,
+                    rtt_ns: rng.next_u64() >> rng.gen_range(20, 44),
+                    age_ns: rng.next_u64() >> rng.gen_range(20, 44),
+                    devices: (0..n_dev)
+                        .map(|_| DeviceLoad {
+                            held: rng.gen_range(0, 200) as u32,
+                            backlog: rng.gen_range(0, 1 << 12) as u32,
+                            // 0 = unmeasured (fallback-rate path)
+                            rate_cps: if rng.next_u32() % 4 == 0 {
+                                0.0
+                            } else {
+                                rng.gen_range(1, 1 << 20) as f64
+                            },
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        // Vantage is usually a member, sometimes a departed server.
+        let local = if !servers.is_empty() && rng.next_u32() % 4 != 0 {
+            servers[rng.gen_range(0, servers.len() as u64) as usize].server
+        } else {
+            rng.next_u32()
+        };
+        ClusterSnapshot { local, servers }
+    }
+
+    let mut rng = Rng::new(0x71ACE5);
+    for case in 0..CASES {
+        let snap = arb_snapshot(&mut rng);
+        let cost = rng.gen_range(0, 1 << 20) as f64 / 10.0;
+        for policy in [PlacementPolicy::Static, PlacementPolicy::LatencyAware] {
+            let a = policy.place(cost, &snap);
+            assert_eq!(
+                a,
+                policy.place(cost, &snap),
+                "case {case}: {policy:?} not deterministic"
+            );
+            if snap.servers.is_empty() {
+                assert_eq!(a, snap.local, "case {case}: empty snapshot fallback");
+            } else {
+                assert!(
+                    snap.servers.iter().any(|s| s.server == a),
+                    "case {case}: {policy:?} placed on absent server {a}"
+                );
+            }
+            if let Some(t) = policy.migrate_target(&snap, 64) {
+                assert_eq!(policy, PlacementPolicy::LatencyAware, "case {case}");
+                assert_ne!(t, snap.local, "case {case}: migrate to self");
+                assert!(
+                    snap.servers.iter().any(|s| s.server == t),
+                    "case {case}: migrate target {t} absent from snapshot"
+                );
+            }
+        }
+        if !snap.servers.is_empty() {
+            let want = PlacementPolicy::LatencyAware.place(cost, &snap);
+            let mut rot = snap.clone();
+            rot.servers
+                .rotate_left(rng.gen_range(0, rot.servers.len() as u64) as usize);
+            assert_eq!(
+                PlacementPolicy::LatencyAware.place(cost, &rot),
+                want,
+                "case {case}: placement depends on snapshot order"
+            );
         }
     }
 }
