@@ -121,11 +121,41 @@ pub struct Platform {
     inner: Arc<PlatformInner>,
 }
 
+/// Mint the platform's session id: 16 bytes of OS entropy
+/// (`/dev/urandom`), falling back to the process PRNG off-unix. Never
+/// all-zero — a zero id on the wire means "daemon, mint one for me",
+/// which would leave each server with a *different* id (and so a
+/// different buffer/event namespace) for this one client.
+fn mint_session_id() -> crate::proto::SessionId {
+    use std::io::Read;
+    let mut id = [0u8; 16];
+    let from_os = std::fs::File::open("/dev/urandom")
+        .and_then(|mut f| f.read_exact(&mut id))
+        .is_ok();
+    while !from_os && id == [0u8; 16] {
+        let mut rng = crate::util::rng::Rng::from_entropy();
+        id[..8].copy_from_slice(&rng.next_u64().to_le_bytes());
+        id[8..].copy_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    if id == [0u8; 16] {
+        id[0] = 1;
+    }
+    id
+}
+
 impl Platform {
     /// Dial every server and perform the session handshake.
+    ///
+    /// The platform mints ONE random session id and presents it to every
+    /// server: each daemon derives the client's buffer/event id namespace
+    /// from the session id, and cross-server migration only works if all
+    /// daemons agree on that namespace. (A zero id would make each daemon
+    /// mint its own, giving the same client different namespaces on
+    /// different servers.)
     pub fn connect(addrs: &[String], cfg: ClientConfig) -> Result<Platform> {
         let events = Arc::new(EventTable::new());
         let read_results = Arc::new(Mutex::new(HashMap::new()));
+        let session = mint_session_id();
         let mut servers = Vec::new();
         for (i, addr) in addrs.iter().enumerate() {
             servers.push(ServerConn::connect(
@@ -134,6 +164,7 @@ impl Platform {
                 cfg.clone(),
                 Arc::clone(&events),
                 Arc::clone(&read_results),
+                session,
             )?);
         }
         if servers.is_empty() {

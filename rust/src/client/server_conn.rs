@@ -341,12 +341,22 @@ pub struct ServerConn {
 impl ServerConn {
     /// Dial, perform the session handshake, spawn the control stream's
     /// I/O threads.
+    ///
+    /// `session` is the id this connection presents in its `Hello` —
+    /// [`Platform::connect`](crate::client::Platform::connect) mints one
+    /// random id and hands the *same* value to every server so the whole
+    /// cluster derives the same id namespace for this client (daemons
+    /// prefix buffer/event ids with a namespace computed from the session
+    /// id; migration between servers relies on the prefixes agreeing).
+    /// An all-zero id asks the daemon to mint one instead — fine for a
+    /// single-server session, wrong for a multi-server platform.
     pub fn connect(
         server_id: u32,
         addr: String,
         cfg: ClientConfig,
         events: Arc<EventTable>,
         read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
+        session: crate::proto::SessionId,
     ) -> Result<Arc<ServerConn>> {
         let core = Arc::new(SessionCore {
             server_id,
@@ -354,7 +364,7 @@ impl ServerConn {
             cfg,
             events,
             read_results,
-            session: Mutex::new([0u8; 16]),
+            session: Mutex::new(session),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(false)),
         });

@@ -34,6 +34,12 @@ use crate::util::now_ns;
 /// enough that a 16-peer mesh costs well under a packet per millisecond.
 pub const LOAD_REPORT_EVERY: Duration = Duration::from_millis(50);
 
+/// Upper bound on per-report device entries folded into the view. Real
+/// servers have a handful of devices; a malformed or hostile report
+/// whose load vectors decode to millions of entries is truncated here so
+/// gossip can never balloon a [`PeerEntry`].
+pub const MAX_REPORT_DEVICES: usize = 256;
+
 /// What this daemon currently knows about one peer.
 struct PeerEntry {
     devices: Vec<DeviceLoad>,
@@ -71,6 +77,11 @@ impl ClusterView {
 
     /// Ingest one peer report (the dispatcher's tag-16 arm). Closes the
     /// RTT loop when the report echoes one of our stamps.
+    ///
+    /// Load vectors are zipped (mismatched lengths truncate to the
+    /// shortest) and capped at [`MAX_REPORT_DEVICES`]: a hostile or
+    /// corrupted report cannot grow a peer entry beyond a plausible
+    /// device count no matter how long its vectors decode.
     pub fn apply(
         &self,
         from: u32,
@@ -86,6 +97,7 @@ impl ClusterView {
             .iter()
             .zip(backlog)
             .zip(rate_mcps)
+            .take(MAX_REPORT_DEVICES)
             .map(|((&h, &b), &r)| DeviceLoad {
                 held: h as u32,
                 backlog: b as u32,

@@ -46,7 +46,7 @@ use crate::net::poll::{self, PollEvent};
 use crate::net::LinkProfile;
 use crate::proto::frame::{FrameDecoder, RecvRing, MAX_COALESCE, RECV_RING_BYTES};
 use crate::proto::wire::W;
-use crate::proto::{Body, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
+use crate::proto::{Body, EventStatus, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
 
 use super::dispatch::Work;
 use super::shard::{IoCtx, Seed, ShardMsg, ShardPool, TimerKind};
@@ -88,6 +88,58 @@ pub fn accept_loop(
         crate::net::tcp::tune(&stream).ok();
         pool.assign(stream);
     }
+}
+
+/// Rewrite every client-presented buffer/event id in `msg` into the
+/// session's daemon-global namespace ([`Session::to_global`]): the
+/// header's event and wait list, plus each body field that names a
+/// buffer. Applied exactly once per inbound client packet, at the
+/// session boundary — nothing downstream ever sees a raw client id, and
+/// peer/migration traffic keeps using global ids untouched.
+///
+/// Returns `false` (without translating the body) for peer-plane bodies
+/// a client stream must never carry — MigrateData, NotifyEvent,
+/// Completion, Welcome, RdmaAdvertise. Accepting a client MigrateData,
+/// for instance, would let one tenant plant buffer contents under
+/// another's global ids; the caller fails the command instead.
+fn translate_client_ids(sess: &Session, msg: &mut Msg) -> bool {
+    msg.event = sess.to_global(msg.event);
+    for w in msg.wait.iter_mut() {
+        *w = sess.to_global(*w);
+    }
+    match &mut msg.body {
+        Body::CreateBuffer {
+            buf,
+            content_size_buf,
+            ..
+        } => {
+            *buf = sess.to_global(*buf);
+            *content_size_buf = sess.to_global(*content_size_buf);
+        }
+        Body::FreeBuffer { buf }
+        | Body::WriteBuffer { buf, .. }
+        | Body::ReadBuffer { buf, .. }
+        | Body::MigrateOut { buf, .. }
+        | Body::SetContentSize { buf, .. } => {
+            *buf = sess.to_global(*buf);
+        }
+        Body::RunKernel { args, outs, .. } => {
+            for id in args.iter_mut().chain(outs.iter_mut()) {
+                *id = sess.to_global(*id);
+            }
+        }
+        // No buffer ids to translate; handled (or ignored) inline by the
+        // dispatcher.
+        Body::Barrier | Body::LoadReport { .. } | Body::Hello { .. } | Body::AttachQueue { .. } => {}
+        // The header translated above still stands for these: the
+        // rejection path fails the event under the session's namespace.
+        Body::MigrateData { .. }
+        | Body::NotifyEvent { .. }
+        | Body::Completion { .. }
+        | Body::Welcome { .. }
+        | Body::RdmaAdvertise { .. } => return false,
+    }
+    true
 }
 
 /// What a connection is, resolved by its handshake packet.
@@ -368,7 +420,7 @@ impl Conn {
             } => {
                 let Some((sess, _resumed)) = ctx.state.sessions.attach(session) else {
                     eprintln!(
-                        "[pocld{}] connection setup failed: session registry full ({} live sessions)",
+                        "[pocld{}] connection setup failed: session refused (registry full or id-namespace claimed; {} live sessions)",
                         ctx.state.server_id,
                         ctx.state.sessions.len()
                     );
@@ -404,7 +456,7 @@ impl Conn {
                 }
                 let Some((sess, _resumed)) = ctx.state.sessions.attach(session) else {
                     eprintln!(
-                        "[pocld{}] connection setup failed: session registry full ({} live sessions)",
+                        "[pocld{}] connection setup failed: session refused (registry full or id-namespace claimed; {} live sessions)",
                         ctx.state.server_id,
                         ctx.state.sessions.len()
                     );
@@ -539,23 +591,34 @@ impl Conn {
         Outbox::new(move || shard.inject(ShardMsg::Flush(token)))
     }
 
-    /// One admitted client packet: replay dedup, device-gate admission,
-    /// dispatch — the body of the old reader loop, verbatim in policy.
-    fn on_client_packet(&mut self, ctx: &mut IoCtx, pkt: Packet) -> bool {
+    /// One admitted client packet: id-namespace translation, replay
+    /// dedup, quota admission, device-gate admission, dispatch — the
+    /// body of the old reader loop, extended with the tenant-isolation
+    /// boundary.
+    fn on_client_packet(&mut self, ctx: &mut IoCtx, mut pkt: Packet) -> bool {
         let sess = match &self.role {
             Role::Client { sess, queue, .. } => (Arc::clone(sess), *queue),
             _ => unreachable!("on_client_packet outside Client role"),
         };
         let (sess, queue) = sess;
+        sess.touch();
+        // The session boundary: every client-presented buffer/event id is
+        // rewritten into this session's namespace before anything
+        // downstream (event table, buffer store, dispatcher, peers) sees
+        // it, so two UEs both naming "buffer 1" can never collide.
+        // Peer-plane bodies on a client stream are flagged (not
+        // translated) and rejected below.
+        let body_ok = translate_client_ids(&sess, &mut pkt.msg);
         // Replay dedup after reconnect ("the server simply ignores
         // commands it has already processed"), per-stream cursor —
         // check-and-advance is one atomic step. Idempotent reads are
         // exempt: re-executing them regenerates the lost payload.
-        sess.touch();
         let idempotent = matches!(pkt.msg.body, Body::ReadBuffer { .. });
         if sess.check_and_note(queue, pkt.msg.cmd_id) && !idempotent {
             // If the duplicate already completed, the client lost the
-            // completion in the disconnect — resend it on this stream.
+            // completion in the disconnect — resend it on this stream
+            // (status lookup in daemon-global id space, the echoed
+            // Completion back in the client's).
             if pkt.msg.event != 0 {
                 if let Some(st) = ctx.state.events.status(pkt.msg.event) {
                     if st.is_terminal() {
@@ -563,7 +626,7 @@ impl Conn {
                         sess.send_on(
                             queue,
                             Packet::bare(Msg::control(Body::Completion {
-                                event: pkt.msg.event,
+                                event: sess.from_global(pkt.msg.event).unwrap_or(pkt.msg.event),
                                 status: st.to_i8(),
                                 ts,
                                 payload_len: 0,
@@ -573,6 +636,47 @@ impl Conn {
                 }
             }
             return true;
+        }
+        if !body_ok {
+            // A client stream carrying a peer-plane body (MigrateData,
+            // NotifyEvent, ...) is hostile or confused either way — a
+            // forged MigrateData would plant cross-tenant buffer state.
+            // Fail the command's event and answer with a Failed
+            // completion, but keep the connection: a fuzzer probing tags
+            // must see its events resolve, not hang.
+            self.fail_client_command(ctx, &sess, queue, &pkt);
+            return true;
+        }
+        // Per-session quota admission (the buffer-store extension of the
+        // UNDELIVERED_MAX_BYTES discipline): a session about to exceed
+        // its buffer-memory or event-table budget is failed and kicked,
+        // so a flooding UE dies at its own budget while neighbors keep
+        // full service. Oversize allocations (> MAX_ALLOC) are not a
+        // quota matter — they fall through to the dispatcher's
+        // fail-the-event path like any other invalid command.
+        let buf_breach = match &pkt.msg.body {
+            Body::CreateBuffer { size, .. } if *size <= super::state::MAX_ALLOC => {
+                ctx.state
+                    .buffers
+                    .used_by(sess.ns())
+                    .saturating_add(*size)
+                    > ctx.state.session_buf_quota
+            }
+            _ => false,
+        };
+        let event_breach = pkt.msg.event != 0
+            && ctx.state.events.tracked_for(sess.ns()) >= ctx.state.session_event_quota;
+        if buf_breach || event_breach {
+            ctx.state.quota_kicks.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[pocld{}] session breached its {} quota; kicking",
+                ctx.state.server_id,
+                if buf_breach { "buffer-memory" } else { "event-table" },
+            );
+            self.fail_client_command(ctx, &sess, queue, &pkt);
+            sess.kick();
+            self.close(ctx);
+            return false;
         }
         // Backpressure edge: device-bound queue-stream commands take a
         // slot of their device's bounded gate before dispatch, so a
@@ -590,6 +694,38 @@ impl Conn {
             }
         }
         self.forward_client(ctx, sess, pkt)
+    }
+
+    /// Fail a rejected client command's event everywhere it matters: the
+    /// local event table (waking parked dependents), the peer mesh
+    /// (dependents parked on other servers), and the client itself — a
+    /// Failed completion echoed in *its* id space over this session's
+    /// streams, so drivers and fuzzers alike see the event resolve
+    /// instead of hanging to a wait timeout. `pkt.msg.event` is already
+    /// daemon-global here. No-op for event 0 (nothing to resolve).
+    fn fail_client_command(&mut self, ctx: &mut IoCtx, sess: &Arc<Session>, queue: u32, pkt: &Packet) {
+        let global = pkt.msg.event;
+        if global == 0 {
+            return;
+        }
+        let wakeups = ctx.state.events.fail(global);
+        if !wakeups.is_empty() {
+            ctx.work_tx.send(Work::Wake(wakeups)).ok();
+        }
+        ctx.state
+            .broadcast_to_peers(&Packet::bare(Msg::control(Body::NotifyEvent {
+                event: global,
+                status: EventStatus::Failed.to_i8(),
+            })));
+        sess.send_on(
+            queue,
+            Packet::bare(Msg::control(Body::Completion {
+                event: sess.from_global(global).unwrap_or(global),
+                status: EventStatus::Failed.to_i8(),
+                ts: Default::default(),
+                payload_len: 0,
+            })),
+        );
     }
 
     fn forward_client(&mut self, ctx: &mut IoCtx, sess: Arc<Session>, pkt: Packet) -> bool {

@@ -522,7 +522,9 @@ impl Dispatcher {
                     sess.send_on(
                         queue,
                         Packet::bare(Msg::control(Body::Completion {
-                            event: ev,
+                            // On the wire back to the client, the event id
+                            // leaves in the session's own id space.
+                            event: sess.from_global(ev).unwrap_or(ev),
                             status: st.to_i8(),
                             ts: Timestamps::default(),
                             payload_len: 0,
@@ -662,7 +664,9 @@ impl Dispatcher {
         self.wake_queue.extend(wakeups);
         if let Some((sess, queue)) = origin {
             let completion = Msg::control(Body::Completion {
-                event,
+                // Reverse-translate for the wire: the client waits under
+                // its own id, not the namespace-prefixed global one.
+                event: sess.from_global(event).unwrap_or(event),
                 status: EventStatus::Complete.to_i8(),
                 ts,
                 payload_len: payload.len() as u64,
@@ -691,7 +695,7 @@ impl Dispatcher {
         self.wake_queue.extend(wakeups);
         if let Some((sess, queue)) = origin {
             let completion = Msg::control(Body::Completion {
-                event,
+                event: sess.from_global(event).unwrap_or(event),
                 status: EventStatus::Failed.to_i8(),
                 ts: Timestamps::default(),
                 payload_len: 0,

@@ -67,7 +67,10 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
                         sess.send_on(
                             *queue,
                             Packet::bare(Msg::control(Body::Completion {
-                                event: job.event,
+                                // Client-ward completions carry the
+                                // session-local event id, not the
+                                // namespace-prefixed global one.
+                                event: sess.from_global(job.event).unwrap_or(job.event),
                                 status: crate::proto::EventStatus::Failed.to_i8(),
                                 ts: Default::default(),
                                 payload_len: 0,
@@ -82,6 +85,19 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
 }
 
 fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {
+    // A destination that is not connected can never commit (and thus
+    // never completes the event); `send_to_peer` would drop the packet
+    // silently and strand the migration event forever. Fail fast so the
+    // worker's failure path fires and waiters are released.
+    if !job.use_rdma
+        && !state
+            .peer_txs
+            .lock()
+            .unwrap()
+            .contains_key(&job.dst_server)
+    {
+        anyhow::bail!("no peer link to destination server {}", job.dst_server);
+    }
     // Content-size extension: transfer only the meaningful prefix.
     // Single staging copy (hot path, see EXPERIMENTS.md §Perf): the
     // content prefix is read out under the buffer's own data lock directly

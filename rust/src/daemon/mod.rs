@@ -79,6 +79,16 @@ pub struct DaemonConfig {
     /// Cadence of the peer `LoadReport` exchange (tag 16) feeding the
     /// cluster scheduler's view; see [`cluster::LOAD_REPORT_EVERY`].
     pub load_report_every: std::time::Duration,
+    /// Per-session buffer-memory budget, bytes: total backing allocation
+    /// a session's id namespace may hold in the buffer store. A session
+    /// whose admission would breach it is kicked (see
+    /// [`state::DaemonState::session_buf_quota`]). Default 8 GiB —
+    /// effectively unlimited for well-behaved UEs, a hard wall for a
+    /// flooding one.
+    pub session_buf_quota: u64,
+    /// Per-session event-table budget: live event entries a session's
+    /// namespace may hold. Default 2^20.
+    pub session_event_quota: usize,
 }
 
 impl DaemonConfig {
@@ -96,6 +106,8 @@ impl DaemonConfig {
             max_sessions: state::MAX_SESSIONS,
             handshake_timeout: std::time::Duration::from_secs(10),
             load_report_every: cluster::LOAD_REPORT_EVERY,
+            session_buf_quota: 8 << 30,
+            session_event_quota: 1 << 20,
         }
     }
 
@@ -355,6 +367,8 @@ impl Cluster {
                 max_sessions: state::MAX_SESSIONS,
                 handshake_timeout: std::time::Duration::from_secs(10),
                 load_report_every: cluster::LOAD_REPORT_EVERY,
+                session_buf_quota: 8 << 30,
+                session_event_quota: 1 << 20,
             };
             daemons.push(Daemon::spawn(cfg)?);
         }

@@ -29,6 +29,27 @@ use super::DaemonConfig;
 /// down with an absurd `Vec` resize.
 pub const MAX_ALLOC: u64 = 1 << 31;
 
+/// Id-namespace prefix of a session: a 31-bit nonzero tag derived
+/// deterministically from the session id (its first four bytes, LE,
+/// masked and floored away from zero).
+///
+/// Client-presented buffer/event ids are translated at the session
+/// boundary to `(ns << 32) | id` ([`Session::to_global`]) so two
+/// mutually-distrusting UEs that both name "buffer 1" can never touch
+/// each other's state. Deriving the prefix from the session id (instead
+/// of minting it per daemon) keeps the translation consistent
+/// cluster-wide: every server a client connects to with one session id
+/// computes the same prefix, so migrated buffers and cross-server event
+/// notifications keep meaning the same object. The mask keeps bit 63 of
+/// every translated id clear — disjoint from the dispatcher's synthetic
+/// scheduler events (`(1 << 63) | fresh_id()`) — and the `.max(1)` keeps
+/// prefix 0 reserved for untranslated internal ids. Prefix collisions
+/// between sessions are refused at attach ([`Sessions::attach`] claims
+/// the prefix), so within one daemon the namespace really is exclusive.
+pub fn ns_of(sid: &SessionId) -> u32 {
+    (u32::from_le_bytes(sid[0..4].try_into().unwrap()) & 0x7FFF_FFFF).max(1)
+}
+
 /// One allocated OpenCL buffer on this server.
 pub struct BufEntry {
     pub data: Arc<RwLock<Vec<u8>>>,
@@ -51,6 +72,13 @@ pub const BUF_SHARDS: usize = 16;
 /// lookups, never for bulk copies.
 pub struct BufStore {
     shards: Vec<Mutex<HashMap<u64, BufEntry>>>,
+    /// Allocated bytes per id-namespace prefix (`id >> 32`) — the
+    /// denominator of the per-session buffer-memory quota
+    /// ([`BufStore::used_by`]). Kept incrementally (charged on insert and
+    /// growth, credited on remove) so the admission check is O(1), not a
+    /// shard scan. A separate mutex from the shards: it is only ever
+    /// taken *after* a shard lock is released, never nested inside one.
+    used: Mutex<HashMap<u32, u64>>,
 }
 
 impl Default for BufStore {
@@ -63,6 +91,7 @@ impl BufStore {
     pub fn new() -> BufStore {
         BufStore {
             shards: (0..BUF_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            used: Mutex::new(HashMap::new()),
         }
     }
 
@@ -73,19 +102,62 @@ impl BufStore {
         &self.shards[(h >> 32) as usize % BUF_SHARDS]
     }
 
+    /// Namespace prefix of a buffer id (see [`ns_of`]; 0 = untranslated).
+    fn prefix(id: u64) -> u32 {
+        (id >> 32) as u32
+    }
+
+    /// Charge `bytes` of allocation against `id`'s namespace.
+    fn charge(&self, id: u64, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        *self.used.lock().unwrap().entry(Self::prefix(id)).or_insert(0) += bytes;
+    }
+
+    /// Credit `bytes` back (entry removed / shrunk).
+    fn credit(&self, id: u64, bytes: u64) {
+        let mut used = self.used.lock().unwrap();
+        let p = Self::prefix(id);
+        if let Some(n) = used.get_mut(&p) {
+            *n = n.saturating_sub(bytes);
+            if *n == 0 {
+                used.remove(&p);
+            }
+        }
+    }
+
+    /// Allocated bytes currently held by namespace `prefix` (the
+    /// per-session quota check at admission; tests/metrics too).
+    pub fn used_by(&self, prefix: u32) -> u64 {
+        self.used.lock().unwrap().get(&prefix).copied().unwrap_or(0)
+    }
+
     /// Create the entry if absent (zero-filled allocation of `size`).
     pub fn ensure(&self, id: u64, size: u64, content_size_buf: u64) {
-        let mut m = self.shard(id).lock().unwrap();
-        m.entry(id).or_insert_with(|| BufEntry {
-            data: Arc::new(RwLock::new(vec![0u8; size as usize])),
-            size,
-            content_size_buf,
-            content_size: size,
-        });
+        {
+            let mut m = self.shard(id).lock().unwrap();
+            if m.contains_key(&id) {
+                return;
+            }
+            m.insert(
+                id,
+                BufEntry {
+                    data: Arc::new(RwLock::new(vec![0u8; size as usize])),
+                    size,
+                    content_size_buf,
+                    content_size: size,
+                },
+            );
+        }
+        self.charge(id, size);
     }
 
     pub fn remove(&self, id: u64) {
-        self.shard(id).lock().unwrap().remove(&id);
+        let removed = self.shard(id).lock().unwrap().remove(&id);
+        if let Some(e) = removed {
+            self.credit(id, e.size);
+        }
     }
 
     pub fn contains(&self, id: u64) -> bool {
@@ -598,6 +670,18 @@ pub struct DaemonState {
     /// handshake; sockets that connect and go silent are closed when it
     /// passes instead of pinning daemon resources forever.
     pub handshake_timeout: Duration,
+    /// Per-session buffer-memory budget, bytes
+    /// (`DaemonConfig::session_buf_quota`). A session whose allocations
+    /// would push its namespace's [`BufStore::used_by`] past this is
+    /// kicked at admission — the buffer-store extension of the
+    /// [`UNDELIVERED_MAX_BYTES`] discipline.
+    pub session_buf_quota: u64,
+    /// Per-session event-table budget, live entries
+    /// (`DaemonConfig::session_event_quota`), enforced against
+    /// [`EventTable::tracked_for`] at admission.
+    pub session_event_quota: usize,
+    /// Sessions kicked for breaching a quota (tests / metrics).
+    pub quota_kicks: AtomicU64,
     /// Commands processed (metrics).
     pub commands_seen: AtomicU64,
     /// Parked commands examined by completion wakeups (metrics). Under the
@@ -626,6 +710,9 @@ pub struct DaemonState {
 /// the registry lock.
 pub struct Session {
     pub id: SessionId,
+    /// This session's id-namespace prefix (see [`ns_of`]), cached at
+    /// creation — the per-packet translation must not recompute it.
+    ns: u32,
     /// Per-stream replay-dedup cursors: queue id -> highest cmd_id fully
     /// processed on that stream. Commands at or below the cursor are
     /// dropped on replay after reconnect (paper §4.3: "the server simply
@@ -663,12 +750,46 @@ impl Session {
     fn new(id: SessionId) -> Arc<Session> {
         Arc::new(Session {
             id,
+            ns: ns_of(&id),
             cursors: Mutex::new(HashMap::new()),
             client_txs: Mutex::new(HashMap::new()),
             client_streams: Mutex::new(HashMap::new()),
             undelivered: Mutex::new(Undelivered::default()),
             last_active_ns: AtomicU64::new(now_ns()),
         })
+    }
+
+    /// This session's id-namespace prefix (see [`ns_of`]).
+    pub fn ns(&self) -> u32 {
+        self.ns
+    }
+
+    /// Translate a client-presented buffer/event id into this session's
+    /// daemon-global namespace. 0 stays 0 (both id spaces reserve it as
+    /// "none"). Client ids are 32-bit in practice (`fresh_id` counts up
+    /// from 1); a client presenting ids past 2^32 aliases them *within
+    /// its own namespace only* — self-inflicted, never cross-tenant.
+    pub fn to_global(&self, id: u64) -> u64 {
+        if id == 0 {
+            0
+        } else {
+            ((self.ns as u64) << 32) | (id & 0xFFFF_FFFF)
+        }
+    }
+
+    /// Translate a daemon-global id back into this session's client id
+    /// space (completions must echo the ids the client presented).
+    /// `None` for ids outside this session's namespace — such an id can
+    /// only reach a translation site through a daemon bug, and the
+    /// callers' `unwrap_or(pass-through)` keeps even that non-fatal.
+    pub fn from_global(&self, global: u64) -> Option<u64> {
+        if global == 0 {
+            Some(0)
+        } else if (global >> 32) as u32 == self.ns {
+            Some(global & 0xFFFF_FFFF)
+        } else {
+            None
+        }
     }
 
     pub fn last_seen(&self, queue: u32) -> u64 {
@@ -784,8 +905,19 @@ impl Session {
 /// entry and the client replays from scratch; all of one client's
 /// streams still converge on one entry. Streamless sessions are reaped
 /// after [`SESSION_IDLE_TTL`] by the daemon's janitor thread.
+struct Registry {
+    map: HashMap<SessionId, Arc<Session>>,
+    /// Namespace prefix -> owning session id. One live session per
+    /// prefix: a fresh mint re-rolls on a claimed prefix, and adopting an
+    /// unknown id whose prefix a *different* live session holds is
+    /// refused outright — so "two sessions, one namespace" is
+    /// structurally impossible on this daemon, not merely improbable.
+    /// Claims are pruned whenever sessions are reaped.
+    ns_claims: HashMap<u32, SessionId>,
+}
+
 pub struct Sessions {
-    map: Mutex<HashMap<SessionId, Arc<Session>>>,
+    map: Mutex<Registry>,
     /// Fallback seed source for fresh session ids when the OS entropy
     /// pool is unavailable (see [`fill_os_entropy`]).
     rng: Mutex<Rng>,
@@ -831,11 +963,23 @@ impl Sessions {
     /// A registry bounded at `cap` live sessions.
     pub fn with_capacity(cap: usize) -> Sessions {
         Sessions {
-            map: Mutex::new(HashMap::new()),
+            map: Mutex::new(Registry {
+                map: HashMap::new(),
+                ns_claims: HashMap::new(),
+            }),
             rng: Mutex::new(Rng::from_entropy()),
             last_cap_reap_ns: AtomicU64::new(0),
             cap: cap.max(1),
         }
+    }
+
+    /// Drop streamless sessions idle past `ttl` and prune the namespace
+    /// claims of everything that went with them (a dead session must not
+    /// pin its prefix against a future tenant).
+    fn retain_live(reg: &mut Registry, ttl: Duration) {
+        reg.map
+            .retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < ttl);
+        reg.ns_claims.retain(|_, sid| reg.map.contains_key(sid));
     }
 
     /// The registry bound (tests / metrics).
@@ -862,9 +1006,9 @@ impl Sessions {
                 }
             }
         }
-        let mut map = self.map.lock().unwrap();
+        let mut reg = self.map.lock().unwrap();
         if !fresh {
-            if let Some(sess) = map.get(&presented) {
+            if let Some(sess) = reg.map.get(&presented) {
                 sess.touch();
                 return Some((Arc::clone(sess), true));
             }
@@ -874,21 +1018,25 @@ impl Sessions {
         // genuinely dead sessions before refusing a live UE — at most
         // once per second, so a flood hammering a full registry cannot
         // make every refused handshake pay the O(sessions) scan.
-        if map.len() >= self.cap {
+        if reg.map.len() >= self.cap {
             let now = now_ns();
             let last = self.last_cap_reap_ns.load(Ordering::Relaxed);
             if now.saturating_sub(last) >= 1_000_000_000 {
                 self.last_cap_reap_ns.store(now, Ordering::Relaxed);
-                map.retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < SESSION_IDLE_TTL);
+                Self::retain_live(&mut reg, SESSION_IDLE_TTL);
             }
-            if map.len() >= self.cap {
+            if reg.map.len() >= self.cap {
                 return None;
             }
         }
         let id = if fresh {
-            // An astronomically rare collision with a live id re-mints
-            // under the lock via the PRNG fallback (no file I/O here).
-            while candidate == [0u8; 16] || map.contains_key(&candidate) {
+            // An astronomically rare collision with a live id — or with a
+            // live id-namespace prefix — re-mints under the lock via the
+            // PRNG fallback (no file I/O here).
+            while candidate == [0u8; 16]
+                || reg.map.contains_key(&candidate)
+                || reg.ns_claims.contains_key(&ns_of(&candidate))
+            {
                 self.rng.lock().unwrap().fill_bytes(&mut candidate);
             }
             candidate
@@ -896,21 +1044,30 @@ impl Sessions {
             // Unknown id: adopt it with fresh replay state (daemon
             // restart / post-TTL return). Creation is atomic under the
             // map lock, so a client's streams racing their re-attach all
-            // land in one entry.
+            // land in one entry. Refused when the presented id's
+            // namespace prefix is claimed by a *different* live session —
+            // admitting it would let two tenants share one id namespace,
+            // the exact collision the translation exists to rule out.
+            if let Some(owner) = reg.ns_claims.get(&ns_of(&presented)) {
+                if *owner != presented {
+                    return None;
+                }
+            }
             presented
         };
         let sess = Session::new(id);
-        map.insert(id, Arc::clone(&sess));
+        reg.ns_claims.insert(sess.ns(), id);
+        reg.map.insert(id, Arc::clone(&sess));
         Some((sess, false))
     }
 
     pub fn get(&self, id: &SessionId) -> Option<Arc<Session>> {
-        self.map.lock().unwrap().get(id).map(Arc::clone)
+        self.map.lock().unwrap().map.get(id).map(Arc::clone)
     }
 
     /// Live session count (tests / metrics).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -919,7 +1076,7 @@ impl Sessions {
 
     /// Ids of every live session (tests / metrics).
     pub fn ids(&self) -> Vec<SessionId> {
-        self.map.lock().unwrap().keys().copied().collect()
+        self.map.lock().unwrap().map.keys().copied().collect()
     }
 
     /// Sever every stream of the named session; true if it exists.
@@ -938,7 +1095,7 @@ impl Sessions {
     /// handshakes are not stalled behind a syscall per stream.
     pub fn kick_all(&self) {
         let sessions: Vec<Arc<Session>> =
-            self.map.lock().unwrap().values().map(Arc::clone).collect();
+            self.map.lock().unwrap().map.values().map(Arc::clone).collect();
         for sess in sessions {
             sess.kick();
         }
@@ -951,10 +1108,10 @@ impl Sessions {
     /// still holding the `Arc` keep a harmless orphan alive until they
     /// exit; the registry entry is what grants new attaches.
     pub fn reap_idle(&self, ttl: Duration) -> usize {
-        let mut map = self.map.lock().unwrap();
-        let before = map.len();
-        map.retain(|_, sess| sess.n_streams() > 0 || sess.idle_for() < ttl);
-        before - map.len()
+        let mut reg = self.map.lock().unwrap();
+        let before = reg.map.len();
+        Self::retain_live(&mut reg, ttl);
+        before - reg.map.len()
     }
 
     /// Hang up sessions whose streams are open but silent for at least
@@ -977,6 +1134,7 @@ impl Sessions {
             .map
             .lock()
             .unwrap()
+            .map
             .values()
             .filter(|sess| sess.n_streams() > 0 && sess.idle_for() >= stale_after)
             .map(Arc::clone)
@@ -1047,6 +1205,9 @@ impl DaemonState {
             rdma,
             shutdown: AtomicBool::new(false),
             handshake_timeout: cfg.handshake_timeout,
+            session_buf_quota: cfg.session_buf_quota,
+            session_event_quota: cfg.session_event_quota,
+            quota_kicks: AtomicU64::new(0),
             commands_seen: AtomicU64::new(0),
             wake_examined: AtomicU64::new(0),
             threads,
@@ -1229,15 +1390,19 @@ impl DaemonState {
     pub fn commit_output(&self, out_id: u64, bytes: Vec<u8>) {
         let len = bytes.len() as u64;
         self.buffers.ensure(out_id, len, 0);
-        let Some((handle, cs_buf)) = self.buffers.with(out_id, |e| {
+        let Some((handle, cs_buf, grew)) = self.buffers.with(out_id, |e| {
             e.content_size = len;
+            let grew = len.saturating_sub(e.size);
             if e.size < len {
                 e.size = len;
             }
-            (Arc::clone(&e.data), e.content_size_buf)
+            (Arc::clone(&e.data), e.content_size_buf, grew)
         }) else {
             return;
         };
+        // Growth is charged against the namespace quota ledger outside
+        // the shard lock (the store's locking contract).
+        self.buffers.charge(out_id, grew);
         *handle.write().unwrap() = bytes;
         self.mirror_content_size(cs_buf, len);
     }
@@ -1248,15 +1413,17 @@ impl DaemonState {
     /// shard lock (the store's locking contract).
     pub fn commit_migration(&self, buf: u64, total_size: u64, content_size: u64, src: &[u8]) {
         self.buffers.ensure(buf, total_size, 0);
-        let Some((handle, cs_buf)) = self.buffers.with(buf, |e| {
+        let Some((handle, cs_buf, grew)) = self.buffers.with(buf, |e| {
             e.content_size = content_size;
+            let grew = total_size.saturating_sub(e.size);
             if e.size < total_size {
                 e.size = total_size;
             }
-            (Arc::clone(&e.data), e.content_size_buf)
+            (Arc::clone(&e.data), e.content_size_buf, grew)
         }) else {
             return;
         };
+        self.buffers.charge(buf, grew);
         {
             let mut data = handle.write().unwrap();
             if data.len() < total_size as usize {
@@ -1343,6 +1510,75 @@ mod tests {
         assert!(resumed);
         assert!(Arc::ptr_eq(&f1, &f2));
         assert_eq!(s.sessions.len(), 2);
+    }
+
+    #[test]
+    fn namespaces_are_exclusive_per_session() {
+        let s = state();
+        let (a, _) = s.sessions.attach([0u8; 16]).unwrap();
+        assert_ne!(a.ns(), 0, "prefix 0 is reserved for internal ids");
+        // Translation round-trips; 0 is "none" in both id spaces; bit 63
+        // stays clear (disjoint from synthetic scheduler events).
+        assert_eq!(a.to_global(0), 0);
+        let g = a.to_global(7);
+        assert_eq!(g >> 32, a.ns() as u64);
+        assert_eq!(g & (1 << 63), 0);
+        assert_eq!(a.from_global(g), Some(7));
+        assert_eq!(a.from_global(0), Some(0));
+        // A different session id computing the same prefix is refused at
+        // attach while the claim holder lives...
+        let mut rival = [9u8; 16];
+        rival[..4].copy_from_slice(&a.id[..4]);
+        assert_ne!(rival, a.id);
+        assert!(
+            s.sessions.attach(rival).is_none(),
+            "claimed prefix must refuse a rival session"
+        );
+        // ...and adoptable again once the holder is reaped.
+        assert_eq!(s.sessions.reap_idle(Duration::ZERO), 1);
+        assert!(s.sessions.attach(rival).is_some());
+        // A fresh mint never lands on a claimed prefix, so ids in A's
+        // namespace are foreign to it.
+        let (b, _) = s.sessions.attach([0u8; 16]).unwrap();
+        assert_ne!(b.ns(), a.ns());
+        assert_eq!(b.from_global(g), None);
+    }
+
+    #[test]
+    fn buf_store_tracks_per_namespace_usage() {
+        let store = BufStore::new();
+        let ns = |p: u64, id: u64| (p << 32) | id;
+        store.ensure(ns(5, 1), 100, 0);
+        store.ensure(ns(5, 2), 50, 0);
+        store.ensure(ns(6, 1), 10, 0);
+        assert_eq!(store.used_by(5), 150);
+        assert_eq!(store.used_by(6), 10);
+        // Re-ensuring an existing buffer never double-charges.
+        store.ensure(ns(5, 1), 100, 0);
+        assert_eq!(store.used_by(5), 150);
+        store.remove(ns(5, 1));
+        assert_eq!(store.used_by(5), 50);
+        store.remove(ns(5, 2));
+        assert_eq!(store.used_by(5), 0);
+        assert_eq!(store.used_by(6), 10);
+        assert_eq!(store.used_by(404), 0);
+    }
+
+    #[test]
+    fn commit_growth_is_charged_to_the_namespace() {
+        let s = state();
+        let id = (9u64 << 32) | 1;
+        s.ensure_buffer(id, 8, 0);
+        assert_eq!(s.buffers.used_by(9), 8);
+        s.commit_output(id, vec![1u8; 32]);
+        assert_eq!(s.buffers.used_by(9), 32);
+        // A smaller output keeps the high-water allocation charge.
+        s.commit_output(id, vec![1u8; 4]);
+        assert_eq!(s.buffers.used_by(9), 32);
+        s.commit_migration(id, 64, 64, &[0u8; 16]);
+        assert_eq!(s.buffers.used_by(9), 64);
+        s.buffers.remove(id);
+        assert_eq!(s.buffers.used_by(9), 0);
     }
 
     #[test]

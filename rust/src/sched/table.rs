@@ -48,23 +48,36 @@ struct Inner {
     waiters: HashMap<u64, Vec<u64>>,
     /// Parked token -> number of unresolved dependency registrations.
     parked: HashMap<u64, usize>,
-    /// Highest event id reclaimed by [`EventTable::gc_terminal`]. Only
-    /// *Complete* entries are ever reclaimed, so an unknown id at or below
-    /// the floor is known-Complete — without this, a wait list referencing
-    /// a reclaimed dependency would re-materialize it as Queued and park
-    /// forever (ids are allocated monotonically by `fresh_id`).
+    /// Highest event id reclaimed by [`EventTable::gc_terminal`], tracked
+    /// *per id-namespace prefix* (`id >> 32`). Only *Complete* entries are
+    /// ever reclaimed, so an unknown id at or below its namespace's floor
+    /// is known-Complete — without this, a wait list referencing a
+    /// reclaimed dependency would re-materialize it as Queued and park
+    /// forever (ids are allocated monotonically within a namespace by
+    /// `fresh_id`).
     ///
-    /// Caveat: "unknown and below the floor" cannot be distinguished from
-    /// "exists elsewhere but still pending" — an event pending on another
-    /// server (or stranded in a severed stream's replay backlog) for
-    /// longer than keep-depth *completions* at this daemon, and only then
-    /// referenced here for the first time, would have its ordering edge
-    /// dropped. The deep keep-depth (see `dispatch::EVENT_TABLE_KEEP`)
-    /// makes that window unrealistic; the alternative — no floor — is a
-    /// guaranteed park-forever for every late reference to a
-    /// legitimately reclaimed event. Exact discrimination needs client
-    /// acks or a compressed reclaimed-id set (ROADMAP).
-    gc_floor: u64,
+    /// The floor must be per-prefix: daemon-side event ids are prefixed
+    /// with the owning session's namespace, and namespaces mint ids
+    /// independently — a single global floor raised by one busy session
+    /// would misread another session's fresh small ids as Complete.
+    ///
+    /// Caveat: within one namespace, "unknown and below the floor" cannot
+    /// be distinguished from "exists elsewhere but still pending" — an
+    /// event pending on another server (or stranded in a severed stream's
+    /// replay backlog) for longer than keep-depth *completions* at this
+    /// daemon, and only then referenced here for the first time, would
+    /// have its ordering edge dropped. The deep keep-depth (see
+    /// `dispatch::EVENT_TABLE_KEEP`) makes that window unrealistic; the
+    /// alternative — no floor — is a guaranteed park-forever for every
+    /// late reference to a legitimately reclaimed event. Exact
+    /// discrimination needs client acks or a compressed reclaimed-id set
+    /// (ROADMAP).
+    gc_floors: HashMap<u32, u64>,
+    /// Live entry count per id-namespace prefix (`id >> 32`) — the
+    /// denominator of the per-session event-table quota
+    /// ([`EventTable::tracked_for`]). Maintained by `ensure_entry` /
+    /// `gc_terminal` so reading it is O(1) on the hot admission path.
+    live: HashMap<u32, usize>,
 }
 
 /// Thread-safe event status registry.
@@ -93,11 +106,27 @@ impl EventTable {
         Self::ensure_entry(&mut m, id);
     }
 
+    /// Namespace prefix of an event id (the per-session translation in
+    /// `daemon::state` puts the owning session's namespace in the high
+    /// 32 bits; untranslated/client-side ids all share prefix 0).
+    fn prefix(id: u64) -> u32 {
+        (id >> 32) as u32
+    }
+
+    /// GC floor governing `id` (its namespace's floor; 0 = nothing
+    /// reclaimed there yet).
+    fn floor_of(m: &Inner, id: u64) -> u64 {
+        m.gc_floors.get(&Self::prefix(id)).copied().unwrap_or(0)
+    }
+
     fn ensure_entry(m: &mut Inner, id: u64) {
-        m.events.entry(id).or_insert(Entry {
-            status: EventStatus::Queued,
-            ts: Timestamps::default(),
-        });
+        if let std::collections::hash_map::Entry::Vacant(v) = m.events.entry(id) {
+            v.insert(Entry {
+                status: EventStatus::Queued,
+                ts: Timestamps::default(),
+            });
+            *m.live.entry(Self::prefix(id)).or_insert(0) += 1;
+        }
     }
 
     /// Atomically evaluate a wait list and, if it is unresolved, register
@@ -124,8 +153,8 @@ impl EventTable {
                 Some(EventStatus::Complete) => {}
                 Some(EventStatus::Failed) => return DepsState::Poisoned,
                 Some(_) => blocking.push(*id),
-                // Reclaimed ids were Complete (see `gc_floor`).
-                None if *id <= m.gc_floor => {}
+                // Reclaimed ids were Complete (see `gc_floors`).
+                None if *id <= Self::floor_of(&m, *id) => {}
                 None => {
                     Self::ensure_entry(&mut m, *id);
                     blocking.push(*id);
@@ -235,7 +264,7 @@ impl EventTable {
             Some(e) => Some(e.status),
             // Reclaimed entries were Complete; report that rather than
             // "unknown" so replay dedup can still resend completions.
-            None if id != 0 && id <= m.gc_floor => Some(EventStatus::Complete),
+            None if id != 0 && id <= Self::floor_of(&m, id) => Some(EventStatus::Complete),
             None => None,
         }
     }
@@ -257,7 +286,7 @@ impl EventTable {
             match m.events.get(id).map(|e| e.status) {
                 Some(EventStatus::Complete) => {}
                 Some(EventStatus::Failed) => return DepsState::Poisoned,
-                None if *id <= m.gc_floor => {}
+                None if *id <= Self::floor_of(&m, *id) => {}
                 _ => all_done = false,
             }
         }
@@ -279,7 +308,7 @@ impl EventTable {
             match m.events.get(&id).map(|e| e.status) {
                 Some(EventStatus::Complete) => return WaitOutcome::Complete,
                 Some(EventStatus::Failed) => return WaitOutcome::Failed,
-                None if id <= m.gc_floor => return WaitOutcome::Complete,
+                None if id <= Self::floor_of(&m, id) => return WaitOutcome::Complete,
                 _ => {}
             }
             let now = std::time::Instant::now();
@@ -332,8 +361,25 @@ impl EventTable {
         for id in complete.into_iter().take(excess) {
             m.events.remove(&id);
             m.waiters.remove(&id);
-            m.gc_floor = m.gc_floor.max(id);
+            let p = Self::prefix(id);
+            if let Some(n) = m.live.get_mut(&p) {
+                *n = n.saturating_sub(1);
+            }
+            let floor = m.gc_floors.entry(p).or_insert(0);
+            *floor = (*floor).max(id);
         }
+    }
+
+    /// Live entries whose id carries namespace `prefix` (the per-session
+    /// event-table quota reads this at admission; tests/metrics too).
+    pub fn tracked_for(&self, prefix: u32) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .live
+            .get(&prefix)
+            .copied()
+            .unwrap_or(0)
     }
 }
 
@@ -462,6 +508,27 @@ mod tests {
         t2.gc_terminal(2);
         assert_eq!(t2.status(51), Some(EventStatus::Failed));
         assert_eq!(t2.park(9, &[51]), DepsState::Poisoned);
+    }
+
+    #[test]
+    fn gc_floor_is_per_namespace_prefix() {
+        let t = EventTable::new();
+        let ns = |p: u64, id: u64| (p << 32) | id;
+        for i in 1..=100 {
+            t.complete(ns(7, i), Timestamps::default());
+        }
+        t.gc_terminal(5);
+        // Reclaimed ids in namespace 7 read Complete...
+        assert_eq!(t.status(ns(7, 1)), Some(EventStatus::Complete));
+        // ...but the same small id in ANOTHER namespace is still unknown:
+        // a fresh session's first events must not inherit a busy
+        // neighbor's floor.
+        assert_eq!(t.status(ns(9, 1)), None);
+        assert_eq!(t.park(1, &[ns(9, 1)]), DepsState::Blocked);
+        // Live counts are per-prefix too.
+        assert_eq!(t.tracked_for(7), 5);
+        assert_eq!(t.tracked_for(9), 1);
+        assert_eq!(t.tracked_for(123), 0);
     }
 
     // ---- reverse waiter index -------------------------------------------

@@ -230,3 +230,107 @@ fn flooding_session_chokes_at_its_own_share_while_other_session_is_admitted() {
     b_ev.wait().unwrap();
     eventually("gate drained", || gate.held() == 0);
 }
+
+#[test]
+fn memory_quota_kicks_flooder_while_neighbor_burst_completes_clean() {
+    // Quota fairness: a raw-socket session allocating past its
+    // buffer-memory budget is failed and kicked at the admission edge,
+    // while a concurrent well-behaved neighbor's in-flight burst
+    // completes with zero errors. (Red against the pre-quota daemon: the
+    // flood is served in full and `admitted` reaches the loop bound.)
+    use poclr::daemon::state::ns_of;
+    use poclr::proto::{read_packet, write_packet, Body, EventStatus, Msg, ROLE_CLIENT};
+
+    let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+    cfg.custom_devices = vec![DeviceKind::Custom(Box::new(Noop))];
+    cfg.session_buf_quota = 1 << 20; // 1 MiB: four 256 KiB allocations fit
+    let d = Daemon::spawn(cfg).unwrap();
+
+    // The neighbor: a well-behaved client-API session.
+    let p = Platform::connect(&[d.addr()], ClientConfig::default()).unwrap();
+
+    let flooder_sid = std::thread::scope(|scope| {
+        let addr = d.addr();
+        let flood = scope.spawn(move || {
+            let mut s = std::net::TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            write_packet(
+                &mut s,
+                &Msg::control(Body::Hello {
+                    session: [0u8; 16],
+                    role: ROLE_CLIENT,
+                    peer_id: 0,
+                }),
+                &[],
+            )
+            .unwrap();
+            let welcome = read_packet(&mut s).unwrap();
+            let Body::Welcome { session, .. } = welcome.msg.body else {
+                panic!("expected Welcome, got {:?}", welcome.msg.body);
+            };
+            // Allocate 256 KiB buffers until the daemon refuses,
+            // serialized on completions so each admission check sees the
+            // committed ledger (deterministic breach point).
+            let mut admitted = 0u32;
+            'flood: for i in 0..64u64 {
+                let msg = Msg {
+                    cmd_id: 0,
+                    queue: 0,
+                    device: 0,
+                    event: 1 + i,
+                    wait: Vec::new(),
+                    body: Body::CreateBuffer {
+                        buf: 1 + i,
+                        size: 256 << 10,
+                        content_size_buf: 0,
+                    },
+                };
+                if write_packet(&mut s, &msg, &[]).is_err() {
+                    break;
+                }
+                loop {
+                    let pkt = match read_packet(&mut s) {
+                        Ok(p) => p,
+                        Err(_) => break 'flood, // kicked: socket severed
+                    };
+                    if let Body::Completion { event, status, .. } = pkt.msg.body {
+                        if event == 1 + i {
+                            if EventStatus::from_i8(status) == EventStatus::Complete {
+                                admitted += 1;
+                                continue 'flood;
+                            }
+                            break 'flood; // breach: command failed
+                        }
+                    }
+                }
+            }
+            (session, admitted)
+        });
+
+        // Meanwhile the neighbor's burst completes with zero errors.
+        let ctx = p.context();
+        let q = ctx.out_of_order_queue(0, 0);
+        for round in 0..20u8 {
+            let b = ctx.create_buffer(4096);
+            q.write(b, &vec![round; 4096]).unwrap();
+            assert_eq!(q.read(b).unwrap(), vec![round; 4096]);
+        }
+
+        let (flooder_sid, admitted) = flood.join().unwrap();
+        assert_eq!(admitted, 4, "exactly quota/alloc-size creates fit");
+        flooder_sid
+    });
+
+    eventually("flooder counted as a quota kick", || {
+        d.state.quota_kicks.load(Ordering::Relaxed) >= 1
+    });
+    // The flooder's namespace holds no more than its budget, and its
+    // debris is invisible to the neighbor's namespace.
+    assert!(d.state.buffers.used_by(ns_of(&flooder_sid)) <= 1 << 20);
+    assert_ne!(ns_of(&flooder_sid), ns_of(&p.session_id(0)));
+
+    // The neighbor keeps full service after the kick.
+    let ctx = p.context();
+    let q = ctx.out_of_order_queue(0, 0);
+    q.run("test.noop", &[], &[]).unwrap().wait().unwrap();
+}

@@ -248,7 +248,11 @@ fn scheduler_migrates_hot_buffer_off_saturated_daemon() {
     // see a gate at capacity next to a free neighbor and push the hot
     // buffer over (gossip every 50 ms, rebalance cooldown 250 ms).
     let deadline = Instant::now() + Duration::from_secs(10);
-    while !c.daemons[1].state.buffers.contains(buf.0) {
+    // Daemon-side, the buffer lives under its session-namespaced global
+    // id (the client's session id prefixes every client-presented id).
+    let global_buf =
+        ((poclr::daemon::state::ns_of(&p.session_id(0)) as u64) << 32) | buf.0;
+    while !c.daemons[1].state.buffers.contains(global_buf) {
         assert!(
             Instant::now() < deadline,
             "scheduler never migrated the hot buffer to the idle peer"
@@ -285,6 +289,96 @@ fn scheduler_migrates_hot_buffer_off_saturated_daemon() {
     q0.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
     let out = q0.read(buf).unwrap();
     assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 9);
+}
+
+#[test]
+fn kick_mid_migration_commits_at_destination_and_source_stays_healthy() {
+    // The kick-vs-migration race: a session is kicked while a migration
+    // job referencing its buffer is still crossing the (slow) peer link.
+    // The push must still commit at the destination under the session's
+    // namespace-prefixed global id, the destination-side completion that
+    // races the reaped session must be dropped rather than deadlock the
+    // dispatcher, and the source daemon must keep serving fresh sessions.
+    use std::time::{Duration, Instant};
+
+    let c = Cluster::start(
+        2,
+        1,
+        LinkProfile::LOOPBACK,
+        // 16 MiB over 100 Mbit/s ≈ 1.3 s of shaped transfer: the job is
+        // genuinely in flight when the kick lands ~100 ms in.
+        LinkProfile::ETH_100M,
+        false,
+        &manifest(),
+        &["increment_s32_1"],
+    )
+    .unwrap();
+    let p = Platform::connect(
+        &c.addrs(),
+        ClientConfig {
+            reconnect: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let sid = p.session_id(0);
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let n = 16 * 1024 * 1024;
+    let buf = ctx.create_buffer(n as u64);
+    q0.write(buf, &vec![0x6Du8; n]).unwrap();
+    // Round-trip before racing: the write has fully landed on server 0.
+    assert_eq!(q0.read(buf).unwrap()[n - 1], 0x6D);
+
+    // MigrateOut reaches server 0's dispatcher in microseconds; the bulk
+    // push then crawls over the shaped peer link. Kick mid-flight. (The
+    // migration completion is forwarded by the kicked source session, so
+    // nobody waits on the event client-side.)
+    let _mig = q1.migrate(buf).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(
+        c.daemons[0].kick_session(&sid),
+        "session unknown at kick time"
+    );
+
+    // The in-flight push still commits at the destination under the
+    // session's global buffer id.
+    let global_buf = ((poclr::daemon::state::ns_of(&sid) as u64) << 32) | buf.0;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !c.daemons[1].state.buffers.contains(global_buf) {
+        assert!(
+            Instant::now() < deadline,
+            "migration never committed after the kick"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The kicked, now streamless session reaps cleanly even though the
+    // migration job briefly held its Arc for failure routing.
+    drop(p);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        c.daemons[0].state.sessions.reap_idle(Duration::ZERO);
+        if c.daemons[0].state.sessions.get(&sid).is_none() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "kicked session never reaped");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // No deadlock, no wedged dispatcher: a fresh session gets full
+    // service from the same daemons, including the peer path.
+    let p2 = Platform::connect(&c.addrs(), ClientConfig::default()).unwrap();
+    let ctx2 = p2.context();
+    let q = ctx2.queue(0, 0);
+    let b = ctx2.create_buffer(4);
+    q.write(b, &9i32.to_le_bytes()).unwrap();
+    q.run("increment_s32_1", &[b], &[b]).unwrap().wait().unwrap();
+    assert_eq!(
+        i32::from_le_bytes(q.read(b).unwrap()[..4].try_into().unwrap()),
+        10
+    );
 }
 
 #[test]

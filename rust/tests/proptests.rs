@@ -1020,6 +1020,279 @@ fn prop_placement_is_deterministic_and_total() {
 }
 
 #[test]
+fn prop_peer_handshake_survives_hostile_hellos() {
+    // Hostile handshakes: random roles, colliding peer ids, zero/garbage
+    // session bytes, AttachQueue for the control stream, and raw noise
+    // right after a peer handshake. None of it may take the acceptor
+    // down — a fresh client session must still complete a barrier.
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    use poclr::daemon::{Daemon, DaemonConfig};
+    use poclr::proto::{read_packet, write_packet, EventStatus, ROLE_CLIENT, ROLE_PEER};
+    use poclr::runtime::Manifest;
+
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let addr = d.addr();
+    let mut rng = Rng::new(0x9EE7_F00D);
+
+    for case in 0..40u64 {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        match rng.gen_range(0, 5) {
+            // Hello with an arbitrary (mostly invalid) role byte.
+            0 => {
+                let mut session = [0u8; 16];
+                rng.fill_bytes(&mut session);
+                let body = Body::Hello {
+                    session,
+                    role: rng.next_u32() as u8,
+                    peer_id: rng.next_u32(),
+                };
+                write_packet(&mut s, &Msg::control(body), &[]).unwrap();
+            }
+            // Duplicate peer handshakes: several "peers" claiming the
+            // same id (latest outbox wins; nothing crashes).
+            1 => {
+                let body = Body::Hello {
+                    session: [0u8; 16],
+                    role: ROLE_PEER,
+                    peer_id: 5 + rng.gen_range(0, 2) as u32,
+                };
+                write_packet(&mut s, &Msg::control(body), &[]).unwrap();
+            }
+            // Peer handshake followed immediately by raw garbage.
+            2 => {
+                let body = Body::Hello {
+                    session: [0u8; 16],
+                    role: ROLE_PEER,
+                    peer_id: 5 + rng.gen_range(0, 4) as u32,
+                };
+                write_packet(&mut s, &Msg::control(body), &[]).unwrap();
+                let mut junk = vec![0u8; 1 + (rng.next_u32() as usize % 1024)];
+                rng.fill_bytes(&mut junk);
+                s.write_all(&junk).ok();
+            }
+            // AttachQueue for stream 0 (reserved for Hello) — refused.
+            3 => {
+                let mut session = [0u8; 16];
+                rng.fill_bytes(&mut session);
+                session[0] |= 1;
+                let body = Body::AttachQueue { session, queue: 0 };
+                write_packet(&mut s, &Msg::control(body), &[]).unwrap();
+            }
+            // A non-handshake body as the very first packet.
+            _ => {
+                let msg = arb_msg(&mut rng);
+                let payload = vec![0u8; msg.payload_len() as usize];
+                write_packet(&mut s, &msg, &payload).ok();
+            }
+        }
+        drop(s);
+
+        if case % 8 == 7 {
+            // Health probe: the acceptor still mints working sessions.
+            let mut c = TcpStream::connect(&addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write_packet(
+                &mut c,
+                &Msg::control(Body::Hello {
+                    session: [0u8; 16],
+                    role: ROLE_CLIENT,
+                    peer_id: 0,
+                }),
+                &[],
+            )
+            .unwrap();
+            let welcome = read_packet(&mut c).expect("acceptor died");
+            assert!(matches!(welcome.msg.body, Body::Welcome { .. }));
+            let probe = Msg {
+                cmd_id: 0,
+                queue: 0,
+                device: 0,
+                event: 7_000 + case,
+                wait: Vec::new(),
+                body: Body::Barrier,
+            };
+            write_packet(&mut c, &probe, &[]).unwrap();
+            loop {
+                let pkt = read_packet(&mut c).expect("daemon died after hostile handshakes");
+                if let Body::Completion { event, status, .. } = pkt.msg.body {
+                    assert_eq!(event, 7_000 + case);
+                    assert_eq!(EventStatus::from_i8(status), EventStatus::Complete);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_peer_gossip_survives_hostile_load_reports() {
+    // Tag-16 LoadReport fuzz over a real peer connection: truncated,
+    // oversized, mismatched and garbage load vectors must neither panic
+    // the shard loop nor poison the cluster view — a hostile report is
+    // folded (vectors zipped to the shortest, capped at
+    // MAX_REPORT_DEVICES) or the connection is dropped, and the daemon
+    // keeps serving clients either way.
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    use poclr::daemon::cluster::MAX_REPORT_DEVICES;
+    use poclr::daemon::{Daemon, DaemonConfig};
+    use poclr::proto::{read_packet, write_packet, EventStatus, ROLE_CLIENT, ROLE_PEER};
+    use poclr::runtime::Manifest;
+
+    let d = Daemon::spawn(DaemonConfig::local(0, 0, Manifest::default())).unwrap();
+    let addr = d.addr();
+    let mut rng = Rng::new(0x605_51F);
+
+    // Peer handshake (no Welcome comes back): the daemon registers an
+    // outbox for "server 7" and starts gossiping its own reports to us.
+    let mut peer = TcpStream::connect(&addr).unwrap();
+    write_packet(
+        &mut peer,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_PEER,
+            peer_id: 7,
+        }),
+        &[],
+    )
+    .unwrap();
+
+    let hostile_report = |rng: &mut Rng, n_held: usize, n_backlog: usize, n_rate: usize| {
+        Body::LoadReport {
+            // A spoofed origin must be ignored: the view keys entries by
+            // the connection's handshake peer id.
+            origin: rng.next_u32(),
+            sent_ns: rng.next_u64(),
+            echo_ns: if rng.next_u32() % 2 == 0 { 0 } else { rng.next_u64() },
+            echo_hold_ns: rng.next_u64(),
+            held: (0..n_held).map(|_| rng.next_u64()).collect(),
+            backlog: (0..n_backlog).map(|_| rng.next_u64()).collect(),
+            rate_mcps: (0..n_rate).map(|_| rng.next_u64()).collect(),
+        }
+    };
+
+    for case in 0..120 {
+        let base = match rng.gen_range(0, 4) {
+            0 => 0,
+            1 => rng.gen_range(0, 8) as usize,
+            2 => 3_000, // far past MAX_REPORT_DEVICES, well under the frame cap
+            _ => rng.gen_range(0, 64) as usize,
+        };
+        // Half the time the three vectors disagree in length.
+        let mismatch = |rng: &mut Rng, n: usize| {
+            if rng.next_u32() % 2 == 0 {
+                n
+            } else {
+                rng.gen_range(0, 3_000) as usize
+            }
+        };
+        let (nb, nr) = (mismatch(&mut rng, base), mismatch(&mut rng, base));
+        let body = hostile_report(&mut rng, base, nb, nr);
+        write_packet(&mut peer, &Msg::control(body), &[])
+            .unwrap_or_else(|e| panic!("case {case}: peer socket died early: {e}"));
+    }
+
+    // Deterministic closing report: equal oversized vectors, so the view
+    // must converge to exactly the cap.
+    let body = hostile_report(&mut rng, 3_000, 3_000, 3_000);
+    write_packet(&mut peer, &Msg::control(body), &[]).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let snap = d.state.cluster_snapshot();
+        if let Some(s7) = snap.servers.iter().find(|s| s.server == 7) {
+            assert!(
+                s7.devices.len() <= MAX_REPORT_DEVICES,
+                "hostile report ballooned the cluster view to {} devices",
+                s7.devices.len()
+            );
+            if s7.devices.len() == MAX_REPORT_DEVICES {
+                break; // the closing report landed, truncated to the cap
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "hostile gossip never reached the cluster view"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Mid-frame truncation from a second peer: promise a report, send
+    // half, vanish.
+    let mut t = TcpStream::connect(&addr).unwrap();
+    write_packet(
+        &mut t,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_PEER,
+            peer_id: 8,
+        }),
+        &[],
+    )
+    .unwrap();
+    let full = Msg::control(hostile_report(&mut rng, 16, 16, 16)).encode();
+    t.write_all(&(full.len() as u32).to_le_bytes()).unwrap();
+    t.write_all(&full[..full.len() / 2]).unwrap();
+    drop(t);
+
+    // Raw garbage from a third "peer".
+    let mut g = TcpStream::connect(&addr).unwrap();
+    write_packet(
+        &mut g,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_PEER,
+            peer_id: 9,
+        }),
+        &[],
+    )
+    .unwrap();
+    let mut junk = vec![0u8; 2048];
+    rng.fill_bytes(&mut junk);
+    g.write_all(&junk).ok();
+    drop(g);
+
+    // The daemon still serves clients after the gossip storm.
+    let mut c = TcpStream::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write_packet(
+        &mut c,
+        &Msg::control(Body::Hello {
+            session: [0u8; 16],
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        }),
+        &[],
+    )
+    .unwrap();
+    let welcome = read_packet(&mut c).expect("daemon died during gossip fuzz");
+    assert!(matches!(welcome.msg.body, Body::Welcome { .. }));
+    let probe = Msg {
+        cmd_id: 0,
+        queue: 0,
+        device: 0,
+        event: 31_337,
+        wait: Vec::new(),
+        body: Body::Barrier,
+    };
+    write_packet(&mut c, &probe, &[]).unwrap();
+    loop {
+        let pkt = read_packet(&mut c).expect("daemon died after gossip fuzz");
+        if let Body::Completion { event, status, .. } = pkt.msg.body {
+            assert_eq!(event, 31_337);
+            assert_eq!(EventStatus::from_i8(status), EventStatus::Complete);
+            break;
+        }
+    }
+    drop(peer);
+}
+
+#[test]
 fn prop_des_schedule_never_overlaps_on_one_resource() {
     use poclr::sim::des::Des;
     let mut rng = Rng::new(777);
