@@ -44,7 +44,7 @@ use anyhow::{bail, Context as _, Result};
 
 use crate::net::LinkProfile;
 use crate::ocl::Residency;
-use crate::proto::{Body, EventStatus, Timestamps};
+use crate::proto::{Body, ErrorCode, EventStatus, Timestamps};
 use crate::sched::placement::{decode_loads, ClusterSnapshot, PlacementPolicy, ServerLoad};
 use crate::sched::{EventTable, WaitOutcome};
 use crate::util::{fresh_id, Bytes};
@@ -112,6 +112,10 @@ pub struct PlatformInner {
     pub servers: Vec<Arc<ServerConn>>,
     pub events: Arc<EventTable>,
     pub read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
+    /// Structured failure reasons decoded by the stream readers from the
+    /// error payload on Failed completions, keyed by event id. Feeds
+    /// [`Event::failure`] / [`Platform::take_error`].
+    pub errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
     pub cfg: ClientConfig,
 }
 
@@ -155,6 +159,7 @@ impl Platform {
     pub fn connect(addrs: &[String], cfg: ClientConfig) -> Result<Platform> {
         let events = Arc::new(EventTable::new());
         let read_results = Arc::new(Mutex::new(HashMap::new()));
+        let errors = Arc::new(Mutex::new(HashMap::new()));
         let session = mint_session_id();
         let mut servers = Vec::new();
         for (i, addr) in addrs.iter().enumerate() {
@@ -164,6 +169,7 @@ impl Platform {
                 cfg.clone(),
                 Arc::clone(&events),
                 Arc::clone(&read_results),
+                Arc::clone(&errors),
                 session,
             )?);
         }
@@ -175,6 +181,7 @@ impl Platform {
                 servers,
                 events,
                 read_results,
+                errors,
                 cfg,
             }),
         })
@@ -202,6 +209,14 @@ impl Platform {
     /// `Daemon::kick_session` or `Sessions::get` to address it.
     pub fn session_id(&self, s: u32) -> crate::proto::SessionId {
         self.inner.servers[s as usize].session_id()
+    }
+
+    /// Take the structured failure reason recorded for `event`, if its
+    /// Failed completion carried one (peer death, quota breach, lost
+    /// buffer, ...). Destructive read: a second call returns `None`.
+    /// [`Event::failure`] is the non-destructive peek.
+    pub fn take_error(&self, event: u64) -> Option<(ErrorCode, String)> {
+        self.inner.errors.lock().unwrap().remove(&event)
     }
 
     /// Events currently tracked by the driver's event table (tests /
@@ -241,6 +256,7 @@ impl Platform {
         let event = Event {
             id: ev,
             events: Arc::clone(&self.inner.events),
+            errors: Arc::clone(&self.inner.errors),
         };
         event.wait()?;
         let payload = self
@@ -365,6 +381,7 @@ pub struct Buffer(pub u64);
 pub struct Event {
     pub id: u64,
     events: Arc<EventTable>,
+    errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
 }
 
 impl std::fmt::Debug for Event {
@@ -380,9 +397,23 @@ impl Event {
     pub fn wait(&self) -> Result<()> {
         match self.events.wait(self.id) {
             WaitOutcome::Complete => Ok(()),
-            WaitOutcome::Failed => bail!("event {} failed", self.id),
+            WaitOutcome::Failed => match self.failure() {
+                Some((code, detail)) => {
+                    bail!("event {} failed [{}]: {detail}", self.id, code.as_str())
+                }
+                None => bail!("event {} failed", self.id),
+            },
             WaitOutcome::TimedOut => bail!("event {} timed out", self.id),
         }
+    }
+
+    /// The structured failure reason that rode this event's Failed
+    /// completion, if any (non-destructive;
+    /// [`Platform::take_error`] removes the entry). `None` for events
+    /// that completed, are still pending, or failed without a structured
+    /// payload (pre-error-code daemons, locally-poisoned waits).
+    pub fn failure(&self) -> Option<(ErrorCode, String)> {
+        self.errors.lock().unwrap().get(&self.id).cloned()
     }
 
     pub fn wait_timeout(&self, t: Duration) -> WaitOutcome {
@@ -577,6 +608,7 @@ impl Context {
         Event {
             id,
             events: Arc::clone(&self.plat.events),
+            errors: Arc::clone(&self.plat.errors),
         }
     }
 

@@ -26,7 +26,8 @@ use anyhow::{bail, Context as _, Result};
 
 use crate::proto::wire::W;
 use crate::proto::{
-    frame, read_packet, read_packet_with, write_packet, Body, EventStatus, Msg, Packet, SessionId,
+    decode_error_payload, frame, read_packet, read_packet_with, write_packet, Body, ErrorCode,
+    EventStatus, Msg, Packet, SessionId,
 };
 use crate::sched::EventTable;
 use crate::util::Bytes;
@@ -40,6 +41,12 @@ pub struct SessionCore {
     pub cfg: ClientConfig,
     pub events: Arc<EventTable>,
     pub read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
+    /// Structured failure reasons keyed by event id, decoded from the
+    /// error payload riding Failed completions (shared platform-wide,
+    /// like `read_results`). Consulted by `Event::wait` to turn "event N
+    /// failed" into a typed error — peer death, quota breach, lost
+    /// buffer — without changing the completion flow.
+    pub errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
     /// Session id from the control stream's Welcome; queue streams present
     /// it in their `AttachQueue`.
     session: Mutex<SessionId>,
@@ -313,6 +320,7 @@ impl StreamInner {
     fn spawn_reader(&self, stream: TcpStream, generation: u64) {
         let events = Arc::clone(&self.core.events);
         let read_results = Arc::clone(&self.core.read_results);
+        let errors = Arc::clone(&self.core.errors);
         let available = Arc::clone(&self.core.available);
         let conn_gen = Arc::clone(&self.conn_gen);
         let server_id = self.core.server_id;
@@ -320,7 +328,15 @@ impl StreamInner {
         std::thread::Builder::new()
             .name(format!("poclr-cr{server_id}q{queue_id}"))
             .spawn(move || {
-                reader_loop_impl(stream, events, read_results, available, conn_gen, generation);
+                reader_loop_impl(
+                    stream,
+                    events,
+                    read_results,
+                    errors,
+                    available,
+                    conn_gen,
+                    generation,
+                );
             })
             .expect("spawn client reader");
     }
@@ -356,6 +372,7 @@ impl ServerConn {
         cfg: ClientConfig,
         events: Arc<EventTable>,
         read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
+        errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
         session: crate::proto::SessionId,
     ) -> Result<Arc<ServerConn>> {
         let core = Arc::new(SessionCore {
@@ -364,6 +381,7 @@ impl ServerConn {
             cfg,
             events,
             read_results,
+            errors,
             session: Mutex::new(session),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(false)),
@@ -447,6 +465,7 @@ fn reader_loop_impl(
     mut stream: TcpStream,
     events: Arc<EventTable>,
     read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
+    errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
     available: Arc<AtomicBool>,
     conn_gen: Arc<AtomicU64>,
     generation: u64,
@@ -467,10 +486,21 @@ fn reader_loop_impl(
                     event, status, ts, ..
                 } = pkt.msg.body
                 {
+                    let st = EventStatus::from_i8(status);
                     if !pkt.payload.is_empty() {
-                        read_results.lock().unwrap().insert(event, pkt.payload);
+                        if st == EventStatus::Failed {
+                            // Failed completions historically carried no
+                            // payload; one here is the structured error
+                            // form — decode it into the typed-error
+                            // table, never into read results.
+                            if let Some((code, detail)) = decode_error_payload(&pkt.payload) {
+                                errors.lock().unwrap().insert(event, (code, detail));
+                            }
+                        } else {
+                            read_results.lock().unwrap().insert(event, pkt.payload);
+                        }
                     }
-                    match EventStatus::from_i8(status) {
+                    match st {
                         EventStatus::Failed => {
                             events.fail(event);
                         }
@@ -518,6 +548,7 @@ mod tests {
             cfg,
             events: Arc::new(EventTable::new()),
             read_results: Arc::new(Mutex::new(HashMap::<u64, Bytes>::new())),
+            errors: Arc::new(Mutex::new(HashMap::new())),
             session: Mutex::new([0u8; 16]),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(available)),

@@ -34,6 +34,15 @@ use crate::util::now_ns;
 /// enough that a 16-peer mesh costs well under a packet per millisecond.
 pub const LOAD_REPORT_EVERY: Duration = Duration::from_millis(50);
 
+/// Peer-death deadline, in gossip intervals: a peer connection that has
+/// not produced *any* inbound traffic for this many `LoadReport` periods
+/// is declared dead — its socket is closed, its events are swept
+/// (`Work::PeerDead`), and its view entry evicted. Six intervals at the
+/// default 50ms cadence gives a 300ms detection deadline: late enough to
+/// ride out scheduler hiccups and a lost report or two, early enough
+/// that stranded waiters fail long before any client timeout.
+pub const PEER_DEATH_INTERVALS: u32 = 6;
+
 /// Upper bound on per-report device entries folded into the view. Real
 /// servers have a handful of devices; a malformed or hostile report
 /// whose load vectors decode to millions of entries is truncated here so
@@ -194,6 +203,13 @@ impl ClusterView {
     pub fn n_peers(&self) -> usize {
         self.peers.lock().unwrap().len()
     }
+
+    /// Forget a dead peer entirely: its next reconnect starts from a
+    /// clean entry (no stale RTT/echo state), and until then snapshots
+    /// never resurrect it even if a caller passes a stale live list.
+    pub fn evict(&self, peer: u32) {
+        self.peers.lock().unwrap().remove(&peer);
+    }
 }
 
 #[cfg(test)]
@@ -256,5 +272,13 @@ mod tests {
         // Departed peers are filtered by the live list.
         let snap = a.snapshot(vec![dev(0, 0, 0.0)], &[]);
         assert_eq!(snap.servers.len(), 1);
+
+        // Eviction forgets the peer even when the live list still names
+        // it (death detection won the race against outbox teardown).
+        a.evict(1);
+        assert_eq!(a.n_peers(), 0);
+        let snap = a.snapshot(vec![dev(0, 0, 0.0)], &[1]);
+        assert_eq!(snap.servers.len(), 1);
+        assert_eq!(a.rtt_ns(1), 0);
     }
 }

@@ -43,10 +43,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::net::poll::{self, PollEvent};
-use crate::net::LinkProfile;
+use crate::net::{FaultAction, LinkProfile};
 use crate::proto::frame::{FrameDecoder, RecvRing, MAX_COALESCE, RECV_RING_BYTES};
 use crate::proto::wire::W;
-use crate::proto::{Body, EventStatus, Msg, Packet, ROLE_CLIENT, ROLE_PEER};
+use crate::proto::{
+    encode_error_payload, Body, ErrorCode, EventStatus, Msg, Packet, ROLE_CLIENT, ROLE_PEER,
+};
+use crate::util::Bytes;
 
 use super::dispatch::Work;
 use super::shard::{IoCtx, Seed, ShardMsg, ShardPool, TimerKind};
@@ -214,6 +217,12 @@ pub struct Conn {
     paused: Option<PausedCmd>,
     /// Monotonic counter minting [`PausedCmd::waiter_gen`] tags.
     waiter_gen: u64,
+    /// Our clock at the last *inbound* traffic on a peer connection
+    /// (adoption counts as traffic). The liveness deadline in
+    /// [`Conn::load_report_due`] measures from here — a peer silent for
+    /// `peer_death_intervals` gossip periods is declared dead. Client
+    /// and handshake connections never consult it.
+    last_peer_seen: Instant,
     role: Role,
     closed: bool,
 }
@@ -281,6 +290,7 @@ impl Conn {
             hangup: false,
             paused: None,
             waiter_gen: 0,
+            last_peer_seen: Instant::now(),
             role,
             closed: false,
         })
@@ -392,6 +402,9 @@ impl Conn {
             Role::Client { .. } => self.on_client_packet(ctx, pkt),
             Role::Peer { peer_id } => {
                 let from_peer = Some(*peer_id);
+                // Any inbound peer traffic proves liveness — the death
+                // deadline is "no packets at all", not "no reports".
+                self.last_peer_seen = Instant::now();
                 if ctx
                     .work_tx
                     .send(Work::Packet {
@@ -430,10 +443,27 @@ impl Conn {
                 self.become_client(ctx, sess, 0)
             }
             Body::Hello {
+                session,
                 role: ROLE_PEER,
                 peer_id,
-                ..
-            } => self.become_peer(ctx, peer_id),
+            } => {
+                // Peer-link authentication: mesh membership is gated on a
+                // shared secret riding the Hello's session field, not
+                // implied by `role=PEER`. The all-zero secret means an
+                // open mesh (the historical behavior, and what every
+                // single-tenant test configures implicitly).
+                if session != ctx.state.peer_secret {
+                    eprintln!(
+                        "[pocld{}] peer hello from server {} rejected: {}",
+                        ctx.state.server_id,
+                        peer_id,
+                        ErrorCode::AuthRejected.as_str()
+                    );
+                    self.close(ctx);
+                    return false;
+                }
+                self.become_peer(ctx, peer_id)
+            }
             Body::AttachQueue { session, queue } => {
                 if queue == 0 {
                     eprintln!(
@@ -528,6 +558,7 @@ impl Conn {
     /// Register as a peer-mesh connection (the listening side; dialed
     /// peers arrive pre-registered via [`ShardPool::adopt_peer`]).
     fn become_peer(&mut self, ctx: &mut IoCtx, peer_id: u32) -> bool {
+        self.last_peer_seen = Instant::now();
         let outbox = self.make_outbox(ctx);
         ctx.state
             .peer_txs
@@ -568,10 +599,26 @@ impl Conn {
         let Role::Peer { peer_id } = &self.role else {
             return true; // stale timer for a token reused by a non-peer
         };
+        let peer = *peer_id;
+        // Peer-death detection rides this timer (no extra machinery): the
+        // gossip cadence doubles as a liveness probe, so a peer that has
+        // gone silent for `peer_death_intervals` report periods is
+        // declared dead here. `close` tears the link down, evicts the
+        // peer from the routing/placement state and hands the dispatcher
+        // a `Work::PeerDead` sweep for its stranded events.
+        let deadline = ctx.state.cluster.interval() * ctx.state.peer_death_intervals;
+        if self.last_peer_seen.elapsed() > deadline {
+            eprintln!(
+                "[pocld{}] peer {} silent past the death deadline ({} report intervals); declaring it dead",
+                ctx.state.server_id, peer, ctx.state.peer_death_intervals
+            );
+            self.close(ctx);
+            return false;
+        }
         let body = ctx
             .state
             .cluster
-            .report_for(*peer_id, &ctx.state.load_snapshot());
+            .report_for(peer, &ctx.state.load_snapshot());
         if let Some(ob) = &self.outbox {
             ob.send(Packet::bare(Msg::control(body))).ok();
         }
@@ -644,7 +691,14 @@ impl Conn {
             // Fail the command's event and answer with a Failed
             // completion, but keep the connection: a fuzzer probing tags
             // must see its events resolve, not hang.
-            self.fail_client_command(ctx, &sess, queue, &pkt);
+            self.fail_client_command(
+                ctx,
+                &sess,
+                queue,
+                &pkt,
+                ErrorCode::InvalidCommand,
+                "peer-plane command rejected on a client stream",
+            );
             return true;
         }
         // Per-session quota admission (the buffer-store extension of the
@@ -662,6 +716,19 @@ impl Conn {
                     .saturating_add(*size)
                     > ctx.state.session_buf_quota
             }
+            // WriteBuffer-driven implicit growth: a write ending past the
+            // buffer's current size (or naming an absent buffer) grows
+            // the session's footprint at commit time — admit that growth
+            // against the same budget *here*, before any payload bytes
+            // are staged. Writes within the current allocation have zero
+            // growth and always pass. Oversize ranges (> MAX_ALLOC) fall
+            // through to the dispatcher's fail-the-event path.
+            &Body::WriteBuffer { buf, offset, len }
+                if offset.saturating_add(len) <= super::state::MAX_ALLOC =>
+            {
+                !ctx.state
+                    .quota_admits_growth(buf, offset.saturating_add(len))
+            }
             _ => false,
         };
         let event_breach = pkt.msg.event != 0
@@ -673,7 +740,27 @@ impl Conn {
                 ctx.state.server_id,
                 if buf_breach { "buffer-memory" } else { "event-table" },
             );
-            self.fail_client_command(ctx, &sess, queue, &pkt);
+            // The kick is no longer anonymous: the Failed completion
+            // carries a structured quota error code so the driver can
+            // tell "budget exceeded" from a generic failure before the
+            // EOF lands.
+            let (code, detail) = if buf_breach {
+                (
+                    ErrorCode::QuotaBufferExceeded,
+                    "session buffer-memory quota exceeded; session kicked",
+                )
+            } else {
+                (
+                    ErrorCode::QuotaEventExceeded,
+                    "session event-table quota exceeded; session kicked",
+                )
+            };
+            self.fail_client_command(ctx, &sess, queue, &pkt, code, detail);
+            // The completion just landed on *this* stream's outbox
+            // (send_on probes the breaching queue first); drain it to the
+            // socket before the kick severs it, so the client reads the
+            // structured code ahead of the EOF instead of racing it.
+            self.flush(ctx);
             sess.kick();
             self.close(ctx);
             return false;
@@ -702,8 +789,20 @@ impl Conn {
     /// Failed completion echoed in *its* id space over this session's
     /// streams, so drivers and fuzzers alike see the event resolve
     /// instead of hanging to a wait timeout. `pkt.msg.event` is already
-    /// daemon-global here. No-op for event 0 (nothing to resolve).
-    fn fail_client_command(&mut self, ctx: &mut IoCtx, sess: &Arc<Session>, queue: u32, pkt: &Packet) {
+    /// daemon-global here. No-op for event 0 (nothing to resolve). The
+    /// structured `code`/`detail` ride the client-ward Failed completion
+    /// as an encoded error payload (and the code rides the peer-ward
+    /// NotifyEvent), so drivers see *why* — quota breach, rejected body —
+    /// not just that the event died.
+    fn fail_client_command(
+        &mut self,
+        ctx: &mut IoCtx,
+        sess: &Arc<Session>,
+        queue: u32,
+        pkt: &Packet,
+        code: ErrorCode,
+        detail: &str,
+    ) {
         let global = pkt.msg.event;
         if global == 0 {
             return;
@@ -716,15 +815,20 @@ impl Conn {
             .broadcast_to_peers(&Packet::bare(Msg::control(Body::NotifyEvent {
                 event: global,
                 status: EventStatus::Failed.to_i8(),
+                code: code.to_u8(),
             })));
+        let payload = Bytes::from(encode_error_payload(code, detail));
         sess.send_on(
             queue,
-            Packet::bare(Msg::control(Body::Completion {
-                event: sess.from_global(global).unwrap_or(global),
-                status: EventStatus::Failed.to_i8(),
-                ts: Default::default(),
-                payload_len: 0,
-            })),
+            Packet {
+                msg: Msg::control(Body::Completion {
+                    event: sess.from_global(global).unwrap_or(global),
+                    status: EventStatus::Failed.to_i8(),
+                    ts: Default::default(),
+                    payload_len: payload.len() as u64,
+                }),
+                payload,
+            },
         );
     }
 
@@ -925,12 +1029,62 @@ impl Conn {
                     }
                     return true;
                 }
+                // Deterministic fault injection on the outbound peer path
+                // (`net::fault`): every packet of the batch gets a verdict
+                // from the injector before it is encoded. Packet order is
+                // already serialized per connection here, so the
+                // counter-indexed rules replay byte-for-byte. A condemned
+                // link (Kill / Truncate) dies through the normal teardown,
+                // so peer-death sweeps and backoff reconnect fire exactly
+                // as for a real crash.
+                let mut extra_delay = Duration::ZERO;
+                let fault_peer = match &self.role {
+                    Role::Peer { peer_id } if !ctx.state.fault.is_noop() => Some(*peer_id),
+                    _ => None,
+                };
+                if let Some(peer) = fault_peer {
+                    let mut kill = false;
+                    let mut truncate = false;
+                    let mut kept = Vec::with_capacity(self.burst.len());
+                    for pkt in self.burst.drain(..) {
+                        if kill || truncate {
+                            continue; // link condemned: nothing later leaves
+                        }
+                        match ctx.state.fault.on_peer_packet(peer) {
+                            FaultAction::Pass => kept.push(pkt),
+                            FaultAction::Drop => {}
+                            FaultAction::Delay(d) => {
+                                extra_delay = extra_delay.max(d);
+                                kept.push(pkt);
+                            }
+                            FaultAction::Kill => kill = true,
+                            FaultAction::Truncate => {
+                                truncate = true;
+                                kept.push(pkt);
+                            }
+                        }
+                    }
+                    self.burst = kept;
+                    if truncate {
+                        self.write_truncated();
+                        self.close(ctx);
+                        return false;
+                    }
+                    if kill {
+                        self.close(ctx);
+                        return false;
+                    }
+                    if self.burst.is_empty() {
+                        continue; // whole batch dropped; try the next one
+                    }
+                }
                 self.encode_burst();
                 // Link pacing: the burst must not be observable at the
-                // receiver before its modeled serialization time.
+                // receiver before its modeled serialization time (plus
+                // any injected fault delay).
                 let total = self.wire.buf.len()
                     + self.burst.iter().map(|p| p.payload.len()).sum::<usize>();
-                let d = self.link.delay_for(total);
+                let d = self.link.delay_for(total) + extra_delay;
                 if !d.is_zero() {
                     if d < PACE_TIMER_MIN {
                         crate::net::shaper::spin_sleep(d);
@@ -964,6 +1118,26 @@ impl Conn {
                     self.close(ctx);
                     return false;
                 }
+            }
+        }
+    }
+
+    /// Emit the condemned burst's frames up to a strict prefix of the
+    /// final frame, then stop: the receiver decodes the earlier packets
+    /// normally, then sees a torn frame ended by EOF — exactly what a
+    /// daemon dying mid-`write_vectored` produces. Best-effort writes
+    /// (the link is going down either way).
+    fn write_truncated(&mut self) {
+        use std::io::Write;
+        self.encode_burst();
+        let n = self.bounds.len();
+        for (i, (pkt, &(start, end))) in self.burst.iter().zip(&self.bounds).enumerate() {
+            if i + 1 == n {
+                let cut = start + (end - start) / 2;
+                let _ = (&self.stream).write_all(&self.wire.buf[start..cut]);
+            } else {
+                let _ = (&self.stream).write_all(&self.wire.buf[start..end]);
+                let _ = (&self.stream).write_all(&pkt.payload);
             }
         }
     }
@@ -1102,11 +1276,24 @@ impl Conn {
             Role::Peer { peer_id } => {
                 // Guarded by identity: a reconnected peer's fresh outbox
                 // must survive the stale connection's teardown.
+                let mut was_live = false;
                 if let Some(ours) = &self.outbox {
                     let mut txs = ctx.state.peer_txs.lock().unwrap();
                     if txs.get(peer_id).is_some_and(|t| Arc::ptr_eq(t, ours)) {
                         txs.remove(peer_id);
+                        was_live = true;
                     }
+                }
+                // Only the *live* registration's death is a peer death: a
+                // stale connection torn down after a reconnect must not
+                // sweep the fresh link's events, and daemon shutdown is
+                // not a peer death either (everything is going away). The
+                // sweep fails events stranded on the peer; the eviction
+                // clears its placement entry so the scheduler stops
+                // routing work at a corpse.
+                if was_live && !ctx.state.shutdown.load(Ordering::SeqCst) {
+                    ctx.state.cluster.evict(*peer_id);
+                    ctx.work_tx.send(Work::PeerDead(*peer_id)).ok();
                 }
             }
             Role::Handshake => {}

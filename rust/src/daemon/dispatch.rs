@@ -30,7 +30,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
-use crate::proto::{Body, EventStatus, Msg, Packet, Timestamps};
+use crate::proto::{encode_error_payload, Body, ErrorCode, EventStatus, Msg, Packet, Timestamps};
 use crate::runtime::executor::ExecOutcome;
 use crate::sched::placement::{encode_loads, PlacementPolicy};
 use crate::sched::table::{DepsState, Wakeup};
@@ -85,6 +85,11 @@ pub enum Work {
     /// Parked commands released by a completion recorded off the dispatch
     /// thread (e.g. the migration worker failing an event).
     Wake(Vec<Wakeup>),
+    /// A peer connection was declared dead (liveness deadline expired or
+    /// the socket failed). The dispatcher sweeps every event known to be
+    /// pending on that peer and fails it with [`ErrorCode::PeerDead`], so
+    /// stranded waiters poison out instead of parking forever.
+    PeerDead(u32),
     Shutdown,
 }
 
@@ -134,6 +139,7 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
         wake_queue: VecDeque::new(),
         ready_backlog,
         event_origin: HashMap::new(),
+        pending_on_peer: HashMap::new(),
         hot_bufs: VecDeque::new(),
         last_rebalance: None,
     };
@@ -173,6 +179,10 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
                 d.wake_queue.extend(wakeups);
                 d.pump();
             }
+            Work::PeerDead(peer) => {
+                d.peer_dead(peer);
+                d.pump();
+            }
         }
         // Every slot release eventually surfaces here as a work item
         // (Finished, ExecDone, or a parking admission), so draining once
@@ -210,6 +220,13 @@ struct Dispatcher {
     /// never reach terminal state are retained indefinitely, and must
     /// not pin a reaped session's backlog with them.
     event_origin: HashMap<u64, (Weak<Session>, u32)>,
+    /// event id -> destination server the event is pending on: migrations
+    /// handed to a peer whose terminal NotifyEvent has not come back yet.
+    /// This is the sweep set for [`Work::PeerDead`] — when the peer dies,
+    /// every event mapped to it here fails with a typed
+    /// [`ErrorCode::PeerDead`] instead of parking its waiters forever.
+    /// Entries clear on the NotifyEvent return leg and in [`Dispatcher::gc`].
+    pending_on_peer: HashMap<u64, u32>,
     /// Buffers recently referenced by kernel launches, most recent at the
     /// back — the candidate set for scheduler-triggered migration
     /// ([`Dispatcher::maybe_rebalance`]). Bounded at [`HOT_BUFS_MAX`].
@@ -437,6 +454,10 @@ impl Dispatcher {
                     .event_origin
                     .get(&event)
                     .and_then(|(w, q)| w.upgrade().map(|sess| (sess, *q)));
+                // From here until the destination's NotifyEvent returns,
+                // this event's fate is in the peer's hands — record that
+                // so a peer death sweeps it (`Work::PeerDead`).
+                self.pending_on_peer.insert(event, dst_server);
                 self.migrate_tx
                     .send(MigrationJob {
                         buf,
@@ -459,6 +480,11 @@ impl Dispatcher {
                 // before touching buffers: a corrupt packet must fail the
                 // event, not panic a copy or balloon an allocation.
                 let ok = total_size <= MAX_ALLOC && content_size <= total_size;
+                // `commit_migration` runs quota admission *before* staging
+                // anything; a `false` from it means the owning session's
+                // buffer quota refused the growth, which travels back to
+                // the source (and its client) as a typed quota error.
+                let mut quota_refused = false;
                 let committed = if !ok {
                     false
                 } else if via_rdma {
@@ -470,21 +496,24 @@ impl Dispatcher {
                             if (shadow.len() as u64) < content_size {
                                 false
                             } else {
-                                self.state.commit_migration(
+                                let done = self.state.commit_migration(
                                     buf,
                                     total_size,
                                     content_size,
                                     &shadow[..content_size as usize],
                                 );
-                                true
+                                quota_refused = !done;
+                                done
                             }
                         }
                         None => false,
                     }
                 } else if pkt.payload.len() as u64 == len && len == content_size {
-                    self.state
+                    let done = self
+                        .state
                         .commit_migration(buf, total_size, content_size, &pkt.payload);
-                    true
+                    quota_refused = !done;
+                    done
                 } else {
                     false
                 };
@@ -501,6 +530,12 @@ impl Dispatcher {
                     // everyone (paper §5.1: "only the destination server
                     // notifies the client of the migration's completion").
                     self.complete_inline(event, queued_ns, submit_ns, Bytes::new());
+                } else if quota_refused {
+                    self.fail_event_with(
+                        event,
+                        ErrorCode::QuotaBufferExceeded,
+                        "migration commit exceeds the session buffer quota",
+                    );
                 } else {
                     self.fail_event(event);
                 }
@@ -508,6 +543,7 @@ impl Dispatcher {
             &Body::NotifyEvent {
                 event: ev,
                 status,
+                code,
             } => {
                 // The event reached terminal state on another server. If
                 // we hold its origin, the command entered the cluster
@@ -516,19 +552,35 @@ impl Dispatcher {
                 // the origin session, which is the only daemon-side
                 // state that knows which UE is waiting. Remote profiling
                 // timestamps do not travel on NotifyEvent, so the
-                // forwarded completion carries defaults.
+                // forwarded completion carries defaults. A remote
+                // *failure* code does travel: re-encode it as an error
+                // payload on the client-ward Completion so the driver can
+                // surface a typed error.
                 let st = EventStatus::from_i8(status);
+                self.pending_on_peer.remove(&ev);
                 if let Some((sess, queue)) = self.take_origin(ev) {
+                    let payload = if st == EventStatus::Failed && code != 0 {
+                        let ec = ErrorCode::from_u8(code);
+                        Bytes::from(encode_error_payload(
+                            ec,
+                            &format!("event failed on a remote server: {}", ec.as_str()),
+                        ))
+                    } else {
+                        Bytes::new()
+                    };
                     sess.send_on(
                         queue,
-                        Packet::bare(Msg::control(Body::Completion {
-                            // On the wire back to the client, the event id
-                            // leaves in the session's own id space.
-                            event: sess.from_global(ev).unwrap_or(ev),
-                            status: st.to_i8(),
-                            ts: Timestamps::default(),
-                            payload_len: 0,
-                        })),
+                        Packet {
+                            msg: Msg::control(Body::Completion {
+                                // On the wire back to the client, the event
+                                // id leaves in the session's own id space.
+                                event: sess.from_global(ev).unwrap_or(ev),
+                                status: st.to_i8(),
+                                ts: Timestamps::default(),
+                                payload_len: payload.len() as u64,
+                            }),
+                            payload,
+                        },
                     );
                 }
                 let wakeups = if st == EventStatus::Failed {
@@ -613,7 +665,18 @@ impl Dispatcher {
                     return;
                 }
                 for (out_id, bytes) in inf.outs.iter().zip(outputs) {
-                    self.state.commit_output(*out_id, bytes);
+                    // Quota admission runs inside `commit_output` *before*
+                    // any bytes are staged; a refusal fails the kernel's
+                    // event with a typed quota error instead of silently
+                    // oversubscribing the owning session.
+                    if !self.state.commit_output(*out_id, bytes) {
+                        self.fail_event_with(
+                            inf.event,
+                            ErrorCode::QuotaBufferExceeded,
+                            "kernel output commit exceeds the session buffer quota",
+                        );
+                        return;
+                    }
                 }
                 let ts = Timestamps {
                     queued_ns: inf.queued_ns,
@@ -682,31 +745,85 @@ impl Dispatcher {
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Complete.to_i8(),
+            code: 0,
         }));
         self.state.broadcast_to_peers(&notify);
     }
 
+    /// Fail an event with the unclassified [`ErrorCode::Generic`] — the
+    /// historical failure path (poisoned dependency, executor error).
     fn fail_event(&mut self, event: u64) {
+        self.fail_event_with(event, ErrorCode::Generic, "");
+    }
+
+    /// Fail an event with a structured error code. The code rides the
+    /// peer-ward NotifyEvent broadcast, and — when it says more than
+    /// "generic" — an encoded error payload rides the client-ward Failed
+    /// Completion so the driver can surface a typed error (Failed
+    /// completions historically carried `payload_len: 0`, so a payload
+    /// here is unambiguously the structured form).
+    fn fail_event_with(&mut self, event: u64, code: ErrorCode, detail: &str) {
         if event == 0 {
             return;
         }
+        self.pending_on_peer.remove(&event);
         let origin = self.take_origin(event);
         let wakeups = self.state.events.fail(event);
         self.wake_queue.extend(wakeups);
         if let Some((sess, queue)) = origin {
+            let payload = if code == ErrorCode::Generic && detail.is_empty() {
+                Bytes::new()
+            } else {
+                Bytes::from(encode_error_payload(code, detail))
+            };
             let completion = Msg::control(Body::Completion {
                 event: sess.from_global(event).unwrap_or(event),
                 status: EventStatus::Failed.to_i8(),
                 ts: Timestamps::default(),
-                payload_len: 0,
+                payload_len: payload.len() as u64,
             });
-            sess.send_on(queue, Packet::bare(completion));
+            sess.send_on(
+                queue,
+                Packet {
+                    msg: completion,
+                    payload,
+                },
+            );
         }
         let notify = Packet::bare(Msg::control(Body::NotifyEvent {
             event,
             status: EventStatus::Failed.to_i8(),
+            code: code.to_u8(),
         }));
         self.state.broadcast_to_peers(&notify);
+    }
+
+    /// Sweep every event recorded as pending on a now-dead peer: each
+    /// fails with [`ErrorCode::PeerDead`], which poisons its dependent
+    /// subtree (stranded waiters release instead of parking forever) and
+    /// reaches the origin client as a typed error.
+    fn peer_dead(&mut self, peer: u32) {
+        let stranded: Vec<u64> = self
+            .pending_on_peer
+            .iter()
+            .filter(|&(_, &p)| p == peer)
+            .map(|(&ev, _)| ev)
+            .collect();
+        if !stranded.is_empty() {
+            eprintln!(
+                "[pocld{}] peer {} died with {} event(s) pending there; failing them",
+                self.state.server_id,
+                peer,
+                stranded.len()
+            );
+        }
+        for ev in stranded {
+            self.fail_event_with(
+                ev,
+                ErrorCode::PeerDead,
+                &format!("server {peer} died before completing the event"),
+            );
+        }
     }
 
     fn fail_command(&mut self, msg: &Msg) {
@@ -762,6 +879,9 @@ impl Dispatcher {
         // High-bit event ids keep the synthetic migration well clear of
         // client-minted event ids.
         let event = (1 << 63) | crate::util::fresh_id();
+        // Synthetic or not, the event is pending on the target until its
+        // NotifyEvent returns — track it so a peer death reclaims it.
+        self.pending_on_peer.insert(event, target);
         self.migrate_tx
             .send(MigrationJob {
                 buf,
@@ -789,6 +909,8 @@ impl Dispatcher {
         // and parked entries hold only `Weak` session refs, so even the
         // retained ones never pin a reaped session's memory.)
         self.event_origin
+            .retain(|ev, _| !events.status(*ev).is_some_and(|s| s.is_terminal()));
+        self.pending_on_peer
             .retain(|ev, _| !events.status(*ev).is_some_and(|s| s.is_terminal()));
     }
 }

@@ -15,7 +15,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 use crate::net::rdma::Wr;
-use crate::proto::{Body, Msg, Packet};
+use crate::proto::{encode_error_payload, Body, ErrorCode, Msg, Packet};
 use crate::util::Bytes;
 
 use super::dispatch::Work;
@@ -51,6 +51,7 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
                         "[pocld{}] migration of buf {} failed: {e:#}",
                         state.server_id, job.buf
                     );
+                    let code = classify_failure(&e);
                     // Local failure: fail the event ourselves (the
                     // destination never learns of this migration) and hand
                     // any released waiters to the dispatch thread.
@@ -61,20 +62,25 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
                     let note = Packet::bare(Msg::control(Body::NotifyEvent {
                         event: job.event,
                         status: crate::proto::EventStatus::Failed.to_i8(),
+                        code: code.to_u8(),
                     }));
                     state.broadcast_to_peers(&note);
                     if let Some((sess, queue)) = &job.origin {
+                        let payload = Bytes::from(encode_error_payload(code, &format!("{e:#}")));
                         sess.send_on(
                             *queue,
-                            Packet::bare(Msg::control(Body::Completion {
-                                // Client-ward completions carry the
-                                // session-local event id, not the
-                                // namespace-prefixed global one.
-                                event: sess.from_global(job.event).unwrap_or(job.event),
-                                status: crate::proto::EventStatus::Failed.to_i8(),
-                                ts: Default::default(),
-                                payload_len: 0,
-                            })),
+                            Packet {
+                                msg: Msg::control(Body::Completion {
+                                    // Client-ward completions carry the
+                                    // session-local event id, not the
+                                    // namespace-prefixed global one.
+                                    event: sess.from_global(job.event).unwrap_or(job.event),
+                                    status: crate::proto::EventStatus::Failed.to_i8(),
+                                    ts: Default::default(),
+                                    payload_len: payload.len() as u64,
+                                }),
+                                payload,
+                            },
                         );
                     }
                 }
@@ -82,6 +88,21 @@ pub fn spawn_worker(state: Arc<DaemonState>, work_tx: Sender<Work>) -> Sender<Mi
         })
         .expect("spawn migration worker");
     tx
+}
+
+/// Map a local migration failure to the structured error code that rides
+/// its NotifyEvent / Completion. The mapping keys off the failure's own
+/// message (all minted in [`run_job`]); anything unrecognized stays the
+/// honest catch-all [`ErrorCode::MigrationFailed`].
+fn classify_failure(e: &anyhow::Error) -> ErrorCode {
+    let msg = format!("{e:#}");
+    if msg.contains("no peer link") {
+        ErrorCode::PeerDead
+    } else if msg.contains("unknown buffer") {
+        ErrorCode::BufferLost
+    } else {
+        ErrorCode::MigrationFailed
+    }
 }
 
 fn run_job(state: &Arc<DaemonState>, job: &MigrationJob) -> anyhow::Result<()> {

@@ -36,15 +36,17 @@ use std::net::TcpListener;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::net::rdma::Fabric;
 use crate::net::tcp;
-use crate::net::LinkProfile;
-use crate::proto::{Body, Msg, Packet, ROLE_PEER};
+use crate::net::{FaultPlan, LinkProfile};
+use crate::proto::{Body, Msg, Packet, SessionId, ROLE_PEER};
 use crate::runtime::executor::DeviceKind;
 use crate::runtime::Manifest;
+use crate::util::rng::Rng;
 
 use dispatch::Work;
 use state::{DaemonState, SESSION_IDLE_TTL};
@@ -89,6 +91,19 @@ pub struct DaemonConfig {
     /// Per-session event-table budget: live event entries a session's
     /// namespace may hold. Default 2^20.
     pub session_event_quota: usize,
+    /// Peer-mesh shared secret, carried in the peer `Hello`'s session
+    /// field: a dialing daemon must present it, and the listening side
+    /// rejects mismatches before `become_peer`. The all-zero default is
+    /// an *open* mesh (the historical behavior and what every
+    /// single-tenant fixture gets implicitly).
+    pub peer_secret: SessionId,
+    /// Peer-death deadline, in `load_report_every` intervals: a peer
+    /// connection with no inbound traffic for this many gossip periods is
+    /// declared dead (see [`cluster::PEER_DEATH_INTERVALS`]).
+    pub peer_death_intervals: u32,
+    /// Deterministic fault-injection plan applied to this daemon's
+    /// outbound peer traffic ([`crate::net::fault`]). Empty = no-op.
+    pub fault: FaultPlan,
 }
 
 impl DaemonConfig {
@@ -108,6 +123,9 @@ impl DaemonConfig {
             load_report_every: cluster::LOAD_REPORT_EVERY,
             session_buf_quota: 8 << 30,
             session_event_quota: 1 << 20,
+            peer_secret: [0u8; 16],
+            peer_death_intervals: cluster::PEER_DEATH_INTERVALS,
+            fault: FaultPlan::none(),
         }
     }
 
@@ -228,6 +246,22 @@ impl Daemon {
                 .context("spawn session janitor")?;
         }
 
+        // Peer reconnect supervisor: redials every dead peer this daemon
+        // originally dialed (only the dialing side knows the address),
+        // with exponential backoff plus seeded jitter. A successful
+        // redial re-runs the full dial path — peer Hello (carrying the
+        // mesh secret), outbox pre-registration, RDMA re-advertise — so
+        // gossip and migration traffic resume without further ceremony.
+        {
+            let state = Arc::clone(&state);
+            let shards = Arc::clone(&shards);
+            state.note_thread();
+            std::thread::Builder::new()
+                .name(format!("pocld{server_id}-reconnect"))
+                .spawn(move || reconnect_supervisor(state, shards))
+                .context("spawn reconnect supervisor")?;
+        }
+
         // Accept loop: accepts and assigns to shards, nothing else (no
         // per-connection spawns).
         let accept_handle = {
@@ -256,32 +290,22 @@ impl Daemon {
 
     /// Dial a peer daemon and register the connection on both ends.
     /// Call once per unordered pair (convention: lower id dials higher).
+    /// The address is remembered in `peer_addrs`, making this daemon the
+    /// peer's reconnect owner: if the link later dies, the backoff
+    /// supervisor redials from that record.
     pub fn connect_peer(&self, peer_id: u32, peer_addr: &str) -> Result<()> {
-        let stream = tcp::connect(peer_addr)?;
-        let hello = Msg::control(Body::Hello {
-            session: [0u8; 16],
-            role: ROLE_PEER,
-            peer_id: self.server_id,
-        });
-        let mut s = stream.try_clone()?;
-        crate::proto::write_packet(&mut s, &hello, &[])?;
-        // The shard adopts the socket; the peer outbox is registered in
-        // `peer_txs` before this returns, so the advertise below (and any
-        // immediate migration traffic) lands in it rather than racing the
-        // registration.
-        self.shards.adopt_peer(stream, peer_id, &self.state);
-        // Advertise our RDMA shadow region to the new peer.
-        if let Some(rdma) = &self.state.rdma {
-            let (rkey, size) = rdma.local_advert();
-            self.state.send_to_peer(
-                peer_id,
-                Packet::bare(Msg::control(Body::RdmaAdvertise {
-                    rkey,
-                    shadow_size: size,
-                })),
-            );
-        }
-        Ok(())
+        self.state
+            .peer_addrs
+            .lock()
+            .unwrap()
+            .insert(peer_id, peer_addr.to_string());
+        dial_peer(
+            &self.state,
+            &self.shards,
+            peer_id,
+            peer_addr,
+            false,
+        )
     }
 
     /// Sever every live client connection of every session — every
@@ -308,6 +332,114 @@ impl Daemon {
             .iter()
             .map(|d| d.busy_ns.load(Ordering::Relaxed))
             .sum()
+    }
+}
+
+/// First retry delay of the peer reconnect backoff.
+pub const RECONNECT_BASE: Duration = Duration::from_millis(25);
+/// Reconnect backoff ceiling (before jitter).
+pub const RECONNECT_CAP: Duration = Duration::from_millis(1000);
+/// Supervisor poll cadence — how often dead links are noticed at all.
+const RECONNECT_POLL: Duration = Duration::from_millis(25);
+
+/// One dial of a peer daemon: connect, send the peer `Hello` (carrying
+/// the mesh secret in its session field), hand the socket to a shard
+/// (which pre-registers the outbox in `peer_txs` before returning, so
+/// immediate traffic cannot race the registration), and re-advertise the
+/// local RDMA window. Shared by [`Daemon::connect_peer`] and the
+/// reconnect supervisor; `single_attempt` uses [`tcp::connect_once`] so
+/// the supervisor's backoff is the only retry policy in play.
+fn dial_peer(
+    state: &Arc<DaemonState>,
+    shards: &Arc<shard::ShardPool>,
+    peer_id: u32,
+    peer_addr: &str,
+    single_attempt: bool,
+) -> Result<()> {
+    let stream = if single_attempt {
+        tcp::connect_once(peer_addr)?
+    } else {
+        tcp::connect(peer_addr)?
+    };
+    let hello = Msg::control(Body::Hello {
+        session: state.peer_secret,
+        role: ROLE_PEER,
+        peer_id: state.server_id,
+    });
+    let mut s = stream.try_clone()?;
+    crate::proto::write_packet(&mut s, &hello, &[])?;
+    shards.adopt_peer(stream, peer_id, state);
+    if let Some(rdma) = &state.rdma {
+        let (rkey, size) = rdma.local_advert();
+        state.send_to_peer(
+            peer_id,
+            Packet::bare(Msg::control(Body::RdmaAdvertise {
+                rkey,
+                shadow_size: size,
+            })),
+        );
+    }
+    Ok(())
+}
+
+/// The reconnect supervisor loop: for every peer this daemon dialed
+/// whose link is down, attempt a redial under exponential backoff
+/// (25ms → 800ms, capped at [`RECONNECT_CAP`]) plus seeded uniform
+/// jitter in `[0, delay/2]` so two daemons redialing each other after a
+/// shared outage do not thundering-herd in lockstep. Suppressed while a
+/// fault-plan partition holds (healing it would undo the very fault the
+/// test asked for); a successful redial resets the peer's fault-injector
+/// counters so packet-indexed rules apply to the new link from packet 1.
+fn reconnect_supervisor(state: Arc<DaemonState>, shards: Arc<shard::ShardPool>) {
+    let mut rng = Rng::new(0x5EED_u64 ^ u64::from(state.server_id));
+    let mut attempts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut next_try: std::collections::HashMap<u32, Instant> = std::collections::HashMap::new();
+    while !state.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(RECONNECT_POLL);
+        let addrs: Vec<(u32, String)> = state
+            .peer_addrs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        for (peer, addr) in addrs {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if state.peer_txs.lock().unwrap().contains_key(&peer) {
+                // Link is up; forget any outage history.
+                attempts.remove(&peer);
+                next_try.remove(&peer);
+                continue;
+            }
+            if state.fault.partitioned(peer) {
+                continue;
+            }
+            let now = Instant::now();
+            if next_try.get(&peer).is_some_and(|t| now < *t) {
+                continue;
+            }
+            match dial_peer(&state, &shards, peer, &addr, true) {
+                Ok(()) => {
+                    state.fault.reset_peer(peer);
+                    attempts.remove(&peer);
+                    next_try.remove(&peer);
+                    eprintln!(
+                        "[pocld{}] reconnected to peer {} at {}",
+                        state.server_id, peer, addr
+                    );
+                }
+                Err(_) => {
+                    let n = attempts.entry(peer).or_insert(0);
+                    let delay = (RECONNECT_BASE * (1u32 << (*n).min(5))).min(RECONNECT_CAP);
+                    let jitter_cap = (delay.as_millis() as u64 / 2).max(1);
+                    let jitter = Duration::from_millis(rng.gen_range(0, jitter_cap + 1));
+                    next_try.insert(peer, now + delay + jitter);
+                    *n = n.saturating_add(1);
+                }
+            }
+        }
     }
 }
 
@@ -369,6 +501,9 @@ impl Cluster {
                 load_report_every: cluster::LOAD_REPORT_EVERY,
                 session_buf_quota: 8 << 30,
                 session_event_quota: 1 << 20,
+                peer_secret: [0u8; 16],
+                peer_death_intervals: cluster::PEER_DEATH_INTERVALS,
+                fault: FaultPlan::none(),
             };
             daemons.push(Daemon::spawn(cfg)?);
         }
@@ -380,6 +515,37 @@ impl Cluster {
             }
         }
         Ok(Cluster { daemons, fabric })
+    }
+
+    /// The chaos-test fixture: like [`Cluster::start`] over loopback
+    /// links without RDMA, but every daemon gets the shared mesh
+    /// `peer_secret` and its own (per-daemon) seeded [`FaultPlan`]
+    /// (`faults[i]` for daemon `i`; missing entries mean no faults).
+    pub fn start_faulted(
+        n: usize,
+        gpus_per_server: usize,
+        manifest: &Manifest,
+        peer_secret: SessionId,
+        mut faults: Vec<FaultPlan>,
+    ) -> Result<Cluster> {
+        faults.resize(n, FaultPlan::none());
+        let mut daemons = Vec::new();
+        for (id, fault) in faults.into_iter().enumerate() {
+            let mut cfg = DaemonConfig::local(id as u32, gpus_per_server, manifest.clone());
+            cfg.peer_secret = peer_secret;
+            cfg.fault = fault;
+            daemons.push(Daemon::spawn(cfg)?);
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let addr = daemons[j].addr();
+                daemons[i].connect_peer(j as u32, &addr)?;
+            }
+        }
+        Ok(Cluster {
+            daemons,
+            fabric: None,
+        })
     }
 
     pub fn addrs(&self) -> Vec<String> {

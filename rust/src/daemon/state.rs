@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::net::fault::FaultInjector;
 use crate::net::rdma::{Endpoint, Mr};
 use crate::net::LinkProfile;
 use crate::proto::{Body, Msg, Packet, SessionId};
@@ -664,6 +665,26 @@ pub struct DaemonState {
     /// Outbound buffers to peers, drained by the shard owning each peer
     /// connection.
     pub peer_txs: Mutex<HashMap<u32, Arc<Outbox>>>,
+    /// Dial addresses of peers this daemon *initiated* a link to
+    /// (`connect_peer` records them) — the reconnect supervisor's address
+    /// book. Only the dialing side can redial: an inbound peer's remote
+    /// endpoint is an ephemeral port, so each direction of the mesh heals
+    /// from the end that originally dialed it.
+    pub peer_addrs: Mutex<HashMap<u32, String>>,
+    /// Shared secret peers must present in their `Hello` (the 16-byte
+    /// `session` field, unused for peers otherwise). All-zero = open mesh
+    /// (the default, and what every pre-existing single-tenant test
+    /// implies); any other value gates membership on knowledge of the
+    /// token instead of on `role=PEER` alone.
+    pub peer_secret: SessionId,
+    /// Peer-death deadline in gossip intervals (see
+    /// [`super::cluster::PEER_DEATH_INTERVALS`];
+    /// `DaemonConfig::peer_death_intervals` overrides it). A peer
+    /// connection silent for `interval * this` is declared dead.
+    pub peer_death_intervals: u32,
+    /// Deterministic outbound-fault injector (chaos testing). No-op
+    /// unless a [`crate::net::FaultPlan`] was loaded via `DaemonConfig`.
+    pub fault: Arc<FaultInjector>,
     pub rdma: Option<RdmaState>,
     pub shutdown: AtomicBool,
     /// Deadline for a connection to complete its `Hello`/`AttachQueue`
@@ -1202,6 +1223,10 @@ impl DaemonState {
             cluster: ClusterView::new(cfg.server_id, cfg.load_report_every),
             sessions: Sessions::with_capacity(cfg.max_sessions),
             peer_txs: Mutex::new(HashMap::new()),
+            peer_addrs: Mutex::new(HashMap::new()),
+            peer_secret: cfg.peer_secret,
+            peer_death_intervals: cfg.peer_death_intervals,
+            fault: Arc::new(FaultInjector::new(cfg.fault.clone())),
             rdma,
             shutdown: AtomicBool::new(false),
             handshake_timeout: cfg.handshake_timeout,
@@ -1383,12 +1408,35 @@ impl DaemonState {
         Some(Bytes::copy_from_slice(&data[start..end]))
     }
 
+    /// Would creating or growing buffer `id` to `new_size` keep its
+    /// namespace within the per-session buffer quota? Prefix 0
+    /// (untranslated internal ids) is never quota'd. This is the
+    /// admission check the quota satellite closes: growth used to be
+    /// *charged* at commit but only *checked* at `CreateBuffer`, so a
+    /// session could blow past its budget through kernel outputs,
+    /// migrations or oversize writes.
+    pub fn quota_admits_growth(&self, id: u64, new_size: u64) -> bool {
+        let prefix = (id >> 32) as u32;
+        if prefix == 0 {
+            return true;
+        }
+        let current = self.buffers.with(id, |e| e.size).unwrap_or(0);
+        let grow = new_size.saturating_sub(current);
+        grow == 0 || self.buffers.used_by(prefix).saturating_add(grow) <= self.session_buf_quota
+    }
+
     /// Commit one kernel output buffer: replace the contents, refresh the
     /// size/content-size bookkeeping and mirror into a linked extension
     /// buffer when present. The data swap happens under only the buffer's
     /// own lock, never the shard lock (the store's locking contract).
-    pub fn commit_output(&self, out_id: u64, bytes: Vec<u8>) {
+    /// Returns false — without staging any bytes — when the growth would
+    /// breach the session's buffer quota; the caller fails the event with
+    /// a structured quota error.
+    pub fn commit_output(&self, out_id: u64, bytes: Vec<u8>) -> bool {
         let len = bytes.len() as u64;
+        if !self.quota_admits_growth(out_id, len) {
+            return false;
+        }
         self.buffers.ensure(out_id, len, 0);
         let Some((handle, cs_buf, grew)) = self.buffers.with(out_id, |e| {
             e.content_size = len;
@@ -1398,20 +1446,33 @@ impl DaemonState {
             }
             (Arc::clone(&e.data), e.content_size_buf, grew)
         }) else {
-            return;
+            return false;
         };
         // Growth is charged against the namespace quota ledger outside
         // the shard lock (the store's locking contract).
         self.buffers.charge(out_id, grew);
         *handle.write().unwrap() = bytes;
         self.mirror_content_size(cs_buf, len);
+        true
     }
 
     /// Commit a peer migration push: allocate/grow to `total_size`, place
     /// the content prefix, update content-size bookkeeping. The bulk
     /// resize + copy runs under only the buffer's own data lock, never the
-    /// shard lock (the store's locking contract).
-    pub fn commit_migration(&self, buf: u64, total_size: u64, content_size: u64, src: &[u8]) {
+    /// shard lock (the store's locking contract). Returns false — without
+    /// staging any bytes — when the growth would breach the destination
+    /// session's buffer quota (quota enforcement must hold across the
+    /// mesh, or migration would be the loophole).
+    pub fn commit_migration(
+        &self,
+        buf: u64,
+        total_size: u64,
+        content_size: u64,
+        src: &[u8],
+    ) -> bool {
+        if !self.quota_admits_growth(buf, total_size) {
+            return false;
+        }
         self.buffers.ensure(buf, total_size, 0);
         let Some((handle, cs_buf, grew)) = self.buffers.with(buf, |e| {
             e.content_size = content_size;
@@ -1421,7 +1482,7 @@ impl DaemonState {
             }
             (Arc::clone(&e.data), e.content_size_buf, grew)
         }) else {
-            return;
+            return false;
         };
         self.buffers.charge(buf, grew);
         {
@@ -1432,6 +1493,7 @@ impl DaemonState {
             data[..src.len()].copy_from_slice(src);
         }
         self.mirror_content_size(cs_buf, content_size);
+        true
     }
 }
 
@@ -1570,15 +1632,40 @@ mod tests {
         let id = (9u64 << 32) | 1;
         s.ensure_buffer(id, 8, 0);
         assert_eq!(s.buffers.used_by(9), 8);
-        s.commit_output(id, vec![1u8; 32]);
+        assert!(s.commit_output(id, vec![1u8; 32]));
         assert_eq!(s.buffers.used_by(9), 32);
         // A smaller output keeps the high-water allocation charge.
-        s.commit_output(id, vec![1u8; 4]);
+        assert!(s.commit_output(id, vec![1u8; 4]));
         assert_eq!(s.buffers.used_by(9), 32);
-        s.commit_migration(id, 64, 64, &[0u8; 16]);
+        assert!(s.commit_migration(id, 64, 64, &[0u8; 16]));
         assert_eq!(s.buffers.used_by(9), 64);
         s.buffers.remove(id);
         assert_eq!(s.buffers.used_by(9), 0);
+    }
+
+    #[test]
+    fn commit_growth_is_quota_checked_before_staging() {
+        let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+        cfg.session_buf_quota = 64;
+        let s = DaemonState::new(&mut cfg).unwrap();
+        let id = (9u64 << 32) | 1;
+        s.ensure_buffer(id, 16, 0);
+        // Within quota: growth commits and is charged.
+        assert!(s.commit_output(id, vec![1u8; 48]));
+        assert_eq!(s.buffers.used_by(9), 48);
+        // Past quota: refused with NOTHING staged — size, charge and
+        // contents all unchanged.
+        assert!(!s.commit_output(id, vec![2u8; 128]));
+        assert_eq!(s.buffers.used_by(9), 48);
+        assert_eq!(s.buffers.with(id, |e| e.size).unwrap(), 48);
+        assert_eq!(s.snapshot_buffer(id).unwrap()[0], 1);
+        // Migration growth obeys the same admission edge.
+        assert!(!s.commit_migration(id, 1 << 20, 8, &[3u8; 8]));
+        assert_eq!(s.buffers.used_by(9), 48);
+        assert!(s.commit_migration(id, 64, 8, &[3u8; 8]));
+        assert_eq!(s.buffers.used_by(9), 64);
+        // Internal ids (prefix 0) are never quota'd.
+        assert!(s.quota_admits_growth(7, 1 << 20));
     }
 
     #[test]
@@ -2007,7 +2094,7 @@ mod tests {
         let s = state();
         s.ensure_buffer(30, 16, 31);
         s.ensure_buffer(31, 4, 0);
-        s.commit_output(30, vec![7; 5]);
+        assert!(s.commit_output(30, vec![7; 5]));
         assert_eq!(s.content_size_of(30), 5);
         let cs = s.buffers.data(31).unwrap();
         let d = cs.read().unwrap();

@@ -5,7 +5,7 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency|placement` —
+//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn` —
 //!   print a DES scenario table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
@@ -196,6 +196,43 @@ fn main() -> anyhow::Result<()> {
                         );
                     }
                 }
+                Some("churn") => {
+                    // Fault-tolerance what-if: a peer daemon killed and
+                    // restarted repeatedly while server 0 keeps
+                    // offloading. Sweeps the gossip cadence to show the
+                    // detection deadline trading strand time against
+                    // gossip traffic.
+                    let cycles = if args.iter().any(|a| a == "--tiny") {
+                        3
+                    } else {
+                        10
+                    };
+                    println!(
+                        "daemon-restart churn model ({cycles} kill/restart cycles, \
+                         2 s up / 0.5 s down, 6 missed reports = dead):"
+                    );
+                    for gossip_ms in [10.0f64, 50.0, 100.0] {
+                        let p = scenarios::churn_restart_recovery(
+                            cycles,
+                            2.0,
+                            0.5,
+                            gossip_ms * 1e-3,
+                            6,
+                        );
+                        println!(
+                            "gossip {gossip_ms:>5.0} ms -> detect {:>5.0} ms   \
+                             outage {:>6.0} ms/cycle   served {:>5.1}%   \
+                             stranded {:>4.1}% (mean fail {:>5.0} ms)   \
+                             fast-failed {:>4.1}%",
+                            p.detection_deadline_s * 1e3,
+                            p.mean_outage_s * 1e3,
+                            p.served_pct,
+                            p.stranded_pct,
+                            p.mean_strand_fail_s * 1e3,
+                            p.fast_failed_pct
+                        );
+                    }
+                }
                 Some("fig16") => {
                     for mode in [
                         FluidMode::Native,
@@ -215,7 +252,7 @@ fn main() -> anyhow::Result<()> {
                 }
                 other => anyhow::bail!(
                     "unknown sim scenario {other:?} \
-                     (fig12|fig13|fig16|queues|sessions|ues|latency|placement)"
+                     (fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn)"
                 ),
             }
             Ok(())
@@ -238,7 +275,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
             eprintln!(
-                "  sim    fig12|fig13|fig16|queues|sessions|ues|latency|placement  \
+                "  sim    fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn  \
                  DES scenario tables"
             );
             eprintln!("  artifacts                      list the AOT manifest");

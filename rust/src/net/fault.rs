@@ -1,0 +1,325 @@
+//! Deterministic fault injection for the peer mesh.
+//!
+//! Chaos testing a distributed daemon is only useful when failures
+//! *replay*: the same seed and the same [`FaultPlan`] must produce the
+//! same byte-for-byte fault sequence on every run. The injector therefore
+//! keys every decision off (a) per-peer outbound packet counters and (b)
+//! a seeded [`Rng`](crate::util::rng::Rng) — never off wall-clock time or
+//! thread interleaving. It sits on the daemon's outbound peer path (the
+//! shard-drained `Outbox` flush in `daemon/connection.rs`), where packet
+//! order is already serialized per connection, so counter-indexed rules
+//! are deterministic even under the sharded event loops.
+//!
+//! A default-constructed injector (`FaultPlan::default()`) is a no-op and
+//! compiles down to one atomic load per flush — production daemons pay
+//! nothing for the machinery.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One fault rule, scoped to a destination peer id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultRule {
+    /// Kill the link to `peer` after `after_packets` outbound packets
+    /// have been sent on it (the socket closes mid-conversation, as a
+    /// crashed daemon's would).
+    KillPeerLink { peer: u32, after_packets: u64 },
+    /// Silently drop every `nth` outbound packet to `peer` (1 = drop
+    /// everything). Models lossy links; the frames never hit the socket.
+    DropEvery { peer: u32, nth: u64 },
+    /// Truncate the frame of outbound packet number `at_packet` to
+    /// `peer` and then kill the link — the receiving decoder sees a
+    /// half-written frame followed by EOF, exactly what a daemon dying
+    /// mid-`write_vectored` produces.
+    TruncateAt { peer: u32, at_packet: u64 },
+    /// Partition: refuse all traffic to `peer` and suppress reconnect
+    /// attempts while the partition holds.
+    Partition { peer: u32 },
+    /// Delay each outbound packet to `peer` by a seeded-uniform amount
+    /// in `[min_ms, max_ms]` (pacing-style hold, order-preserving).
+    DelayMs { peer: u32, min_ms: u64, max_ms: u64 },
+}
+
+/// A seeded set of fault rules, threaded through `DaemonConfig`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the injector's PRNG (jitter decisions). Two daemons with
+    /// the same plan and seed make identical decisions.
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Plan with no rules: the injector becomes a no-op.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// What the flush path must do with one outbound peer packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Send normally.
+    Pass,
+    /// Discard the packet; keep the link up.
+    Drop,
+    /// Write a truncated frame, then kill the link.
+    Truncate,
+    /// Kill the link before sending this packet.
+    Kill,
+    /// Hold the packet for the given duration, then send.
+    Delay(Duration),
+}
+
+#[derive(Default)]
+struct FaultCounters {
+    /// Outbound packets observed per destination peer.
+    sent: HashMap<u32, u64>,
+    /// Peers whose link the injector already killed (kill fires once).
+    killed: HashMap<u32, bool>,
+}
+
+/// Deterministic fault injector instantiated from a [`FaultPlan`].
+pub struct FaultInjector {
+    plan: FaultPlan,
+    counters: Mutex<FaultCounters>,
+    rng: Mutex<Rng>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let rng = Rng::new(plan.seed);
+        FaultInjector {
+            plan,
+            counters: Mutex::new(FaultCounters::default()),
+            rng: Mutex::new(rng),
+        }
+    }
+
+    /// True when no rules are loaded — the hot path checks this first and
+    /// skips all bookkeeping.
+    pub fn is_noop(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Is `peer` currently partitioned away? Consulted by the outbound
+    /// path *and* the reconnect supervisor (a partitioned peer must not
+    /// be redialed — that would heal the partition the test asked for).
+    pub fn partitioned(&self, peer: u32) -> bool {
+        self.plan
+            .rules
+            .iter()
+            .any(|r| matches!(r, FaultRule::Partition { peer: p } if *p == peer))
+    }
+
+    /// Decide the fate of the next outbound packet to `peer`. Counts the
+    /// packet (1-indexed: the first packet to a peer is packet 1) and
+    /// applies the first matching rule in plan order. Deterministic:
+    /// depends only on the plan, the seed, and how many packets were
+    /// sent to this peer before.
+    pub fn on_peer_packet(&self, peer: u32) -> FaultAction {
+        if self.is_noop() {
+            return FaultAction::Pass;
+        }
+        let mut c = self.counters.lock().unwrap();
+        if *c.killed.get(&peer).unwrap_or(&false) {
+            return FaultAction::Kill;
+        }
+        let n = c.sent.entry(peer).or_insert(0);
+        *n += 1;
+        let n = *n;
+        for rule in &self.plan.rules {
+            match rule {
+                FaultRule::KillPeerLink {
+                    peer: p,
+                    after_packets,
+                } if *p == peer && n > *after_packets => {
+                    c.killed.insert(peer, true);
+                    return FaultAction::Kill;
+                }
+                FaultRule::DropEvery { peer: p, nth } if *p == peer && *nth > 0 => {
+                    if n % *nth == 0 {
+                        return FaultAction::Drop;
+                    }
+                }
+                FaultRule::TruncateAt { peer: p, at_packet } if *p == peer && n == *at_packet => {
+                    c.killed.insert(peer, true);
+                    return FaultAction::Truncate;
+                }
+                FaultRule::Partition { peer: p } if *p == peer => {
+                    return FaultAction::Drop;
+                }
+                FaultRule::DelayMs {
+                    peer: p,
+                    min_ms,
+                    max_ms,
+                } if *p == peer => {
+                    let hold = if max_ms > min_ms {
+                        self.rng.lock().unwrap().gen_range(*min_ms, *max_ms + 1)
+                    } else {
+                        *min_ms
+                    };
+                    return FaultAction::Delay(Duration::from_millis(hold));
+                }
+                _ => {}
+            }
+        }
+        FaultAction::Pass
+    }
+
+    /// Reset per-peer counters and the kill latch for `peer` — called
+    /// when a fresh link to the peer is established (reconnect), so
+    /// packet-counted rules apply to the new link from packet 1.
+    pub fn reset_peer(&self, peer: u32) {
+        let mut c = self.counters.lock().unwrap();
+        c.sent.remove(&peer);
+        c.killed.remove(&peer);
+    }
+
+    /// Packets counted towards `peer` so far (tests).
+    pub fn sent_to(&self, peer: u32) -> u64 {
+        *self.counters.lock().unwrap().sent.get(&peer).unwrap_or(&0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn actions(inj: &FaultInjector, peer: u32, n: usize) -> Vec<FaultAction> {
+        (0..n).map(|_| inj.on_peer_packet(peer)).collect()
+    }
+
+    #[test]
+    fn noop_plan_passes_everything() {
+        let inj = FaultInjector::new(FaultPlan::none());
+        assert!(inj.is_noop());
+        assert_eq!(actions(&inj, 1, 4), vec![FaultAction::Pass; 4]);
+        // No-op short-circuits before counting.
+        assert_eq!(inj.sent_to(1), 0);
+    }
+
+    #[test]
+    fn kill_after_n_latches() {
+        let plan = FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::KillPeerLink {
+                peer: 2,
+                after_packets: 3,
+            }],
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(
+            actions(&inj, 2, 5),
+            vec![
+                FaultAction::Pass,
+                FaultAction::Pass,
+                FaultAction::Pass,
+                FaultAction::Kill,
+                FaultAction::Kill,
+            ]
+        );
+        // Other peers are untouched.
+        assert_eq!(actions(&inj, 3, 2), vec![FaultAction::Pass; 2]);
+        // A reconnect resets the latch and the counter.
+        inj.reset_peer(2);
+        assert_eq!(actions(&inj, 2, 3), vec![FaultAction::Pass; 3]);
+    }
+
+    #[test]
+    fn drop_every_nth_and_partition() {
+        let plan = FaultPlan {
+            seed: 1,
+            rules: vec![
+                FaultRule::DropEvery { peer: 1, nth: 2 },
+                FaultRule::Partition { peer: 9 },
+            ],
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(
+            actions(&inj, 1, 4),
+            vec![
+                FaultAction::Pass,
+                FaultAction::Drop,
+                FaultAction::Pass,
+                FaultAction::Drop,
+            ]
+        );
+        assert!(inj.partitioned(9));
+        assert!(!inj.partitioned(1));
+        assert_eq!(actions(&inj, 9, 2), vec![FaultAction::Drop; 2]);
+    }
+
+    #[test]
+    fn truncate_then_dead() {
+        let plan = FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::TruncateAt { peer: 4, at_packet: 2 }],
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(
+            actions(&inj, 4, 3),
+            vec![FaultAction::Pass, FaultAction::Truncate, FaultAction::Kill]
+        );
+    }
+
+    #[test]
+    fn delay_is_seed_deterministic() {
+        let plan = FaultPlan {
+            seed: 77,
+            rules: vec![FaultRule::DelayMs {
+                peer: 5,
+                min_ms: 1,
+                max_ms: 20,
+            }],
+        };
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan);
+        let da = actions(&a, 5, 16);
+        let db = actions(&b, 5, 16);
+        assert_eq!(da, db);
+        for act in da {
+            match act {
+                FaultAction::Delay(d) => {
+                    assert!((1..=20).contains(&(d.as_millis() as u64)), "{d:?}")
+                }
+                other => panic!("expected delay, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn whole_sequences_replay_across_runs() {
+        let plan = FaultPlan {
+            seed: 0xC0FFEE,
+            rules: vec![
+                FaultRule::DropEvery { peer: 1, nth: 3 },
+                FaultRule::KillPeerLink {
+                    peer: 2,
+                    after_packets: 7,
+                },
+                FaultRule::DelayMs {
+                    peer: 3,
+                    min_ms: 0,
+                    max_ms: 9,
+                },
+            ],
+        };
+        let run = |plan: FaultPlan| {
+            let inj = FaultInjector::new(plan);
+            let mut seq = Vec::new();
+            for i in 0..30u32 {
+                seq.push(inj.on_peer_packet(1 + i % 3));
+            }
+            seq
+        };
+        assert_eq!(run(plan.clone()), run(plan));
+    }
+}

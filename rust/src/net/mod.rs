@@ -12,9 +12,11 @@
 //!   memory regions, chained work requests, single doorbell, zero-syscall
 //!   data placement) over in-process shared memory.
 
+pub mod fault;
 pub mod poll;
 pub mod rdma;
 pub mod shaper;
 pub mod tcp;
 
+pub use fault::{FaultAction, FaultInjector, FaultPlan, FaultRule};
 pub use shaper::LinkProfile;

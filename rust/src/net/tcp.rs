@@ -92,6 +92,16 @@ pub fn connect<A: ToSocketAddrs + Clone + std::fmt::Debug>(addr: A) -> Result<Tc
     Err(last_err.unwrap()).with_context(|| format!("connect {addr:?}"))
 }
 
+/// Single connect attempt with tuning applied — no retry loop. The peer
+/// reconnect supervisor uses this so its exponential backoff is the only
+/// retry policy in play (the retrying [`connect`] would hide ~500ms of
+/// extra blocking inside every failed attempt).
+pub fn connect_once<A: ToSocketAddrs + Clone + std::fmt::Debug>(addr: A) -> Result<TcpStream> {
+    let s = TcpStream::connect(addr.clone()).with_context(|| format!("connect {addr:?}"))?;
+    tune(&s)?;
+    Ok(s)
+}
+
 /// Bind a listener on 127.0.0.1 with an OS-assigned port.
 pub fn listen_loopback() -> Result<(TcpListener, u16)> {
     let l = TcpListener::bind("127.0.0.1:0").context("bind")?;

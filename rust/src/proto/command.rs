@@ -53,6 +53,116 @@ impl EventStatus {
     }
 }
 
+/// Structured failure reason carried on `Failed` completions (and on the
+/// peer `NotifyEvent` that propagates a remote failure back to the event's
+/// origin server). The numeric value is part of the wire format: it rides
+/// the [`Body::NotifyEvent`] `code` byte and the error payload encoded by
+/// [`encode_error_payload`]. Unknown values decode as [`ErrorCode::Generic`]
+/// so old peers never wedge a new daemon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Unclassified failure (poisoned dependency, executor error, ...).
+    Generic,
+    /// The peer daemon holding this event's work died (gossip deadline
+    /// missed or its socket closed) before completing it.
+    PeerDead,
+    /// A buffer this command needed does not exist on the executing
+    /// server (freed, never migrated, or lost with a dead peer).
+    BufferLost,
+    /// The session's buffer-memory quota would be exceeded (checked at
+    /// CreateBuffer admission *and* before implicit growth is staged).
+    QuotaBufferExceeded,
+    /// The session's event-table quota was exceeded.
+    QuotaEventExceeded,
+    /// The command was malformed or not allowed on this plane (e.g. a
+    /// client sending peer-only bodies).
+    InvalidCommand,
+    /// A peer-to-peer migration failed in flight.
+    MigrationFailed,
+    /// Peer handshake presented a bad shared secret; the mesh rejected it.
+    AuthRejected,
+}
+
+impl ErrorCode {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::Generic => 0,
+            ErrorCode::PeerDead => 1,
+            ErrorCode::BufferLost => 2,
+            ErrorCode::QuotaBufferExceeded => 3,
+            ErrorCode::QuotaEventExceeded => 4,
+            ErrorCode::InvalidCommand => 5,
+            ErrorCode::MigrationFailed => 6,
+            ErrorCode::AuthRejected => 7,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Self {
+        match v {
+            1 => ErrorCode::PeerDead,
+            2 => ErrorCode::BufferLost,
+            3 => ErrorCode::QuotaBufferExceeded,
+            4 => ErrorCode::QuotaEventExceeded,
+            5 => ErrorCode::InvalidCommand,
+            6 => ErrorCode::MigrationFailed,
+            7 => ErrorCode::AuthRejected,
+            _ => ErrorCode::Generic,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Generic => "generic",
+            ErrorCode::PeerDead => "peer-dead",
+            ErrorCode::BufferLost => "buffer-lost",
+            ErrorCode::QuotaBufferExceeded => "quota-buffer-exceeded",
+            ErrorCode::QuotaEventExceeded => "quota-event-exceeded",
+            ErrorCode::InvalidCommand => "invalid-command",
+            ErrorCode::MigrationFailed => "migration-failed",
+            ErrorCode::AuthRejected => "auth-rejected",
+        }
+    }
+}
+
+/// Magic prefix distinguishing a structured error payload from arbitrary
+/// buffer bytes. A `Failed` completion historically carried no payload at
+/// all, so any payload on a failure is new-protocol; the magic is a
+/// belt-and-braces guard against misclassifying junk.
+const ERROR_PAYLOAD_MAGIC: u32 = 0x504C_4345; // "ECLP"
+
+/// Encode a structured error as a `Failed`-completion payload: magic,
+/// code byte, and a human-readable detail string (truncated to fit the
+/// u16 length prefix).
+pub fn encode_error_payload(code: ErrorCode, detail: &str) -> Vec<u8> {
+    let mut w = W::with_capacity(8 + detail.len());
+    w.u32(ERROR_PAYLOAD_MAGIC);
+    w.u8(code.to_u8());
+    let detail = if detail.len() > u16::MAX as usize {
+        let mut cut = u16::MAX as usize;
+        while !detail.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        &detail[..cut]
+    } else {
+        detail
+    };
+    w.str16(detail);
+    w.buf
+}
+
+/// Decode a structured error payload; `None` when the bytes are not one
+/// (wrong magic, truncated) — callers then treat the failure as
+/// [`ErrorCode::Generic`] with no detail.
+pub fn decode_error_payload(bytes: &[u8]) -> Option<(ErrorCode, String)> {
+    let mut r = R::new(bytes);
+    if r.u32().ok()? != ERROR_PAYLOAD_MAGIC {
+        return None;
+    }
+    let code = ErrorCode::from_u8(r.u8().ok()?);
+    let detail = r.str16().ok()?;
+    Some((code, detail))
+}
+
 /// OpenCL event profiling timestamps in daemon-local ns (paper Fig 9 uses
 /// the event profiling API; these four are CL_PROFILING_COMMAND_*).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -141,9 +251,13 @@ pub enum Body {
         len: u64,
     },
     /// Peer -> peer event completion notification (paper Fig 3 green arrow).
+    /// `code` is the [`ErrorCode`] byte when `status` is Failed (0 =
+    /// generic / not a failure) so the origin server can forward a typed
+    /// error to the client.
     NotifyEvent {
         event: u64,
         status: i8,
+        code: u8,
     },
     /// Command completion (server -> client). For ReadBuffer, `payload_len`
     /// bytes of buffer contents follow.
@@ -336,10 +450,15 @@ impl Msg {
                 w.u64(*total_size);
                 w.u64(*len);
             }
-            Body::NotifyEvent { event, status } => {
+            Body::NotifyEvent {
+                event,
+                status,
+                code,
+            } => {
                 w.u8(T_NOTIFY);
                 w.u64(*event);
                 w.i8(*status);
+                w.u8(*code);
             }
             Body::Completion {
                 event,
@@ -455,6 +574,7 @@ impl Msg {
             T_NOTIFY => Body::NotifyEvent {
                 event: r.u64()?,
                 status: r.i8()?,
+                code: r.u8()?,
             },
             T_COMPLETION => Body::Completion {
                 event: r.u64()?,
@@ -585,7 +705,8 @@ mod tests {
             },
             Body::NotifyEvent {
                 event: 42,
-                status: 0,
+                status: -1,
+                code: ErrorCode::PeerDead.to_u8(),
             },
             Body::Completion {
                 event: 42,
@@ -643,6 +764,37 @@ mod tests {
         let mut enc = Msg::control(Body::Barrier).encode();
         *enc.last_mut().unwrap() = 200;
         assert!(Msg::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn error_payload_roundtrip() {
+        let enc = encode_error_payload(ErrorCode::PeerDead, "server 2 missed 6 gossip intervals");
+        let (code, detail) = decode_error_payload(&enc).unwrap();
+        assert_eq!(code, ErrorCode::PeerDead);
+        assert_eq!(detail, "server 2 missed 6 gossip intervals");
+        // Arbitrary buffer bytes never misdecode as a structured error.
+        assert!(decode_error_payload(b"just some buffer data").is_none());
+        assert!(decode_error_payload(&[]).is_none());
+        // Truncated structured payloads are rejected, not panicked on.
+        assert!(decode_error_payload(&enc[..6]).is_none());
+    }
+
+    #[test]
+    fn error_code_roundtrip() {
+        for code in [
+            ErrorCode::Generic,
+            ErrorCode::PeerDead,
+            ErrorCode::BufferLost,
+            ErrorCode::QuotaBufferExceeded,
+            ErrorCode::QuotaEventExceeded,
+            ErrorCode::InvalidCommand,
+            ErrorCode::MigrationFailed,
+            ErrorCode::AuthRejected,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.to_u8()), code);
+            assert!(!code.as_str().is_empty());
+        }
+        assert_eq!(ErrorCode::from_u8(200), ErrorCode::Generic);
     }
 
     #[test]

@@ -19,7 +19,10 @@ pub mod command;
 pub mod frame;
 pub mod wire;
 
-pub use command::{Body, EventStatus, Msg, Packet, SessionId, Timestamps, ROLE_CLIENT, ROLE_PEER};
+pub use command::{
+    decode_error_payload, encode_error_payload, Body, ErrorCode, EventStatus, Msg, Packet,
+    SessionId, Timestamps, ROLE_CLIENT, ROLE_PEER,
+};
 pub use frame::{
     read_packet, read_packet_with, write_packet, write_packet_with, write_packets,
     write_packets_paced, FrameDecoder, RecvRing,

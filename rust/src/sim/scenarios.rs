@@ -519,6 +519,126 @@ pub fn fig16_fluidx3d(mode: FluidMode, nodes: usize, steps: usize) -> FluidPoint
     }
 }
 
+/// One daemon-restart churn measurement point.
+#[derive(Debug, Clone)]
+pub struct ChurnPoint {
+    pub n_cycles: usize,
+    /// Gossip silence needed before a peer is declared dead (s).
+    pub detection_deadline_s: f64,
+    /// Mean time a stranded command waits before its Failed completion
+    /// arrives (s) — bounded by the detection deadline.
+    pub mean_strand_fail_s: f64,
+    /// Mean peer-death -> peer-link-restored outage per cycle (s).
+    pub mean_outage_s: f64,
+    /// Offloaded commands that completed normally (percent).
+    pub served_pct: f64,
+    /// Commands dispatched into the silence window and swept as
+    /// `peer-dead` at the detection deadline (percent).
+    pub stranded_pct: f64,
+    /// Commands arriving after detection but before the link healed,
+    /// failed fast with a typed error instead of hanging (percent).
+    pub fast_failed_pct: f64,
+}
+
+/// Daemon-restart churn: server 0 offloads a steady kernel stream to
+/// peer 1 while peer 1 is killed and restarted `n_cycles` times. The
+/// model replays the daemon's fault-tolerance timeline rather than an
+/// idealized one:
+///
+/// * the crash is silent (no FIN reaches the origin), so death is only
+///   discovered by gossip silence: `death_intervals` missed
+///   `LoadReport`s of `gossip_interval_s` each — commands dispatched
+///   into that window *strand* and are swept to Failed at the deadline,
+///   exactly what the dispatcher's `pending_on_peer` sweep does;
+/// * between detection and link recovery, offload attempts fail fast
+///   with a typed `peer-dead` error (no hang, no strand);
+/// * the reconnect supervisor retries from the moment of eviction with
+///   exponential backoff, 25 ms doubling to a 1 s cap (the daemon's
+///   `RECONNECT_BASE`/`RECONNECT_CAP`; seeded jitter elided — it only
+///   de-synchronizes fleets, the expectation is unchanged), so a
+///   restarted peer is re-adopted by the first attempt after it is
+///   listening again.
+///
+/// Returns per-cycle outage and per-command outcome fractions; the
+/// three outcome percentages partition the offered load.
+pub fn churn_restart_recovery(
+    n_cycles: usize,
+    up_for_s: f64,
+    down_for_s: f64,
+    gossip_interval_s: f64,
+    death_intervals: u32,
+) -> ChurnPoint {
+    let exec_s = 200e-6;
+    let peer_rtt_s = 200e-6;
+    let interarrival_s = 5e-3;
+    let reconnect_base_s = 25e-3;
+    let reconnect_cap_s = 1.0;
+    let detection_s = gossip_interval_s * death_intervals as f64;
+
+    let cycle_s = up_for_s + down_for_s;
+    let horizon_s = n_cycles as f64 * cycle_s + up_for_s;
+
+    // Death / detection / link-restored instants for each cycle.
+    let mut windows: Vec<(f64, f64, f64)> = Vec::with_capacity(n_cycles);
+    for k in 0..n_cycles {
+        let t_die = k as f64 * cycle_s + up_for_s;
+        let t_det = t_die + detection_s;
+        let t_up = t_die + down_for_s;
+        // Backoff attempts start at eviction and double to the cap; the
+        // first attempt finding the daemon listening re-adopts the peer.
+        let mut attempt = t_det;
+        let mut n = 0u32;
+        while attempt < t_up {
+            attempt += (reconnect_base_s * f64::from(1u32 << n.min(5))).min(reconnect_cap_s);
+            n += 1;
+        }
+        windows.push((t_die, t_det, attempt.max(t_up)));
+    }
+
+    let mut des = Des::new();
+    let (mut served, mut stranded, mut fast_failed) = (0usize, 0usize, 0usize);
+    let mut strand_wait_s = 0.0;
+    let mut i = 0usize;
+    loop {
+        let now = i as f64 * interarrival_s;
+        if now >= horizon_s {
+            break;
+        }
+        i += 1;
+        // Classification epsilon: far below the 5 ms arrival grid, far
+        // above f64 noise — an arrival landing numerically *on* a window
+        // edge classifies identically regardless of cycle geometry.
+        let eps = 1e-9;
+        match windows.iter().find(|&&(d, _, l)| now >= d && l - now > eps) {
+            // Dispatched into the silence window: strands on the dead
+            // peer, fails when the sweep runs at the deadline.
+            Some(&(_, det, _)) if det - now > eps => {
+                stranded += 1;
+                strand_wait_s += det - now;
+            }
+            // Peer already declared dead: typed fast-fail.
+            Some(_) => fast_failed += 1,
+            // Link up: pay the peer RTT, queue on the peer's device.
+            None => {
+                des.schedule("peer1", now + peer_rtt_s, exec_s);
+                served += 1;
+            }
+        }
+    }
+
+    let total = (served + stranded + fast_failed).max(1) as f64;
+    let outage_s: f64 = windows.iter().map(|&(d, _, l)| l - d).sum();
+    ChurnPoint {
+        n_cycles,
+        detection_deadline_s: detection_s,
+        mean_strand_fail_s: strand_wait_s / stranded.max(1) as f64,
+        mean_outage_s: outage_s / n_cycles.max(1) as f64,
+        served_pct: served as f64 / total * 100.0,
+        stranded_pct: stranded as f64 / total * 100.0,
+        fast_failed_pct: fast_failed as f64 / total * 100.0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -734,5 +854,62 @@ mod tests {
         let rdma = fig16_fluidx3d(FluidMode::PoclrRdma, 3, 10);
         let gain = rdma.mlups / tcp.mlups;
         assert!(gain > 0.98 && gain < 1.15, "gain {gain}");
+    }
+
+    #[test]
+    fn churn_stranded_wait_is_bounded_by_the_detection_deadline() {
+        // The fail-not-hang invariant: no stranded command waits longer
+        // than the gossip-silence deadline for its Failed completion.
+        let p = churn_restart_recovery(5, 2.0, 0.5, 50e-3, 6);
+        assert!((p.detection_deadline_s - 0.3).abs() < 1e-9);
+        assert!(p.stranded_pct > 0.0, "{p:?}");
+        assert!(
+            p.mean_strand_fail_s > 0.0
+                && p.mean_strand_fail_s <= p.detection_deadline_s + 1e-9,
+            "{p:?}"
+        );
+        // The three outcomes partition the offered load.
+        let sum = p.served_pct + p.stranded_pct + p.fast_failed_pct;
+        assert!((sum - 100.0).abs() < 1e-6, "{p:?}");
+        // Outage covers the restart gap plus detection plus at most one
+        // capped backoff step of rejoin lag.
+        assert!(p.mean_outage_s >= 0.5, "{p:?}");
+        assert!(
+            p.mean_outage_s <= 0.5 + p.detection_deadline_s + 1.0 + 1e-9,
+            "{p:?}"
+        );
+    }
+
+    #[test]
+    fn churn_faster_gossip_detects_and_recovers_sooner() {
+        let slow = churn_restart_recovery(5, 2.0, 0.5, 50e-3, 6);
+        let fast = churn_restart_recovery(5, 2.0, 0.5, 10e-3, 6);
+        // Tighter gossip shrinks the silence window: commands strand
+        // for less time and fewer of them strand at all.
+        assert!(fast.mean_strand_fail_s < slow.mean_strand_fail_s, "{fast:?} vs {slow:?}");
+        assert!(fast.stranded_pct < slow.stranded_pct, "{fast:?} vs {slow:?}");
+        // Note the outage itself is NOT monotone in the gossip rate:
+        // earlier eviction starts the backoff clock earlier, so the
+        // supervisor can sit deeper in a doubled delay when the daemon
+        // finally listens again. Only the strand window shrinks.
+        assert!(fast.detection_deadline_s < slow.detection_deadline_s);
+    }
+
+    #[test]
+    fn churn_longer_downtime_costs_availability_not_strand_time() {
+        let short = churn_restart_recovery(4, 2.0, 0.25, 50e-3, 6);
+        let long = churn_restart_recovery(4, 2.0, 2.0, 50e-3, 6);
+        assert!(long.served_pct < short.served_pct, "{long:?} vs {short:?}");
+        assert!(long.fast_failed_pct > short.fast_failed_pct, "{long:?} vs {short:?}");
+        // Strand wait depends only on the detection deadline, never on
+        // how long the daemon stays down.
+        assert!(
+            (long.mean_strand_fail_s - short.mean_strand_fail_s).abs() < 1e-9,
+            "{long:?} vs {short:?}"
+        );
+        // Determinism: the model is pure — same inputs, same point.
+        let again = churn_restart_recovery(4, 2.0, 2.0, 50e-3, 6);
+        assert!((again.served_pct - long.served_pct).abs() < 1e-12);
+        assert!((again.mean_outage_s - long.mean_outage_s).abs() < 1e-12);
     }
 }

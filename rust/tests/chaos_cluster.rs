@@ -1,0 +1,462 @@
+//! Cluster fault-tolerance chaos tests: daemons dying mid-flight,
+//! seeded network faults, stranded-event recovery, backoff reconnect
+//! and mesh authentication.
+//!
+//! The failure-model contract under test (docs/architecture.md
+//! "Failure model"):
+//!
+//! * **Peer death is detected** — by EOF/EPIPE immediately, or by gossip
+//!   silence within `peer_death_intervals × load_report_every` (default
+//!   6 × 50 ms = 300 ms).
+//! * **Stranded events fail, never hang** — every event pending on a
+//!   dead peer is swept by the dispatcher and failed with the structured
+//!   [`ErrorCode::PeerDead`], which the client driver decodes into a
+//!   typed error; dependents fail through poison propagation.
+//! * **Survivors keep serving** — the remaining daemons and every other
+//!   session stay fully functional.
+//! * **Links recover** — the dialing daemon redials dead peers under
+//!   exponential backoff, so a restarted daemon rejoins the mesh without
+//!   operator action.
+//!
+//! Faults come from the deterministic [`FaultPlan`] layer where network
+//! behavior is being injected, and from genuinely dropping `Daemon`
+//! instances where real process death is the point.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::state::ns_of;
+use poclr::daemon::{Cluster, Daemon, DaemonConfig};
+use poclr::net::{FaultPlan, FaultRule, LinkProfile};
+use poclr::proto::{
+    decode_error_payload, read_packet, write_packet, Body, ErrorCode, EventStatus, Msg, SessionId,
+    ROLE_CLIENT,
+};
+use poclr::runtime::Manifest;
+use poclr::sched::WaitOutcome;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+/// Poll until `cond` holds or `deadline` passes; panics with `what`.
+fn wait_for(deadline: Instant, what: &str, mut cond: impl FnMut() -> bool) {
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn peer_link_up(d: &Daemon, peer: u32) -> bool {
+    d.state.peer_txs.lock().unwrap().contains_key(&peer)
+}
+
+#[test]
+fn daemon_death_mid_migration_fails_stranded_events_and_survivors_serve() {
+    // 16 MiB over a 100 Mbit/s peer link ≈ 1.3 s of shaped transfer: the
+    // MigrateData push is genuinely mid-flight when daemon 1 dies. The
+    // dispatcher on daemon 0 must sweep the stranded migration event
+    // (and, through poison, the kernel gated on it) instead of leaving
+    // the client waiting forever.
+    let mut c = Cluster::start(
+        3,
+        1,
+        LinkProfile::LOOPBACK,
+        LinkProfile::ETH_100M,
+        false,
+        &manifest(),
+        &["increment_s32_1"],
+    )
+    .unwrap();
+    let p = Platform::connect(&c.addrs(), ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let q2 = ctx.queue(2, 0);
+
+    let n = 16 * 1024 * 1024;
+    let big = ctx.create_buffer(n as u64);
+    q0.write(big, &vec![0x5Au8; n]).unwrap().wait().unwrap();
+    let other = ctx.create_buffer(4);
+    q2.write(other, &3i32.to_le_bytes()).unwrap().wait().unwrap();
+
+    // Mid-migration: the push to server 1 crawls over the shaped link.
+    let mig = q1.migrate(big).unwrap();
+    // Mid-kernel: a kernel on the surviving server 2, gated on the
+    // migration event — it can only resolve through the peer mesh.
+    let gated = q2
+        .run_with_waits("increment_s32_1", &[other], &[other], &[&mig])
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let dead = c.daemons.remove(1);
+    drop(dead); // daemon 1 dies with the push still in flight
+
+    // The stranded migration fails promptly with the structured code.
+    let failed_at = Instant::now();
+    assert_eq!(
+        mig.wait_timeout(Duration::from_secs(20)),
+        WaitOutcome::Failed,
+        "stranded migration event neither failed nor completed"
+    );
+    assert!(
+        failed_at.elapsed() < Duration::from_secs(20),
+        "stranded event took longer than any detection deadline"
+    );
+    let (code, detail) = mig
+        .failure()
+        .expect("Failed completion carried no structured error payload");
+    assert_eq!(code, ErrorCode::PeerDead, "detail: {detail}");
+    let err = mig.wait().unwrap_err().to_string();
+    assert!(err.contains("peer-dead"), "untyped wait error: {err}");
+    // Destructive take through the platform accessor.
+    assert_eq!(p.take_error(mig.id).unwrap().0, ErrorCode::PeerDead);
+    assert!(p.take_error(mig.id).is_none());
+
+    // The gated kernel fails through poison propagation — no hang.
+    assert_eq!(
+        gated.wait_timeout(Duration::from_secs(20)),
+        WaitOutcome::Failed,
+        "kernel gated on the stranded migration never resolved"
+    );
+
+    // Daemon 0 evicted the dead peer from its mesh view.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    wait_for(deadline, "daemon 0 to evict dead peer 1", || {
+        !peer_link_up(&c.daemons[0], 1)
+    });
+
+    // Survivors keep serving: fresh kernels on servers 0 and 2 complete,
+    // and the 0↔2 migration path still works.
+    let fresh = ctx.create_buffer(4);
+    q0.write(fresh, &7i32.to_le_bytes()).unwrap().wait().unwrap();
+    q0.run("increment_s32_1", &[fresh], &[fresh]).unwrap().wait().unwrap();
+    q2.migrate(fresh).unwrap().wait().unwrap();
+    q2.run("increment_s32_1", &[fresh], &[fresh]).unwrap().wait().unwrap();
+    let out = q2.read(fresh).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 9);
+}
+
+/// One run of the seeded-partition scenario; returns the error code the
+/// client observed for the stranded migration.
+fn partition_scenario(seed: u64) -> ErrorCode {
+    // Both directions of the 0↔1 link are partitioned by the fault plan
+    // (packets dropped at the injector, reconnect suppressed), so each
+    // side sees pure gossip silence — the timer-deadline detection path,
+    // not the EOF path. Server 2 is untouched.
+    let faults = vec![
+        FaultPlan {
+            seed,
+            rules: vec![FaultRule::Partition { peer: 1 }],
+        },
+        FaultPlan {
+            seed,
+            rules: vec![FaultRule::Partition { peer: 0 }],
+        },
+    ];
+    let c = Cluster::start_faulted(3, 1, &manifest(), [0u8; 16], faults).unwrap();
+    let p = Platform::connect(&c.addrs(), ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let q2 = ctx.queue(2, 0);
+
+    // Silence-based detection: both ends declare the partitioned link
+    // dead within peer_death_intervals × load_report_every (300 ms) plus
+    // scheduling slop.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    wait_for(deadline, "daemon 0 to declare partitioned peer 1 dead", || {
+        !peer_link_up(&c.daemons[0], 1)
+    });
+
+    let buf = ctx.create_buffer(4);
+    q0.write(buf, &1i32.to_le_bytes()).unwrap().wait().unwrap();
+    let mig = q1.migrate(buf).unwrap();
+    assert_eq!(
+        mig.wait_timeout(Duration::from_secs(20)),
+        WaitOutcome::Failed,
+        "migration across the partition neither failed nor completed"
+    );
+    let (code, _) = mig.failure().expect("no structured error payload");
+
+    // Survivors: the unpartitioned server 2 serves a full round trip.
+    let ok = ctx.create_buffer(4);
+    q2.write(ok, &5i32.to_le_bytes()).unwrap().wait().unwrap();
+    q2.run("increment_s32_1", &[ok], &[ok]).unwrap().wait().unwrap();
+    let out = q2.read(ok).unwrap();
+    assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 6);
+    code
+}
+
+#[test]
+fn seeded_partition_detection_is_deterministic_across_runs() {
+    let a = partition_scenario(0xDEAD_5EED);
+    let b = partition_scenario(0xDEAD_5EED);
+    assert_eq!(a, ErrorCode::PeerDead);
+    assert_eq!(a, b, "same seed, same plan must produce the same outcome");
+}
+
+#[test]
+fn seeded_link_kill_mid_stream_fails_migration_with_peer_dead() {
+    // KillPeerLink severs daemon 0's link to peer 1 at its very first
+    // outbound flush — the socket dies mid-conversation exactly as a
+    // crashed daemon's would, driving the close→evict→sweep path (and
+    // the reconnect supervisor afterwards, which the latched kill rule
+    // re-severs; the link flaps, the client outcome does not).
+    let faults = vec![FaultPlan {
+        seed: 7,
+        rules: vec![FaultRule::KillPeerLink {
+            peer: 1,
+            after_packets: 0,
+        }],
+    }];
+    let c = Cluster::start_faulted(2, 1, &manifest(), [0u8; 16], faults).unwrap();
+    let p = Platform::connect(&c.addrs(), ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+
+    let buf = ctx.create_buffer(4);
+    q0.write(buf, &2i32.to_le_bytes()).unwrap().wait().unwrap();
+    let mig = q1.migrate(buf).unwrap();
+    assert_eq!(
+        mig.wait_timeout(Duration::from_secs(20)),
+        WaitOutcome::Failed,
+        "migration over the killed link neither failed nor completed"
+    );
+    assert_eq!(mig.failure().unwrap().0, ErrorCode::PeerDead);
+
+    // Daemon 0 itself keeps serving local work throughout the flapping.
+    let ok = ctx.create_buffer(4);
+    q0.write(ok, &10i32.to_le_bytes()).unwrap().wait().unwrap();
+    q0.run("increment_s32_1", &[ok], &[ok]).unwrap().wait().unwrap();
+    assert_eq!(
+        i32::from_le_bytes(q0.read(ok).unwrap()[..4].try_into().unwrap()),
+        11
+    );
+}
+
+#[test]
+fn restarted_daemon_rejoins_mesh_via_backoff_reconnect_and_serves_migrations() {
+    let secret: SessionId = [9u8; 16];
+    let mut c = Cluster::start_faulted(2, 1, &manifest(), secret, Vec::new()).unwrap();
+    let addr0 = c.daemons[0].addr();
+
+    // Kill daemon 1 outright; daemon 0 notices and evicts it.
+    let dead = c.daemons.remove(1);
+    let port = dead.port;
+    drop(dead);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    wait_for(deadline, "daemon 0 to evict dead peer 1", || {
+        !peer_link_up(&c.daemons[0], 1)
+    });
+
+    // Revive daemon 1 at the same address with the same mesh secret.
+    // The listen port can sit in TIME_WAIT briefly after the old
+    // daemon's teardown, so the rebind retries.
+    let revived = loop {
+        let mut cfg = DaemonConfig::local(1, 1, manifest());
+        cfg.peer_secret = secret;
+        match Daemon::spawn_on_port(cfg, port) {
+            Ok(d) => break d,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "could not rebind port {port}: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+
+    // Daemon 0's backoff supervisor redials from its recorded address,
+    // re-handshakes (the secret must match) and the mesh heals.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    wait_for(deadline, "daemon 0 to redial the revived peer 1", || {
+        peer_link_up(&c.daemons[0], 1)
+    });
+
+    // The healed mesh carries real work: produce on 0, migrate to the
+    // revived 1, read it back there.
+    let p = Platform::connect(&[addr0, revived.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let buf = ctx.create_buffer(4);
+    q0.write(buf, &40i32.to_le_bytes()).unwrap().wait().unwrap();
+    q1.migrate(buf).unwrap().wait().unwrap();
+    q1.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
+    assert_eq!(
+        i32::from_le_bytes(q1.read(buf).unwrap()[..4].try_into().unwrap()),
+        41
+    );
+}
+
+#[test]
+fn wrong_mesh_secret_never_joins_the_mesh() {
+    let mut cfg_a = DaemonConfig::local(0, 1, Manifest::default());
+    cfg_a.peer_secret = [0xAAu8; 16];
+    let a = Daemon::spawn(cfg_a).unwrap();
+    let mut cfg_b = DaemonConfig::local(1, 1, Manifest::default());
+    cfg_b.peer_secret = [0xBBu8; 16];
+    let b = Daemon::spawn(cfg_b).unwrap();
+
+    // The dial itself succeeds at the TCP level; the listener rejects
+    // the Hello's secret before become_peer, and every backoff redial
+    // meets the same wall.
+    a.connect_peer(1, &b.addr()).unwrap();
+    std::thread::sleep(Duration::from_millis(600));
+    assert!(
+        b.state.peer_txs.lock().unwrap().is_empty(),
+        "daemon with the wrong secret was admitted to the mesh"
+    );
+
+    // The rejecting daemon still serves clients normally.
+    let p = Platform::connect(&[b.addr()], ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q = ctx.queue(0, 0);
+    q.barrier().unwrap().wait().unwrap();
+}
+
+// ---- structured quota errors over the raw wire ------------------------
+
+fn handshake(addr: &str, session: SessionId) -> (TcpStream, SessionId) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    write_packet(
+        &mut s,
+        &Msg::control(Body::Hello {
+            session,
+            role: ROLE_CLIENT,
+            peer_id: 0,
+        }),
+        &[],
+    )
+    .unwrap();
+    let pkt = read_packet(&mut s).expect("daemon died during handshake");
+    let Body::Welcome { session, .. } = pkt.msg.body else {
+        panic!("expected Welcome, got {:?}", pkt.msg.body);
+    };
+    (s, session)
+}
+
+fn send(s: &mut TcpStream, event: u64, body: Body, payload: &[u8]) -> std::io::Result<()> {
+    let msg = Msg {
+        cmd_id: 0,
+        queue: 0,
+        device: 0,
+        event,
+        wait: Vec::new(),
+        body,
+    };
+    write_packet(s, &msg, payload)
+}
+
+/// Read to `event`'s completion: `Some((status, payload))`, or `None` on
+/// EOF (the kicked-session race this suite is proving no longer eats the
+/// breach completion itself).
+fn completion_of(s: &mut TcpStream, event: u64) -> Option<(i8, Vec<u8>)> {
+    loop {
+        let pkt = read_packet(s).ok()?;
+        if let Body::Completion {
+            event: ev, status, ..
+        } = pkt.msg.body
+        {
+            if ev == event {
+                return Some((status, pkt.payload.to_vec()));
+            }
+        }
+    }
+}
+
+#[test]
+fn quota_breach_kick_carries_structured_error_code() {
+    let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+    cfg.session_buf_quota = 1 << 20;
+    let d = Daemon::spawn(cfg).unwrap();
+    let (mut s, _) = handshake(&d.addr(), [0u8; 16]);
+
+    // One allocation four times the budget: refused, failed, kicked —
+    // and the Failed completion now names the reason before the EOF.
+    send(
+        &mut s,
+        1,
+        Body::CreateBuffer {
+            buf: 1,
+            size: 4 << 20,
+            content_size_buf: 0,
+        },
+        &[],
+    )
+    .unwrap();
+    let (status, payload) =
+        completion_of(&mut s, 1).expect("breach completion lost to the kick");
+    assert_eq!(EventStatus::from_i8(status), EventStatus::Failed);
+    let (code, detail) =
+        decode_error_payload(&payload).expect("Failed completion carried no error payload");
+    assert_eq!(code, ErrorCode::QuotaBufferExceeded, "detail: {detail}");
+    assert!(detail.contains("quota"), "detail: {detail}");
+}
+
+#[test]
+fn event_quota_breach_carries_structured_error_code() {
+    let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+    cfg.session_event_quota = 8;
+    let d = Daemon::spawn(cfg).unwrap();
+    let (mut s, _) = handshake(&d.addr(), [0u8; 16]);
+
+    let mut breach = None;
+    for i in 1..=64u64 {
+        if send(&mut s, i, Body::Barrier, &[]).is_err() {
+            break;
+        }
+        match completion_of(&mut s, i) {
+            Some((st, payload)) if EventStatus::from_i8(st) == EventStatus::Failed => {
+                breach = Some(payload);
+                break;
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    let payload = breach.expect("event-table flood was never refused with a completion");
+    let (code, _) = decode_error_payload(&payload).expect("no structured payload on the kick");
+    assert_eq!(code, ErrorCode::QuotaEventExceeded);
+}
+
+#[test]
+fn write_buffer_implicit_growth_is_admitted_before_staging() {
+    let mut cfg = DaemonConfig::local(0, 0, Manifest::default());
+    cfg.session_buf_quota = 1 << 20;
+    let d = Daemon::spawn(cfg).unwrap();
+    let (mut s, sid) = handshake(&d.addr(), [0u8; 16]);
+
+    // A write naming an absent buffer would implicitly create it at
+    // commit time — 2 MiB of growth against a 1 MiB budget must be
+    // refused at admission, before any payload bytes are staged.
+    let n = 2 << 20;
+    send(
+        &mut s,
+        1,
+        Body::WriteBuffer {
+            buf: 1,
+            offset: 0,
+            len: n as u64,
+        },
+        &vec![0x44u8; n],
+    )
+    .unwrap();
+    let (status, payload) =
+        completion_of(&mut s, 1).expect("breach completion lost to the kick");
+    assert_eq!(EventStatus::from_i8(status), EventStatus::Failed);
+    let (code, _) = decode_error_payload(&payload).expect("no structured payload on the kick");
+    assert_eq!(code, ErrorCode::QuotaBufferExceeded);
+    // Nothing was staged for the kicked session.
+    assert_eq!(d.state.buffers.used_by(ns_of(&sid)), 0);
+
+    // A fresh session on the same daemon gets full service.
+    let (mut s2, _) = handshake(&d.addr(), [0u8; 16]);
+    send(&mut s2, 9, Body::Barrier, &[]).unwrap();
+    let (status, _) = completion_of(&mut s2, 9).expect("daemon unhealthy after the kick");
+    assert_eq!(EventStatus::from_i8(status), EventStatus::Complete);
+}

@@ -123,6 +123,7 @@ fn failed_event_poisons_dependent_subtree_transitively() {
             Body::NotifyEvent {
                 event: 666,
                 status: EventStatus::Failed.to_i8(),
+                code: 0,
             },
         ),
     );
@@ -153,6 +154,7 @@ fn deep_dependency_chain_cascades_in_one_notification() {
             Body::NotifyEvent {
                 event: 7000,
                 status: EventStatus::Complete.to_i8(),
+                code: 0,
             },
         ),
     );
@@ -181,6 +183,7 @@ fn mixed_dependency_fanout_wakes_each_dependent_once() {
             Body::NotifyEvent {
                 event: 51,
                 status: EventStatus::Complete.to_i8(),
+                code: 0,
             },
         ),
     );
@@ -197,6 +200,7 @@ fn mixed_dependency_fanout_wakes_each_dependent_once() {
             Body::NotifyEvent {
                 event: 52,
                 status: EventStatus::Complete.to_i8(),
+                code: 0,
             },
         ),
     );

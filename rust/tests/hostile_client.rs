@@ -584,6 +584,7 @@ fn random_multisession_interleavings_resolve_every_event() {
                     let body = Body::NotifyEvent {
                         event: rng.next_u64(),
                         status: (rng.gen_range(0, 5) as i8) - 1,
+                        code: rng.gen_range(0, 9) as u8,
                     };
                     send(s, ev, Vec::new(), body, &[]).unwrap();
                 }

@@ -53,6 +53,7 @@ fn arb_body(rng: &mut Rng) -> Body {
         7 => Body::NotifyEvent {
             event: rng.next_u64(),
             status: (rng.gen_range(0, 5) as i8) - 1,
+            code: rng.gen_range(0, 9) as u8,
         },
         8 => Body::SetContentSize {
             buf: rng.next_u64(),
