@@ -4,6 +4,7 @@
 //! *Native* in Figs 8-10 and 16 (calling the NVIDIA driver directly), and
 //! also the UE-local fallback device of Fig 4.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
 use std::sync::Mutex;
@@ -31,12 +32,21 @@ impl LocalReadHandle {
     }
 }
 
+/// Smoothing divisor of the per-artifact execution-time EWMA (same
+/// weight as the daemon's completion-rate smoothing,
+/// [`crate::daemon::device::RateEwma`]).
+const EXEC_EWMA_ALPHA_INV: f64 = 5.0;
+
 /// A synchronous local execution queue over one device. Buffer contents
 /// are shared [`Bytes`] — reads and kernel-input snapshots are refcount
 /// bumps, mirroring the remote driver's zero-copy payload path.
 pub struct LocalQueue {
     exec: DeviceExecutor,
     buffers: Mutex<HashMap<u64, Bytes>>,
+    /// Per-artifact EWMA of measured wall-clock execution time, µs —
+    /// the local-path cost estimate feeding the adaptive offload
+    /// controller ([`super::offload`]).
+    exec_us: Mutex<HashMap<String, f64>>,
 }
 
 impl LocalQueue {
@@ -45,6 +55,7 @@ impl LocalQueue {
         LocalQueue {
             exec: DeviceExecutor::spawn(DeviceKind::Gpu, manifest, "local".into()),
             buffers: Mutex::new(HashMap::new()),
+            exec_us: Mutex::new(HashMap::new()),
         }
     }
 
@@ -53,6 +64,7 @@ impl LocalQueue {
         LocalQueue {
             exec: DeviceExecutor::spawn(kind, manifest, "local-custom".into()),
             buffers: Mutex::new(HashMap::new()),
+            exec_us: Mutex::new(HashMap::new()),
         }
     }
 
@@ -127,12 +139,30 @@ impl LocalQueue {
         for (o, bytes) in outs.iter().zip(outputs) {
             m.insert(o.0, Bytes::from(bytes));
         }
+        let dur_us = outcome.end_ns.saturating_sub(outcome.start_ns) as f64 / 1_000.0;
+        match self.exec_us.lock().unwrap().entry(artifact.to_string()) {
+            Entry::Occupied(mut e) => {
+                let v = e.get_mut();
+                *v += (dur_us - *v) / EXEC_EWMA_ALPHA_INV;
+            }
+            Entry::Vacant(e) => {
+                e.insert(dur_us);
+            }
+        }
         Ok(Timestamps {
             queued_ns,
             submit_ns: queued_ns,
             start_ns: outcome.start_ns,
             end_ns: outcome.end_ns,
         })
+    }
+
+    /// Smoothed wall-clock execution time of one run of `artifact` on
+    /// this device, µs (`None` until it has completed here at least
+    /// once). The local-path cost estimate of the adaptive offload
+    /// controller ([`super::offload`]).
+    pub fn exec_estimate_us(&self, artifact: &str) -> Option<f64> {
+        self.exec_us.lock().unwrap().get(artifact).copied()
     }
 
     /// Device busy time so far (utilization metric).
@@ -159,6 +189,9 @@ mod tests {
         assert!(ts.end_ns >= ts.start_ns);
         let out = q.read(b).unwrap();
         assert_eq!(i32::from_le_bytes(out[..4].try_into().unwrap()), 6);
+        // The run seeded the artifact's execution-time estimate.
+        assert!(q.exec_estimate_us("increment_s32_1").is_some());
+        assert!(q.exec_estimate_us("never_ran").is_none());
     }
 
     #[test]

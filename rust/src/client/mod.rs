@@ -33,6 +33,7 @@
 //!   Fig 4.
 
 pub mod local;
+pub mod offload;
 pub mod server_conn;
 
 use std::collections::HashMap;
@@ -91,6 +92,10 @@ pub struct ClientConfig {
     /// queue wait). The knob only steers *new* work — it never moves
     /// commands already enqueued.
     pub placement: PlacementPolicy,
+    /// Adaptive offload knobs consumed by [`offload::AdaptiveRunner`]
+    /// (hysteresis band, gossip refresh cadence, local slowdown model).
+    /// Inert unless an adaptive runner is built on this platform.
+    pub offload: offload::OffloadConfig,
 }
 
 impl Default for ClientConfig {
@@ -103,6 +108,7 @@ impl Default for ClientConfig {
             content_size_enabled: true,
             per_queue_streams: true,
             placement: PlacementPolicy::Static,
+            offload: offload::OffloadConfig::default(),
         }
     }
 }
@@ -200,6 +206,19 @@ impl Platform {
     /// Is the given server currently reachable ("device available")?
     pub fn available(&self, s: u32) -> bool {
         self.inner.servers[s as usize].available()
+    }
+
+    /// Smoothed access-link RTT to server `s`, ns — measured from
+    /// command completions (0 until the first one closes a sample). The
+    /// link term of the adaptive offload delay model; see
+    /// [`server_conn::RttTracker`].
+    pub fn rtt_ns(&self, s: u32) -> u64 {
+        self.inner.servers[s as usize].rtt_ns()
+    }
+
+    /// The configuration this platform was connected with.
+    pub fn client_config(&self) -> &ClientConfig {
+        &self.inner.cfg
     }
 
     /// The session id this platform holds with server `s`. Each
@@ -1088,6 +1107,10 @@ mod tests {
         assert!(!c.rdma_migrations);
         assert_eq!(c.backup_depth, 128);
         assert_eq!(c.placement, PlacementPolicy::Static);
+        // Offload defaults: a real hysteresis band, inert link model.
+        assert!(c.offload.offload_factor < 1.0);
+        assert!(c.offload.unoffload_factor > 1.0);
+        assert_eq!(c.offload.local_slowdown, 1.0);
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! SLO-driven adaptive offload: the client-side decision loop that picks,
+//! per enqueue, between the UE-local fallback device ([`super::local`])
+//! and the remote cluster (the Fig 4 edge-offload story run *adaptively*
+//! instead of only on link loss).
+//!
+//! The delay model prices both paths in µs:
+//!
+//! * **local** — the artifact's measured execution-time EWMA on the local
+//!   device ([`LocalQueue::exec_estimate_us`]), scaled by
+//!   [`OffloadConfig::local_slowdown`] (a UE's silicon is typically far
+//!   weaker than a server GPU; the reproduction's interpreter runs at
+//!   host speed on both sides, so the gap is modeled, not measured).
+//! * **remote** — the shared cluster arithmetic
+//!   ([`crate::sched::placement::predict_remote_us`]): measured link RTT
+//!   (completion-piggybacked, [`super::server_conn::RttTracker`]) +
+//!   payload serialization + the gossiped queue-wait of the target
+//!   server + the kernel's own cost.
+//!
+//! Decisions pass through a hysteresis band (the muPlacer shape from
+//! PAPERS.md: un-offload when the SLO margin collapses, re-offload only
+//! once it clearly recovers) so gossip jitter never flip-flops the
+//! placement. [`OffloadController::decide`] is pure over its two inputs —
+//! the DES congestion scenario (`poclr sim offload`) and the live
+//! [`AdaptiveRunner`] share it verbatim, which is what lets the
+//! integration test pin the same convergence the simulation sweeps.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::sched::placement::{predict_remote_us, DeviceLoad, ServerLoad};
+use crate::util::Bytes;
+
+use super::local::{LocalBuffer, LocalQueue};
+use super::{Buffer, Context, Platform, Queue};
+
+/// Knobs of the adaptive offload decision loop (carried on
+/// [`super::ClientConfig::offload`]).
+#[derive(Clone, Debug)]
+pub struct OffloadConfig {
+    /// Re-offload threshold: switch Local -> Remote only when the
+    /// predicted remote latency undercuts the local estimate by this
+    /// factor (`remote < local * offload_factor`).
+    pub offload_factor: f64,
+    /// Un-offload threshold: switch Remote -> Local only when the
+    /// predicted remote latency exceeds the local estimate by this
+    /// factor (`remote > local * unoffload_factor`). Together with
+    /// `offload_factor` this forms the hysteresis band.
+    pub unoffload_factor: f64,
+    /// Refresh the cluster-load snapshot (one control-stream round trip)
+    /// every this many frames; between refreshes decisions reuse the
+    /// cached gossip.
+    pub refresh_every: u32,
+    /// Local execution is priced at `measured * local_slowdown`: the
+    /// factor by which the UE device is slower than the servers'.
+    pub local_slowdown: f64,
+    /// Access-link throughput used to price payload serialization, B/s
+    /// (0 disables the transfer term).
+    pub link_bytes_per_sec: f64,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            offload_factor: 0.8,
+            unoffload_factor: 1.25,
+            refresh_every: 8,
+            local_slowdown: 1.0,
+            link_bytes_per_sec: 0.0,
+        }
+    }
+}
+
+/// Where one enqueue goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Local,
+    Remote,
+}
+
+/// The pure decision core: current placement + hysteresis + ratio
+/// counters. No I/O — the live runner and the DES both drive it with
+/// their own predictions.
+pub struct OffloadController {
+    cfg: OffloadConfig,
+    current: Target,
+    decisions: u64,
+    remote_chosen: u64,
+}
+
+impl OffloadController {
+    /// Starts on the local device (conservative: nothing is offloaded
+    /// until the remote path has proven cheaper).
+    pub fn new(cfg: OffloadConfig) -> OffloadController {
+        OffloadController {
+            cfg,
+            current: Target::Local,
+            decisions: 0,
+            remote_chosen: 0,
+        }
+    }
+
+    /// One decision: compare the two predicted latencies (µs) through
+    /// the hysteresis band and return the placement for this enqueue.
+    /// Inside the band the current placement sticks.
+    pub fn decide(&mut self, remote_us: f64, local_us: f64) -> Target {
+        self.current = match self.current {
+            Target::Local if remote_us < local_us * self.cfg.offload_factor => Target::Remote,
+            Target::Remote if remote_us > local_us * self.cfg.unoffload_factor => Target::Local,
+            keep => keep,
+        };
+        self.decisions += 1;
+        if self.current == Target::Remote {
+            self.remote_chosen += 1;
+        }
+        self.current
+    }
+
+    /// Current placement (the sticky hysteresis state).
+    pub fn current(&self) -> Target {
+        self.current
+    }
+
+    /// Fraction of decisions since the last [`reset_window`] that chose
+    /// the remote path (0.0 when no decision was made yet).
+    ///
+    /// [`reset_window`]: OffloadController::reset_window
+    pub fn offload_ratio(&self) -> f64 {
+        if self.decisions == 0 {
+            return 0.0;
+        }
+        self.remote_chosen as f64 / self.decisions as f64
+    }
+
+    /// Start a fresh measurement window (the hysteresis state carries
+    /// over — only the ratio counters reset).
+    pub fn reset_window(&mut self) {
+        self.decisions = 0;
+        self.remote_chosen = 0;
+    }
+}
+
+/// Cluster-load gossip cached between control-stream refreshes.
+struct LoadsCache {
+    servers: Option<Vec<ServerLoad>>,
+    frames_left: u32,
+}
+
+/// Live per-frame offload wrapper: owns a local queue and a remote queue
+/// over the same artifact, and routes each `write -> run -> read` frame
+/// through [`OffloadController::decide`]. Falls back to the local device
+/// when a chosen remote frame fails (the Fig 4 signal), so an access-link
+/// loss degrades to local execution instead of an error.
+pub struct AdaptiveRunner {
+    plat: Platform,
+    artifact: String,
+    remote: Queue,
+    r_in: Buffer,
+    r_out: Buffer,
+    local: LocalQueue,
+    l_in: LocalBuffer,
+    l_out: LocalBuffer,
+    cfg: OffloadConfig,
+    ctrl: Mutex<OffloadController>,
+    loads: Mutex<LoadsCache>,
+}
+
+impl AdaptiveRunner {
+    /// Build the two paths for one artifact with `buf_size`-byte in/out
+    /// buffers: a remote queue on device 0 of server 0 and the given
+    /// local device. Offload knobs come from the platform's
+    /// [`super::ClientConfig::offload`].
+    pub fn new(
+        plat: &Platform,
+        ctx: &Context,
+        local: LocalQueue,
+        artifact: &str,
+        buf_size: u64,
+    ) -> AdaptiveRunner {
+        let cfg = plat.client_config().offload.clone();
+        let l_in = local.create_buffer(buf_size as usize);
+        let l_out = local.create_buffer(buf_size as usize);
+        AdaptiveRunner {
+            plat: plat.clone(),
+            artifact: artifact.to_string(),
+            remote: ctx.queue(0, 0),
+            r_in: ctx.create_buffer(buf_size),
+            r_out: ctx.create_buffer(buf_size),
+            local,
+            l_in,
+            l_out,
+            ctrl: Mutex::new(OffloadController::new(cfg.clone())),
+            loads: Mutex::new(LoadsCache {
+                servers: None,
+                frames_left: 0,
+            }),
+            cfg,
+        }
+    }
+
+    /// One frame: price both paths, decide, execute, return the output
+    /// bytes and where they were computed. The very first frame always
+    /// runs locally to seed the local execution-time EWMA.
+    pub fn run_frame(&self, input: &[u8]) -> Result<(Bytes, Target)> {
+        let Some(measured_us) = self.local.exec_estimate_us(&self.artifact) else {
+            let out = self.run_local(input)?;
+            return Ok((out, Target::Local));
+        };
+        let local_us = measured_us * self.cfg.local_slowdown.max(0.0);
+        // The servers run the artifact at the *measured* speed (their
+        // silicon, not the UE's), so the remote cost term is unscaled.
+        let remote_us = self.predict_remote(input.len() as u64, measured_us);
+        let target = self.ctrl.lock().unwrap().decide(remote_us, local_us);
+        match target {
+            Target::Local => Ok((self.run_local(input)?, Target::Local)),
+            Target::Remote => match self.run_remote(input) {
+                Ok(out) => Ok((out, Target::Remote)),
+                // Remote path failed mid-frame (link loss, server gone):
+                // the local device is the always-available fallback.
+                Err(_) => Ok((self.run_local(input)?, Target::Local)),
+            },
+        }
+    }
+
+    /// Offload ratio of the current measurement window (see
+    /// [`OffloadController::offload_ratio`]; the seeding frame is not a
+    /// decision and does not count).
+    pub fn offload_ratio(&self) -> f64 {
+        self.ctrl.lock().unwrap().offload_ratio()
+    }
+
+    /// Start a fresh ratio window and force the next frame to re-query
+    /// the cluster's load gossip (phase boundaries in tests).
+    pub fn reset_window(&self) {
+        self.ctrl.lock().unwrap().reset_window();
+        self.loads.lock().unwrap().frames_left = 0;
+    }
+
+    fn run_local(&self, input: &[u8]) -> Result<Bytes> {
+        self.local.write(self.l_in, input);
+        self.local.run(&self.artifact, &[self.l_in], &[self.l_out])?;
+        self.local.read(self.l_out)
+    }
+
+    fn run_remote(&self, input: &[u8]) -> Result<Bytes> {
+        self.remote.write(self.r_in, input)?;
+        self.remote.run(&self.artifact, &[self.r_in], &[self.r_out])?;
+        self.remote.read(self.r_out)
+    }
+
+    /// Predicted remote-path latency for this frame, µs. Uses the
+    /// measured per-server RTT and the cached (periodically refreshed)
+    /// load gossip; a failed refresh keeps the previous snapshot, and
+    /// with no snapshot at all the target is priced as idle — the
+    /// optimistic bootstrap that lets the first remote frames happen and
+    /// start the RTT measurement.
+    fn predict_remote(&self, payload_bytes: u64, kernel_cost_us: f64) -> f64 {
+        let mut cache = self.loads.lock().unwrap();
+        if cache.frames_left == 0 || cache.servers.is_none() {
+            if let Ok(servers) = self.plat.cluster_loads() {
+                cache.servers = Some(servers);
+            }
+            cache.frames_left = self.cfg.refresh_every.max(1);
+        }
+        cache.frames_left -= 1;
+        let idle = ServerLoad {
+            server: 0,
+            rtt_ns: 0,
+            age_ns: 0,
+            devices: vec![DeviceLoad {
+                held: 0,
+                backlog: 0,
+                rate_cps: 0.0,
+            }],
+        };
+        let load = cache
+            .servers
+            .as_ref()
+            .and_then(|s| s.first())
+            .unwrap_or(&idle);
+        predict_remote_us(
+            self.plat.rtt_ns(0),
+            // The frame uploads the input and downloads the output; the
+            // buffers are same-sized, so the wire carries ~2x payload.
+            payload_bytes * 2,
+            self.cfg.link_bytes_per_sec,
+            load,
+            kernel_cost_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_hysteresis_and_ratio() {
+        let mut c = OffloadController::new(OffloadConfig::default());
+        assert_eq!(c.current(), Target::Local);
+        // Inside the band nothing moves.
+        assert_eq!(c.decide(950.0, 1_000.0), Target::Local);
+        // A clear win flips to remote...
+        assert_eq!(c.decide(700.0, 1_000.0), Target::Remote);
+        // ...and mild degradation inside the band sticks there.
+        assert_eq!(c.decide(1_200.0, 1_000.0), Target::Remote);
+        // Collapsed SLO margin un-offloads.
+        assert_eq!(c.decide(2_000.0, 1_000.0), Target::Local);
+        // 2 of 4 decisions chose remote.
+        assert!((c.offload_ratio() - 0.5).abs() < 1e-9);
+        c.reset_window();
+        assert_eq!(c.offload_ratio(), 0.0);
+        // The placement itself survives the window reset.
+        assert_eq!(c.current(), Target::Local);
+    }
+
+    #[test]
+    fn hysteresis_band_prevents_flapping() {
+        let mut c = OffloadController::new(OffloadConfig::default());
+        c.decide(700.0, 1_000.0);
+        assert_eq!(c.current(), Target::Remote);
+        // Jitter oscillating around parity never leaves the band, so the
+        // placement is stable for the whole run.
+        for i in 0..100 {
+            let remote = if i % 2 == 0 { 900.0 } else { 1_100.0 };
+            assert_eq!(c.decide(remote, 1_000.0), Target::Remote);
+        }
+    }
+
+    #[test]
+    fn config_defaults_form_a_band() {
+        let cfg = OffloadConfig::default();
+        assert!(cfg.offload_factor < 1.0);
+        assert!(cfg.unoffload_factor > 1.0);
+        assert_eq!(cfg.refresh_every, 8);
+        assert_eq!(cfg.local_slowdown, 1.0);
+        assert_eq!(cfg.link_bytes_per_sec, 0.0);
+    }
+}

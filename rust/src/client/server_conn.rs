@@ -30,9 +30,82 @@ use crate::proto::{
     EventStatus, Msg, Packet, SessionId,
 };
 use crate::sched::EventTable;
-use crate::util::Bytes;
+use crate::util::{now_ns, Bytes};
 
 use super::ClientConfig;
+
+/// In-flight RTT samples kept at most this many: events whose
+/// completions never return (failed link, abandoned waits) must not
+/// grow the tracker without bound — at the cap new samples are simply
+/// skipped until completions drain the map.
+const RTT_INFLIGHT_MAX: usize = 4096;
+
+/// Smoothing divisor of the RTT EWMA (same weight as the daemon-side
+/// rate smoothing).
+const RTT_EWMA_ALPHA_INV: i64 = 5;
+
+/// Measured access-link round-trip time to one server, piggybacked on
+/// command completions: [`QueueStream::send_command`] stamps each
+/// event's send time, the reader closes the sample when the completion
+/// returns. The completion's [`Timestamps`] let the sample subtract the
+/// *server residence* time (`end_ns - queued_ns`, durations on the
+/// daemon clock, so no clock sync needed) — what remains is network
+/// round-trip plus client-side queueing, the link term of the adaptive
+/// offload controller's remote-path prediction
+/// ([`crate::sched::placement::predict_remote_us`]).
+pub struct RttTracker {
+    /// event id -> send wall-clock ns, awaiting completion.
+    inflight: Mutex<HashMap<u64, u64>>,
+    /// EWMA RTT, ns (0 = unmeasured).
+    rtt_ns: AtomicU64,
+}
+
+impl RttTracker {
+    pub fn new() -> RttTracker {
+        RttTracker {
+            inflight: Mutex::new(HashMap::new()),
+            rtt_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Stamp an event's send time (no-op at the in-flight cap).
+    fn sent(&self, event: u64) {
+        let mut m = self.inflight.lock().unwrap();
+        if m.len() < RTT_INFLIGHT_MAX {
+            m.entry(event).or_insert_with(now_ns);
+        }
+    }
+
+    /// Close an event's sample: wall round-trip minus server residence.
+    /// Failed completions only clear the stamp — their timestamps are
+    /// not a residence measurement.
+    fn completed(&self, event: u64, ts: &crate::proto::Timestamps, failed: bool) {
+        let mut m = self.inflight.lock().unwrap();
+        let Some(sent_ns) = m.remove(&event) else {
+            return;
+        };
+        if failed {
+            return;
+        }
+        let wall = now_ns().saturating_sub(sent_ns);
+        let residence = ts.end_ns.saturating_sub(ts.queued_ns);
+        let sample = wall.saturating_sub(residence) as i64;
+        // The inflight lock above serializes updates, so load+store is
+        // race-free.
+        let old = self.rtt_ns.load(Ordering::Relaxed) as i64;
+        let next = if old == 0 {
+            sample
+        } else {
+            old + (sample - old) / RTT_EWMA_ALPHA_INV
+        };
+        self.rtt_ns.store(next.max(1) as u64, Ordering::Relaxed);
+    }
+
+    /// Smoothed link RTT, ns (0 = no completion measured yet).
+    pub fn rtt_ns(&self) -> u64 {
+        self.rtt_ns.load(Ordering::Relaxed)
+    }
+}
 
 /// State shared by every stream to one server.
 pub struct SessionCore {
@@ -55,6 +128,8 @@ pub struct SessionCore {
     /// it does not. Any stream discovering a dead socket marks the server
     /// unavailable; any successful (re)handshake or write re-arms it.
     available: Arc<AtomicBool>,
+    /// Per-server link RTT, measured from completions on any stream.
+    pub rtt: Arc<RttTracker>,
 }
 
 /// Handle to one socket with its own writer/reader thread pair. Clones
@@ -155,6 +230,9 @@ impl QueueStream {
             body,
         };
         let pkt = Packet { msg, payload };
+        if event != 0 {
+            inner.core.rtt.sent(event);
+        }
         {
             let mut backup = inner.backup.lock().unwrap();
             backup.push_back((cmd_id, pkt.clone()));
@@ -322,6 +400,7 @@ impl StreamInner {
         let read_results = Arc::clone(&self.core.read_results);
         let errors = Arc::clone(&self.core.errors);
         let available = Arc::clone(&self.core.available);
+        let rtt = Arc::clone(&self.core.rtt);
         let conn_gen = Arc::clone(&self.conn_gen);
         let server_id = self.core.server_id;
         let queue_id = self.queue_id;
@@ -334,6 +413,7 @@ impl StreamInner {
                     read_results,
                     errors,
                     available,
+                    rtt,
                     conn_gen,
                     generation,
                 );
@@ -385,6 +465,7 @@ impl ServerConn {
             session: Mutex::new(session),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(false)),
+            rtt: Arc::new(RttTracker::new()),
         });
         let control = QueueStream::open(Arc::clone(&core), 0)?;
         Ok(Arc::new(ServerConn {
@@ -454,6 +535,12 @@ impl ServerConn {
         self.core.n_devices.load(Ordering::SeqCst)
     }
 
+    /// Smoothed access-link RTT to this server, ns (0 until the first
+    /// completion closes a sample). See [`RttTracker`].
+    pub fn rtt_ns(&self) -> u64 {
+        self.core.rtt.rtt_ns()
+    }
+
     /// Queue streams attached over this connection's lifetime
     /// (tests/metrics).
     pub fn n_queue_streams(&self) -> usize {
@@ -467,6 +554,7 @@ fn reader_loop_impl(
     read_results: Arc<Mutex<HashMap<u64, Bytes>>>,
     errors: Arc<Mutex<HashMap<u64, (ErrorCode, String)>>>,
     available: Arc<AtomicBool>,
+    rtt: Arc<RttTracker>,
     conn_gen: Arc<AtomicU64>,
     generation: u64,
 ) {
@@ -487,6 +575,7 @@ fn reader_loop_impl(
                 } = pkt.msg.body
                 {
                     let st = EventStatus::from_i8(status);
+                    rtt.completed(event, &ts, st == EventStatus::Failed);
                     if !pkt.payload.is_empty() {
                         if st == EventStatus::Failed {
                             // Failed completions historically carried no
@@ -552,6 +641,7 @@ mod tests {
             session: Mutex::new([0u8; 16]),
             n_devices: AtomicU32::new(0),
             available: Arc::new(AtomicBool::new(available)),
+            rtt: Arc::new(RttTracker::new()),
         });
         let inner = Arc::new(StreamInner {
             core,
@@ -562,6 +652,28 @@ mod tests {
             backup: Mutex::new(VecDeque::new()),
         });
         (QueueStream { inner, tx }, rx)
+    }
+
+    #[test]
+    fn rtt_tracker_closes_samples_and_skips_failures() {
+        let t = RttTracker::new();
+        assert_eq!(t.rtt_ns(), 0);
+        t.sent(7);
+        // Zero-duration residence: the whole wall round-trip is link RTT.
+        let ts = crate::proto::Timestamps {
+            queued_ns: 100,
+            submit_ns: 100,
+            start_ns: 100,
+            end_ns: 100,
+        };
+        t.completed(7, &ts, false);
+        assert!(t.rtt_ns() >= 1);
+        let before = t.rtt_ns();
+        // Unknown events and failed completions leave the EWMA untouched.
+        t.completed(99, &ts, false);
+        t.sent(8);
+        t.completed(8, &ts, true);
+        assert_eq!(t.rtt_ns(), before);
     }
 
     #[test]

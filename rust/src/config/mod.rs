@@ -13,6 +13,10 @@ pub struct Testbed {
     pub peer_link: LinkProfile,
     /// Per-GPU dense f32 throughput used by the DES cost model (GFLOP/s).
     pub gpu_gflops: f64,
+    /// The UE's on-device throughput (GFLOP/s) — the local-execution
+    /// cost model of the adaptive offload DES (`sim offload`): a phone
+    /// SoC or embedded GPU, orders of magnitude below the servers'.
+    pub ue_gflops: f64,
 }
 
 /// §6.1/6.2: two 2x2080Ti servers, 100 Mb switched Ethernet.
@@ -23,6 +27,7 @@ pub const LATENCY_BED: Testbed = Testbed {
     client_link: LinkProfile::ETH_100M,
     peer_link: LinkProfile::ETH_100M,
     gpu_gflops: 13_450.0, // 2080 Ti fp32
+    ue_gflops: 700.0,     // Adreno-class mobile GPU
 };
 
 /// §6.2/6.3: same servers with the 40 Gb direct link between them.
@@ -33,6 +38,7 @@ pub const DIRECT_40G_BED: Testbed = Testbed {
     client_link: LinkProfile::ETH_100M,
     peer_link: LinkProfile::ETH_40G_DIRECT,
     gpu_gflops: 13_450.0,
+    ue_gflops: 700.0,
 };
 
 /// §6.4: 3x(4xP100) + 1x(4xV100), 56 Gb LAN -> 16 GPUs.
@@ -43,6 +49,7 @@ pub const MATMUL_BED: Testbed = Testbed {
     client_link: LinkProfile::LAN_56G,
     peer_link: LinkProfile::LAN_56G,
     gpu_gflops: 9_300.0, // P100 fp32
+    ue_gflops: 700.0,
 };
 
 /// §7.2: 3 A6000 servers on 100 Gb fiber, gigabit desktop client.
@@ -53,6 +60,7 @@ pub const FLUID_BED: Testbed = Testbed {
     client_link: LinkProfile::ETH_1G,
     peer_link: LinkProfile::LAN_100G,
     gpu_gflops: 38_700.0, // A6000 fp32
+    ue_gflops: 950.0,     // desktop iGPU client
 };
 
 /// §7.1: GTX 1060 server behind Wi-Fi 6.
@@ -63,6 +71,7 @@ pub const AR_BED: Testbed = Testbed {
     client_link: LinkProfile::WIFI6,
     peer_link: LinkProfile::ETH_1G,
     gpu_gflops: 4_400.0, // GTX 1060
+    ue_gflops: 350.0,     // AR headset SoC
 };
 
 #[cfg(test)]
@@ -75,6 +84,8 @@ mod tests {
             assert!(bed.n_servers >= 1);
             assert!(bed.gpus_per_server >= 1);
             assert!(bed.gpu_gflops > 0.0);
+            // UEs are real but always weaker than the servers.
+            assert!(bed.ue_gflops > 0.0 && bed.ue_gflops < bed.gpu_gflops);
         }
         assert_eq!(MATMUL_BED.n_servers * MATMUL_BED.gpus_per_server, 16);
     }

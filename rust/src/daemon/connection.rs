@@ -513,6 +513,13 @@ impl Conn {
     /// reattached stream's registrations.
     fn become_client(&mut self, ctx: &mut IoCtx, sess: Arc<Session>, queue: u32) -> bool {
         sess.touch();
+        // A fresh client link restarts the client-plane fault counters
+        // (the client analogue of `reset_peer` on a peer redial), so
+        // packet-indexed chaos rules apply to every new link from its
+        // packet 1 and a torn-frame kill does not latch forever.
+        if !ctx.state.fault.client_is_noop() {
+            ctx.state.fault.reset_client();
+        }
         let welcome = Msg::control(Body::Welcome {
             session: sess.id,
             server_id: ctx.state.server_id,
@@ -1029,20 +1036,26 @@ impl Conn {
                     }
                     return true;
                 }
-                // Deterministic fault injection on the outbound peer path
+                // Deterministic fault injection on the outbound path
                 // (`net::fault`): every packet of the batch gets a verdict
                 // from the injector before it is encoded. Packet order is
                 // already serialized per connection here, so the
                 // counter-indexed rules replay byte-for-byte. A condemned
-                // link (Kill / Truncate) dies through the normal teardown,
-                // so peer-death sweeps and backoff reconnect fire exactly
-                // as for a real crash.
+                // link (Kill / Truncate) dies through the normal teardown:
+                // peer links drive peer-death sweeps and backoff
+                // reconnect, client links drive the client driver's
+                // reconnect-and-replay path, exactly as a real crash or
+                // access-network cut would. `fault_scope` is
+                // `Some(Some(peer))` on peer links, `Some(None)` on
+                // client links with client rules loaded, `None` when the
+                // injector has nothing to say about this connection.
                 let mut extra_delay = Duration::ZERO;
-                let fault_peer = match &self.role {
-                    Role::Peer { peer_id } if !ctx.state.fault.is_noop() => Some(*peer_id),
+                let fault_scope: Option<Option<u32>> = match &self.role {
+                    Role::Peer { peer_id } if !ctx.state.fault.is_noop() => Some(Some(*peer_id)),
+                    Role::Client { .. } if !ctx.state.fault.client_is_noop() => Some(None),
                     _ => None,
                 };
-                if let Some(peer) = fault_peer {
+                if let Some(peer) = fault_scope {
                     let mut kill = false;
                     let mut truncate = false;
                     let mut kept = Vec::with_capacity(self.burst.len());
@@ -1050,7 +1063,11 @@ impl Conn {
                         if kill || truncate {
                             continue; // link condemned: nothing later leaves
                         }
-                        match ctx.state.fault.on_peer_packet(peer) {
+                        let action = match peer {
+                            Some(p) => ctx.state.fault.on_peer_packet(p),
+                            None => ctx.state.fault.on_client_packet(),
+                        };
+                        match action {
                             FaultAction::Pass => kept.push(pkt),
                             FaultAction::Drop => {}
                             FaultAction::Delay(d) => {

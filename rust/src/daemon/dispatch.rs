@@ -38,7 +38,7 @@ use crate::util::{now_ns, Bytes};
 
 use super::device::{self, CmdDone, DeviceCmd, KernelSubmitted};
 use super::migrate::{self, MigrationJob};
-use super::state::{DaemonState, Session, StreamKey, DEVICE_QUEUE_DEPTH, MAX_ALLOC};
+use super::state::{gate_size_for_rate, DaemonState, Session, StreamKey, MAX_ALLOC};
 
 /// The dispatcher reclaims old Complete events every this many packets
 /// (ROADMAP "Event-table GC wiring"): completions for commands at or below
@@ -142,6 +142,7 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
         pending_on_peer: HashMap::new(),
         hot_bufs: VecDeque::new(),
         last_rebalance: None,
+        last_resize: None,
     };
 
     while let Ok(work) = rx.recv() {
@@ -187,6 +188,7 @@ pub fn run(state: Arc<DaemonState>, rx: Receiver<Work>, self_tx: Sender<Work>) {
         // Every slot release eventually surfaces here as a work item
         // (Finished, ExecDone, or a parking admission), so draining once
         // per item keeps the backlogs moving without extra signalling.
+        d.maybe_resize_gates();
         d.drain_backlogs();
     }
 }
@@ -233,6 +235,10 @@ struct Dispatcher {
     hot_bufs: VecDeque<u64>,
     /// Last scheduler-triggered migration, for [`REBALANCE_COOLDOWN`].
     last_rebalance: Option<Instant>,
+    /// Last adaptive gate-resize pass, throttled to
+    /// `state.gate_resize_every` (only advances when
+    /// `state.adaptive_gates` is on).
+    last_resize: Option<Instant>,
 }
 
 impl Dispatcher {
@@ -314,7 +320,7 @@ impl Dispatcher {
                 continue;
             }
             let gate = &self.state.device_gates[dev];
-            if gate.held() >= DEVICE_QUEUE_DEPTH {
+            if gate.held() >= gate.depth() {
                 continue;
             }
             let taken = std::mem::take(&mut self.ready_backlog[dev]);
@@ -844,6 +850,32 @@ impl Dispatcher {
         }
     }
 
+    /// Adaptive gate sizing (opt-in via `DaemonConfig::adaptive_gates`):
+    /// re-derive every device gate's admission depth and per-stream
+    /// share from its measured completion-rate EWMA
+    /// ([`gate_size_for_rate`]), throttled to `state.gate_resize_every`.
+    /// Growing publishes — parked readers wake into the new headroom
+    /// before the next natural release. Shrinking only moves the
+    /// admission bound: slots already held keep draining, so no command
+    /// is cancelled and no waiter is stranded (the backlog drain that
+    /// follows every work item re-probes under the new bound).
+    fn maybe_resize_gates(&mut self) {
+        if !self.state.adaptive_gates {
+            return;
+        }
+        if self
+            .last_resize
+            .is_some_and(|t| t.elapsed() < self.state.gate_resize_every)
+        {
+            return;
+        }
+        self.last_resize = Some(Instant::now());
+        for (dev, gate) in self.state.device_gates.iter().enumerate() {
+            let (depth, share) = gate_size_for_rate(self.state.device_rates[dev].rate_cps());
+            gate.resize(depth, share);
+        }
+    }
+
     /// Scheduler-triggered migration (runs on every peer load report,
     /// rate-limited by [`REBALANCE_COOLDOWN`]): when the pure policy says
     /// this server is saturated and a peer scores clearly better, push
@@ -859,9 +891,23 @@ impl Dispatcher {
         {
             return;
         }
+        // Saturation is judged against each gate's *live* bound (adaptive
+        // sizing shrinks per device); the pure policy still receives one
+        // cap — the bound of the first saturated gate. With fixed sizing
+        // every gate's bound is the historical DEVICE_QUEUE_DEPTH, so
+        // this degenerates to the old constant cap.
+        let Some(cap) = self
+            .state
+            .device_gates
+            .iter()
+            .find(|g| g.held() >= g.depth())
+            .map(|g| g.depth())
+        else {
+            return;
+        };
         let snap = self.state.cluster_snapshot();
         let policy = PlacementPolicy::LatencyAware;
-        let Some(target) = policy.migrate_target(&snap, DEVICE_QUEUE_DEPTH as u32) else {
+        let Some(target) = policy.migrate_target(&snap, cap as u32) else {
             return;
         };
         // Hottest candidate that still exists locally.

@@ -102,8 +102,20 @@ pub struct DaemonConfig {
     /// declared dead (see [`cluster::PEER_DEATH_INTERVALS`]).
     pub peer_death_intervals: u32,
     /// Deterministic fault-injection plan applied to this daemon's
-    /// outbound peer traffic ([`crate::net::fault`]). Empty = no-op.
+    /// outbound peer and client traffic ([`crate::net::fault`]).
+    /// Empty = no-op.
     pub fault: FaultPlan,
+    /// Adaptive gate sizing: derive each device gate's admission depth
+    /// and per-stream share from the device's measured completion-rate
+    /// EWMA (see [`state::gate_size_for_rate`]) instead of the
+    /// compile-time [`state::DEVICE_QUEUE_DEPTH`]/[`state::STREAM_SHARE`]
+    /// constants, so slow custom devices shed load early while deep GPU
+    /// pipelines stay full. Off by default — sizing then matches the
+    /// historical constants exactly.
+    pub adaptive_gates: bool,
+    /// Cadence of the dispatcher's adaptive resize pass (only read when
+    /// `adaptive_gates` is on; see [`state::GATE_RESIZE_EVERY`]).
+    pub gate_resize_every: std::time::Duration,
 }
 
 impl DaemonConfig {
@@ -126,6 +138,8 @@ impl DaemonConfig {
             peer_secret: [0u8; 16],
             peer_death_intervals: cluster::PEER_DEATH_INTERVALS,
             fault: FaultPlan::none(),
+            adaptive_gates: false,
+            gate_resize_every: state::GATE_RESIZE_EVERY,
         }
     }
 
@@ -504,6 +518,8 @@ impl Cluster {
                 peer_secret: [0u8; 16],
                 peer_death_intervals: cluster::PEER_DEATH_INTERVALS,
                 fault: FaultPlan::none(),
+                adaptive_gates: false,
+                gate_resize_every: state::GATE_RESIZE_EVERY,
             };
             daemons.push(Daemon::spawn(cfg)?);
         }

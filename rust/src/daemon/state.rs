@@ -216,12 +216,56 @@ pub const SHADOW_BYTES: usize = 160 * 1024 * 1024;
 /// Past this, stream readers block in their admission loop
 /// (`daemon::connection::admit_device_slot`) — the backpressure edge the
 /// ROADMAP's "bounded queue with per-stream fairness" item asks for.
+/// This is the *default and ceiling*: with adaptive gate sizing enabled
+/// (`DaemonConfig::adaptive_gates`) each gate's live bound is derived
+/// from the device's measured completion rate (see
+/// [`gate_size_for_rate`]) and can shrink below this, never exceed it.
 pub const DEVICE_QUEUE_DEPTH: usize = 64;
 
 /// Of those, how many one stream may hold: a single greedy queue stream
 /// saturates at this share and leaves headroom for every other stream
 /// targeting the same device (the fairness policy across streams).
+/// Like [`DEVICE_QUEUE_DEPTH`], the default; adaptive sizing keeps the
+/// same 4:1 depth:share ratio as it resizes.
 pub const STREAM_SHARE: usize = 16;
+
+/// Adaptive gate sizing targets this much *drain time* of admitted work:
+/// a gate is sized so that a full pipeline clears in roughly this many
+/// milliseconds at the device's measured completion rate. Fast devices
+/// (a GPU pipeline completing tens of thousands of commands/s) hit the
+/// [`DEVICE_QUEUE_DEPTH`] ceiling and stay deep; slow custom devices (a
+/// 30 fps decoder) shrink to [`GATE_DEPTH_MIN`] and shed load at
+/// admission instead of hoarding a 64-deep queue they would take seconds
+/// to drain — the client's offload loop sees the short queue in the next
+/// `LoadReport` and routes around it.
+pub const GATE_TARGET_DRAIN_MS: u64 = 5;
+
+/// Floor for an adaptively-sized gate: even the slowest device keeps a
+/// few slots so pipelining (overlap of transfer and execute) survives.
+pub const GATE_DEPTH_MIN: usize = 4;
+
+/// Default cadence of the dispatcher's adaptive gate resize pass
+/// (`DaemonConfig::gate_resize_every` overrides it). Two gossip
+/// intervals: fast enough that a collapsing device sheds load before
+/// its queue grows unbounded, slow enough that the rate EWMA has fresh
+/// samples between passes.
+pub const GATE_RESIZE_EVERY: Duration = Duration::from_millis(100);
+
+/// Map a device's measured completion rate to an adaptive
+/// `(depth, share)` pair: `rate × GATE_TARGET_DRAIN_MS`, clamped to
+/// `[GATE_DEPTH_MIN, DEVICE_QUEUE_DEPTH]`, with the default 4:1
+/// depth:share fairness ratio. An unmeasured device (`rate_cps == 0`)
+/// keeps the compile-time defaults. Pure — the dispatcher's resize
+/// driver, the unit tests and the DES all call the same function.
+pub fn gate_size_for_rate(rate_cps: f64) -> (usize, usize) {
+    if rate_cps <= 0.0 {
+        return (DEVICE_QUEUE_DEPTH, STREAM_SHARE);
+    }
+    let depth = (rate_cps * GATE_TARGET_DRAIN_MS as f64 / 1_000.0).round() as usize;
+    let depth = depth.clamp(GATE_DEPTH_MIN, DEVICE_QUEUE_DEPTH);
+    let share = (depth / 4).max(1);
+    (depth, share)
+}
 
 /// The device-gate fairness key: one client stream of one session.
 ///
@@ -263,6 +307,13 @@ struct GateInner {
 pub struct DeviceGate {
     inner: Mutex<GateInner>,
     cv: Condvar,
+    /// Live admission bound, `GATE_DEPTH_MIN..=DEVICE_QUEUE_DEPTH`
+    /// ([`DEVICE_QUEUE_DEPTH`] by default; retargeted by the
+    /// dispatcher's adaptive resize driver when
+    /// `DaemonConfig::adaptive_gates` is on).
+    depth: AtomicUsize,
+    /// Live per-stream fair share (defaults to [`STREAM_SHARE`]).
+    share: AtomicUsize,
     /// Capacity freed since the last [`DeviceGate::publish`] — lets the
     /// dispatcher's per-work-item publish pass skip gates (and their
     /// parked readers) where nothing changed.
@@ -288,16 +339,20 @@ impl DeviceGate {
         DeviceGate {
             inner: Mutex::new(GateInner::default()),
             cv: Condvar::new(),
+            depth: AtomicUsize::new(DEVICE_QUEUE_DEPTH),
+            share: AtomicUsize::new(STREAM_SHARE),
             dirty: AtomicBool::new(false),
             waiters: Mutex::new(Vec::new()),
         }
     }
 
     /// Grant one slot to `stream` if the device bound and the stream's
-    /// fair share both allow it.
-    fn grant(g: &mut GateInner, stream: StreamKey) -> bool {
+    /// fair share both allow it (against the gate's *live* bounds).
+    fn grant(&self, g: &mut GateInner, stream: StreamKey) -> bool {
         let stream_held = g.per_stream.get(&stream).copied().unwrap_or(0);
-        if g.held < DEVICE_QUEUE_DEPTH && stream_held < STREAM_SHARE {
+        if g.held < self.depth.load(Ordering::Relaxed)
+            && stream_held < self.share.load(Ordering::Relaxed)
+        {
             g.held += 1;
             *g.per_stream.entry(stream).or_insert(0) += 1;
             true
@@ -311,7 +366,7 @@ impl DeviceGate {
     /// entry point — it overflows refused commands into its ready
     /// backlog and must never block.
     pub fn try_enter(&self, stream: StreamKey) -> bool {
-        Self::grant(&mut self.inner.lock().unwrap(), stream)
+        self.grant(&mut self.inner.lock().unwrap(), stream)
     }
 
     /// One grant-or-park step of a stream reader's admission loop: under
@@ -323,11 +378,11 @@ impl DeviceGate {
     /// stream supersession) live.
     pub fn enter_or_wait(&self, stream: StreamKey, timeout: Duration) -> bool {
         let mut g = self.inner.lock().unwrap();
-        if Self::grant(&mut g, stream) {
+        if self.grant(&mut g, stream) {
             return true;
         }
         let (mut g, _) = self.cv.wait_timeout(g, timeout).unwrap();
-        Self::grant(&mut g, stream)
+        self.grant(&mut g, stream)
     }
 
     /// Unconditionally take a slot, bounds notwithstanding — the
@@ -412,6 +467,41 @@ impl DeviceGate {
             .get(&stream)
             .copied()
             .unwrap_or(0)
+    }
+
+    /// The gate's live admission bound (equals [`DEVICE_QUEUE_DEPTH`]
+    /// unless adaptively resized).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// The gate's live per-stream fair share.
+    pub fn share(&self) -> usize {
+        self.share.load(Ordering::Relaxed)
+    }
+
+    /// Retarget the gate's bounds (the adaptive-sizing entry point).
+    ///
+    /// Shrinking never strands already-admitted commands: held slots
+    /// stay held and drain through the normal release path — admission
+    /// simply stays closed while occupancy is at or above the new
+    /// bound, so a collapsed device sheds load within one resize
+    /// interval without cancelling anything in its pipeline. Growing
+    /// (or loosening the share) publishes immediately, so cv-parked
+    /// readers and registered gate waiters re-probe without waiting for
+    /// the next completion's release→publish cycle — resizing can wake
+    /// waiters, never orphan them, which is why it cannot deadlock a
+    /// paused connection (the retry timer remains the backstop either
+    /// way).
+    pub fn resize(&self, depth: usize, share: usize) {
+        let depth = depth.max(1);
+        let share = share.clamp(1, depth);
+        let old_depth = self.depth.swap(depth, Ordering::Relaxed);
+        let old_share = self.share.swap(share, Ordering::Relaxed);
+        if depth > old_depth || share > old_share {
+            self.dirty.store(true, Ordering::Release);
+            self.publish();
+        }
     }
 }
 
@@ -685,6 +775,13 @@ pub struct DaemonState {
     /// Deterministic outbound-fault injector (chaos testing). No-op
     /// unless a [`crate::net::FaultPlan`] was loaded via `DaemonConfig`.
     pub fault: Arc<FaultInjector>,
+    /// Adaptive gate sizing on (`DaemonConfig::adaptive_gates`): the
+    /// dispatcher periodically retargets each device gate's depth/share
+    /// from its measured completion-rate EWMA via [`gate_size_for_rate`].
+    pub adaptive_gates: bool,
+    /// Cadence of the dispatcher's adaptive resize pass
+    /// (`DaemonConfig::gate_resize_every`).
+    pub gate_resize_every: Duration,
     pub rdma: Option<RdmaState>,
     pub shutdown: AtomicBool,
     /// Deadline for a connection to complete its `Hello`/`AttachQueue`
@@ -1227,6 +1324,8 @@ impl DaemonState {
             peer_secret: cfg.peer_secret,
             peer_death_intervals: cfg.peer_death_intervals,
             fault: Arc::new(FaultInjector::new(cfg.fault.clone())),
+            adaptive_gates: cfg.adaptive_gates,
+            gate_resize_every: cfg.gate_resize_every,
             rdma,
             shutdown: AtomicBool::new(false),
             handshake_timeout: cfg.handshake_timeout,
@@ -2099,5 +2198,120 @@ mod tests {
         let cs = s.buffers.data(31).unwrap();
         let d = cs.read().unwrap();
         assert_eq!(u32::from_le_bytes(d[..4].try_into().unwrap()), 5);
+    }
+
+    #[test]
+    fn gate_size_for_rate_targets_drain_time_within_bounds() {
+        // Unmeasured devices keep the compile-time defaults.
+        assert_eq!(gate_size_for_rate(0.0), (DEVICE_QUEUE_DEPTH, STREAM_SHARE));
+        assert_eq!(gate_size_for_rate(-1.0), (DEVICE_QUEUE_DEPTH, STREAM_SHARE));
+        // A 30 fps decoder: 30 × 5 ms rounds to 0 -> floor.
+        assert_eq!(gate_size_for_rate(30.0), (GATE_DEPTH_MIN, 1));
+        // 2 000 cps × 5 ms = 10 slots, share 10/4 = 2.
+        assert_eq!(gate_size_for_rate(2_000.0), (10, 2));
+        // Exactly at the ceiling: 12 800 cps × 5 ms = 64.
+        assert_eq!(
+            gate_size_for_rate(12_800.0),
+            (DEVICE_QUEUE_DEPTH, STREAM_SHARE)
+        );
+        // A GPU pipeline far past the ceiling clamps, never exceeds.
+        assert_eq!(
+            gate_size_for_rate(1e6),
+            (DEVICE_QUEUE_DEPTH, STREAM_SHARE)
+        );
+        // Monotone in rate, and the 4:1 fairness ratio holds throughout.
+        let mut last = 0;
+        for rate in [10.0, 100.0, 1_000.0, 3_000.0, 8_000.0, 20_000.0] {
+            let (depth, share) = gate_size_for_rate(rate);
+            assert!(depth >= last, "depth not monotone at {rate}");
+            assert!((GATE_DEPTH_MIN..=DEVICE_QUEUE_DEPTH).contains(&depth));
+            assert_eq!(share, (depth / 4).max(1), "ratio broken at {rate}");
+            last = depth;
+        }
+    }
+
+    #[test]
+    fn gate_shrink_closes_admission_without_evicting_held_slots() {
+        let gate = DeviceGate::new();
+        // Two streams fill 8 slots under the default bounds.
+        for _ in 0..4 {
+            assert!(gate.try_enter(key(1, 1)));
+            assert!(gate.try_enter(key(1, 2)));
+        }
+        assert_eq!(gate.held(), 8);
+        // Shrink below the current occupancy: nothing is evicted — the
+        // 8 in-flight commands are already on the device pipeline — but
+        // admission closes immediately.
+        gate.resize(4, 1);
+        assert_eq!((gate.depth(), gate.share()), (4, 1));
+        assert_eq!(gate.held(), 8, "shrink must not evict held slots");
+        assert!(!gate.try_enter(key(1, 1)), "over the new depth");
+        assert!(!gate.try_enter(key(2, 9)), "even a fresh stream");
+        // Draining releases reopen admission only once occupancy is
+        // back under the *new* bound.
+        for _ in 0..4 {
+            gate.release(key(1, 1));
+        }
+        assert_eq!(gate.held(), 4);
+        assert!(!gate.try_enter(key(2, 9)), "still at the new depth");
+        gate.release(key(1, 2));
+        assert!(gate.try_enter(key(2, 9)), "admission reopens at the bound");
+        // The shrunk share binds too: stream (2,9) holds 1 = new share.
+        gate.release(key(1, 2));
+        assert!(!gate.try_enter(key(2, 9)), "share 1 is exhausted");
+        assert!(gate.try_enter(key(2, 10)));
+    }
+
+    #[test]
+    fn gate_resize_clamps_degenerate_bounds() {
+        let gate = DeviceGate::new();
+        // Zero depth clamps to 1, share clamps into [1, depth].
+        gate.resize(0, 0);
+        assert_eq!((gate.depth(), gate.share()), (1, 1));
+        // Share can never exceed depth.
+        gate.resize(4, 100);
+        assert_eq!((gate.depth(), gate.share()), (4, 4));
+        assert!(gate.try_enter(key(1, 1)));
+        assert!(gate.try_enter(key(1, 1)));
+    }
+
+    #[test]
+    fn gate_grow_wakes_parked_readers() {
+        let gate = Arc::new(DeviceGate::new());
+        gate.resize(2, 2);
+        assert!(gate.try_enter(key(4, 1)));
+        assert!(gate.try_enter(key(4, 1)));
+        let g2 = Arc::clone(&gate);
+        let h = std::thread::spawn(move || {
+            // A reader parked at the old bound (long timeout: only the
+            // resize's publish can plausibly wake it in time).
+            while !g2.enter_or_wait(key(4, 2), Duration::from_secs(5)) {}
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "reader must park at the old depth");
+        // The adaptive pass grows the gate (rate recovered): the parked
+        // reader must be notified — without a release ever happening.
+        gate.resize(8, 2);
+        h.join().unwrap();
+        assert_eq!(gate.held(), 3);
+    }
+
+    #[test]
+    fn gate_resize_is_idempotent_and_noop_without_change() {
+        let gate = DeviceGate::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        gate.add_waiter(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        // Same-size and shrinking resizes never publish (nothing new to
+        // admit), so the registered waiter stays parked...
+        gate.resize(DEVICE_QUEUE_DEPTH, STREAM_SHARE);
+        gate.resize(32, 8);
+        gate.resize(32, 8);
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        // ...and a grow fires it exactly once.
+        gate.resize(48, 12);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
     }
 }

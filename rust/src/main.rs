@@ -5,7 +5,7 @@
 //! * `poclr daemon [--port P] [--gpus N]` — run a standalone pocld.
 //! * `poclr quick [--servers N]` — spawn an in-process cluster and run a
 //!   buffer-hopping smoke workload end to end.
-//! * `poclr sim fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn` —
+//! * `poclr sim fig12|...|placement|churn|offload|city` —
 //!   print a DES scenario table.
 //! * `poclr artifacts` — list the loaded artifact manifest.
 
@@ -233,6 +233,58 @@ fn main() -> anyhow::Result<()> {
                         );
                     }
                 }
+                Some("offload") => {
+                    // SLO-driven adaptive offload under a congestion
+                    // episode: the production controller + remote delay
+                    // model driven through light / saturated / recovered
+                    // phases on the Wi-Fi 6 AR testbed.
+                    let frames = if args.iter().any(|a| a == "--tiny") {
+                        120
+                    } else {
+                        600
+                    };
+                    println!(
+                        "adaptive offload model ({frames} frames/phase, 100 Hz AR \
+                         frames, Wi-Fi 6 UE vs shared edge GPU):"
+                    );
+                    for p in scenarios::offload_congestion(frames) {
+                        println!(
+                            "{:>9}: offload {:>5.1}%   p50 {:>7.0} µs   p99 {:>7.0} µs",
+                            p.phase,
+                            p.offload_ratio * 100.0,
+                            p.p50_us,
+                            p.p99_us
+                        );
+                    }
+                }
+                Some("city") => {
+                    // City-scale churn: Poisson UE arrivals onto a MEC
+                    // cluster with a mid-run handover storm. Sweeps the
+                    // city size at a fixed cluster.
+                    let tiny = args.iter().any(|a| a == "--tiny");
+                    let sweep: &[usize] = if tiny {
+                        &[2_000, 10_000]
+                    } else {
+                        &[10_000, 100_000, 1_000_000]
+                    };
+                    let servers = 16usize;
+                    println!(
+                        "city churn model ({servers} servers, 10 s window, 10% \
+                         handover storm at t=5 s, seed 7):"
+                    );
+                    for &n in sweep {
+                        let p = scenarios::city_churn(n, servers, 7);
+                        println!(
+                            "{n:>9} UEs: {:>8} cmds   p50 {:>6.2} µs   p99 {:>8.2} µs   \
+                             storm p99 {:>9.1} µs   Jain {:.4}",
+                            p.cmds,
+                            p.p50_us,
+                            p.p99_us,
+                            p.storm_p99_us,
+                            p.jain_fairness
+                        );
+                    }
+                }
                 Some("fig16") => {
                     for mode in [
                         FluidMode::Native,
@@ -252,7 +304,8 @@ fn main() -> anyhow::Result<()> {
                 }
                 other => anyhow::bail!(
                     "unknown sim scenario {other:?} \
-                     (fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn)"
+                     (fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn|\
+                     offload|city)"
                 ),
             }
             Ok(())
@@ -275,8 +328,8 @@ fn main() -> anyhow::Result<()> {
             eprintln!("  daemon [--port P] [--gpus N]   run a standalone pocld");
             eprintln!("  quick  [--servers N]           in-process cluster smoke run");
             eprintln!(
-                "  sim    fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn  \
-                 DES scenario tables"
+                "  sim    fig12|fig13|fig16|queues|sessions|ues|latency|placement|churn\
+                 |offload|city  DES scenario tables"
             );
             eprintln!("  artifacts                      list the AOT manifest");
             std::process::exit(2);

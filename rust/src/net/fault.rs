@@ -1,26 +1,45 @@
-//! Deterministic fault injection for the peer mesh.
+//! Deterministic fault injection for the peer mesh and the client plane.
 //!
 //! Chaos testing a distributed daemon is only useful when failures
 //! *replay*: the same seed and the same [`FaultPlan`] must produce the
 //! same byte-for-byte fault sequence on every run. The injector therefore
-//! keys every decision off (a) per-peer outbound packet counters and (b)
-//! a seeded [`Rng`](crate::util::rng::Rng) — never off wall-clock time or
-//! thread interleaving. It sits on the daemon's outbound peer path (the
-//! shard-drained `Outbox` flush in `daemon/connection.rs`), where packet
-//! order is already serialized per connection, so counter-indexed rules
-//! are deterministic even under the sharded event loops.
+//! keys every decision off (a) per-peer (and one client-plane) outbound
+//! packet counters and (b) a seeded [`Rng`](crate::util::rng::Rng) —
+//! never off wall-clock time or thread interleaving. It sits on the
+//! daemon's outbound flush path (the shard-drained `Outbox` flush in
+//! `daemon/connection.rs`), where packet order is already serialized per
+//! connection, so counter-indexed rules are deterministic even under the
+//! sharded event loops.
+//!
+//! Two planes are hooked independently:
+//!
+//! * **Peer plane** — rules scoped to a destination peer id, consulted
+//!   for `Role::Peer` connections. A condemned link drives the normal
+//!   peer-death machinery (eviction, stranded-event sweep, backoff
+//!   reconnect).
+//! * **Client plane** — `Client*` rules, consulted for `Role::Client`
+//!   connections. The packet index is one daemon-wide client-plane
+//!   counter (client streams have no stable peer id), so rules replay
+//!   exactly when a test drives one client stream at a time; the counter
+//!   resets on every fresh client handshake (`reset_client`), mirroring
+//!   `reset_peer` on reconnect, so packet-indexed rules apply to each
+//!   new link from packet 1.
 //!
 //! A default-constructed injector (`FaultPlan::default()`) is a no-op and
 //! compiles down to one atomic load per flush — production daemons pay
-//! nothing for the machinery.
+//! nothing for the machinery. Partitions can be *healed* at runtime
+//! ([`FaultInjector::heal_partition`]) so split-brain tests can pin
+//! re-convergence time after the cut ends.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::rng::Rng;
 
-/// One fault rule, scoped to a destination peer id.
+/// One fault rule. Peer-plane rules are scoped to a destination peer id;
+/// `Client*` rules act on the daemon's outbound client-stream traffic.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FaultRule {
     /// Kill the link to `peer` after `after_packets` outbound packets
@@ -36,11 +55,38 @@ pub enum FaultRule {
     /// mid-`write_vectored` produces.
     TruncateAt { peer: u32, at_packet: u64 },
     /// Partition: refuse all traffic to `peer` and suppress reconnect
-    /// attempts while the partition holds.
+    /// attempts while the partition holds (heal it at runtime with
+    /// [`FaultInjector::heal_partition`]).
     Partition { peer: u32 },
     /// Delay each outbound packet to `peer` by a seeded-uniform amount
     /// in `[min_ms, max_ms]` (pacing-style hold, order-preserving).
     DelayMs { peer: u32, min_ms: u64, max_ms: u64 },
+    /// Client plane: kill the client stream after `after_packets`
+    /// outbound packets (counted across the daemon's client plane).
+    ClientKillAfter { after_packets: u64 },
+    /// Client plane: silently drop every `nth` outbound client packet
+    /// (completions vanish in flight; the daemon believes they were
+    /// delivered — the lossy-access-network case).
+    ClientDropEvery { nth: u64 },
+    /// Client plane: truncate outbound client packet `at_packet` and
+    /// kill that stream — the client's decoder sees a torn frame + EOF.
+    ClientTruncateAt { at_packet: u64 },
+    /// Client plane: delay each outbound client packet by a
+    /// seeded-uniform amount in `[min_ms, max_ms]`.
+    ClientDelayMs { min_ms: u64, max_ms: u64 },
+}
+
+impl FaultRule {
+    /// True for rules consulted on the client plane.
+    pub fn is_client(&self) -> bool {
+        matches!(
+            self,
+            FaultRule::ClientKillAfter { .. }
+                | FaultRule::ClientDropEvery { .. }
+                | FaultRule::ClientTruncateAt { .. }
+                | FaultRule::ClientDelayMs { .. }
+        )
+    }
 }
 
 /// A seeded set of fault rules, threaded through `DaemonConfig`.
@@ -61,9 +107,17 @@ impl FaultPlan {
     pub fn is_empty(&self) -> bool {
         self.rules.is_empty()
     }
+
+    fn has_peer_rules(&self) -> bool {
+        self.rules.iter().any(|r| !r.is_client())
+    }
+
+    fn has_client_rules(&self) -> bool {
+        self.rules.iter().any(|r| r.is_client())
+    }
 }
 
-/// What the flush path must do with one outbound peer packet.
+/// What the flush path must do with one outbound packet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultAction {
     /// Send normally.
@@ -84,11 +138,20 @@ struct FaultCounters {
     sent: HashMap<u32, u64>,
     /// Peers whose link the injector already killed (kill fires once).
     killed: HashMap<u32, bool>,
+    /// Outbound packets observed on the client plane.
+    client_sent: u64,
+    /// The client-plane kill latch.
+    client_killed: bool,
 }
 
 /// Deterministic fault injector instantiated from a [`FaultPlan`].
 pub struct FaultInjector {
-    plan: FaultPlan,
+    /// The live plan. Mutable so tests can heal partitions at runtime;
+    /// the hot paths never take this lock while the plane is inactive.
+    plan: Mutex<FaultPlan>,
+    /// Fast-path flags: any peer-plane / client-plane rules loaded?
+    peer_active: AtomicBool,
+    client_active: AtomicBool,
     counters: Mutex<FaultCounters>,
     rng: Mutex<Rng>,
 }
@@ -97,26 +160,57 @@ impl FaultInjector {
     pub fn new(plan: FaultPlan) -> FaultInjector {
         let rng = Rng::new(plan.seed);
         FaultInjector {
-            plan,
+            peer_active: AtomicBool::new(plan.has_peer_rules()),
+            client_active: AtomicBool::new(plan.has_client_rules()),
+            plan: Mutex::new(plan),
             counters: Mutex::new(FaultCounters::default()),
             rng: Mutex::new(rng),
         }
     }
 
-    /// True when no rules are loaded — the hot path checks this first and
-    /// skips all bookkeeping.
+    /// True when no peer-plane rules are loaded — the peer flush path
+    /// checks this first and skips all bookkeeping.
     pub fn is_noop(&self) -> bool {
-        self.plan.is_empty()
+        !self.peer_active.load(Ordering::Relaxed)
+    }
+
+    /// True when no client-plane rules are loaded (the common case; one
+    /// atomic load on the client flush path).
+    pub fn client_is_noop(&self) -> bool {
+        !self.client_active.load(Ordering::Relaxed)
     }
 
     /// Is `peer` currently partitioned away? Consulted by the outbound
     /// path *and* the reconnect supervisor (a partitioned peer must not
     /// be redialed — that would heal the partition the test asked for).
     pub fn partitioned(&self, peer: u32) -> bool {
+        if self.is_noop() {
+            return false;
+        }
         self.plan
+            .lock()
+            .unwrap()
             .rules
             .iter()
             .any(|r| matches!(r, FaultRule::Partition { peer: p } if *p == peer))
+    }
+
+    /// Heal a partition at runtime: remove every `Partition` rule naming
+    /// `peer`, so the outbound path passes traffic again and the
+    /// reconnect supervisor may redial. Returns true if a rule was
+    /// removed. The split-brain tests cut a link with `Partition`, wait
+    /// for both sides to declare death, heal, and then pin how many
+    /// gossip intervals re-convergence takes.
+    pub fn heal_partition(&self, peer: u32) -> bool {
+        let mut plan = self.plan.lock().unwrap();
+        let before = plan.rules.len();
+        plan.rules
+            .retain(|r| !matches!(r, FaultRule::Partition { peer: p } if *p == peer));
+        let healed = plan.rules.len() != before;
+        self.peer_active.store(plan.has_peer_rules(), Ordering::Relaxed);
+        self.client_active
+            .store(plan.has_client_rules(), Ordering::Relaxed);
+        healed
     }
 
     /// Decide the fate of the next outbound packet to `peer`. Counts the
@@ -128,6 +222,7 @@ impl FaultInjector {
         if self.is_noop() {
             return FaultAction::Pass;
         }
+        let plan = self.plan.lock().unwrap();
         let mut c = self.counters.lock().unwrap();
         if *c.killed.get(&peer).unwrap_or(&false) {
             return FaultAction::Kill;
@@ -135,7 +230,7 @@ impl FaultInjector {
         let n = c.sent.entry(peer).or_insert(0);
         *n += 1;
         let n = *n;
-        for rule in &self.plan.rules {
+        for rule in &plan.rules {
             match rule {
                 FaultRule::KillPeerLink {
                     peer: p,
@@ -174,6 +269,48 @@ impl FaultInjector {
         FaultAction::Pass
     }
 
+    /// Decide the fate of the next outbound packet on a *client* stream.
+    /// Counts against the daemon-wide client-plane counter (1-indexed)
+    /// and applies the first matching client rule in plan order —
+    /// deterministic whenever one client stream drives the plane.
+    pub fn on_client_packet(&self) -> FaultAction {
+        if self.client_is_noop() {
+            return FaultAction::Pass;
+        }
+        let plan = self.plan.lock().unwrap();
+        let mut c = self.counters.lock().unwrap();
+        if c.client_killed {
+            return FaultAction::Kill;
+        }
+        c.client_sent += 1;
+        let n = c.client_sent;
+        for rule in &plan.rules {
+            match rule {
+                FaultRule::ClientKillAfter { after_packets } if n > *after_packets => {
+                    c.client_killed = true;
+                    return FaultAction::Kill;
+                }
+                FaultRule::ClientDropEvery { nth } if *nth > 0 && n % *nth == 0 => {
+                    return FaultAction::Drop;
+                }
+                FaultRule::ClientTruncateAt { at_packet } if n == *at_packet => {
+                    c.client_killed = true;
+                    return FaultAction::Truncate;
+                }
+                FaultRule::ClientDelayMs { min_ms, max_ms } => {
+                    let hold = if max_ms > min_ms {
+                        self.rng.lock().unwrap().gen_range(*min_ms, *max_ms + 1)
+                    } else {
+                        *min_ms
+                    };
+                    return FaultAction::Delay(Duration::from_millis(hold));
+                }
+                _ => {}
+            }
+        }
+        FaultAction::Pass
+    }
+
     /// Reset per-peer counters and the kill latch for `peer` — called
     /// when a fresh link to the peer is established (reconnect), so
     /// packet-counted rules apply to the new link from packet 1.
@@ -183,9 +320,24 @@ impl FaultInjector {
         c.killed.remove(&peer);
     }
 
+    /// Reset the client-plane counter and kill latch — called when a
+    /// fresh client stream completes its handshake, so packet-counted
+    /// client rules apply to each new link from packet 1 (the client
+    /// analogue of [`FaultInjector::reset_peer`]).
+    pub fn reset_client(&self) {
+        let mut c = self.counters.lock().unwrap();
+        c.client_sent = 0;
+        c.client_killed = false;
+    }
+
     /// Packets counted towards `peer` so far (tests).
     pub fn sent_to(&self, peer: u32) -> u64 {
         *self.counters.lock().unwrap().sent.get(&peer).unwrap_or(&0)
+    }
+
+    /// Packets counted on the client plane so far (tests).
+    pub fn client_sent(&self) -> u64 {
+        self.counters.lock().unwrap().client_sent
     }
 }
 
@@ -197,13 +349,20 @@ mod tests {
         (0..n).map(|_| inj.on_peer_packet(peer)).collect()
     }
 
+    fn client_actions(inj: &FaultInjector, n: usize) -> Vec<FaultAction> {
+        (0..n).map(|_| inj.on_client_packet()).collect()
+    }
+
     #[test]
     fn noop_plan_passes_everything() {
         let inj = FaultInjector::new(FaultPlan::none());
         assert!(inj.is_noop());
+        assert!(inj.client_is_noop());
         assert_eq!(actions(&inj, 1, 4), vec![FaultAction::Pass; 4]);
+        assert_eq!(client_actions(&inj, 4), vec![FaultAction::Pass; 4]);
         // No-op short-circuits before counting.
         assert_eq!(inj.sent_to(1), 0);
+        assert_eq!(inj.client_sent(), 0);
     }
 
     #[test]
@@ -321,5 +480,94 @@ mod tests {
             seq
         };
         assert_eq!(run(plan.clone()), run(plan));
+    }
+
+    #[test]
+    fn client_rules_are_a_separate_plane() {
+        // Client rules never touch peer traffic and vice versa; the two
+        // planes keep independent counters.
+        let plan = FaultPlan {
+            seed: 3,
+            rules: vec![
+                FaultRule::ClientDropEvery { nth: 2 },
+                FaultRule::DropEvery { peer: 1, nth: 3 },
+            ],
+        };
+        let inj = FaultInjector::new(plan);
+        assert!(!inj.is_noop());
+        assert!(!inj.client_is_noop());
+        assert_eq!(
+            client_actions(&inj, 4),
+            vec![
+                FaultAction::Pass,
+                FaultAction::Drop,
+                FaultAction::Pass,
+                FaultAction::Drop,
+            ]
+        );
+        // Peer counter unaffected by the 4 client packets.
+        assert_eq!(
+            actions(&inj, 1, 3),
+            vec![FaultAction::Pass, FaultAction::Pass, FaultAction::Drop]
+        );
+        assert_eq!(inj.client_sent(), 4);
+        assert_eq!(inj.sent_to(1), 3);
+    }
+
+    #[test]
+    fn client_truncate_latches_until_reset() {
+        let plan = FaultPlan {
+            seed: 5,
+            rules: vec![FaultRule::ClientTruncateAt { at_packet: 2 }],
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(
+            client_actions(&inj, 3),
+            vec![FaultAction::Pass, FaultAction::Truncate, FaultAction::Kill]
+        );
+        // A fresh client handshake resets the plane (replay from pkt 1).
+        inj.reset_client();
+        assert_eq!(client_actions(&inj, 1), vec![FaultAction::Pass]);
+        assert_eq!(inj.client_sent(), 1);
+    }
+
+    #[test]
+    fn client_delay_replays_with_the_seed() {
+        let plan = FaultPlan {
+            seed: 42,
+            rules: vec![FaultRule::ClientDelayMs {
+                min_ms: 2,
+                max_ms: 11,
+            }],
+        };
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan);
+        let da = client_actions(&a, 12);
+        assert_eq!(da, client_actions(&b, 12));
+        for act in da {
+            match act {
+                FaultAction::Delay(d) => {
+                    assert!((2..=11).contains(&(d.as_millis() as u64)), "{d:?}")
+                }
+                other => panic!("expected delay, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn heal_partition_reopens_the_link() {
+        let plan = FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule::Partition { peer: 7 }],
+        };
+        let inj = FaultInjector::new(plan);
+        assert!(inj.partitioned(7));
+        assert_eq!(inj.on_peer_packet(7), FaultAction::Drop);
+        assert!(inj.heal_partition(7));
+        assert!(!inj.partitioned(7));
+        assert!(inj.is_noop(), "healed plan with no other rules is a no-op");
+        assert_eq!(inj.on_peer_packet(7), FaultAction::Pass);
+        // Healing twice is a no-op.
+        assert!(!inj.heal_partition(7));
     }
 }

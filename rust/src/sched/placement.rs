@@ -86,29 +86,62 @@ pub enum PlacementPolicy {
     LatencyAware,
 }
 
+/// Queue-wait estimate (µs) implied by a server's least-loaded device
+/// (depth / completion-rate). This is the wait term of
+/// [`PlacementPolicy::score`], factored out so the client's offload
+/// controller and the DES price congestion with the daemon's own
+/// arithmetic. Total: a server advertising zero devices can execute
+/// nothing and scores effectively unplaceable but still finite.
+pub fn queue_wait_us(server: &ServerLoad) -> f64 {
+    let wait_us = server
+        .devices
+        .iter()
+        .map(|d| {
+            let rate = if d.rate_cps > 0.0 {
+                d.rate_cps
+            } else {
+                FALLBACK_RATE_CPS
+            };
+            d.depth() as f64 / rate * 1e6
+        })
+        .fold(f64::INFINITY, f64::min);
+    if wait_us.is_finite() {
+        wait_us
+    } else {
+        1e12
+    }
+}
+
+/// Predicted end-to-end latency (µs) of offloading one command to a
+/// server: measured link RTT + payload serialization on the access link
+/// + the server's queue wait + the kernel's own cost. The client's
+/// adaptive offload controller ([`crate::client::offload`]) and the DES
+/// congestion scenario both price the remote path through this one
+/// function, so live decisions and simulated sweeps stay comparable.
+pub fn predict_remote_us(
+    rtt_ns: u64,
+    payload_bytes: u64,
+    link_bytes_per_sec: f64,
+    load: &ServerLoad,
+    kernel_cost_us: f64,
+) -> f64 {
+    let rtt_us = rtt_ns as f64 / 1_000.0;
+    let xfer_us = if link_bytes_per_sec > 0.0 {
+        payload_bytes as f64 / link_bytes_per_sec * 1e6
+    } else {
+        0.0
+    };
+    rtt_us + xfer_us + queue_wait_us(load) + kernel_cost_us.max(0.0)
+}
+
 impl PlacementPolicy {
     /// Effective-latency score (µs) of running one more command on this
     /// server: link RTT plus the queue wait implied by its least-loaded
-    /// device (depth / completion-rate), plus the kernel's own cost.
-    /// Lower is better. Total over all inputs; never NaN.
+    /// device ([`queue_wait_us`]), plus the kernel's own cost. Lower is
+    /// better. Total over all inputs; never NaN.
     pub fn score(server: &ServerLoad, kernel_cost_us: f64) -> f64 {
         let rtt_us = server.rtt_ns as f64 / 1_000.0;
-        let wait_us = server
-            .devices
-            .iter()
-            .map(|d| {
-                let rate = if d.rate_cps > 0.0 {
-                    d.rate_cps
-                } else {
-                    FALLBACK_RATE_CPS
-                };
-                d.depth() as f64 / rate * 1e6
-            })
-            .fold(f64::INFINITY, f64::min);
-        // A server advertising zero devices can execute nothing: score it
-        // effectively unplaceable but still finite (totality).
-        let wait_us = if wait_us.is_finite() { wait_us } else { 1e12 };
-        rtt_us + wait_us + kernel_cost_us.max(0.0)
+        rtt_us + queue_wait_us(server) + kernel_cost_us.max(0.0)
     }
 
     /// Choose the server for a new command of cost `kernel_cost_us`.
@@ -332,6 +365,18 @@ mod tests {
         // 8 queued commands (~800 µs wait) still beats a 10-second-stale
         // report's decayed score.
         assert_eq!(PlacementPolicy::LatencyAware.place(0.0, &snap), 0);
+    }
+
+    #[test]
+    fn remote_prediction_prices_congestion_and_transfer() {
+        let calm = idle(1, 200_000);
+        let busy = loaded(1, 200_000, 64, 30);
+        let base = predict_remote_us(200_000, 0, 0.0, &calm, 50.0);
+        // 94 queued commands at 10k cps add ~9.4 ms of queue wait.
+        assert!(predict_remote_us(200_000, 0, 0.0, &busy, 50.0) > base + 9_000.0);
+        // 1 MB over a 1 Gbit/s access link pays ~8 ms of serialization.
+        let xfer = predict_remote_us(200_000, 1_000_000, 125_000_000.0, &calm, 50.0);
+        assert!((xfer - base - 8_000.0).abs() < 1.0);
     }
 
     #[test]

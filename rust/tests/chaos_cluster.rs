@@ -293,6 +293,87 @@ fn restarted_daemon_rejoins_mesh_via_backoff_reconnect_and_serves_migrations() {
 }
 
 #[test]
+fn healed_partition_reconverges_without_operator_action() {
+    // Split-brain and heal: both directions of the 0↔1 link are
+    // partitioned (packets dropped, redial suppressed), both sides
+    // declare death by gossip silence — then the partition heals at
+    // runtime. Re-convergence must be automatic and prompt: the
+    // reconnect supervisor skipped the partitioned peer *without*
+    // growing its backoff, so the post-heal redial lands within a poll
+    // interval, not at the back of an exponential curve.
+    let faults = vec![
+        FaultPlan {
+            seed: 0xB1FF,
+            rules: vec![FaultRule::Partition { peer: 1 }],
+        },
+        FaultPlan {
+            seed: 0xB1FF,
+            rules: vec![FaultRule::Partition { peer: 0 }],
+        },
+    ];
+    let c = Cluster::start_faulted(2, 1, &manifest(), [3u8; 16], faults).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    wait_for(deadline, "side 0 to declare partitioned peer 1 dead", || {
+        !peer_link_up(&c.daemons[0], 1)
+    });
+    wait_for(deadline, "side 1 to declare partitioned peer 0 dead", || {
+        !peer_link_up(&c.daemons[1], 0)
+    });
+
+    // Heal both directions; healing twice must be a no-op.
+    assert!(c.daemons[0].state.fault.heal_partition(1));
+    assert!(c.daemons[1].state.fault.heal_partition(0));
+    assert!(!c.daemons[0].state.fault.heal_partition(1));
+    let healed_at = Instant::now();
+
+    // The mesh re-converges: links up in both directions...
+    let deadline = Instant::now() + Duration::from_secs(10);
+    wait_for(deadline, "mesh links to re-converge after the heal", || {
+        peer_link_up(&c.daemons[0], 1) && peer_link_up(&c.daemons[1], 0)
+    });
+    // ...promptly — a poll interval plus a handshake, with slop; far
+    // under the 1 s backoff cap a grown outage history would impose.
+    let reconverge = healed_at.elapsed();
+    assert!(
+        reconverge < Duration::from_secs(5),
+        "re-convergence took {reconverge:?}"
+    );
+
+    // Load gossip resumes: each side's cluster snapshot re-includes the
+    // healed peer (the scheduler can place on it again).
+    wait_for(deadline, "load gossip to re-include the healed peer", || {
+        let zero_sees_one = c.daemons[0]
+            .state
+            .cluster_snapshot()
+            .servers
+            .iter()
+            .any(|s| s.server == 1);
+        let one_sees_zero = c.daemons[1]
+            .state
+            .cluster_snapshot()
+            .servers
+            .iter()
+            .any(|s| s.server == 0);
+        zero_sees_one && one_sees_zero
+    });
+
+    // And the healed link carries real work: produce on 0, migrate to
+    // 1, compute there, read back.
+    let p = Platform::connect(&c.addrs(), ClientConfig::default()).unwrap();
+    let ctx = p.context();
+    let q0 = ctx.queue(0, 0);
+    let q1 = ctx.queue(1, 0);
+    let buf = ctx.create_buffer(4);
+    q0.write(buf, &20i32.to_le_bytes()).unwrap().wait().unwrap();
+    q1.migrate(buf).unwrap().wait().unwrap();
+    q1.run("increment_s32_1", &[buf], &[buf]).unwrap().wait().unwrap();
+    assert_eq!(
+        i32::from_le_bytes(q1.read(buf).unwrap()[..4].try_into().unwrap()),
+        21
+    );
+}
+
+#[test]
 fn wrong_mesh_secret_never_joins_the_mesh() {
     let mut cfg_a = DaemonConfig::local(0, 1, Manifest::default());
     cfg_a.peer_secret = [0xAAu8; 16];

@@ -1,0 +1,219 @@
+//! Live SLO-driven adaptive offload: the congestion loop the DES
+//! (`poclr sim offload`) sweeps deterministically, exercised against a
+//! real daemon. Flooder sessions saturate the daemon's device gate; the
+//! [`AdaptiveRunner`]'s delay model — measured local execution EWMA vs
+//! measured RTT + gossiped queue wait + kernel cost — must shed the
+//! workload to the UE-local device through the hysteresis band, keep
+//! the frame tail bounded while congested, and re-offload once the
+//! congestion clears. The daemon runs with adaptive gate sizing on, so
+//! the congested phase also drives the completion-rate-derived resize
+//! path under real load.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use poclr::client::local::LocalQueue;
+use poclr::client::offload::{AdaptiveRunner, OffloadConfig, Target};
+use poclr::client::{ClientConfig, Platform};
+use poclr::daemon::{Daemon, DaemonConfig};
+use poclr::runtime::Manifest;
+use poclr::util::stats::Samples;
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+/// A frame-sized kernel: heavy enough that its execution time dominates
+/// scheduling noise, with equal-sized in/out buffers for the runner.
+const ARTIFACT: &str = "lbm_step_9x16x64";
+const FRAME_BYTES: usize = 41_472;
+const FRAMES: usize = 40;
+/// Inflight commands each flooder keeps pipelined (3 flooders × 48 ≈
+/// 3× the default gate depth: the gate stays saturated with a steady
+/// ready-backlog behind it, no draining troughs between bursts).
+const FLOOD_DEPTH: usize = 48;
+
+fn run_phase(runner: &AdaptiveRunner, input: &[u8]) -> (Samples, usize) {
+    runner.reset_window();
+    let mut lat = Samples::new();
+    let mut remote = 0usize;
+    for _ in 0..FRAMES {
+        let t0 = Instant::now();
+        let (_out, target) = runner.run_frame(input).expect("frame failed");
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+        if target == Target::Remote {
+            remote += 1;
+        }
+        // Frame pacing, as a real AR client would have.
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    (lat, remote)
+}
+
+#[test]
+fn adaptive_offload_sheds_under_congestion_and_reoffloads_after() {
+    let mut cfg = DaemonConfig::local(0, 1, manifest());
+    cfg.adaptive_gates = true;
+    let d = Daemon::spawn(cfg).unwrap();
+    let addr = d.addr();
+
+    let client_cfg = ClientConfig {
+        offload: OffloadConfig {
+            // Model a UE far weaker than the server (the interpreter
+            // runs at host speed on both sides, so the gap is a knob).
+            local_slowdown: 50.0,
+            // Tight gossip refresh: phase transitions are visible
+            // within a few frames.
+            refresh_every: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let p = Platform::connect(&[addr.clone()], client_cfg).unwrap();
+    let ctx = p.context();
+    let runner = AdaptiveRunner::new(
+        &p,
+        &ctx,
+        LocalQueue::gpu(manifest()),
+        ARTIFACT,
+        FRAME_BYTES as u64,
+    );
+    let input = vec![0u8; FRAME_BYTES];
+
+    // Phase 1 — light: the idle edge GPU wins on the modeled economics
+    // (remote = RTT + kernel vs local = 50× kernel), so after the one
+    // EWMA-seeding frame every decision goes remote.
+    let (mut light, _) = run_phase(&runner, &input);
+    let light_ratio = runner.offload_ratio();
+    assert!(
+        light_ratio > 0.8,
+        "uncongested ratio {light_ratio} (expected >0.8)"
+    );
+
+    // Phase 2 — saturated: flooder sessions keep a deep pipeline of
+    // kernels on the daemon, so the gate holds its cap and a steady
+    // ready-backlog queues behind it.
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooders: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let p = Platform::connect(&[addr], ClientConfig::default()).unwrap();
+                let ctx = p.context();
+                let q = ctx.queue(0, 0);
+                let buf = ctx.create_buffer(FRAME_BYTES as u64);
+                q.write(buf, &vec![0u8; FRAME_BYTES])
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                let mut ring = VecDeque::new();
+                while !stop.load(Ordering::Relaxed) {
+                    while ring.len() < FLOOD_DEPTH {
+                        ring.push_back(q.run(ARTIFACT, &[buf], &[buf]).unwrap());
+                    }
+                    ring.pop_front().unwrap().wait().unwrap();
+                }
+                for ev in ring {
+                    ev.wait().ok();
+                }
+            })
+        })
+        .collect();
+
+    // Gate saturated with a real backlog before the phase starts.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let load = &d.state.load_snapshot()[0];
+        // Backlog only builds once the gate is at its cap: a steady
+        // ready-queue behind a full gate is the saturation signal.
+        if load.backlog > 32 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "flooders never saturated the device gate: {load:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (mut sat, sat_remote) = run_phase(&runner, &input);
+    let sat_ratio = runner.offload_ratio();
+    assert!(
+        sat_ratio < 0.2,
+        "congested ratio {sat_ratio} ({sat_remote} remote frames; expected <0.2)"
+    );
+    // The SLO holds through the congestion: un-offloaded frames run at
+    // local speed instead of queueing behind the flood, so the tail
+    // stays within 2× the uncongested baseline.
+    let (light_p99, sat_p99) = (light.percentile(99.0), sat.percentile(99.0));
+    assert!(
+        sat_p99 <= 2.0 * light_p99,
+        "congested p99 {sat_p99:.0} µs vs uncongested {light_p99:.0} µs"
+    );
+
+    // Phase 3 — recovered: flood stops, the backlog drains, and the
+    // controller re-offloads on the next gossip refresh.
+    stop.store(true, Ordering::Relaxed);
+    for f in flooders {
+        f.join().unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let load = &d.state.load_snapshot()[0];
+        if load.held == 0 && load.backlog == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backlog never drained after the flood: {load:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (_rec, _) = run_phase(&runner, &input);
+    let rec_ratio = runner.offload_ratio();
+    assert!(
+        rec_ratio > 0.8,
+        "recovered ratio {rec_ratio} (expected >0.8)"
+    );
+}
+
+#[test]
+fn adaptive_runner_seeds_locally_then_follows_the_band() {
+    // No congestion at all: the very first frame must run locally (it
+    // seeds the execution-time EWMA the delay model needs), and every
+    // frame after that offloads under idle-cluster economics.
+    let d = Daemon::spawn(DaemonConfig::local(0, 1, manifest())).unwrap();
+    let p = Platform::connect(
+        &[d.addr()],
+        ClientConfig {
+            offload: OffloadConfig {
+                local_slowdown: 50.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ctx = p.context();
+    let runner = AdaptiveRunner::new(
+        &p,
+        &ctx,
+        LocalQueue::gpu(manifest()),
+        ARTIFACT,
+        FRAME_BYTES as u64,
+    );
+    let input = vec![1u8; FRAME_BYTES];
+
+    let (_, first) = runner.run_frame(&input).unwrap();
+    assert_eq!(first, Target::Local, "seeding frame must run locally");
+    assert_eq!(runner.offload_ratio(), 0.0, "seeding frame is not a decision");
+    for i in 0..6 {
+        let (_, t) = runner.run_frame(&input).unwrap();
+        assert_eq!(t, Target::Remote, "frame {i} under an idle cluster");
+    }
+    assert!(runner.offload_ratio() > 0.99);
+}

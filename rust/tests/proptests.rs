@@ -1294,6 +1294,102 @@ fn prop_peer_gossip_survives_hostile_load_reports() {
 }
 
 #[test]
+fn prop_adaptive_gate_resizing_never_strands_parked_readers() {
+    // The adaptive-gate liveness contract: while reader threads loop
+    // through `enter_or_wait` (the production admission path), a mutator
+    // resizes the gate through the full `gate_size_for_rate` range —
+    // shrinks below live occupancy, grows, degenerate rates — at a
+    // cadence far faster than the production 100 ms pass. No
+    // interleaving may strand a parked reader: every worker must
+    // complete its quota (the timed re-probe plus grow-publish are the
+    // wakeup backstops), and the gate must drain to empty afterwards.
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use poclr::daemon::state::{gate_size_for_rate, DeviceGate};
+
+    const WORKERS: usize = 4;
+    const ACQS: usize = 60;
+    // Workers 0 and 1 share one stream key (contending on a single
+    // per-stream share, which shrinks to 1 under slow rates); the rest
+    // have their own.
+    fn worker_key(w: usize) -> ([u8; 16], u32) {
+        if w < 2 {
+            ([7; 16], 1)
+        } else {
+            ([w as u8; 16], w as u32)
+        }
+    }
+
+    for seed in [0xDEAD_10CCu64, 0x600D_CAFE, 42] {
+        let gate = Arc::new(DeviceGate::new());
+        let deadline = Instant::now() + Duration::from_secs(30);
+
+        let workers: Vec<_> = (0..WORKERS)
+            .map(|w| {
+                let gate = Arc::clone(&gate);
+                let key = worker_key(w);
+                std::thread::spawn(move || {
+                    let mut done = 0;
+                    while done < ACQS {
+                        assert!(
+                            Instant::now() < deadline,
+                            "seed {seed:#x}: worker {w} stranded at {done}/{ACQS} acquisitions"
+                        );
+                        if gate.enter_or_wait(key, Duration::from_millis(5)) {
+                            assert!(gate.held() >= 1);
+                            gate.release(key);
+                            // Releases alone never notify (the
+                            // dispatcher backlog has first claim);
+                            // publish is the production wakeup.
+                            gate.publish();
+                            done += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let mutator = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                for _ in 0..120 {
+                    // Rates spanning unmeasured (0), floor-clamped slow
+                    // devices, mid-range and ceiling-clamped GPUs.
+                    let rate = match rng.gen_range(0, 4) {
+                        0 => 0.0,
+                        1 => rng.gen_range(1, 400) as f64,
+                        2 => rng.gen_range(400, 13_000) as f64,
+                        _ => rng.gen_range(13_000, 1 << 20) as f64,
+                    };
+                    let (depth, share) = gate_size_for_rate(rate);
+                    gate.resize(depth, share);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                // Leave the gate at its defaults so stragglers finish
+                // against a known-roomy bound.
+                gate.resize(64, 16);
+                gate.publish();
+            })
+        };
+
+        for h in workers {
+            h.join().unwrap();
+        }
+        mutator.join().unwrap();
+        assert_eq!(gate.held(), 0, "seed {seed:#x}: slots leaked");
+        for w in 0..WORKERS {
+            assert_eq!(
+                gate.stream_held(worker_key(w)),
+                0,
+                "seed {seed:#x}: worker {w}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_des_schedule_never_overlaps_on_one_resource() {
     use poclr::sim::des::Des;
     let mut rng = Rng::new(777);
